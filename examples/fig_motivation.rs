@@ -1,0 +1,116 @@
+//! Reproduces the paper's motivating figures:
+//!
+//! * **Fig. 3** — AIBA: allocating input buses to highly associated input
+//!   readings at the same time co-schedules their multiplications.
+//! * **Fig. 4** — Mul-CI: multicasting a high-fanout input over two buses
+//!   avoids the caching operation.
+//! * **Fig. 5/6** — RID-AT: reconstructing the adder tree against the
+//!   realized multiplication schedule reduces MCIDs.
+//!
+//! ```bash
+//! cargo run --release --example fig_motivation
+//! ```
+
+use sparsemap::arch::StreamingCgra;
+use sparsemap::config::Techniques;
+use sparsemap::dfg::analysis::mii;
+use sparsemap::dfg::build::build_sdfg;
+use sparsemap::dfg::EdgeKind;
+use sparsemap::sched::ridat::{reconstruct_adder_trees, schedule_adds_fixed};
+use sparsemap::sched::sparsemap::schedule_at;
+use sparsemap::sched::ResourceTables;
+use sparsemap::sparse::SparseBlock;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let cgra = StreamingCgra::paper_default();
+
+    // ---- Fig. 3: AIBA --------------------------------------------------
+    // Channels c0/c2 share four kernels (the highest association); channel
+    // order splits them across bus cycles, AIBA keeps them together.
+    #[rustfmt::skip]
+    let fig3 = SparseBlock::from_mask("fig3", 4, 4, vec![
+        // k0     k1     k2     k3
+        true,  true,  true,  true,  // c0
+        true,  false, false, false, // c1
+        true,  true,  true,  true,  // c2
+        false, true,  false, false, // c3
+    ])?;
+    println!("Fig. 3 (AIBA): association(c0,c2) = {}", fig3.association(0, 2));
+    let (g3, idx3) = build_sdfg(&fig3);
+    // The paper's Fig. 3 bottleneck is input buses; emulate with a
+    // 2-input-bus fabric so the 4 readings need two cycles.
+    let narrow = StreamingCgra::new(4, 2, 8, 8);
+    let ii_n = mii(&g3, &narrow);
+    for (name, tech) in [
+        ("channel order", Techniques { aiba: false, mul_ci: true, rid_at: true }),
+        ("AIBA         ", Techniques::all()),
+    ] {
+        match schedule_at(&g3, &narrow, tech, ii_n) {
+            Ok(s) => {
+                let (r0, r2) = (idx3.read(0).unwrap(), idx3.read(2).unwrap());
+                println!(
+                    "  {name}: II={} MCIDs={} — c0 read at t={}, c2 read at t={} ({})",
+                    s.ii,
+                    s.mcids().len(),
+                    s.t[r0],
+                    s.t[r2],
+                    if s.t[r0] == s.t[r2] { "co-scheduled ✓" } else { "split ✗" },
+                );
+            }
+            Err(e) => println!("  {name}: fails at II={ii_n} ({e})"),
+        }
+    }
+
+    // ---- Fig. 4: Mul-CI ------------------------------------------------
+    // One input with 5 multiplications on a 4×4 PEA: one bus reaches only
+    // 4 PEs.
+    let fig4 = SparseBlock::from_mask("fig4", 1, 5, vec![true; 5])?;
+    let (g4, _) = build_sdfg(&fig4);
+    println!("\nFig. 4 (Mul-CI): input c0 with fanout 5 on a 4×4 PEA");
+    for (name, tech) in [
+        ("without Mul-CI", Techniques { aiba: true, mul_ci: false, rid_at: true }),
+        ("with Mul-CI   ", Techniques::all()),
+    ] {
+        let s = schedule_at(&g4, &cgra, tech, 2)?;
+        println!(
+            "  {name}: input COPs={} (input-bus allocations: {})",
+            s.input_cops(),
+            s.g.reads().len(),
+        );
+    }
+
+    // ---- Fig. 5/6: RID-AT ----------------------------------------------
+    // The paper's exact setting: one kernel with 4 multiplications
+    // scheduled at t = 0, 0, 1, 2 (Fig. 5(a)). Fixed balanced tree vs the
+    // reconstructed tree.
+    let fig5 = SparseBlock::from_mask("fig5", 4, 1, vec![true; 4])?;
+    let count_mcids = |g: &sparsemap::dfg::SDfg, t: &[Option<usize>]| {
+        g.edges()
+            .iter()
+            .filter(|e| e.kind == EdgeKind::Internal)
+            .filter(|e| t[e.dst].unwrap() - t[e.src].unwrap() > 1)
+            .count()
+    };
+    println!("\nFig. 5/6 (RID-AT): 1 kernel, muls scheduled at t = 0, 0, 1, 2");
+    for fixed in [true, false] {
+        let (mut g5, idx5) = build_sdfg(&fig5);
+        let mut t = vec![None; g5.len()];
+        let times = [0usize, 0, 1, 2];
+        let mut tables = ResourceTables::new(&cgra, 4);
+        for ch in 0..4 {
+            let r = idx5.read(ch).unwrap();
+            let m = idx5.mul(ch, 0).unwrap();
+            t[r] = Some(times[ch]);
+            t[m] = Some(times[ch]);
+            tables.take_pe(times[ch], 1);
+        }
+        if fixed {
+            schedule_adds_fixed(&g5, &mut t, &mut tables)?;
+            println!("  fixed adder tree: MCIDs={}", count_mcids(&g5, &t));
+        } else {
+            reconstruct_adder_trees(&mut g5, &mut t, &mut tables, &[0], &cgra)?;
+            println!("  RID-AT          : MCIDs={}", count_mcids(&g5, &t));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,114 @@
+"""AOT compile path: lower the L2 model (which embeds the L1 Pallas kernel,
+interpret=True) to **HLO text** and write ``artifacts/``.
+
+HLO *text* — not ``lowered.compile().serialize()`` and not a serialized
+``HloModuleProto`` — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (behind the rust ``xla``
+0.1.6 crate) rejects; the text parser reassigns ids and round-trips cleanly.
+
+Run once via ``make artifacts``; python never appears on the request path.
+
+Outputs:
+  artifacts/<name>.hlo.txt           one per model variant
+  artifacts/manifest.tsv             name \t file \t dtype \t in-shapes \t out-shape
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_str(shapes) -> str:
+    return ";".join("x".join(str(d) for d in s) for s in shapes)
+
+
+# Sparse-block AOT variants: one per distinct (C, K) appearing in the paper's
+# Table 2, streamed in T=64-position chunks.  The rust runtime picks the
+# variant matching the block and pads the position stream to a multiple of T.
+BLOCK_VARIANTS = [
+    ("sb_c4k6", 64, 4, 6),
+    ("sb_c6k6", 64, 6, 6),
+    ("sb_c8k8", 64, 8, 8),
+    # im2col'd 3x3 conv blocks for the e2e CNN (Cin*9 -> Cout).
+    ("sb_c36k6", 256, 36, 6),
+    ("sb_c54k8", 256, 54, 8),
+]
+
+# Conv-layer AOT variants for the e2e example: (name, N, Cin, H, W, Cout).
+CONV_VARIANTS = [
+    ("conv_l1_c4k6_16x16", 1, 4, 16, 16, 6),
+    ("conv_l2_c6k8_16x16", 1, 6, 16, 16, 8),
+]
+
+
+def build_all(out_dir: str) -> list[tuple[str, str, str, str, str]]:
+    rows = []
+    f32 = jnp.float32
+
+    for name, t, c, k in BLOCK_VARIANTS:
+        entry = model.make_block_entry()
+        specs = (
+            jax.ShapeDtypeStruct((t, c), f32),
+            jax.ShapeDtypeStruct((c, k), f32),
+            jax.ShapeDtypeStruct((c, k), f32),
+        )
+        text = to_hlo_text(jax.jit(entry).lower(*specs))
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        rows.append((name, fname, "f32",
+                     _shape_str([s.shape for s in specs]), f"{t}x{k}"))
+
+    for name, n, cin, h, w, cout in CONV_VARIANTS:
+        entry = model.make_conv_entry()
+        specs = (
+            jax.ShapeDtypeStruct((n, cin, h, w), f32),
+            jax.ShapeDtypeStruct((cin * 9, cout), f32),
+            jax.ShapeDtypeStruct((cin * 9, cout), f32),
+            jax.ShapeDtypeStruct((cout,), f32),
+        )
+        text = to_hlo_text(jax.jit(entry).lower(*specs))
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        rows.append((name, fname, "f32",
+                     _shape_str([s.shape for s in specs]),
+                     f"{n}x{cout}x{h}x{w}"))
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    rows = build_all(out_dir)
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        for row in rows:
+            f.write("\t".join(row) + "\n")
+    for name, fname, _, ins, out in rows:
+        print(f"aot: {name:24s} in=[{ins}] out={out} -> {fname}")
+    print(f"aot: wrote {len(rows)} modules + manifest.tsv to {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

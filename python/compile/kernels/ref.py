@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+contract.  Everything in here must be boring, obviously-correct jnp."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sparse_block_matmul_ref(x, w, mask):
+    """``(T, C) @ ((C, K) * mask)`` with f32 accumulation."""
+    wm = (w * mask).astype(jnp.float32)
+    return jnp.dot(x.astype(jnp.float32), wm).astype(x.dtype)
+
+
+def bias_relu_ref(x, b):
+    """``relu(x + b)``."""
+    return jnp.maximum(x + b[None, :], 0.0).astype(x.dtype)
+
+
+def sparse_block_elementwise_ref(x, w, mask):
+    """The s-DFG semantics, literally: per output kernel k, accumulate only
+    the multiplications whose weight is nonzero.  Slow, used in tests to pin
+    down that the matmul oracle equals the paper's zero-skipping dataflow."""
+    t, c = x.shape
+    _, k = w.shape
+    out = jnp.zeros((t, k), dtype=jnp.float32)
+    for kk in range(k):
+        acc = jnp.zeros((t,), dtype=jnp.float32)
+        for cc in range(c):
+            acc = acc + jnp.where(
+                mask[cc, kk] != 0, x[:, cc].astype(jnp.float32) * w[cc, kk], 0.0
+            )
+        out = out.at[:, kk].set(acc)
+    return out.astype(x.dtype)

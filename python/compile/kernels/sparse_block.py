@@ -1,0 +1,121 @@
+"""L1 — Pallas kernel for the sparse-block MAC hot-spot.
+
+The streaming CGRA in the paper executes, per loop iteration, one sparse
+block: ``y[k] = sum_c w[c, k] * x[c]`` with zero-weight multiplications
+skipped.  On TPU the analogous hot-spot is a masked (C, K) weight panel kept
+resident in VMEM while activations stream through the MXU in (T_BLK, C)
+tiles — ``BlockSpec`` plays the role the paper's input buses play in time
+(the HBM->VMEM schedule), and the MXU systolic array plays the role of the
+spatial PEA.  See DESIGN.md §Hardware-Adaptation.
+
+The kernel is lowered with ``interpret=True`` everywhere in this repo: the
+CPU PJRT plugin cannot run Mosaic custom-calls, and correctness (vs
+``ref.py``) is the build-time contract.  Real-TPU performance is estimated
+from the VMEM footprint / MXU-utilization analysis in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile along the streaming (spatial-position) dimension.  64 rows of
+# bf16/f32 activations keep the tile MXU-shaped (the MXU is 128x128; a 64-row
+# tile at C<=128 underfills it, but the paper's blocks are tiny — the win is
+# keeping the masked weight panel resident across the whole stream).
+DEFAULT_BLOCK_T = 32
+
+
+def _masked_matmul_kernel(x_ref, w_ref, m_ref, o_ref):
+    """One grid step: o = x_tile @ (w * mask).
+
+    ``w * mask`` is recomputed per tile rather than materialized in HBM: the
+    panel is tiny (<= 64x64) and fusing the mask keeps a single VMEM copy of
+    the weights, mirroring the paper's pre-loading of nonzero weights into
+    PE-local LRFs.
+    """
+    w = w_ref[...] * m_ref[...]
+    o_ref[...] = jnp.dot(
+        x_ref[...], w, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def sparse_block_matmul(x, w, mask, *, block_t=DEFAULT_BLOCK_T, interpret=True):
+    """Streamed sparse-block forward: ``(T, C) @ ((C, K) * mask) -> (T, K)``.
+
+    Args:
+      x: ``(T, C)`` activations — T streaming positions (the CGRA's loop
+        iterations), C input channels (the block's input readings ``V_R``).
+      w: ``(C, K)`` block weights — K kernels (the block's output writings
+        ``V_W``).
+      mask: ``(C, K)`` 0/1 sparsity pattern (nonzero == a multiplication node
+        in the s-DFG).
+      block_t: tile height along T; T must be divisible by it.
+      interpret: must stay True off-TPU (see module docstring).
+
+    Returns:
+      ``(T, K)`` outputs with the same dtype as ``x``.
+    """
+    t, c = x.shape
+    c2, k = w.shape
+    if c != c2 or mask.shape != w.shape:
+        raise ValueError(f"shape mismatch: x={x.shape} w={w.shape} mask={mask.shape}")
+    if t % block_t != 0:
+        raise ValueError(f"T={t} not divisible by block_t={block_t}")
+    grid = (t // block_t,)
+    return pl.pallas_call(
+        _masked_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, c), lambda i: (i, 0)),
+            # Weight/mask panels are re-fetched per grid step by index-map
+            # (0, 0) — Pallas keeps them VMEM-resident across steps.
+            pl.BlockSpec((c, k), lambda i: (0, 0)),
+            pl.BlockSpec((c, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_t, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, k), x.dtype),
+        interpret=interpret,
+    )(x, w, mask)
+
+
+def _bias_act_kernel(x_ref, b_ref, o_ref):
+    """Fused bias + ReLU epilogue tile."""
+    o_ref[...] = jnp.maximum(x_ref[...] + b_ref[...], 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def bias_relu(x, b, *, block_t=DEFAULT_BLOCK_T, interpret=True):
+    """Fused ``relu(x + b)`` over a ``(T, K)`` stream (layer epilogue)."""
+    t, k = x.shape
+    if b.shape != (k,):
+        raise ValueError(f"bias shape {b.shape} != ({k},)")
+    if t % block_t != 0:
+        raise ValueError(f"T={t} not divisible by block_t={block_t}")
+    return pl.pallas_call(
+        _bias_act_kernel,
+        grid=(t // block_t,),
+        in_specs=[
+            pl.BlockSpec((block_t, k), lambda i: (i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_t, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, k), x.dtype),
+        interpret=interpret,
+    )(x, b)
+
+
+def vmem_bytes(t_blk: int, c: int, k: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one grid step of the MAC kernel.
+
+    x tile + w panel + mask panel + out tile (double-buffered inputs).
+    Used by DESIGN.md's roofline discussion and the perf tests.
+    """
+    x_tile = t_blk * c * dtype_bytes
+    panels = 2 * c * k * dtype_bytes
+    out_tile = t_blk * k * dtype_bytes
+    return 2 * (x_tile + panels) + out_tile

@@ -1,0 +1,104 @@
+"""L2 — JAX model of the compute the streaming CGRA accelerates.
+
+The paper partitions a sparse conv layer into *sparse blocks*; each block
+computes ``K`` output kernels from ``C`` input channels with a 0/1 weight
+mask, streamed over all spatial positions.  This module expresses:
+
+  * ``sparse_block_fwd`` — a single block over a stream of T positions
+    (exactly the s-DFG the rust mapper schedules), built on the L1 Pallas
+    kernel so both lower into one HLO module;
+  * ``conv_layer_fwd`` — a full 3x3 block-sparse conv layer (im2col +
+    blocked masked matmul + fused bias/ReLU) for the end-to-end example;
+  * the AOT entry points used by ``aot.py``.
+
+Everything here is build-time Python; the rust coordinator only ever sees
+the lowered HLO text in ``artifacts/``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.sparse_block import bias_relu, sparse_block_matmul
+
+
+def sparse_block_fwd(x, w, mask):
+    """One sparse block over a stream: ``(T, C) -> (T, K)``."""
+    return sparse_block_matmul(x, w, mask)
+
+
+def im2col(img, kh: int, kw: int):
+    """NCHW image -> (N*H*W, C*kh*kw) patch matrix (SAME zero padding).
+
+    This is the streaming-access transformation: the CGRA's data memories
+    stream patch elements onto the input buses; here it linearizes the same
+    access pattern for the MXU.
+    """
+    n, c, h, w = img.shape
+    ph, pw = kh // 2, kw // 2
+    padded = jnp.pad(img, ((0, 0), (0, 0), (ph, ph), (pw, pw)))
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(padded[:, :, dy : dy + h, dx : dx + w])
+    # (kh*kw, N, C, H, W) -> (N, H, W, C, kh*kw) -> (N*H*W, C*kh*kw)
+    stack = jnp.stack(cols, axis=0)
+    stack = jnp.transpose(stack, (1, 3, 4, 2, 0))
+    return stack.reshape(n * h * w, c * kh * kw)
+
+
+def conv_layer_fwd(img, w, mask, b):
+    """Block-sparse 2D conv layer with fused bias+ReLU.
+
+    Args:
+      img: ``(N, Cin, H, W)`` activations.
+      w: ``(Cin*kh*kw, Cout)`` im2col-flattened weights.
+      mask: same shape 0/1 sparsity pattern.
+      b: ``(Cout,)`` bias.
+
+    Returns:
+      ``(N, Cout, H, W)`` post-ReLU activations.
+    """
+    n, cin, h, wd = img.shape
+    patches = im2col(img, 3, 3)
+    y = sparse_block_matmul(patches, w, mask)
+    y = bias_relu(y, b)
+    cout = w.shape[1]
+    return jnp.transpose(y.reshape(n, h, wd, cout), (0, 3, 1, 2))
+
+
+def conv_layer_ref(img, w, mask, b):
+    """lax-conv reference for ``conv_layer_fwd`` (used in pytest)."""
+    cout = w.shape[1]
+    cin = img.shape[1]
+    wm = (w * mask).reshape(cin, 3, 3, cout)  # matches im2col (c, dy, dx) order
+    wm = jnp.transpose(wm, (3, 0, 1, 2))  # OIHW
+    y = jax.lax.conv_general_dilated(
+        img, wm, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return jnp.maximum(y + b[None, :, None, None], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (shapes fixed at lowering time; see aot.py)
+# ---------------------------------------------------------------------------
+
+def make_block_entry():
+    """Returns fn(x, w, mask) -> (y,) for a sparse block — 1-tuple output,
+    matching the rust loader's ``to_tuple1`` convention."""
+
+    def entry(x, w, mask):
+        return (sparse_block_fwd(x, w, mask),)
+
+    return entry
+
+
+def make_conv_entry():
+    """Returns fn(img, w, mask, b) -> (y,) for a conv layer."""
+
+    def entry(img, w, mask, b):
+        return (conv_layer_fwd(img, w, mask, b),)
+
+    return entry

@@ -1,0 +1,136 @@
+"""L1 correctness: Pallas sparse-block kernel vs pure-jnp oracle.
+
+hypothesis sweeps shapes/dtypes/sparsity; assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    bias_relu_ref,
+    sparse_block_elementwise_ref,
+    sparse_block_matmul_ref,
+)
+from compile.kernels.sparse_block import (
+    bias_relu,
+    sparse_block_matmul,
+    vmem_bytes,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _case(seed, t, c, k, p_zero, dtype):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((t, c)).astype(dtype)
+    w = rng.standard_normal((c, k)).astype(dtype)
+    mask = (rng.random((c, k)) >= p_zero).astype(dtype)
+    return jnp.asarray(x), jnp.asarray(w), jnp.asarray(mask)
+
+
+TOL = {np.float32: 1e-5, np.float16: 2e-2}
+
+
+@pytest.mark.parametrize("t,c,k", [(32, 4, 6), (64, 6, 6), (64, 8, 8), (256, 36, 6), (256, 54, 8)])
+def test_kernel_matches_ref_paper_shapes(t, c, k):
+    """Every AOT variant shape must match the oracle bit-tight."""
+    x, w, mask = _case(0, t, c, k, 0.4, np.float32)
+    got = sparse_block_matmul(x, w, mask)
+    want = sparse_block_matmul_ref(x, w, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    t_blocks=st.integers(1, 4),
+    c=st.integers(1, 40),
+    k=st.integers(1, 24),
+    p_zero=st.floats(0.0, 1.0),
+)
+def test_kernel_matches_ref_hypothesis(seed, t_blocks, c, k, p_zero):
+    """Property: for any shape/sparsity, kernel == oracle."""
+    t = 32 * t_blocks
+    x, w, mask = _case(seed, t, c, k, p_zero, np.float32)
+    got = sparse_block_matmul(x, w, mask)
+    want = sparse_block_matmul_ref(x, w, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kernel_f16_inputs(seed):
+    """Reduced-precision activations still accumulate in f32."""
+    x, w, mask = _case(seed, 32, 8, 8, 0.4, np.float16)
+    got = np.asarray(sparse_block_matmul(x, w, mask), dtype=np.float32)
+    want = np.asarray(sparse_block_matmul_ref(x, w, mask), dtype=np.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_matmul_oracle_equals_sdfg_semantics():
+    """The matmul oracle is exactly the paper's zero-skipping dataflow."""
+    x, w, mask = _case(7, 32, 8, 8, 0.5, np.float32)
+    a = sparse_block_matmul_ref(x, w, mask)
+    b = sparse_block_elementwise_ref(x, w, mask)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_zero_mask_gives_zero_output():
+    x, w, _ = _case(1, 32, 8, 8, 0.0, np.float32)
+    mask = jnp.zeros_like(w)
+    got = sparse_block_matmul(x, w, mask)
+    assert np.all(np.asarray(got) == 0.0)
+
+
+def test_full_mask_equals_dense_matmul():
+    x, w, _ = _case(2, 64, 8, 8, 0.0, np.float32)
+    mask = jnp.ones_like(w)
+    got = sparse_block_matmul(x, w, mask)
+    np.testing.assert_allclose(got, x @ w, rtol=1e-5, atol=1e-5)
+
+
+def test_masked_entries_do_not_contribute():
+    """Poison masked weights with NaN-free huge values; output unchanged."""
+    x, w, mask = _case(3, 32, 6, 6, 0.4, np.float32)
+    w_poison = jnp.where(mask == 0, 1e30, w)
+    a = sparse_block_matmul(x, w, mask)
+    b = sparse_block_matmul(x, w_poison, mask)
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_block_t_variants_agree():
+    x, w, mask = _case(4, 128, 8, 8, 0.4, np.float32)
+    a = sparse_block_matmul(x, w, mask, block_t=32)
+    b = sparse_block_matmul(x, w, mask, block_t=64)
+    c = sparse_block_matmul(x, w, mask, block_t=128)
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(a, c, rtol=1e-6, atol=1e-6)
+
+
+def test_shape_validation():
+    x, w, mask = _case(5, 32, 4, 6, 0.4, np.float32)
+    with pytest.raises(ValueError):
+        sparse_block_matmul(x, w[:, :5], mask)
+    with pytest.raises(ValueError):
+        sparse_block_matmul(x[:31], w, mask)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 16))
+def test_bias_relu_matches_ref(seed, k):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((64, k)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((k,)).astype(np.float32))
+    got = bias_relu(x, b)
+    want = bias_relu_ref(x, b)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    assert np.all(np.asarray(got) >= 0.0)
+
+
+def test_vmem_estimate_under_budget():
+    """Largest paper block's working set must sit far under 16 MiB VMEM."""
+    for t, c, k in [(64, 8, 8), (256, 54, 8)]:
+        assert vmem_bytes(t, c, k) < 1 << 20  # < 1 MiB

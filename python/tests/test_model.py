@@ -1,0 +1,67 @@
+"""L2 correctness: conv layer (im2col + Pallas block matmul + fused epilogue)
+vs jax.lax conv reference; im2col structural properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def _layer_case(seed, n, cin, h, w, cout, p_zero=0.4):
+    rng = np.random.default_rng(seed)
+    img = jnp.asarray(rng.standard_normal((n, cin, h, w)).astype(np.float32))
+    wt = jnp.asarray(rng.standard_normal((cin * 9, cout)).astype(np.float32))
+    mask = jnp.asarray((rng.random((cin * 9, cout)) >= p_zero).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((cout,)).astype(np.float32))
+    return img, wt, mask, b
+
+
+@pytest.mark.parametrize("n,cin,h,w,cout", [(1, 4, 16, 16, 6), (1, 6, 16, 16, 8), (2, 3, 8, 16, 4)])
+def test_conv_layer_matches_lax_ref(n, cin, h, w, cout):
+    img, wt, mask, b = _layer_case(0, n, cin, h, w, cout)
+    got = model.conv_layer_fwd(img, wt, mask, b)
+    want = model.conv_layer_ref(img, wt, mask, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    cin=st.integers(1, 6),
+    cout=st.integers(1, 8),
+    p_zero=st.floats(0.0, 0.9),
+)
+def test_conv_layer_hypothesis(seed, cin, cout, p_zero):
+    img, wt, mask, b = _layer_case(seed, 1, cin, 16, 16, cout, p_zero)
+    got = model.conv_layer_fwd(img, wt, mask, b)
+    want = model.conv_layer_ref(img, wt, mask, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_im2col_shape_and_center_column():
+    img, _, _, _ = _layer_case(1, 2, 3, 8, 8, 4)
+    patches = model.im2col(img, 3, 3)
+    assert patches.shape == (2 * 8 * 8, 3 * 9)
+    # The center tap (dy=1, dx=1) of channel c is the image itself.
+    center = np.asarray(patches).reshape(2, 8, 8, 3, 9)[:, :, :, :, 4]
+    np.testing.assert_allclose(center, np.transpose(np.asarray(img), (0, 2, 3, 1)))
+
+
+def test_im2col_zero_padding_borders():
+    img = jnp.ones((1, 1, 4, 4), dtype=jnp.float32)
+    patches = np.asarray(model.im2col(img, 3, 3)).reshape(4, 4, 9)
+    # Top-left pixel: taps reaching outside the image are zero.
+    assert patches[0, 0, 0] == 0.0 and patches[0, 0, 4] == 1.0
+    # Interior pixel: all 9 taps inside.
+    assert np.all(patches[1, 1, :] == 1.0)
+
+
+def test_sparse_block_fwd_is_kernel():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((64, 8)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((8, 8)).astype(np.float32))
+    mask = jnp.asarray((rng.random((8, 8)) >= 0.4).astype(np.float32))
+    got = model.sparse_block_fwd(x, w, mask)
+    np.testing.assert_allclose(got, x @ (w * mask), rtol=1e-5, atol=1e-5)

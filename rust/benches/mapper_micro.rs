@@ -1,0 +1,79 @@
+//! Micro-benchmarks of every stage of the mapping pipeline plus the
+//! simulator — the profile that drives the §Perf optimization loop in
+//! EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo bench --bench mapper_micro
+//! ```
+
+use sparsemap::arch::StreamingCgra;
+use sparsemap::bind::{bind, conflict, mis, route, BusCostModel};
+use sparsemap::config::Techniques;
+use sparsemap::dfg::analysis::mii;
+use sparsemap::dfg::build::build_sdfg;
+use sparsemap::sched::{baseline, sparsemap as sm_sched};
+use sparsemap::sim::simulate_and_check;
+use sparsemap::sparse::gen::paper_blocks;
+use sparsemap::util::bench::{black_box, BenchConfig, Bencher};
+
+fn main() {
+    let cgra = StreamingCgra::paper_default();
+    let mut b = Bencher::with_config(BenchConfig {
+        warmup_ns: 50_000_000,
+        measure_ns: 300_000_000,
+        samples: 8,
+    });
+
+    // Representative small (block1) and large (block5) workloads.
+    for label in ["block1", "block5"] {
+        let nb = paper_blocks().into_iter().find(|n| n.label == label).unwrap();
+        let (g, _) = build_sdfg(&nb.block);
+        let base = mii(&g, &cgra);
+
+        b.bench(&format!("{label}/build_sdfg"), || {
+            black_box(build_sdfg(&nb.block));
+        });
+        b.bench(&format!("{label}/schedule(sparsemap)"), || {
+            let ii = if label == "block1" { base } else { base + 1 };
+            black_box(sm_sched::schedule_at(&g, &cgra, Techniques::all(), ii).ok());
+        });
+        b.bench(&format!("{label}/schedule(baseline)"), || {
+            black_box(baseline::schedule_at(&g, &cgra, base + 1).ok());
+        });
+
+        // A routable schedule for downstream stages.
+        let s = (base..base + 3)
+            .find_map(|ii| {
+                let s = sm_sched::schedule_at(&g, &cgra, Techniques::all(), ii).ok()?;
+                route::preallocate(&s, &cgra).ok()?;
+                Some(s)
+            })
+            .expect("routable schedule");
+        let plan = route::preallocate(&s, &cgra).unwrap();
+        b.bench(&format!("{label}/route_preallocate"), || {
+            black_box(route::preallocate(&s, &cgra).ok());
+        });
+        b.bench(&format!("{label}/conflict_graph"), || {
+            black_box(conflict::build(&s, &cgra, &plan));
+        });
+        let cg = conflict::build(&s, &cgra, &plan);
+        let routes: Vec<_> = (0..s.g.edges().len()).map(|i| plan.route(i)).collect();
+        b.bench(&format!("{label}/sbts_solve"), || {
+            let mut cost = BusCostModel::new(&s, &cg, &routes);
+            black_box(mis::solve_with(&cg, 30_000, 42, &mut cost));
+        });
+        // The straight-line schedule above may not bind for the densest
+        // blocks; bench the simulator on the mapper's (phase-④) result.
+        let mapping = sparsemap::mapper::map_block(
+            &nb.block,
+            &cgra,
+            &sparsemap::mapper::MapperOptions::sparsemap(),
+        )
+        .expect("map_block")
+        .mapping;
+        let _ = bind; // bind() itself is covered via sbts_solve above
+        b.bench(&format!("{label}/simulate_64it"), || {
+            black_box(simulate_and_check(&mapping, &nb.block, &cgra, 64, 7).unwrap());
+        });
+    }
+}

@@ -1,0 +1,77 @@
+//! Bench: coordinator serving throughput — the end-to-end request path
+//! (mapping cache + CGRA simulation) under a mixed-block request stream,
+//! across worker counts. This is the system-level headline the paper's
+//! throughput claim translates to on this testbed.
+//!
+//! ```bash
+//! cargo bench --bench serving_throughput
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use sparsemap::config::SparsemapConfig;
+use sparsemap::coordinator::{Coordinator, InferRequest};
+use sparsemap::sparse::gen::paper_blocks;
+use sparsemap::util::rng::Pcg64;
+
+fn main() {
+    let blocks: Vec<Arc<_>> = paper_blocks()
+        .into_iter()
+        .take(4)
+        .map(|nb| Arc::new(nb.block))
+        .collect();
+
+    for workers in [1usize, 2, 4, 8] {
+        let mut cfg = SparsemapConfig::default();
+        cfg.workers = workers;
+        cfg.queue_depth = 32;
+        let coord = Coordinator::new(&cfg);
+        let mut rng = Pcg64::seeded(1);
+
+        // Warm the mapping cache (compile path off the measurement).
+        for (id, block) in blocks.iter().enumerate() {
+            let xs = stream(block, 4, id as u64);
+            coord
+                .submit(InferRequest { id: id as u64, block: Arc::clone(block), xs })
+                .unwrap();
+        }
+        let _ = coord.collect(blocks.len());
+
+        let n = 200u64;
+        let iters = 32;
+        let t0 = Instant::now();
+        let mut submitted = 0u64;
+        let mut collected = 0usize;
+        for id in 0..n {
+            let block = Arc::clone(&blocks[rng.index(blocks.len())]);
+            let xs = stream(&block, iters, id);
+            coord.submit(InferRequest { id, block, xs }).unwrap();
+            submitted += 1;
+            // Drain opportunistically to keep the pipeline full.
+            if submitted % 16 == 0 {
+                collected += coord.collect(8).len();
+            }
+        }
+        collected += coord.collect(n as usize - collected).len();
+        let wall = t0.elapsed();
+        let m = coord.metrics.snapshot();
+        println!(
+            "workers={workers}: {n} requests ({} iterations each) in {wall:?} → {:.0} req/s, \
+             {:.2} Miter/s, mean latency {:.2} ms (cache hits {})",
+            iters,
+            n as f64 / wall.as_secs_f64(),
+            (n as f64 * iters as f64) / wall.as_secs_f64() / 1e6,
+            m.total_latency_ns as f64 / 1e6 / n as f64,
+            m.cache_hits,
+        );
+        assert_eq!(collected, n as usize);
+    }
+}
+
+fn stream(block: &sparsemap::sparse::SparseBlock, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..n)
+        .map(|_| (0..block.c).map(|_| rng.next_normal() as f32).collect())
+        .collect()
+}

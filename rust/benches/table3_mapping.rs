@@ -1,0 +1,51 @@
+//! Bench: regenerates the paper's **Table 2** (block features) and
+//! **Table 3** (mapping comparison, baselines [6][12] vs SparseMap) and
+//! times the full mapping pipeline per block.
+//!
+//! ```bash
+//! cargo bench --bench table3_mapping
+//! ```
+//!
+//! Paper reference rows (Table 3): SparseMap reaches the MII in the first
+//! mapping attempt for every block; the baselines fail "block5"/"block7"
+//! outright and pay 40 COPs / 63 MCIDs vs SparseMap's 3 / 34.
+
+use sparsemap::arch::StreamingCgra;
+use sparsemap::mapper::{map_block, MapperOptions};
+use sparsemap::report;
+use sparsemap::sparse::gen::paper_blocks;
+use sparsemap::util::bench::{BenchConfig, Bencher};
+
+fn main() {
+    let cgra = StreamingCgra::paper_default();
+
+    println!("== Table 2: block features ==\n{}\n", report::table2());
+
+    println!("== Table 3: mapping result comparison ==");
+    let (table, base_rows, sm_rows) = report::table3(&cgra);
+    println!("{table}\n");
+    let (bc, bm) = report::totals(&base_rows);
+    let (sc, sm) = report::totals(&sm_rows);
+    println!(
+        "totals (first attempts): baseline |C|={bc} |M|={bm} → sparsemap |C|={sc} |M|={sm} \
+         (COPs ↓{:.1}%, MCIDs ↓{:.1}%)",
+        100.0 * (1.0 - sc as f64 / bc.max(1) as f64),
+        100.0 * (1.0 - sm as f64 / bm.max(1) as f64),
+    );
+    println!("paper: COPs 40 → 3 (↓92.5%), MCIDs 63 → 34 (↓46.0%)\n");
+
+    // Timing: end-to-end map_block per paper block (the compile-path hot
+    // loop of the coordinator).
+    println!("== mapping latency (schedule + route + CG + SBTS + verify) ==");
+    let mut b = Bencher::with_config(BenchConfig {
+        warmup_ns: 10_000_000,
+        measure_ns: 100_000_000,
+        samples: 3,
+    });
+    let opts = MapperOptions::sparsemap();
+    for nb in paper_blocks() {
+        b.bench(&format!("map/{}", nb.label), || {
+            let _ = map_block(&nb.block, &cgra, &opts);
+        });
+    }
+}

@@ -1,0 +1,26 @@
+//! Bench: regenerates the paper's **Table 4** — the ablation of AIBA,
+//! Mul-CI and RID-AT over the seven evaluation blocks.
+//!
+//! ```bash
+//! cargo bench --bench table4_ablation
+//! ```
+//!
+//! Paper reference: Mul-CI removes nearly all COPs; RID-AT then cuts the
+//! remaining MCIDs roughly in half (e.g. block5: 23 → 13 → 8).
+
+use sparsemap::arch::StreamingCgra;
+use sparsemap::report;
+
+fn main() {
+    let cgra = StreamingCgra::paper_default();
+    println!("== Table 4: impact of technique combinations ==");
+    let (table, rows) = report::table4(&cgra);
+    println!("{table}\n");
+    let names = ["AIBA", "AIBA+Mul-CI", "AIBA+Mul-CI+RID-AT"];
+    for (name, rows) in names.iter().zip(&rows) {
+        let cops: usize = rows.iter().filter_map(|r| r.cops0).sum();
+        let mcids: usize = rows.iter().filter_map(|r| r.mcids0).sum();
+        let fails = rows.iter().filter(|r| r.final_ii.is_none()).count();
+        println!("{name:22}: total |C|={cops:3} |M|={mcids:3} failed blocks={fails}");
+    }
+}

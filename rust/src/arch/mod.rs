@@ -1,0 +1,200 @@
+//! Streaming CGRA architecture model (paper §1, Fig. 1).
+//!
+//! The fabric is an `N × M` PE array (PEA) fed by `M` **input buses** (one
+//! per column — a bus fans out to the `N` PEs of its column) and drained by
+//! `N` **output buses** (one per row), a crossbar between the data memories
+//! and the input buses (which provides the multi-cast used by Mul-CI), a
+//! shared global register file (GRF) and per-PE local register files (LRF).
+//! PEs have **no load/store units**: all I/O data arrives on buses at
+//! compiler-chosen times, which is exactly why the mapper must manage I/O
+//! data explicitly (COPs / MCIDs).
+//!
+//! The same row/column buses carry internal (PE→PE) traffic, so I/O
+//! allocation and internal routing contend — conflict rule R2(2) in §4.2.
+
+pub mod tec;
+
+pub use tec::TimeExtendedCgra;
+
+/// A PE coordinate: row `i` in `0..n`, column `j` in `0..m`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PeId {
+    pub row: usize,
+    pub col: usize,
+}
+
+impl std::fmt::Display for PeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "pe({},{})", self.row, self.col)
+    }
+}
+
+/// Streaming CGRA configuration (the paper evaluates N = M = 4, LRF 8,
+/// GRF 8).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StreamingCgra {
+    /// PEA rows == number of output buses (`N` in the paper).
+    pub n: usize,
+    /// PEA columns == number of input buses (`M` in the paper).
+    pub m: usize,
+    /// Per-PE local register file capacity.
+    pub lrf_capacity: usize,
+    /// Global register file capacity (shared, crossbar-reachable).
+    pub grf_capacity: usize,
+    /// GRF write ports per cycle. The paper's Fig. 3 discussion ("routing
+    /// via GRF ... is able for 1 MCID at most" per modulo slot) pins this
+    /// to 1.
+    pub grf_write_ports: usize,
+}
+
+impl StreamingCgra {
+    /// The paper's evaluation target: 4×4 PEA, LRF 8, GRF 8.
+    pub fn paper_default() -> Self {
+        StreamingCgra { n: 4, m: 4, lrf_capacity: 8, grf_capacity: 8, grf_write_ports: 1 }
+    }
+
+    /// Custom geometry (used by tests and the config system).
+    pub fn new(n: usize, m: usize, lrf: usize, grf: usize) -> Self {
+        assert!(n > 0 && m > 0, "degenerate PEA");
+        StreamingCgra { n, m, lrf_capacity: lrf, grf_capacity: grf, grf_write_ports: 1 }
+    }
+
+    /// Total PEs (`N × M` — the per-modulo-slot operation capacity).
+    pub fn num_pes(&self) -> usize {
+        self.n * self.m
+    }
+
+    /// Number of input buses (`M`).
+    pub fn num_input_buses(&self) -> usize {
+        self.m
+    }
+
+    /// Number of output buses (`N`).
+    pub fn num_output_buses(&self) -> usize {
+        self.n
+    }
+
+    /// PEs directly reachable from one input bus (its column): `N`.
+    pub fn input_bus_fanout(&self) -> usize {
+        self.n
+    }
+
+    /// Iterate all PE coordinates row-major.
+    pub fn pes(&self) -> impl Iterator<Item = PeId> + '_ {
+        (0..self.n).flat_map(move |row| (0..self.m).map(move |col| PeId { row, col }))
+    }
+
+    /// Flat index of a PE (row-major), for table lookups.
+    pub fn pe_index(&self, pe: PeId) -> usize {
+        debug_assert!(pe.row < self.n && pe.col < self.m);
+        pe.row * self.m + pe.col
+    }
+
+    /// Inverse of [`Self::pe_index`].
+    pub fn pe_at(&self, idx: usize) -> PeId {
+        debug_assert!(idx < self.num_pes());
+        PeId { row: idx / self.m, col: idx % self.m }
+    }
+
+    /// PEs fed by input bus `ibus` (the whole column).
+    pub fn input_bus_pes(&self, ibus: usize) -> impl Iterator<Item = PeId> + '_ {
+        debug_assert!(ibus < self.m);
+        (0..self.n).map(move |row| PeId { row, col: ibus })
+    }
+
+    /// PEs drained by output bus `obus` (the whole row).
+    pub fn output_bus_pes(&self, obus: usize) -> impl Iterator<Item = PeId> + '_ {
+        debug_assert!(obus < self.n);
+        (0..self.m).map(move |col| PeId { row: obus, col })
+    }
+
+    /// Whether two PEs can exchange a value over one bus hop (same row or
+    /// same column).
+    pub fn bus_reachable(&self, a: PeId, b: PeId) -> bool {
+        a.row == b.row || a.col == b.col
+    }
+
+    /// Whether two PEs are mesh neighbours (dedicated point-to-point link,
+    /// no contention — the classic CGRA nearest-neighbour interconnect that
+    /// BusMap's row/column buses augment).
+    pub fn mesh_adjacent(&self, a: PeId, b: PeId) -> bool {
+        let dr = a.row.abs_diff(b.row);
+        let dc = a.col.abs_diff(b.col);
+        dr + dc == 1
+    }
+
+    /// Minimum initiation interval for an s-DFG with the given node counts
+    /// (§4.1): `max(⌈|V_OP|/(N·M)⌉, ⌈|V_R|/M⌉, ⌈|V_W|/N⌉)`.
+    pub fn mii(&self, n_ops: usize, n_reads: usize, n_writes: usize) -> usize {
+        let by_pe = n_ops.div_ceil(self.num_pes());
+        let by_in = n_reads.div_ceil(self.m);
+        let by_out = n_writes.div_ceil(self.n);
+        by_pe.max(by_in).max(by_out).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_geometry() {
+        let c = StreamingCgra::paper_default();
+        assert_eq!(c.num_pes(), 16);
+        assert_eq!(c.num_input_buses(), 4);
+        assert_eq!(c.num_output_buses(), 4);
+        assert_eq!(c.input_bus_fanout(), 4);
+        assert_eq!(c.lrf_capacity, 8);
+        assert_eq!(c.grf_capacity, 8);
+    }
+
+    #[test]
+    fn pe_index_roundtrip() {
+        let c = StreamingCgra::new(3, 5, 8, 8);
+        for (i, pe) in c.pes().enumerate() {
+            assert_eq!(c.pe_index(pe), i);
+            assert_eq!(c.pe_at(i), pe);
+        }
+        assert_eq!(c.pes().count(), 15);
+    }
+
+    #[test]
+    fn bus_topology() {
+        let c = StreamingCgra::paper_default();
+        let col2: Vec<PeId> = c.input_bus_pes(2).collect();
+        assert_eq!(col2.len(), 4);
+        assert!(col2.iter().all(|pe| pe.col == 2));
+        let row1: Vec<PeId> = c.output_bus_pes(1).collect();
+        assert_eq!(row1.len(), 4);
+        assert!(row1.iter().all(|pe| pe.row == 1));
+    }
+
+    #[test]
+    fn reachability_is_row_or_col() {
+        let c = StreamingCgra::paper_default();
+        let a = PeId { row: 1, col: 2 };
+        assert!(c.bus_reachable(a, PeId { row: 1, col: 0 }));
+        assert!(c.bus_reachable(a, PeId { row: 3, col: 2 }));
+        assert!(!c.bus_reachable(a, PeId { row: 0, col: 0 }));
+        assert!(c.bus_reachable(a, a));
+    }
+
+    #[test]
+    fn mii_matches_paper_blocks() {
+        // Table 2 + §4.1 formula: block1 (26,4,6) → 2 … block7 (58,8,8) → 4.
+        let c = StreamingCgra::paper_default();
+        assert_eq!(c.mii(26, 4, 6), 2);
+        assert_eq!(c.mii(26, 4, 6), 2);
+        assert_eq!(c.mii(36, 6, 6), 3);
+        assert_eq!(c.mii(32, 4, 6), 2);
+        assert_eq!(c.mii(58, 8, 8), 4);
+        assert_eq!(c.mii(40, 8, 8), 3);
+        assert_eq!(c.mii(58, 8, 8), 4);
+    }
+
+    #[test]
+    fn mii_never_zero() {
+        let c = StreamingCgra::paper_default();
+        assert_eq!(c.mii(0, 0, 0), 1);
+    }
+}

@@ -1,0 +1,168 @@
+//! Time-extended CGRA (TEC, §3.1 def. 4): the streaming CGRA replicated
+//! over `0..II` modulo time layers, with directed edges from each resource
+//! at layer `t` to the connected resources at layer `(t + 1) % II`.
+//!
+//! The binder does not materialize TEC edges as an explicit graph — the
+//! conflict rules consult [`TimeExtendedCgra::connects`] — but the type also
+//! exposes the explicit edge list for tests and for the paper-faithful
+//! definition.
+
+use crate::arch::{PeId, StreamingCgra};
+
+/// A resource node within one time layer of the TEC.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Resource {
+    Pe(PeId),
+    /// Input bus `j` (feeds column `j`).
+    InputBus(usize),
+    /// Output bus `i` (drains row `i`).
+    OutputBus(usize),
+    /// The shared global register file.
+    Grf,
+}
+
+/// A resource replicated at a modulo time layer (`v^m` in the paper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TecNode {
+    pub resource: Resource,
+    pub layer: usize,
+}
+
+/// The time-extended CGRA.
+#[derive(Clone, Debug)]
+pub struct TimeExtendedCgra {
+    pub cgra: StreamingCgra,
+    pub ii: usize,
+}
+
+impl TimeExtendedCgra {
+    pub fn new(cgra: StreamingCgra, ii: usize) -> Self {
+        assert!(ii >= 1, "II must be >= 1");
+        TimeExtendedCgra { cgra, ii }
+    }
+
+    /// Successor layer with wraparound (`m2 = m1 + 1`, or `0` from `II-1`).
+    pub fn next_layer(&self, layer: usize) -> usize {
+        (layer + 1) % self.ii
+    }
+
+    /// All resource nodes at one layer.
+    pub fn layer_nodes(&self, layer: usize) -> Vec<TecNode> {
+        assert!(layer < self.ii);
+        let mut v: Vec<TecNode> = Vec::new();
+        for pe in self.cgra.pes() {
+            v.push(TecNode { resource: Resource::Pe(pe), layer });
+        }
+        for j in 0..self.cgra.m {
+            v.push(TecNode { resource: Resource::InputBus(j), layer });
+        }
+        for i in 0..self.cgra.n {
+            v.push(TecNode { resource: Resource::OutputBus(i), layer });
+        }
+        v.push(TecNode { resource: Resource::Grf, layer });
+        v
+    }
+
+    /// Total node count (`(N·M + M + N + 1) · II`).
+    pub fn num_nodes(&self) -> usize {
+        (self.cgra.num_pes() + self.cgra.m + self.cgra.n + 1) * self.ii
+    }
+
+    /// Whether data produced on `from.resource` during `from.layer` can be
+    /// consumed on `to.resource` during `to.layer` (single-hop, one cycle):
+    /// `to.layer` must be the wraparound successor of `from.layer`, and the
+    /// physical resources must be connected:
+    /// * input bus `j` → PEs of column `j` (operand delivery);
+    /// * PE → PE in the same row or column (internal bus hop);
+    /// * PE (row `i`) → output bus `i` (result write-out);
+    /// * PE ↔ GRF via the crossbar (MCID routing);
+    /// * PE → same PE (value held in its LRF).
+    pub fn connects(&self, from: TecNode, to: TecNode) -> bool {
+        if to.layer != self.next_layer(from.layer) {
+            return false;
+        }
+        match (from.resource, to.resource) {
+            (Resource::InputBus(j), Resource::Pe(pe)) => pe.col == j,
+            (Resource::Pe(a), Resource::Pe(b)) => self.cgra.bus_reachable(a, b),
+            (Resource::Pe(pe), Resource::OutputBus(i)) => pe.row == i,
+            (Resource::Pe(_), Resource::Grf) => true,
+            (Resource::Grf, Resource::Pe(_)) => true,
+            _ => false,
+        }
+    }
+
+    /// Explicit directed edge list (paper-faithful `E_T`; tests only — the
+    /// hot path uses [`Self::connects`]).
+    pub fn edges(&self) -> Vec<(TecNode, TecNode)> {
+        let mut out = Vec::new();
+        for layer in 0..self.ii {
+            let next = self.next_layer(layer);
+            for a in self.layer_nodes(layer) {
+                for b in self.layer_nodes(next) {
+                    if self.connects(a, b) {
+                        out.push((a, b));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tec(ii: usize) -> TimeExtendedCgra {
+        TimeExtendedCgra::new(StreamingCgra::paper_default(), ii)
+    }
+
+    #[test]
+    fn layer_wraparound() {
+        let t = tec(3);
+        assert_eq!(t.next_layer(0), 1);
+        assert_eq!(t.next_layer(2), 0);
+    }
+
+    #[test]
+    fn node_count() {
+        let t = tec(2);
+        assert_eq!(t.num_nodes(), (16 + 4 + 4 + 1) * 2);
+        assert_eq!(t.layer_nodes(0).len(), 25);
+    }
+
+    #[test]
+    fn connectivity_rules() {
+        let t = tec(2);
+        let pe12 = TecNode { resource: Resource::Pe(PeId { row: 1, col: 2 }), layer: 0 };
+        let pe32 = TecNode { resource: Resource::Pe(PeId { row: 3, col: 2 }), layer: 1 };
+        let pe00 = TecNode { resource: Resource::Pe(PeId { row: 0, col: 0 }), layer: 1 };
+        assert!(t.connects(pe12, pe32), "same column, next layer");
+        assert!(!t.connects(pe12, pe00), "diagonal unreachable in one hop");
+
+        let ib2 = TecNode { resource: Resource::InputBus(2), layer: 0 };
+        assert!(t.connects(ib2, TecNode { resource: Resource::Pe(PeId { row: 0, col: 2 }), layer: 1 }));
+        assert!(!t.connects(ib2, TecNode { resource: Resource::Pe(PeId { row: 0, col: 1 }), layer: 1 }));
+
+        let ob1 = TecNode { resource: Resource::OutputBus(1), layer: 1 };
+        assert!(t.connects(TecNode { resource: Resource::Pe(PeId { row: 1, col: 3 }), layer: 0 }, ob1));
+        assert!(!t.connects(TecNode { resource: Resource::Pe(PeId { row: 2, col: 3 }), layer: 0 }, ob1));
+
+        // Same layer never connects.
+        assert!(!t.connects(pe12, TecNode { resource: Resource::Pe(PeId { row: 3, col: 2 }), layer: 0 }));
+    }
+
+    #[test]
+    fn edges_match_connects() {
+        let t = tec(2);
+        let edges = t.edges();
+        assert!(!edges.is_empty());
+        assert!(edges.iter().all(|&(a, b)| t.connects(a, b)));
+        // Every PE reaches the GRF each layer: 16 PEs * 2 layers edges to GRF.
+        let grf_in = edges
+            .iter()
+            .filter(|(_, b)| matches!(b.resource, Resource::Grf))
+            .count();
+        assert_eq!(grf_in, 32);
+    }
+}

@@ -1,0 +1,258 @@
+//! Conflict-graph construction (paper §4.2).
+//!
+//! Vertices (`V_CG`):
+//! * `(r^m, ibus_i^m)` — input reading `r` on input bus `i`;
+//! * `(w^m, obus_j^m)` — output writing `w` on output bus `j`;
+//! * `(pe^m, op^m)` — PE operation on a PE. The BusMap quadruple's
+//!   `bus_x/bus_y` components are *derived* from the chosen placements
+//!   (canonical two-hop routing: producer's row bus → junction →
+//!   consumer's column bus) and checked by [`crate::bind::Mapping::verify`]
+//!   after the MIS solve — binding retries with a fresh seed if a bus
+//!   collision survives, which is rare because a 4×4 PEA offers 8 buses
+//!   per slot.
+//!
+//! Edges are the hard resource conflicts: R1 (I/O bus exclusiveness),
+//! R2(1) (readers sit in their bus's column / writers' producers in their
+//! bus's row), PE exclusiveness per modulo slot, and LRF pinning of
+//! same-PE MCID consumers.
+
+use crate::arch::{PeId, StreamingCgra};
+use crate::bind::route::RoutePlan;
+use crate::dfg::{EdgeKind, NodeId};
+use crate::sched::ScheduledSDfg;
+use crate::util::BitSet;
+
+/// One binding candidate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Candidate {
+    /// Reading `node` allocated to input bus `ibus`.
+    Read { node: NodeId, ibus: usize },
+    /// Writing `node` allocated to output bus `obus`.
+    Write { node: NodeId, obus: usize },
+    /// PE op `node` on `pe`.
+    Op { node: NodeId, pe: PeId },
+}
+
+impl Candidate {
+    pub fn node(&self) -> NodeId {
+        match *self {
+            Candidate::Read { node, .. }
+            | Candidate::Write { node, .. }
+            | Candidate::Op { node, .. } => node,
+        }
+    }
+}
+
+/// The conflict graph: candidates + bitset adjacency.
+pub struct ConflictGraph {
+    pub candidates: Vec<Candidate>,
+    /// Adjacency as bitsets over candidate indices.
+    pub adj: Vec<BitSet>,
+    /// Candidate indices per s-DFG node.
+    pub of_node: Vec<Vec<usize>>,
+    /// Number of s-DFG nodes (the MIS target size).
+    pub num_nodes: usize,
+}
+
+impl ConflictGraph {
+    pub fn num_candidates(&self) -> usize {
+        self.candidates.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.adj.iter().map(|b| b.len()).sum::<usize>() / 2
+    }
+}
+
+/// Build the conflict graph for a scheduled s-DFG + route plan.
+pub fn build(s: &ScheduledSDfg, cgra: &StreamingCgra, _plan: &RoutePlan) -> ConflictGraph {
+    let g = &s.g;
+    let n_nodes = g.len();
+
+    // ---- candidates -------------------------------------------------------
+    let mut candidates = Vec::new();
+    let mut of_node: Vec<Vec<usize>> = vec![Vec::new(); n_nodes];
+    for v in g.nodes() {
+        match g.kind(v) {
+            k if k.is_read() => {
+                for ibus in 0..cgra.m {
+                    of_node[v].push(candidates.len());
+                    candidates.push(Candidate::Read { node: v, ibus });
+                }
+            }
+            k if k.is_write() => {
+                for obus in 0..cgra.n {
+                    of_node[v].push(candidates.len());
+                    candidates.push(Candidate::Write { node: v, obus });
+                }
+            }
+            _ => {
+                for pe in cgra.pes() {
+                    of_node[v].push(candidates.len());
+                    candidates.push(Candidate::Op { node: v, pe });
+                }
+            }
+        }
+    }
+
+    // ---- edges ------------------------------------------------------------
+    let nc = candidates.len();
+    let mut adj: Vec<BitSet> = (0..nc).map(|_| BitSet::new(nc)).collect();
+
+    let input_src = |op: NodeId| -> Option<NodeId> {
+        g.in_edges(op)
+            .find(|(_, e)| e.kind == EdgeKind::Input)
+            .map(|(_, e)| e.src)
+    };
+    let output_producer = |w: NodeId| -> NodeId {
+        g.predecessors(w).next().expect("write has a producer")
+    };
+
+    for a in 0..nc {
+        for b in (a + 1)..nc {
+            let conflict = {
+                use Candidate::*;
+                let (ca, cb) = (&candidates[a], &candidates[b]);
+                if ca.node() == cb.node() {
+                    true // pick-one clique
+                } else {
+                    let slot = |v: NodeId| s.m(v);
+                    match (*ca, *cb) {
+                        // R1: I/O bus exclusiveness.
+                        (Read { node: r1, ibus: i1 }, Read { node: r2, ibus: i2 }) => {
+                            i1 == i2 && slot(r1) == slot(r2)
+                        }
+                        (Write { node: w1, obus: o1 }, Write { node: w2, obus: o2 }) => {
+                            o1 == o2 && slot(w1) == slot(w2)
+                        }
+                        (Read { .. }, Write { .. }) | (Write { .. }, Read { .. }) => false,
+                        // R2(1): consumers of a reading sit in its column.
+                        (Read { node: r, ibus }, Op { node: op, pe })
+                        | (Op { node: op, pe }, Read { node: r, ibus }) => {
+                            input_src(op) == Some(r) && pe.col != ibus
+                        }
+                        // R2(1): the producer of a writing sits in its row.
+                        (Write { node: w, obus }, Op { node: op, pe })
+                        | (Op { node: op, pe }, Write { node: w, obus }) => {
+                            output_producer(w) == op && pe.row != obus
+                        }
+                        (Op { node: v1, pe: p1 }, Op { node: v2, pe: p2 }) => {
+                            // One PE, one op per modulo slot.
+                            p1 == p2 && slot(v1) == slot(v2)
+                        }
+                    }
+                }
+            };
+            if conflict {
+                adj[a].insert(b);
+                adj[b].insert(a);
+            }
+        }
+    }
+
+    ConflictGraph { candidates, adj, of_node, num_nodes: n_nodes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bind::route::preallocate;
+    use crate::config::Techniques;
+    use crate::dfg::analysis::mii;
+    use crate::dfg::build::build_sdfg;
+    use crate::dfg::NodeKind;
+    use crate::sched::sparsemap::schedule_at;
+    use crate::sparse::gen::paper_blocks;
+
+    fn cg_for(label_idx: usize, ii_extra: usize) -> (ScheduledSDfg, ConflictGraph) {
+        let cgra = StreamingCgra::paper_default();
+        let nb = &paper_blocks()[label_idx];
+        let (g, _) = build_sdfg(&nb.block);
+        let s = schedule_at(&g, &cgra, Techniques::all(), mii(&g, &cgra) + ii_extra).unwrap();
+        let plan = preallocate(&s, &cgra).unwrap();
+        let cg = build(&s, &cgra, &plan);
+        (s, cg)
+    }
+
+    #[test]
+    fn candidate_counts() {
+        let (s, cg) = cg_for(0, 0);
+        for v in s.g.nodes() {
+            let k = cg.of_node[v].len();
+            match s.g.kind(v) {
+                NodeKind::Read { .. } | NodeKind::Write { .. } => assert_eq!(k, 4),
+                _ => assert_eq!(k, 16),
+            }
+        }
+    }
+
+    #[test]
+    fn same_node_candidates_conflict() {
+        let (_, cg) = cg_for(1, 0);
+        for v in 0..cg.of_node.len() {
+            let c = &cg.of_node[v];
+            for i in 0..c.len() {
+                for j in (i + 1)..c.len() {
+                    assert!(cg.adj[c[i]].contains(c[j]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn r1_same_bus_same_slot_conflicts() {
+        let (s, cg) = cg_for(0, 0);
+        for (i, ca) in cg.candidates.iter().enumerate() {
+            if let Candidate::Read { node: r1, ibus: 0 } = *ca {
+                for (j, cb) in cg.candidates.iter().enumerate() {
+                    if let Candidate::Read { node: r2, ibus: 0 } = *cb {
+                        if r1 != r2 && s.m(r1) == s.m(r2) {
+                            assert!(cg.adj[i].contains(j), "{r1} vs {r2} on ibus0");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn input_consumer_must_be_in_bus_column() {
+        let (s, cg) = cg_for(2, 0);
+        for e in s.g.edges() {
+            if e.kind != EdgeKind::Input {
+                continue;
+            }
+            if !matches!(s.g.kind(e.dst), NodeKind::Mul { .. }) {
+                continue;
+            }
+            let rc = cg.of_node[e.src].clone();
+            let oc = cg.of_node[e.dst].clone();
+            for &i in &rc {
+                let Candidate::Read { ibus, .. } = cg.candidates[i] else { unreachable!() };
+                for &j in &oc {
+                    let Candidate::Op { pe, .. } = cg.candidates[j] else { unreachable!() };
+                    if pe.col != ibus {
+                        assert!(cg.adj[i].contains(j));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn graph_sizes_are_sane() {
+        let (s, cg) = cg_for(4, 1); // block5
+        assert_eq!(cg.num_nodes, s.g.len());
+        // reads*4 + writes*4 + ops*16.
+        let want: usize = s
+            .g
+            .nodes()
+            .map(|v| match s.g.kind(v) {
+                NodeKind::Read { .. } | NodeKind::Write { .. } => 4,
+                _ => 16,
+            })
+            .sum();
+        assert_eq!(cg.num_candidates(), want);
+        assert!(cg.num_edges() > 0);
+    }
+}

@@ -1,0 +1,331 @@
+//! SBTS-style tabu/local search for the binding problem (Jin & Hao [24],
+//! as used by the paper's binding phase §4.2).
+//!
+//! The conflict graph has structure the generic MIS problem lacks:
+//! candidates of one s-DFG node form a clique, so an independent set holds
+//! at most one candidate per node and the optimum is exactly `|V_D|`. The
+//! solver therefore works on *assignments* (one candidate per node, always)
+//! and minimizes `hard_conflicts · K + secondary_cost` — the assignment
+//! view of SBTS's (1, k)-swap neighborhood, where re-assigning a node
+//! inserts one vertex and implicitly evicts every conflicting sibling
+//! choice. The secondary cost hook carries the derived-bus-collision count
+//! (see `crate::bind::BusCostModel`), so routing quality is optimized in
+//! the same search instead of a post-hoc repair.
+
+use crate::bind::conflict::ConflictGraph;
+use crate::util::rng::Pcg64;
+use crate::util::BitSet;
+
+/// Secondary (soft) objective evaluated incrementally during the search.
+pub trait SecondaryCost {
+    /// (Re)initialize from a full assignment.
+    fn reset(&mut self, assign: &[usize]);
+    /// Remove node `v`'s contribution (its incident claims), given the
+    /// current assignment.
+    fn detach(&mut self, v: usize, assign: &[usize]);
+    /// Add node `v`'s contribution back.
+    fn attach(&mut self, v: usize, assign: &[usize]);
+    /// Current total cost.
+    fn total(&self) -> usize;
+    /// Nodes currently contributing to the cost (move candidates once the
+    /// hard constraints are satisfied).
+    fn hot_nodes(&self, assign: &[usize]) -> Vec<usize>;
+}
+
+/// A no-op secondary cost (pure MIS).
+pub struct NoCost;
+
+impl SecondaryCost for NoCost {
+    fn reset(&mut self, _: &[usize]) {}
+    fn detach(&mut self, _: usize, _: &[usize]) {}
+    fn attach(&mut self, _: usize, _: &[usize]) {}
+    fn total(&self) -> usize {
+        0
+    }
+    fn hot_nodes(&self, _: &[usize]) -> Vec<usize> {
+        vec![]
+    }
+}
+
+/// Result of a solve.
+#[derive(Clone, Debug)]
+pub struct MisResult {
+    /// Best assignment's conflict-free subset (all nodes when the solve
+    /// fully succeeded — check `size() == cg.num_nodes`).
+    pub chosen: Vec<usize>,
+    /// The full best assignment (one candidate per node), conflicts and
+    /// all — what `chosen` was extracted from.
+    pub assignment: Vec<usize>,
+    /// Whether both hard and secondary objectives reached zero.
+    pub clean: bool,
+    /// Iterations actually spent.
+    pub iterations: usize,
+}
+
+impl MisResult {
+    pub fn size(&self) -> usize {
+        self.chosen.len()
+    }
+}
+
+/// Solve MIS (`cost = NoCost`) or the full binding problem with an
+/// iteration budget. Deterministic for a fixed seed.
+pub fn solve(cg: &ConflictGraph, max_iterations: usize, seed: u64) -> MisResult {
+    solve_with(cg, max_iterations, seed, &mut NoCost)
+}
+
+pub fn solve_with(
+    cg: &ConflictGraph,
+    max_iterations: usize,
+    seed: u64,
+    cost: &mut dyn SecondaryCost,
+) -> MisResult {
+    let nc = cg.num_candidates();
+    let n_nodes = cg.of_node.len();
+    let mut rng = Pcg64::seeded(seed);
+
+    // ---- greedy init: nodes with fewest candidates first.
+    let mut order: Vec<usize> = (0..n_nodes).collect();
+    order.sort_by_key(|&v| cg.of_node[v].len());
+    let mut assign: Vec<usize> = vec![usize::MAX; n_nodes];
+    let mut chosen = BitSet::new(nc);
+    for &v in &order {
+        let best = cg.of_node[v]
+            .iter()
+            .copied()
+            .min_by_key(|&c| (cg.adj[c].intersection_len(&chosen), cg.adj[c].len()))
+            .expect("every node has candidates");
+        assign[v] = best;
+        chosen.insert(best);
+    }
+    cost.reset(&assign);
+
+    let mut conf: Vec<usize> = (0..n_nodes)
+        .map(|v| cg.adj[assign[v]].intersection_len(&chosen))
+        .collect();
+    let mut hard: usize = conf.iter().sum::<usize>() / 2;
+
+    let mut best_assign = assign.clone();
+    let mut best_score = hard * 1_000_000 + cost.total();
+    let mut tabu_until = vec![0usize; n_nodes];
+    let mut iter = 0usize;
+
+    let mut stagnant = 0usize;
+    // Bail out early on hopeless instances: past this many moves without
+    // improving the best score, further search rarely converges and the
+    // caller's II-escalation is the better spend.
+    let stagnation_cutoff = (max_iterations / 4).max(8000);
+    let mut since_best = 0usize;
+    while (hard > 0 || cost.total() > 0) && iter < max_iterations {
+        if since_best > stagnation_cutoff {
+            break;
+        }
+        iter += 1;
+        since_best += 1;
+        // Plateau kick: after a long stretch without improving the best,
+        // shake a random handful of nodes (large-neighbourhood restart).
+        if stagnant > 800 {
+            stagnant = 0;
+            for _ in 0..4 {
+                let v = rng.index(n_nodes);
+                let cur = assign[v];
+                chosen.remove(cur);
+                cost.detach(v, &assign);
+                let c = cg.of_node[v][rng.index(cg.of_node[v].len())];
+                assign[v] = c;
+                chosen.insert(c);
+                cost.attach(v, &assign);
+            }
+            conf = (0..n_nodes)
+                .map(|v| cg.adj[assign[v]].intersection_len(&chosen))
+                .collect();
+            hard = conf.iter().sum::<usize>() / 2;
+        }
+        // Pick a node to move: hard-conflicted first, else a bus-hot node.
+        let pool: Vec<usize> = if hard > 0 {
+            (0..n_nodes).filter(|&v| conf[v] > 0).collect()
+        } else {
+            cost.hot_nodes(&assign)
+        };
+        if pool.is_empty() {
+            break; // nothing movable contributes — stuck
+        }
+        let v = if rng.chance(0.25) {
+            pool[rng.index(pool.len())]
+        } else {
+            *pool
+                .iter()
+                .filter(|&&v| tabu_until[v] <= iter)
+                .max_by_key(|&&v| (conf[v], rng.next_below(8)))
+                .unwrap_or(&pool[rng.index(pool.len())])
+        };
+
+        // Evaluate every candidate of v under (hard, secondary).
+        let cur = assign[v];
+        chosen.remove(cur);
+        cost.detach(v, &assign);
+        let noise = rng.chance(0.05);
+        let mut best_c = cur;
+        let mut best_local = (usize::MAX, u64::MAX);
+        if noise {
+            best_c = cg.of_node[v][rng.index(cg.of_node[v].len())];
+        } else {
+            for &c in &cg.of_node[v] {
+                let h = cg.adj[c].intersection_len(&chosen);
+                assign[v] = c;
+                cost.attach(v, &assign);
+                let s = h * 1_000_000 + cost.total();
+                cost.detach(v, &assign);
+                let key = (s, rng.next_below(8));
+                if key < best_local {
+                    best_local = key;
+                    best_c = c;
+                }
+            }
+        }
+        assign[v] = best_c;
+        chosen.insert(best_c);
+        cost.attach(v, &assign);
+        if best_c != cur {
+            tabu_until[v] = iter + 3 + rng.index(5);
+            // Incremental hard-conflict update.
+            for u in 0..n_nodes {
+                if u == v {
+                    continue;
+                }
+                let c = assign[u];
+                let before = cg.adj[cur].contains(c) as isize;
+                let after = cg.adj[best_c].contains(c) as isize;
+                match after - before {
+                    1 => conf[u] += 1,
+                    -1 => conf[u] -= 1,
+                    _ => {}
+                }
+            }
+            conf[v] = cg.adj[best_c].intersection_len(&chosen);
+            hard = conf.iter().sum::<usize>() / 2;
+            let score = hard * 1_000_000 + cost.total();
+            if score < best_score {
+                best_score = score;
+                best_assign = assign.clone();
+                stagnant = 0;
+                since_best = 0;
+            } else {
+                stagnant += 1;
+            }
+        } else {
+            stagnant += 1;
+        }
+    }
+
+    let clean = hard == 0 && cost.total() == 0;
+    let final_assign = if clean { assign } else { best_assign };
+    let mut chosen_list = Vec::with_capacity(n_nodes);
+    let mut kept = BitSet::new(nc);
+    for &c in final_assign.iter() {
+        if kept.is_disjoint(&cg.adj[c]) {
+            kept.insert(c);
+            chosen_list.push(c);
+        }
+    }
+    MisResult { chosen: chosen_list, assignment: final_assign, clean, iterations: iter }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::StreamingCgra;
+    use crate::bind::conflict::build;
+    use crate::bind::route::preallocate;
+    use crate::config::Techniques;
+    use crate::dfg::analysis::mii;
+    use crate::dfg::build::build_sdfg;
+    use crate::sched::sparsemap::schedule_at;
+    use crate::sparse::gen::paper_blocks;
+
+    #[test]
+    fn solves_paper_blocks_to_full_mis() {
+        let cgra = StreamingCgra::paper_default();
+        for nb in paper_blocks() {
+            let (g, _) = build_sdfg(&nb.block);
+            let base = mii(&g, &cgra);
+            let Some((s, plan)) = (base..base + 3).find_map(|ii| {
+                let s = schedule_at(&g, &cgra, Techniques::all(), ii).ok()?;
+                let plan = preallocate(&s, &cgra).ok()?;
+                Some((s, plan))
+            }) else {
+                panic!("{}: no routable schedule", nb.label);
+            };
+            let cg = build(&s, &cgra, &plan);
+            let res = solve(&cg, 60_000, 1);
+            assert_eq!(
+                res.size(),
+                cg.num_nodes,
+                "{}: bound {} of {} nodes at II={}",
+                nb.label,
+                res.size(),
+                cg.num_nodes,
+                s.ii
+            );
+        }
+    }
+
+    #[test]
+    fn result_is_independent_and_one_per_node() {
+        let cgra = StreamingCgra::paper_default();
+        let nb = &paper_blocks()[6];
+        let (g, _) = build_sdfg(&nb.block);
+        let s = schedule_at(&g, &cgra, Techniques::all(), mii(&g, &cgra) + 1).unwrap();
+        let plan = preallocate(&s, &cgra).unwrap();
+        let cg = build(&s, &cgra, &plan);
+        let res = solve(&cg, 60_000, 2);
+        for (i, &a) in res.chosen.iter().enumerate() {
+            for &b in res.chosen.iter().skip(i + 1) {
+                assert!(!cg.adj[a].contains(b), "conflicting pair in MIS");
+            }
+        }
+        let mut seen = std::collections::HashSet::new();
+        for &c in &res.chosen {
+            assert!(seen.insert(cg.candidates[c].node()), "node bound twice");
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let cgra = StreamingCgra::paper_default();
+        let nb = &paper_blocks()[0];
+        let (g, _) = build_sdfg(&nb.block);
+        let s = schedule_at(&g, &cgra, Techniques::all(), mii(&g, &cgra) + 1).unwrap();
+        let plan = preallocate(&s, &cgra).unwrap();
+        let cg = build(&s, &cgra, &plan);
+        let a = solve(&cg, 10_000, 7);
+        let b = solve(&cg, 10_000, 7);
+        assert_eq!(a.chosen, b.chosen);
+    }
+
+    #[test]
+    fn respects_iteration_budget_on_infeasible_graphs() {
+        // Infeasible on purpose: two reads at the same slot on a
+        // 1-input-bus machine.
+        let cgra = StreamingCgra::new(2, 1, 8, 8);
+        use crate::dfg::{EdgeKind, NodeKind, SDfg};
+        let mut g = SDfg::new("infeasible");
+        let r1 = g.add_node(NodeKind::Read { ch: 0, replica: 0 });
+        let r2 = g.add_node(NodeKind::Read { ch: 1, replica: 0 });
+        let m1 = g.add_node(NodeKind::Mul { ch: 0, kr: 0 });
+        let m2 = g.add_node(NodeKind::Mul { ch: 1, kr: 0 });
+        g.add_edge(r1, m1, EdgeKind::Input);
+        g.add_edge(r2, m2, EdgeKind::Input);
+        let a = g.add_node(NodeKind::Add { kr: 0 });
+        g.add_edge(m1, a, EdgeKind::Internal);
+        g.add_edge(m2, a, EdgeKind::Internal);
+        let w = g.add_node(NodeKind::Write { kr: 0 });
+        g.add_edge(a, w, EdgeKind::Output);
+        let s = crate::sched::ScheduledSDfg { g, ii: 2, t: vec![0, 0, 0, 0, 1, 2] };
+        let plan = preallocate(&s, &cgra).unwrap();
+        let cg = build(&s, &cgra, &plan);
+        let res = solve(&cg, 500, 3);
+        assert!(res.size() < cg.num_nodes, "cannot bind an infeasible schedule");
+        assert!(res.iterations <= 500);
+    }
+}

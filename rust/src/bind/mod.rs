@@ -1,0 +1,579 @@
+//! Binding (paper §4.2): routing pre-allocation → conflict-graph
+//! construction → SBTS MIS solve → bus-routing check → verified
+//! [`Mapping`].
+//!
+//! `|MIS| == |V_D|` means every s-DFG node got a physical resource without
+//! hard conflicts; a post-pass then derives the BusMap `bus_x`/`bus_y`
+//! assignments (canonical two-hop routes: producer's row bus → junction →
+//! consumer's column bus) and re-solves with a fresh seed in the rare case
+//! of a bus collision. Anything less is an incomplete mapping; the mapper
+//! escalates II (see `crate::mapper`).
+
+pub mod conflict;
+pub mod mis;
+pub mod route;
+
+use crate::arch::{PeId, StreamingCgra};
+use crate::dfg::{EdgeKind, NodeId, NodeKind};
+use crate::error::{Error, Result};
+use crate::sched::ScheduledSDfg;
+
+pub use conflict::{Candidate, ConflictGraph};
+pub use mis::SecondaryCost;
+pub use route::{Route, RoutePlan};
+
+/// Where one s-DFG node landed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    InputBus(usize),
+    OutputBus(usize),
+    Pe(PeId),
+}
+
+/// A physical bus at a modulo slot — the unit of exclusiveness for data
+/// transfers. Row buses are the output buses; column buses the input buses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum BusAt {
+    Row { slot: usize, row: usize },
+    Col { slot: usize, col: usize },
+}
+
+/// A complete, verified mapping of a scheduled s-DFG onto the CGRA.
+#[derive(Clone, Debug)]
+pub struct Mapping {
+    pub s: ScheduledSDfg,
+    pub placements: Vec<Placement>,
+    pub plan_routes: Vec<Option<Route>>,
+    /// SBTS iterations spent (across retries).
+    pub mis_iterations: usize,
+    pub ii: usize,
+}
+
+impl Mapping {
+    pub fn cops(&self) -> usize {
+        self.s.cops()
+    }
+
+    pub fn mcids(&self) -> usize {
+        self.s.mcids().len()
+    }
+
+    pub fn pe_of(&self, v: NodeId) -> Option<PeId> {
+        match self.placements[v] {
+            Placement::Pe(pe) => Some(pe),
+            _ => None,
+        }
+    }
+
+    pub fn ibus_of(&self, v: NodeId) -> Option<usize> {
+        match self.placements[v] {
+            Placement::InputBus(i) => Some(i),
+            _ => None,
+        }
+    }
+
+    pub fn obus_of(&self, v: NodeId) -> Option<usize> {
+        match self.placements[v] {
+            Placement::OutputBus(i) => Some(i),
+            _ => None,
+        }
+    }
+
+    pub fn route_of_edge(&self, edge_idx: usize) -> Option<Route> {
+        self.plan_routes[edge_idx]
+    }
+
+    /// The bus claims of one dependency edge under canonical two-hop
+    /// routing, with the value id (producer) that rides the bus. The
+    /// simulator uses the same function to drive its interconnect.
+    pub fn bus_claims_of_edge(&self, idx: usize) -> Vec<(BusAt, NodeId)> {
+        let place = |v: NodeId| self.placements[v];
+        claims_of_edge(&self.s, &self.plan_routes, &place, idx)
+    }
+
+    /// Re-check every binding constraint from first principles (independent
+    /// of the conflict-graph encoding). Used by tests and the simulator.
+    pub fn verify(&self, cgra: &StreamingCgra) -> Result<()> {
+        let g = &self.s.g;
+        let fail = |msg: String| -> Result<()> {
+            Err(Error::RouteFailed { ii: self.ii, reason: msg })
+        };
+        // Kind-appropriate placements.
+        for v in g.nodes() {
+            let ok = match (g.kind(v), self.placements[v]) {
+                (NodeKind::Read { .. }, Placement::InputBus(i)) => i < cgra.m,
+                (NodeKind::Write { .. }, Placement::OutputBus(i)) => i < cgra.n,
+                (k, Placement::Pe(pe)) if k.is_pe_op() => pe.row < cgra.n && pe.col < cgra.m,
+                _ => false,
+            };
+            if !ok {
+                return fail(format!("node {v} has ill-typed placement"));
+            }
+        }
+        // Exclusivity per modulo slot.
+        let mut seen_pe = std::collections::HashMap::new();
+        let mut seen_ibus = std::collections::HashMap::new();
+        let mut seen_obus = std::collections::HashMap::new();
+        for v in g.nodes() {
+            let m = self.s.m(v);
+            match self.placements[v] {
+                Placement::Pe(pe) => {
+                    if let Some(prev) = seen_pe.insert((m, pe), v) {
+                        return fail(format!("PE {pe} slot {m}: nodes {prev} and {v}"));
+                    }
+                }
+                Placement::InputBus(i) => {
+                    if let Some(prev) = seen_ibus.insert((m, i), v) {
+                        return fail(format!("ibus {i} slot {m}: nodes {prev} and {v}"));
+                    }
+                }
+                Placement::OutputBus(i) => {
+                    if let Some(prev) = seen_obus.insert((m, i), v) {
+                        return fail(format!("obus {i} slot {m}: nodes {prev} and {v}"));
+                    }
+                }
+            }
+        }
+        // Dependency constraints.
+        for (idx, e) in g.edges().iter().enumerate() {
+            match e.kind {
+                EdgeKind::Input => {
+                    let ibus = self.ibus_of(e.src).expect("read on input bus");
+                    let pe = self.pe_of(e.dst).expect("consumer on PE");
+                    if pe.col != ibus {
+                        return fail(format!(
+                            "input dep {}→{}: consumer col {} != ibus {ibus}",
+                            e.src, e.dst, pe.col
+                        ));
+                    }
+                }
+                EdgeKind::Output => {
+                    let obus = self.obus_of(e.dst).expect("write on output bus");
+                    let pe = self.pe_of(e.src).expect("producer on PE");
+                    if pe.row != obus {
+                        return fail(format!(
+                            "output dep {}→{}: producer row {} != obus {obus}",
+                            e.src, e.dst, pe.row
+                        ));
+                    }
+                }
+                EdgeKind::Internal => match self.plan_routes[idx] {
+                    Some(Route::Lrf) => {
+                        // Forwarding from the producer's LRF is impossible
+                        // while the producer PE re-executes the producer.
+                        if self.s.m(e.src) == self.s.m(e.dst) {
+                            return fail(format!(
+                                "LRF dep {}→{}: same modulo slot",
+                                e.src, e.dst
+                            ));
+                        }
+                    }
+                    Some(Route::Bus) | Some(Route::Grf) => {}
+                    None => {
+                        return fail(format!("internal dep {}→{} unrouted", e.src, e.dst));
+                    }
+                },
+            }
+        }
+        // Bus exclusiveness: every claim keyed by (bus, slot) must carry a
+        // single value (broadcast of one producer is fine). Covers R2(2):
+        // a reading's column bus and a writing's row bus are claimed with
+        // the reading's / producer's value id.
+        let mut claims: std::collections::HashMap<BusAt, NodeId> = std::collections::HashMap::new();
+        for idx in 0..g.edges().len() {
+            for (bus, value) in self.bus_claims_of_edge(idx) {
+                match claims.entry(bus) {
+                    std::collections::hash_map::Entry::Vacant(en) => {
+                        en.insert(value);
+                    }
+                    std::collections::hash_map::Entry::Occupied(en) => {
+                        if *en.get() != value {
+                            return fail(format!(
+                                "bus collision on {bus:?}: values {} and {value}",
+                                en.get()
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Claim set of one dependency edge under an arbitrary placement lookup —
+/// shared by [`Mapping::bus_claims_of_edge`] and the in-search bus cost.
+fn claims_of_edge(
+    s: &ScheduledSDfg,
+    routes: &[Option<Route>],
+    place: &dyn Fn(NodeId) -> Placement,
+    idx: usize,
+) -> Vec<(BusAt, NodeId)> {
+    let e = s.g.edge(idx);
+    match e.kind {
+        EdgeKind::Input => {
+            let Placement::InputBus(ibus) = place(e.src) else { return vec![] };
+            vec![(BusAt::Col { slot: s.m(e.dst), col: ibus }, e.src)]
+        }
+        EdgeKind::Output => {
+            let Placement::OutputBus(obus) = place(e.dst) else { return vec![] };
+            vec![(BusAt::Row { slot: s.m(e.dst), row: obus }, e.src)]
+        }
+        EdgeKind::Internal => {
+            // Bus-routed deps and LRF-routed MCIDs (value parked in the
+            // producer's LRF, forwarded at the consumer's cycle) both ride
+            // the interconnect; only GRF routes bypass the PEA buses.
+            if routes[idx] == Some(Route::Grf) || routes[idx].is_none() {
+                return vec![];
+            }
+            let (Placement::Pe(ps), Placement::Pe(pd)) = (place(e.src), place(e.dst)) else {
+                return vec![];
+            };
+            let slot = s.m(e.dst);
+            let mesh = ps.row.abs_diff(pd.row) + ps.col.abs_diff(pd.col) == 1;
+            if ps == pd || mesh {
+                // Same PE or dedicated mesh-neighbour link: no shared bus.
+                vec![]
+            } else if ps.row == pd.row {
+                vec![(BusAt::Row { slot, row: ps.row }, e.src)]
+            } else if ps.col == pd.col {
+                vec![(BusAt::Col { slot, col: ps.col }, e.src)]
+            } else if (e.src ^ e.dst) & 1 == 0 {
+                // Two hops, variant A: producer's row bus → junction
+                // (ps.row, pd.col) → consumer's column bus.
+                vec![
+                    (BusAt::Row { slot, row: ps.row }, e.src),
+                    (BusAt::Col { slot, col: pd.col }, e.src),
+                ]
+            } else {
+                // Two hops, variant B: producer's column bus → junction
+                // (pd.row, ps.col) → consumer's row bus. Alternating the
+                // junction corner per edge spreads transfer load over both
+                // bus planes.
+                vec![
+                    (BusAt::Col { slot, col: ps.col }, e.src),
+                    (BusAt::Row { slot, row: pd.row }, e.src),
+                ]
+            }
+        }
+    }
+}
+
+/// Incremental bus-collision model plugged into the SBTS solve as the
+/// secondary objective (realizes BusMap's `bus_x`/`bus_y` consistency).
+pub struct BusCostModel<'a> {
+    s: &'a ScheduledSDfg,
+    cg: &'a ConflictGraph,
+    routes: &'a [Option<Route>],
+    /// Claim-relevant edge indices incident to each node (whose placement
+    /// affects the edge's claims).
+    incident: Vec<Vec<usize>>,
+    /// Per bus: value -> multiplicity.
+    claims: std::collections::HashMap<BusAt, std::collections::HashMap<NodeId, usize>>,
+    /// Per bus: claiming edge indices (multiset) — lets `hot_nodes` find
+    /// the movable endpoints of colliding buses without a full edge scan.
+    bus_edges: std::collections::HashMap<BusAt, Vec<usize>>,
+    /// Buses currently carrying more than one distinct value.
+    hot: std::collections::HashSet<BusAt>,
+    total: usize,
+}
+
+impl<'a> BusCostModel<'a> {
+    pub fn new(s: &'a ScheduledSDfg, cg: &'a ConflictGraph, routes: &'a [Option<Route>]) -> Self {
+        let mut incident: Vec<Vec<usize>> = vec![Vec::new(); s.g.len()];
+        for (idx, e) in s.g.edges().iter().enumerate() {
+            match e.kind {
+                EdgeKind::Input => incident[e.src].push(idx),
+                EdgeKind::Output => incident[e.dst].push(idx),
+                EdgeKind::Internal => {
+                    // Bus and LRF routes both ride the interconnect.
+                    if matches!(routes[idx], Some(Route::Bus) | Some(Route::Lrf)) {
+                        incident[e.src].push(idx);
+                        incident[e.dst].push(idx);
+                    }
+                }
+            }
+        }
+        BusCostModel {
+            s,
+            cg,
+            routes,
+            incident,
+            claims: std::collections::HashMap::new(),
+            bus_edges: std::collections::HashMap::new(),
+            hot: std::collections::HashSet::new(),
+            total: 0,
+        }
+    }
+
+    fn placement_of(&self, cand: usize) -> Placement {
+        match self.cg.candidates[cand] {
+            Candidate::Read { ibus, .. } => Placement::InputBus(ibus),
+            Candidate::Write { obus, .. } => Placement::OutputBus(obus),
+            Candidate::Op { pe, .. } => Placement::Pe(pe),
+        }
+    }
+
+    fn edge_claims(&self, idx: usize, assign: &[usize]) -> Vec<(BusAt, NodeId)> {
+        let place = |v: NodeId| self.placement_of(assign[v]);
+        claims_of_edge(self.s, self.routes, &place, idx)
+    }
+
+    fn bus_contrib(values: &std::collections::HashMap<NodeId, usize>) -> usize {
+        values.len().saturating_sub(1)
+    }
+
+    fn add_claim(&mut self, bus: BusAt, value: NodeId, edge_idx: usize, delta: isize) {
+        let entry = self.claims.entry(bus).or_default();
+        self.total -= Self::bus_contrib(entry);
+        if delta > 0 {
+            *entry.entry(value).or_insert(0) += 1;
+        } else {
+            let c = entry.get_mut(&value).expect("claim present");
+            *c -= 1;
+            if *c == 0 {
+                entry.remove(&value);
+            }
+        }
+        self.total += Self::bus_contrib(entry);
+        if Self::bus_contrib(entry) > 0 {
+            self.hot.insert(bus);
+        } else {
+            self.hot.remove(&bus);
+        }
+        if entry.is_empty() {
+            self.claims.remove(&bus);
+        }
+        let edges = self.bus_edges.entry(bus).or_default();
+        if delta > 0 {
+            edges.push(edge_idx);
+        } else if let Some(pos) = edges.iter().position(|&e| e == edge_idx) {
+            edges.swap_remove(pos);
+            if edges.is_empty() {
+                self.bus_edges.remove(&bus);
+            }
+        }
+    }
+
+    /// Unique edge list incident to `v` (an edge appears once even if both
+    /// endpoints are v-adjacent — claims are computed per edge).
+    fn edges_of(&self, v: usize) -> &[usize] {
+        &self.incident[v]
+    }
+}
+
+impl<'a> SecondaryCost for BusCostModel<'a> {
+    fn reset(&mut self, assign: &[usize]) {
+        self.claims.clear();
+        self.bus_edges.clear();
+        self.hot.clear();
+        self.total = 0;
+        for idx in 0..self.s.g.edges().len() {
+            for (bus, value) in self.edge_claims(idx, assign) {
+                self.add_claim(bus, value, idx, 1);
+            }
+        }
+    }
+
+    fn detach(&mut self, v: usize, assign: &[usize]) {
+        for &idx in self.edges_of(v).to_vec().iter() {
+            for (bus, value) in self.edge_claims(idx, assign) {
+                self.add_claim(bus, value, idx, -1);
+            }
+        }
+    }
+
+    fn attach(&mut self, v: usize, assign: &[usize]) {
+        for &idx in self.edges_of(v).to_vec().iter() {
+            for (bus, value) in self.edge_claims(idx, assign) {
+                self.add_claim(bus, value, idx, 1);
+            }
+        }
+    }
+
+    fn total(&self) -> usize {
+        self.total
+    }
+
+    fn hot_nodes(&self, _assign: &[usize]) -> Vec<usize> {
+        // Incrementally-maintained: endpoints of the edges claiming any
+        // colliding bus (plus their same-bus rivals).
+        if self.total == 0 {
+            return vec![];
+        }
+        let mut nodes = std::collections::BTreeSet::new();
+        for bus in &self.hot {
+            if let Some(edges) = self.bus_edges.get(bus) {
+                for &idx in edges {
+                    let e = self.s.g.edge(idx);
+                    nodes.insert(e.src);
+                    nodes.insert(e.dst);
+                }
+            }
+        }
+        nodes.into_iter().collect()
+    }
+}
+
+/// Bind a scheduled s-DFG: pre-allocate routes, build the conflict graph,
+/// solve hard conflicts + bus collisions in one SBTS search (fresh seeds on
+/// failure), and assemble a verified [`Mapping`].
+pub fn bind(
+    s: &ScheduledSDfg,
+    cgra: &StreamingCgra,
+    mis_iterations: usize,
+    seed: u64,
+) -> Result<Mapping> {
+    let plan = route::preallocate(s, cgra)?;
+    let cg = conflict::build(s, cgra, &plan);
+    let routes: Vec<Option<Route>> = (0..s.g.edges().len()).map(|i| plan.route(i)).collect();
+    let mut spent = 0usize;
+    let mut best_bound = 0usize;
+    for attempt in 0..3u64 {
+        let mut cost = BusCostModel::new(s, &cg, &routes);
+        let res = mis::solve_with(
+            &cg,
+            mis_iterations,
+            seed.wrapping_add(attempt * 0x9e37),
+            &mut cost,
+        );
+        spent += res.iterations;
+        best_bound = best_bound.max(res.size());
+        if !res.clean {
+            continue;
+        }
+        let placements: Vec<Placement> = res
+            .assignment
+            .iter()
+            .map(|&c| match cg.candidates[c] {
+                Candidate::Read { ibus, .. } => Placement::InputBus(ibus),
+                Candidate::Write { obus, .. } => Placement::OutputBus(obus),
+                Candidate::Op { pe, .. } => Placement::Pe(pe),
+            })
+            .collect();
+        let mapping = Mapping {
+            s: s.clone(),
+            placements,
+            plan_routes: routes.clone(),
+            mis_iterations: spent,
+            ii: s.ii,
+        };
+        mapping.verify(cgra)?;
+        return Ok(mapping);
+    }
+    Err(Error::BindFailed { ii: s.ii, bound: best_bound, total: cg.num_nodes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Techniques;
+    use crate::dfg::analysis::mii;
+    use crate::dfg::build::build_sdfg;
+    use crate::sched::sparsemap::schedule_at;
+    use crate::sparse::gen::paper_blocks;
+
+    #[test]
+    fn binds_and_verifies_all_paper_blocks() {
+        let cgra = StreamingCgra::paper_default();
+        for nb in paper_blocks() {
+            let (g, _) = build_sdfg(&nb.block);
+            let base = mii(&g, &cgra);
+            // First (II, perturbation) whose schedule binds — the mapper's
+            // phase-④ search, inlined. blocks 5/7 need up to MII+2.
+            let (s, m) = (base..base + 4)
+                .find_map(|ii| {
+                    (0..8u64).find_map(|p| {
+                        let s = crate::sched::sparsemap::schedule_at_perturbed(
+                            &g,
+                            &cgra,
+                            Techniques::all(),
+                            ii,
+                            p,
+                        )
+                        .ok()?;
+                        let m = bind(&s, &cgra, 60_000, 42 ^ p).ok()?;
+                        Some((s, m))
+                    })
+                })
+                .unwrap_or_else(|| panic!("{}: no binding", nb.label));
+            m.verify(&cgra).unwrap();
+            assert_eq!(m.ii, s.ii);
+        }
+    }
+
+    #[test]
+    fn verify_catches_corrupted_placement() {
+        let cgra = StreamingCgra::paper_default();
+        let nb = &paper_blocks()[0];
+        let (g, _) = build_sdfg(&nb.block);
+        let s = schedule_at(&g, &cgra, Techniques::all(), mii(&g, &cgra) + 1).unwrap();
+        let m = bind(&s, &cgra, 60_000, 42).unwrap();
+
+        // Corrupt: move a mul out of its read's column.
+        let mut bad = m.clone();
+        let (edge_src, edge_dst) = bad
+            .s
+            .g
+            .edges()
+            .iter()
+            .find(|e| {
+                e.kind == EdgeKind::Input
+                    && matches!(bad.s.g.kind(e.dst), NodeKind::Mul { .. })
+            })
+            .map(|e| (e.src, e.dst))
+            .unwrap();
+        let ibus = bad.ibus_of(edge_src).unwrap();
+        let wrong_col = (ibus + 1) % cgra.m;
+        bad.placements[edge_dst] = Placement::Pe(PeId { row: 0, col: wrong_col });
+        assert!(bad.verify(&cgra).is_err(), "verify must catch bad column");
+    }
+
+    #[test]
+    fn verify_catches_pe_double_booking() {
+        let cgra = StreamingCgra::paper_default();
+        let nb = &paper_blocks()[1];
+        let (g, _) = build_sdfg(&nb.block);
+        let s = schedule_at(&g, &cgra, Techniques::all(), mii(&g, &cgra)).unwrap();
+        let m = bind(&s, &cgra, 60_000, 42).unwrap();
+        let ops: Vec<usize> = m.s.g.nodes().filter(|&v| m.s.g.kind(v).is_pe_op()).collect();
+        let mut bad = m.clone();
+        let mut corrupted = false;
+        'outer: for (i, &a) in ops.iter().enumerate() {
+            for &b in ops.iter().skip(i + 1) {
+                if bad.s.m(a) == bad.s.m(b) {
+                    bad.placements[b] = bad.placements[a];
+                    corrupted = true;
+                    break 'outer;
+                }
+            }
+        }
+        assert!(corrupted);
+        assert!(bad.verify(&cgra).is_err());
+    }
+
+    #[test]
+    fn bus_claims_cover_two_hop_routes() {
+        let cgra = StreamingCgra::paper_default();
+        let nb = &paper_blocks()[2];
+        let (g, _) = build_sdfg(&nb.block);
+        let s = schedule_at(&g, &cgra, Techniques::all(), mii(&g, &cgra)).unwrap();
+        let m = bind(&s, &cgra, 60_000, 42).unwrap();
+        for (idx, e) in m.s.g.edges().iter().enumerate() {
+            if e.kind == EdgeKind::Internal && m.route_of_edge(idx) == Some(Route::Bus) {
+                let ps = m.pe_of(e.src).unwrap();
+                let pd = m.pe_of(e.dst).unwrap();
+                let claims = m.bus_claims_of_edge(idx);
+                let mesh = ps.row.abs_diff(pd.row) + ps.col.abs_diff(pd.col) == 1;
+                let want = if ps == pd || mesh {
+                    0 // same PE or dedicated mesh link
+                } else if ps.row == pd.row || ps.col == pd.col {
+                    1 // single bus hop
+                } else {
+                    2 // two-hop via a junction
+                };
+                assert_eq!(claims.len(), want, "edge {}→{} {ps} {pd}", e.src, e.dst);
+            }
+        }
+    }
+}

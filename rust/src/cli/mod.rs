@@ -1,0 +1,324 @@
+//! Command-line interface (clap is unavailable offline; the parser is a
+//! substrate of this repo).
+//!
+//! ```text
+//! sparsemap <command> [--key value] ...
+//!
+//! commands:
+//!   table2                      print Table 2 (block features)
+//!   table3                      print Table 3 (mapping comparison)
+//!   table4                      print Table 4 (ablation)
+//!   map        --block <name>   map one paper block and print the result
+//!   simulate   --block <name>   map + simulate + verify one block
+//!   serve      --requests <n>   run the streaming coordinator demo
+//!   artifacts                   list AOT artifacts and smoke-run one
+//! common flags:
+//!   --config <path>             TOML-subset config file
+//!   --scheduler <sparsemap|baseline>
+//!   --iters <n>                 simulation iterations (default 64)
+//!   --seed <n>
+//! ```
+
+use std::collections::HashMap;
+
+use crate::config::SparsemapConfig;
+use crate::coordinator::{Coordinator, InferRequest};
+use crate::error::{Error, Result};
+use crate::mapper::{map_block, MapperOptions};
+use crate::report;
+use crate::sim::simulate_and_check;
+use crate::sparse::gen::paper_blocks;
+
+/// Parsed command line: a command plus `--key value` flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter();
+        let command = it.next().unwrap_or_default();
+        let mut flags = HashMap::new();
+        while let Some(arg) = it.next() {
+            let Some(key) = arg.strip_prefix("--") else {
+                return Err(Error::Config(format!("unexpected positional argument '{arg}'")));
+            };
+            let value = it
+                .next()
+                .ok_or_else(|| Error::Config(format!("flag --{key} needs a value")))?;
+            flags.insert(key.to_string(), value);
+        }
+        Ok(Args { command, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} expects an integer, got '{v}'"))),
+        }
+    }
+}
+
+fn load_config(args: &Args) -> Result<SparsemapConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => SparsemapConfig::from_file(path)?,
+        None => SparsemapConfig::default(),
+    };
+    if let Some(s) = args.get("scheduler") {
+        cfg.scheduler = s.parse()?;
+    }
+    if let Some(s) = args.get("seed") {
+        cfg.seed = s
+            .parse()
+            .map_err(|_| Error::Config(format!("--seed expects an integer, got '{s}'")))?;
+    }
+    Ok(cfg)
+}
+
+fn find_block(name: &str) -> Result<crate::sparse::SparseBlock> {
+    paper_blocks()
+        .into_iter()
+        .find(|nb| nb.label == name)
+        .map(|nb| nb.block)
+        .ok_or_else(|| {
+            Error::Config(format!(
+                "unknown block '{name}' (try block1..block7)"
+            ))
+        })
+}
+
+/// CLI entrypoint; returns the process exit code.
+pub fn run<I: IntoIterator<Item = String>>(argv: I) -> i32 {
+    crate::util::logging::init();
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "table2" => {
+            println!("{}", report::table2());
+            Ok(())
+        }
+        "table3" => cmd_table3(args),
+        "table4" => cmd_table4(args),
+        "map" => cmd_map(args),
+        "simulate" => cmd_simulate(args),
+        "serve" => cmd_serve(args),
+        "artifacts" => cmd_artifacts(args),
+        "" | "help" | "--help" | "-h" => {
+            print!("{}", USAGE);
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown command '{other}' (try 'help')"))),
+    }
+}
+
+const USAGE: &str = "\
+sparsemap — loop mapping for sparse CNNs on streaming CGRAs
+
+usage: sparsemap <command> [--key value]...
+
+commands:
+  table2                     block features (paper Table 2)
+  table3                     mapping comparison (paper Table 3)
+  table4                     technique ablation (paper Table 4)
+  map      --block blockN    map one block, print II/COPs/MCIDs
+  simulate --block blockN    map + cycle-accurate simulate + verify
+  serve    --requests N      streaming coordinator demo
+  artifacts                  list + smoke-run the AOT artifacts
+flags:
+  --config path  --scheduler sparsemap|baseline  --iters N  --seed N
+";
+
+fn cmd_table3(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let (t, base_rows, sm_rows) = report::table3(&cfg.cgra);
+    println!("{t}");
+    let (bc, bm) = report::totals(&base_rows);
+    let (sc, sm) = report::totals(&sm_rows);
+    println!(
+        "\nTotals (first attempts): baseline |C|={bc} |M|={bm}  sparsemap |C|={sc} |M|={sm}  \
+         (COPs ↓{:.1}%, MCIDs ↓{:.1}%)",
+        100.0 * (1.0 - sc as f64 / bc.max(1) as f64),
+        100.0 * (1.0 - sm as f64 / bm.max(1) as f64),
+    );
+    Ok(())
+}
+
+fn cmd_table4(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let (t, _) = report::table4(&cfg.cgra);
+    println!("{t}");
+    Ok(())
+}
+
+fn cmd_map(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let block = find_block(args.get("block").unwrap_or("block1"))?;
+    let opts = MapperOptions::from_config(&cfg);
+    let out = map_block(&block, &cfg.cgra, &opts)?;
+    println!(
+        "{}: MII={} first(II0={} C={} M={} ok={}) final II={} C={} M={} speedup={:.2} \
+         attempts={} mis_iters={}",
+        block.name,
+        out.mii,
+        out.first_attempt.ii0,
+        out.first_attempt.cops,
+        out.first_attempt.mcids,
+        out.first_attempt.success,
+        out.mapping.ii,
+        out.mapping.cops(),
+        out.mapping.mcids(),
+        out.speedup(&block, &cfg.cgra),
+        out.attempts.len(),
+        out.mapping.mis_iterations,
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let block = find_block(args.get("block").unwrap_or("block1"))?;
+    let iters = args.get_usize("iters", 64)?;
+    let opts = MapperOptions::from_config(&cfg);
+    let out = map_block(&block, &cfg.cgra, &opts)?;
+    let res = simulate_and_check(&out.mapping, &block, &cfg.cgra, iters, cfg.seed)?;
+    println!(
+        "{}: II={} iterations={} cycles={} throughput={:.4} it/cycle \
+         (1/II={:.4}) PE-util={:.1}% lrf_peak={} grf_peak={} — outputs verified ✓",
+        block.name,
+        out.mapping.ii,
+        res.iterations,
+        res.cycles,
+        res.throughput(),
+        1.0 / out.mapping.ii as f64,
+        100.0 * res.pe_utilization(),
+        res.lrf_peak,
+        res.grf_peak,
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let n = args.get_usize("requests", 32)?;
+    let iters = args.get_usize("iters", 16)?;
+    let coord = Coordinator::new(&cfg);
+    let blocks: Vec<std::sync::Arc<crate::sparse::SparseBlock>> = paper_blocks()
+        .into_iter()
+        .take(4)
+        .map(|nb| std::sync::Arc::new(nb.block))
+        .collect();
+    let mut rng = crate::util::rng::Pcg64::seeded(cfg.seed);
+    let t0 = std::time::Instant::now();
+    for id in 0..n as u64 {
+        let block = std::sync::Arc::clone(&blocks[rng.index(blocks.len())]);
+        let xs: Vec<Vec<f32>> = (0..iters)
+            .map(|_| (0..block.c).map(|_| rng.next_normal() as f32).collect())
+            .collect();
+        coord.submit(InferRequest { id, block, xs })?;
+    }
+    let results = coord.collect(n);
+    let wall = t0.elapsed();
+    let ok = results.iter().filter(|r| r.is_ok()).count();
+    let m = coord.metrics.snapshot();
+    println!(
+        "served {ok}/{n} requests in {wall:?}: cache hits {} misses {} total CGRA cycles {}",
+        m.cache_hits, m.cache_misses, m.total_cycles
+    );
+    println!(
+        "mean latency {:.2} ms, throughput {:.1} req/s",
+        m.total_latency_ns as f64 / 1e6 / n as f64,
+        n as f64 / wall.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = args
+        .get("dir")
+        .map(str::to_string)
+        .unwrap_or_else(crate::runtime::default_artifacts_dir);
+    let mut rt = crate::runtime::Runtime::new(&dir)?;
+    println!("platform: {}", rt.platform());
+    for name in rt.artifact_names() {
+        let spec = rt.spec(&name).unwrap().clone();
+        println!("  {name}: in={:?} out={:?}", spec.in_shapes, spec.out_shape);
+    }
+    // Smoke-run the first sparse-block artifact.
+    let name = "sb_c4k6".to_string();
+    if let Some(spec) = rt.spec(&name).cloned() {
+        let ins: Vec<Vec<f32>> = spec
+            .in_shapes
+            .iter()
+            .map(|s| vec![1.0f32; s.iter().product()])
+            .collect();
+        let refs: Vec<&[f32]> = ins.iter().map(|v| v.as_slice()).collect();
+        let y = rt.execute(&name, &refs)?;
+        println!("smoke-ran {name}: output len {} sum {:.1}", y.len(), y.iter().sum::<f32>());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_flags() {
+        let a = Args::parse(argv("map --block block3 --seed 7")).unwrap();
+        assert_eq!(a.command, "map");
+        assert_eq!(a.get("block"), Some("block3"));
+        assert_eq!(a.get_usize("seed", 0).unwrap(), 7);
+        assert_eq!(a.get_usize("iters", 64).unwrap(), 64);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Args::parse(argv("map stray")).is_err());
+        assert!(Args::parse(argv("map --block")).is_err());
+        let a = Args::parse(argv("map --iters notanum")).unwrap();
+        assert!(a.get_usize("iters", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(dispatch(&Args::parse(argv("frobnicate")).unwrap()).is_err());
+    }
+
+    #[test]
+    fn table2_runs() {
+        assert!(dispatch(&Args::parse(argv("table2")).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn unknown_block_errors() {
+        assert!(find_block("block99").is_err());
+        assert!(find_block("block2").is_ok());
+    }
+}

@@ -1,0 +1,193 @@
+//! Configuration system: a TOML-subset parser (sections, string / int /
+//! float / bool scalars, comments) plus the typed `SparsemapConfig` the
+//! launcher consumes. serde/toml are unavailable offline, so the parser is
+//! a substrate of this repo.
+
+mod parser;
+
+pub use parser::{ParsedConfig, Value};
+
+use crate::arch::StreamingCgra;
+use crate::error::{Error, Result};
+
+/// Which scheduling pipeline to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// The paper's contribution: AIBA + Mul-CI + RID-AT.
+    SparseMap,
+    /// Lifetime-sensitive modulo scheduling (Llosa [23]) as used by the
+    /// BusMap [6] / Zhao [12] baselines.
+    Baseline,
+}
+
+impl std::str::FromStr for SchedulerKind {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "sparsemap" => Ok(SchedulerKind::SparseMap),
+            "baseline" => Ok(SchedulerKind::Baseline),
+            other => Err(Error::Config(format!("unknown scheduler '{other}'"))),
+        }
+    }
+}
+
+/// Ablation switches (Table 4): each of the paper's three techniques can be
+/// disabled independently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Techniques {
+    pub aiba: bool,
+    pub mul_ci: bool,
+    pub rid_at: bool,
+}
+
+impl Techniques {
+    pub fn all() -> Self {
+        Techniques { aiba: true, mul_ci: true, rid_at: true }
+    }
+
+    pub fn aiba_only() -> Self {
+        Techniques { aiba: true, mul_ci: false, rid_at: false }
+    }
+
+    pub fn aiba_mulci() -> Self {
+        Techniques { aiba: true, mul_ci: true, rid_at: false }
+    }
+}
+
+/// Full launcher configuration.
+#[derive(Clone, Debug)]
+pub struct SparsemapConfig {
+    pub cgra: StreamingCgra,
+    pub scheduler: SchedulerKind,
+    pub techniques: Techniques,
+    /// Give up when II exceeds `MII + ii_slack` (the paper's "Failed").
+    pub ii_slack: usize,
+    /// SBTS iteration budget per MIS solve.
+    pub mis_iterations: usize,
+    /// Artifacts directory for the PJRT runtime.
+    pub artifacts_dir: String,
+    /// Coordinator worker threads.
+    pub workers: usize,
+    /// Coordinator bounded-queue depth (backpressure).
+    pub queue_depth: usize,
+    /// Seed for workload generation.
+    pub seed: u64,
+}
+
+impl Default for SparsemapConfig {
+    fn default() -> Self {
+        SparsemapConfig {
+            cgra: StreamingCgra::paper_default(),
+            scheduler: SchedulerKind::SparseMap,
+            techniques: Techniques::all(),
+            ii_slack: 2,
+            mis_iterations: 20_000,
+            artifacts_dir: "artifacts".into(),
+            workers: 4,
+            queue_depth: 16,
+            seed: 42,
+        }
+    }
+}
+
+impl SparsemapConfig {
+    /// Load from a TOML-subset file; unknown keys are rejected so typos
+    /// fail loudly.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_str_cfg(&text)
+    }
+
+    pub fn from_str_cfg(text: &str) -> Result<Self> {
+        let parsed = ParsedConfig::parse(text)?;
+        let mut cfg = SparsemapConfig::default();
+        for (section, key, value) in parsed.entries() {
+            match (section.as_str(), key.as_str()) {
+                ("cgra", "rows") => cfg.cgra.n = value.as_int()? as usize,
+                ("cgra", "cols") => cfg.cgra.m = value.as_int()? as usize,
+                ("cgra", "lrf_capacity") => cfg.cgra.lrf_capacity = value.as_int()? as usize,
+                ("cgra", "grf_capacity") => cfg.cgra.grf_capacity = value.as_int()? as usize,
+                ("cgra", "grf_write_ports") => {
+                    cfg.cgra.grf_write_ports = value.as_int()? as usize
+                }
+                ("mapper", "scheduler") => cfg.scheduler = value.as_str()?.parse()?,
+                ("mapper", "aiba") => cfg.techniques.aiba = value.as_bool()?,
+                ("mapper", "mul_ci") => cfg.techniques.mul_ci = value.as_bool()?,
+                ("mapper", "rid_at") => cfg.techniques.rid_at = value.as_bool()?,
+                ("mapper", "ii_slack") => cfg.ii_slack = value.as_int()? as usize,
+                ("mapper", "mis_iterations") => cfg.mis_iterations = value.as_int()? as usize,
+                ("runtime", "artifacts_dir") => cfg.artifacts_dir = value.as_str()?.to_string(),
+                ("coordinator", "workers") => cfg.workers = value.as_int()? as usize,
+                ("coordinator", "queue_depth") => cfg.queue_depth = value.as_int()? as usize,
+                ("workload", "seed") => cfg.seed = value.as_int()? as u64,
+                (s, k) => {
+                    return Err(Error::Config(format!("unknown config key [{s}] {k}")));
+                }
+            }
+        }
+        if cfg.cgra.n == 0 || cfg.cgra.m == 0 {
+            return Err(Error::Config("cgra geometry must be positive".into()));
+        }
+        if cfg.workers == 0 {
+            return Err(Error::Config("coordinator.workers must be >= 1".into()));
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_setup() {
+        let c = SparsemapConfig::default();
+        assert_eq!(c.cgra, StreamingCgra::paper_default());
+        assert_eq!(c.scheduler, SchedulerKind::SparseMap);
+        assert!(c.techniques.aiba && c.techniques.mul_ci && c.techniques.rid_at);
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let text = r#"
+# paper setup
+[cgra]
+rows = 4
+cols = 4
+lrf_capacity = 8
+grf_capacity = 8
+
+[mapper]
+scheduler = "baseline"
+rid_at = false
+ii_slack = 3
+
+[coordinator]
+workers = 2
+queue_depth = 4
+
+[workload]
+seed = 7
+"#;
+        let c = SparsemapConfig::from_str_cfg(text).unwrap();
+        assert_eq!(c.scheduler, SchedulerKind::Baseline);
+        assert!(!c.techniques.rid_at);
+        assert!(c.techniques.aiba);
+        assert_eq!(c.ii_slack, 3);
+        assert_eq!(c.workers, 2);
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let err = SparsemapConfig::from_str_cfg("[cgra]\nrowz = 4\n").unwrap_err();
+        assert!(err.to_string().contains("rowz"));
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(SparsemapConfig::from_str_cfg("[cgra]\nrows = 0\ncols = 0\n").is_err());
+        assert!(SparsemapConfig::from_str_cfg("[coordinator]\nworkers = 0\n").is_err());
+        assert!(SparsemapConfig::from_str_cfg("[mapper]\nscheduler = \"magic\"\n").is_err());
+    }
+}

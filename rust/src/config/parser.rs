@@ -1,0 +1,172 @@
+//! TOML-subset parser: `[section]` headers, `key = value` lines, `#`
+//! comments, values of type string (double-quoted), integer, float, bool.
+//! No arrays/tables-of-tables — the config surface doesn't need them.
+
+use crate::error::{Error, Result};
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => Err(Error::Config(format!("expected string, got {other:?}"))),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            other => Err(Error::Config(format!("expected integer, got {other:?}"))),
+        }
+    }
+
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            other => Err(Error::Config(format!("expected float, got {other:?}"))),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => Err(Error::Config(format!("expected bool, got {other:?}"))),
+        }
+    }
+}
+
+/// Parsed file: ordered `(section, key, value)` triples.
+#[derive(Clone, Debug, Default)]
+pub struct ParsedConfig {
+    entries: Vec<(String, String, Value)>,
+}
+
+impl ParsedConfig {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut section = String::new();
+        let mut entries = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    return Err(Error::Config(format!("line {}: unterminated section", lineno + 1)));
+                };
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(Error::Config(format!("line {}: empty section name", lineno + 1)));
+                }
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                return Err(Error::Config(format!("line {}: expected 'key = value'", lineno + 1)));
+            };
+            let key = line[..eq].trim();
+            let value = line[eq + 1..].trim();
+            if key.is_empty() || value.is_empty() {
+                return Err(Error::Config(format!("line {}: empty key or value", lineno + 1)));
+            }
+            entries.push((section.clone(), key.to_string(), parse_value(value, lineno + 1)?));
+        }
+        Ok(ParsedConfig { entries })
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &(String, String, Value)> {
+        self.entries.iter()
+    }
+
+    /// Look up a single key.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries
+            .iter()
+            .find(|(s, k, _)| s == section && k == key)
+            .map(|(_, _, v)| v)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a double-quoted string is not a comment.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            return Err(Error::Config(format!("line {lineno}: unterminated string")));
+        };
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(Error::Config(format!("line {lineno}: cannot parse value '{s}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalar_types() {
+        let p = ParsedConfig::parse(
+            "a = 1\nb = 2.5\nc = \"hi # there\"\nd = true\n[sec]\ne = false\n",
+        )
+        .unwrap();
+        assert_eq!(p.get("", "a"), Some(&Value::Int(1)));
+        assert_eq!(p.get("", "b"), Some(&Value::Float(2.5)));
+        assert_eq!(p.get("", "c"), Some(&Value::Str("hi # there".into())));
+        assert_eq!(p.get("", "d"), Some(&Value::Bool(true)));
+        assert_eq!(p.get("sec", "e"), Some(&Value::Bool(false)));
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let p = ParsedConfig::parse("# hello\n\nx = 3 # trailing\n").unwrap();
+        assert_eq!(p.get("", "x"), Some(&Value::Int(3)));
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let e = ParsedConfig::parse("x = 1\noops\n").unwrap_err();
+        assert!(e.to_string().contains("line 2"), "{e}");
+        let e = ParsedConfig::parse("[open\n").unwrap_err();
+        assert!(e.to_string().contains("line 1"), "{e}");
+        let e = ParsedConfig::parse("v = \"unterminated\n").unwrap_err();
+        assert!(e.to_string().contains("line 1"), "{e}");
+    }
+
+    #[test]
+    fn value_conversions() {
+        assert_eq!(Value::Int(3).as_float().unwrap(), 3.0);
+        assert!(Value::Int(3).as_str().is_err());
+        assert!(Value::Str("x".into()).as_int().is_err());
+        assert!(Value::Bool(true).as_bool().unwrap());
+    }
+}

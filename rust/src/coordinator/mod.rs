@@ -1,0 +1,316 @@
+//! Streaming inference coordinator (L3 runtime).
+//!
+//! Owns the request path of the system: a bounded job queue (backpressure),
+//! a worker-thread pool that maps blocks (with a compile-once mapping
+//! cache) and executes them on the cycle-accurate CGRA simulator, and
+//! aggregate metrics. The PJRT cross-check (`crate::runtime`) runs on the
+//! caller's thread — XLA executables stay off the worker pool.
+//!
+//! tokio is unavailable offline; the pool is built on std threads +
+//! `std::sync::mpsc::sync_channel`, which gives exactly the bounded-queue
+//! semantics the backpressure design needs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::arch::StreamingCgra;
+use crate::config::SparsemapConfig;
+use crate::error::{Error, Result};
+use crate::mapper::{map_block, MapOutcome, MapperOptions};
+use crate::sim::simulate;
+use crate::sparse::SparseBlock;
+
+/// One inference job: run `xs` (iteration-major input vectors) through a
+/// sparse block on the CGRA.
+pub struct InferRequest {
+    pub id: u64,
+    pub block: Arc<SparseBlock>,
+    pub xs: Vec<Vec<f32>>,
+}
+
+/// The coordinator's answer.
+#[derive(Clone, Debug)]
+pub struct InferResult {
+    pub id: u64,
+    pub block_name: String,
+    pub outputs: Vec<Vec<f32>>,
+    /// CGRA cycles consumed.
+    pub cycles: u64,
+    /// II of the mapping used.
+    pub ii: usize,
+    /// Whether this job triggered a fresh mapping (cache miss).
+    pub mapped_fresh: bool,
+    /// End-to-end latency in nanoseconds.
+    pub latency_ns: u64,
+}
+
+/// Aggregate counters (lock-free reads).
+#[derive(Default)]
+pub struct Metrics {
+    pub jobs: AtomicU64,
+    pub failures: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+    pub total_cycles: AtomicU64,
+    pub total_latency_ns: AtomicU64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            jobs: self.jobs.load(Ordering::Relaxed),
+            failures: self.failures.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            total_cycles: self.total_cycles.load(Ordering::Relaxed),
+            total_latency_ns: self.total_latency_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct MetricsSnapshot {
+    pub jobs: u64,
+    pub failures: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub total_cycles: u64,
+    pub total_latency_ns: u64,
+}
+
+/// Single-flight mapping cache: the outer map hands out one slot per block
+/// key; the slot's own mutex serializes mapping of that block while other
+/// blocks proceed in parallel.
+type CacheSlot = Arc<Mutex<Option<Arc<MapOutcome>>>>;
+type Cache = Arc<Mutex<std::collections::HashMap<String, CacheSlot>>>;
+
+enum Job {
+    Infer(InferRequest),
+}
+
+/// The streaming coordinator.
+pub struct Coordinator {
+    tx: Option<SyncSender<Job>>,
+    results: Receiver<Result<InferResult>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Spawn `cfg.workers` worker threads with a queue of depth
+    /// `cfg.queue_depth`.
+    pub fn new(cfg: &SparsemapConfig) -> Self {
+        let (tx, rx) = sync_channel::<Job>(cfg.queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let (res_tx, results) = std::sync::mpsc::channel::<Result<InferResult>>();
+        let cache: Cache = Arc::new(Mutex::new(std::collections::HashMap::new()));
+        let metrics = Arc::new(Metrics::default());
+        let opts = MapperOptions::from_config(cfg);
+        let cgra = cfg.cgra.clone();
+
+        let workers = (0..cfg.workers)
+            .map(|wid| {
+                let rx = Arc::clone(&rx);
+                let res_tx = res_tx.clone();
+                let cache = Arc::clone(&cache);
+                let metrics = Arc::clone(&metrics);
+                let opts = opts.clone();
+                let cgra = cgra.clone();
+                std::thread::Builder::new()
+                    .name(format!("sparsemap-worker-{wid}"))
+                    .spawn(move || worker_loop(rx, res_tx, cache, metrics, opts, cgra))
+                    .expect("spawn worker")
+            })
+            .collect();
+
+        Coordinator { tx: Some(tx), results, workers, metrics }
+    }
+
+    /// Submit a job; blocks when the queue is full (backpressure).
+    pub fn submit(&self, req: InferRequest) -> Result<()> {
+        self.tx
+            .as_ref()
+            .expect("coordinator live")
+            .send(Job::Infer(req))
+            .map_err(|_| Error::Runtime("coordinator shut down".into()))
+    }
+
+    /// Collect exactly `n` results (any order — jobs are tagged by id).
+    pub fn collect(&self, n: usize) -> Vec<Result<InferResult>> {
+        (0..n).map(|_| self.results.recv().expect("workers alive")).collect()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.tx.take(); // close the queue; workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<Job>>>,
+    res_tx: Sender<Result<InferResult>>,
+    cache: Cache,
+    metrics: Arc<Metrics>,
+    opts: MapperOptions,
+    cgra: StreamingCgra,
+) {
+    loop {
+        let job = {
+            let guard = rx.lock().expect("queue lock");
+            guard.recv()
+        };
+        let Ok(Job::Infer(req)) = job else { return };
+        let started = Instant::now();
+        let outcome = run_one(&req, &cache, &metrics, &opts, &cgra);
+        metrics.jobs.fetch_add(1, Ordering::Relaxed);
+        let out = match outcome {
+            Ok((outputs, cycles, ii, fresh)) => {
+                metrics.total_cycles.fetch_add(cycles, Ordering::Relaxed);
+                let latency_ns = started.elapsed().as_nanos() as u64;
+                metrics.total_latency_ns.fetch_add(latency_ns, Ordering::Relaxed);
+                Ok(InferResult {
+                    id: req.id,
+                    block_name: req.block.name.clone(),
+                    outputs,
+                    cycles,
+                    ii,
+                    mapped_fresh: fresh,
+                    latency_ns,
+                })
+            }
+            Err(e) => {
+                metrics.failures.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        };
+        if res_tx.send(out).is_err() {
+            return; // caller gone
+        }
+    }
+}
+
+fn run_one(
+    req: &InferRequest,
+    cache: &Cache,
+    metrics: &Metrics,
+    opts: &MapperOptions,
+    cgra: &StreamingCgra,
+) -> Result<(Vec<Vec<f32>>, u64, usize, bool)> {
+    // Mapping with a compile-once, single-flight cache keyed by block
+    // identity: concurrent requests for the same block wait on its slot
+    // instead of mapping twice.
+    let key = format!("{}#{}x{}", req.block.name, req.block.c, req.block.k);
+    let slot: CacheSlot = {
+        let mut guard = cache.lock().expect("cache lock");
+        Arc::clone(guard.entry(key).or_default())
+    };
+    let (outcome, fresh) = {
+        let mut slot_guard = slot.lock().expect("slot lock");
+        match slot_guard.as_ref() {
+            Some(o) => {
+                metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+                (Arc::clone(o), false)
+            }
+            None => {
+                metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+                let o = Arc::new(map_block(&req.block, cgra, opts)?);
+                *slot_guard = Some(Arc::clone(&o));
+                (o, true)
+            }
+        }
+    };
+    let res = simulate(&outcome.mapping, &req.block, cgra, &req.xs)?;
+    Ok((res.outputs, res.cycles, outcome.mapping.ii, fresh))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::paper_blocks;
+
+    fn small_cfg() -> SparsemapConfig {
+        let mut cfg = SparsemapConfig::default();
+        cfg.workers = 2;
+        cfg.queue_depth = 4;
+        cfg.mis_iterations = 20_000;
+        cfg
+    }
+
+    fn stream_for(block: &SparseBlock, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = crate::util::rng::Pcg64::seeded(seed);
+        (0..n)
+            .map(|_| (0..block.c).map(|_| rng.next_normal() as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn processes_jobs_and_caches_mappings() {
+        let cfg = small_cfg();
+        let coord = Coordinator::new(&cfg);
+        let block = Arc::new(paper_blocks()[1].block.clone());
+        for id in 0..6 {
+            let xs = stream_for(&block, 8, id);
+            coord
+                .submit(InferRequest { id, block: Arc::clone(&block), xs })
+                .unwrap();
+        }
+        let results = coord.collect(6);
+        assert_eq!(results.len(), 6);
+        for r in &results {
+            let r = r.as_ref().expect("job ok");
+            assert_eq!(r.outputs.len(), 8);
+        }
+        let m = coord.metrics.snapshot();
+        assert_eq!(m.jobs, 6);
+        assert_eq!(m.failures, 0);
+        assert_eq!(m.cache_misses, 1, "one block → one mapping");
+        assert_eq!(m.cache_hits, 5);
+    }
+
+    #[test]
+    fn outputs_match_reference_forward() {
+        let cfg = small_cfg();
+        let coord = Coordinator::new(&cfg);
+        let block = Arc::new(paper_blocks()[2].block.clone());
+        let xs = stream_for(&block, 12, 9);
+        coord
+            .submit(InferRequest { id: 0, block: Arc::clone(&block), xs: xs.clone() })
+            .unwrap();
+        let r = coord.collect(1).pop().unwrap().unwrap();
+        for (x, y) in xs.iter().zip(&r.outputs) {
+            let want = block.forward(x);
+            for (a, b) in y.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn multiple_blocks_in_flight() {
+        let cfg = small_cfg();
+        let coord = Coordinator::new(&cfg);
+        let blocks: Vec<Arc<SparseBlock>> = paper_blocks()
+            .into_iter()
+            .take(3)
+            .map(|nb| Arc::new(nb.block))
+            .collect();
+        let mut id = 0;
+        for block in &blocks {
+            for _ in 0..2 {
+                let xs = stream_for(block, 4, id);
+                coord.submit(InferRequest { id, block: Arc::clone(block), xs }).unwrap();
+                id += 1;
+            }
+        }
+        let results = coord.collect(id as usize);
+        assert!(results.iter().all(|r| r.is_ok()));
+        let m = coord.metrics.snapshot();
+        assert_eq!(m.cache_misses, 3);
+    }
+}

@@ -1,0 +1,157 @@
+//! s-DFG analyses shared by the schedulers: association matrix (AIBA's
+//! priority signal), fanout statistics, and the MII bound.
+
+use crate::arch::StreamingCgra;
+use crate::dfg::{NodeId, NodeKind, SDfg};
+
+/// Pairwise channel association (paper §2.1: number of kernels requiring
+/// both channels), computed once per block and consulted by AIBA on every
+/// bus-allocation decision.
+#[derive(Clone, Debug)]
+pub struct AssociationMatrix {
+    /// Read node ids, in the order rows/cols of `assoc` are laid out.
+    pub reads: Vec<NodeId>,
+    assoc: Vec<u32>,
+    n: usize,
+}
+
+impl AssociationMatrix {
+    /// Build from the s-DFG structure alone (two reads are associated per
+    /// kernel in which both have a multiplication).
+    pub fn build(g: &SDfg) -> Self {
+        let reads = g.reads();
+        let n = reads.len();
+        // kernel set per read, as bit mask over kernels (k ≤ 64 everywhere
+        // in this domain; fall back to a set if ever exceeded).
+        let kernels_of = |r: NodeId| -> u64 {
+            let mut bits = 0u64;
+            for m in g.fanout_muls(r) {
+                if let NodeKind::Mul { kr, .. } = g.kind(m) {
+                    assert!(kr < 64, "kernel index beyond u64 bitmask");
+                    bits |= 1 << kr;
+                }
+            }
+            bits
+        };
+        let masks: Vec<u64> = reads.iter().map(|&r| kernels_of(r)).collect();
+        let mut assoc = vec![0u32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                assoc[i * n + j] = (masks[i] & masks[j]).count_ones();
+            }
+        }
+        AssociationMatrix { reads, assoc, n }
+    }
+
+    /// Association between the i-th and j-th read (matrix order).
+    pub fn by_index(&self, i: usize, j: usize) -> u32 {
+        self.assoc[i * self.n + j]
+    }
+
+    /// Index of a read node in matrix order.
+    pub fn index_of(&self, r: NodeId) -> Option<usize> {
+        self.reads.iter().position(|&x| x == r)
+    }
+
+    /// Association of read `r` summed over a set of reads.
+    pub fn sum_with(&self, r: NodeId, others: &[NodeId]) -> u32 {
+        let Some(i) = self.index_of(r) else { return 0 };
+        others
+            .iter()
+            .filter_map(|&o| self.index_of(o))
+            .map(|j| self.by_index(i, j))
+            .sum()
+    }
+
+    /// Total association of `r` with every other read (AIBA tie-break).
+    pub fn total(&self, r: NodeId) -> u32 {
+        let Some(i) = self.index_of(r) else { return 0 };
+        (0..self.n).filter(|&j| j != i).map(|j| self.by_index(i, j)).sum()
+    }
+}
+
+/// MII of a graph on a CGRA (§4.1): resource bound over PEs / input buses /
+/// output buses. COPs are not included — they are a scheduling artifact.
+pub fn mii(g: &SDfg, cgra: &StreamingCgra) -> usize {
+    cgra.mii(g.v_op().len(), g.reads().len(), g.writes().len())
+}
+
+/// Longest path length (in edges) from any source to any sink — the
+/// pipeline depth lower bound, used for simulator sizing and reporting.
+pub fn critical_path_len(g: &SDfg) -> usize {
+    let order = g.topo_order();
+    let mut dist = vec![0usize; g.len()];
+    let mut best = 0;
+    for &v in &order {
+        for s in g.successors(v) {
+            dist[s] = dist[s].max(dist[v] + 1);
+            best = best.max(dist[s]);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::build::build_sdfg;
+    use crate::sparse::gen::{paper_blocks, random_block};
+    use crate::sparse::SparseBlock;
+
+    #[test]
+    fn association_matches_block_definition() {
+        let b = random_block("a", 6, 6, 0.4, 3);
+        let (g, idx) = build_sdfg(&b);
+        let am = AssociationMatrix::build(&g);
+        for c1 in 0..6 {
+            for c2 in 0..6 {
+                let (Some(r1), Some(r2)) = (idx.read(c1), idx.read(c2)) else { continue };
+                let (Some(i), Some(j)) = (am.index_of(r1), am.index_of(r2)) else { continue };
+                assert_eq!(am.by_index(i, j) as usize, b.association(c1, c2), "({c1},{c2})");
+            }
+        }
+    }
+
+    #[test]
+    fn fig3_example_association() {
+        // Fig. 3: 4 channels, 4 kernels; c2/c3 have the highest association.
+        // Build the paper's example: k0 = c0+c1, k1 = c1+c2+c3, k2 = c2+c3,
+        // k3 = c2+c3 (approximation of Fig 3(a)'s adder structure).
+        let mask = vec![
+            // k0    k1     k2     k3
+            true, false, false, false, // c0
+            true, true, false, false, // c1
+            false, true, true, true, // c2
+            false, true, true, true, // c3
+        ];
+        let b = SparseBlock::from_mask("fig3", 4, 4, mask).unwrap();
+        assert_eq!(b.association(2, 3), 3);
+        assert!(b.association(2, 3) > b.association(0, 1));
+        let (g, idx) = build_sdfg(&b);
+        let am = AssociationMatrix::build(&g);
+        let r2 = idx.read(2).unwrap();
+        let r3 = idx.read(3).unwrap();
+        let (i, j) = (am.index_of(r2).unwrap(), am.index_of(r3).unwrap());
+        assert_eq!(am.by_index(i, j), 3);
+    }
+
+    #[test]
+    fn mii_of_paper_blocks() {
+        let cgra = StreamingCgra::paper_default();
+        let want = [2, 2, 3, 2, 4, 3, 4];
+        for (nb, &w) in paper_blocks().iter().zip(&want) {
+            let (g, _) = build_sdfg(&nb.block);
+            assert_eq!(mii(&g, &cgra), w, "{}", nb.label);
+        }
+    }
+
+    #[test]
+    fn critical_path_reasonable() {
+        let b = random_block("c", 8, 8, 0.4, 5);
+        let (g, _) = build_sdfg(&b);
+        let cp = critical_path_len(&g);
+        // read -> mul -> log2(tree) adds -> write.
+        assert!(cp >= 3, "cp={cp}");
+        assert!(cp <= 2 + 8, "cp={cp}");
+    }
+}

@@ -1,0 +1,169 @@
+//! s-DFG construction from a [`SparseBlock`].
+//!
+//! The baseline compilers ([6][12]) map a *fixed* adder tree (balanced
+//! binary reduction in channel order); SparseMap treats the tree wiring as
+//! reconstructable (RID-AT) but the node multiset is identical — a kernel
+//! with `n` multiplications always carries `n − 1` additions.
+
+use crate::dfg::{EdgeKind, NodeId, NodeKind, SDfg};
+use crate::sparse::SparseBlock;
+
+/// Handles into the built graph, used by schedulers.
+#[derive(Clone, Debug, Default)]
+pub struct SDfgIndex {
+    /// Read node per channel (dense over channels with fanout ≥ 1).
+    pub read_of_channel: Vec<(usize, NodeId)>,
+    /// Mul node per (channel, kernel) nonzero.
+    pub mul_of: Vec<((usize, usize), NodeId)>,
+    /// Adds per kernel (in construction order).
+    pub adds_of_kernel: Vec<(usize, Vec<NodeId>)>,
+    /// Write node per non-empty kernel.
+    pub write_of_kernel: Vec<(usize, NodeId)>,
+}
+
+impl SDfgIndex {
+    pub fn read(&self, ch: usize) -> Option<NodeId> {
+        self.read_of_channel.iter().find(|(c, _)| *c == ch).map(|&(_, v)| v)
+    }
+
+    pub fn mul(&self, ch: usize, kr: usize) -> Option<NodeId> {
+        self.mul_of.iter().find(|((c, k), _)| *c == ch && *k == kr).map(|&(_, v)| v)
+    }
+
+    pub fn write(&self, kr: usize) -> Option<NodeId> {
+        self.write_of_kernel.iter().find(|(k, _)| *k == kr).map(|&(_, v)| v)
+    }
+}
+
+/// Build the s-DFG of a block with fixed balanced adder trees.
+pub fn build_sdfg(block: &SparseBlock) -> (SDfg, SDfgIndex) {
+    let mut g = SDfg::new(&block.name);
+    let mut index = SDfgIndex::default();
+
+    // Input readings, channel order.
+    for ch in 0..block.c {
+        if block.channel_fanout(ch) > 0 {
+            let r = g.add_node(NodeKind::Read { ch, replica: 0 });
+            index.read_of_channel.push((ch, r));
+        }
+    }
+
+    // Multiplications with their input dependencies.
+    for ch in 0..block.c {
+        let Some(r) = index.read(ch) else { continue };
+        for kr in block.kernels_of_channel(ch) {
+            let m = g.add_node(NodeKind::Mul { ch, kr });
+            g.add_edge(r, m, EdgeKind::Input);
+            index.mul_of.push(((ch, kr), m));
+        }
+    }
+
+    // Adder trees (balanced binary reduction in channel order) + writes.
+    for kr in 0..block.k {
+        let muls: Vec<NodeId> = block
+            .channels_of_kernel(kr)
+            .into_iter()
+            .map(|ch| index.mul(ch, kr).expect("mul exists"))
+            .collect();
+        if muls.is_empty() {
+            continue;
+        }
+        let mut adds = Vec::new();
+        let mut frontier = muls;
+        while frontier.len() > 1 {
+            let mut next = Vec::with_capacity(frontier.len().div_ceil(2));
+            let mut it = frontier.chunks_exact(2);
+            for pair in &mut it {
+                let a = g.add_node(NodeKind::Add { kr });
+                g.add_edge(pair[0], a, EdgeKind::Internal);
+                g.add_edge(pair[1], a, EdgeKind::Internal);
+                adds.push(a);
+                next.push(a);
+            }
+            if let [odd] = it.remainder() {
+                next.push(*odd);
+            }
+            frontier = next;
+        }
+        let root = frontier[0];
+        let w = g.add_node(NodeKind::Write { kr });
+        g.add_edge(root, w, EdgeKind::Output);
+        index.adds_of_kernel.push((kr, adds));
+        index.write_of_kernel.push((kr, w));
+    }
+
+    debug_assert!(g.validate().is_ok(), "freshly built s-DFG must validate");
+    (g, index)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::{paper_blocks, random_block};
+
+    #[test]
+    fn node_counts_match_table2_identities() {
+        for nb in paper_blocks() {
+            let f = nb.block.features();
+            let (g, _) = build_sdfg(&nb.block);
+            assert_eq!(g.reads().len(), f.v_r, "{}", nb.label);
+            assert_eq!(g.writes().len(), f.v_w, "{}", nb.label);
+            assert_eq!(g.v_op().len(), f.v_op, "{}", nb.label);
+            assert!(g.cops().is_empty());
+            g.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn adder_tree_shape() {
+        // Kernel with n muls gets n-1 adds and a single root feeding the
+        // write.
+        let b = random_block("t", 8, 8, 0.4, 42);
+        let (g, idx) = build_sdfg(&b);
+        for (kr, adds) in &idx.adds_of_kernel {
+            let n = b.kernel_size(*kr);
+            assert_eq!(adds.len(), n.saturating_sub(1), "kernel {kr}");
+        }
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn fanout_muls_match_block() {
+        let b = random_block("t", 6, 6, 0.4, 1);
+        let (g, idx) = build_sdfg(&b);
+        for ch in 0..6 {
+            if let Some(r) = idx.read(ch) {
+                assert_eq!(g.fanout_muls(r).len(), b.channel_fanout(ch));
+            }
+        }
+    }
+
+    #[test]
+    fn single_mul_kernel_feeds_write_directly() {
+        // mask: 2 channels, 2 kernels; kernel 1 has exactly one mul.
+        let b = crate::sparse::SparseBlock::from_mask(
+            "s",
+            2,
+            2,
+            vec![true, false, true, true],
+        )
+        .unwrap();
+        let (g, idx) = build_sdfg(&b);
+        let w1 = idx.write(1).unwrap();
+        let prod: Vec<_> = g.predecessors(w1).collect();
+        assert_eq!(prod.len(), 1);
+        assert!(matches!(g.kind(prod[0]), NodeKind::Mul { kr: 1, .. }));
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let b = random_block("t", 8, 8, 0.3, 7);
+        let (g, _) = build_sdfg(&b);
+        let order = g.topo_order();
+        let pos: std::collections::HashMap<_, _> =
+            order.iter().enumerate().map(|(i, &v)| (v, i)).collect();
+        for e in g.edges() {
+            assert!(pos[&e.src] < pos[&e.dst]);
+        }
+    }
+}

@@ -1,0 +1,345 @@
+//! The sparse data-flow graph (s-DFG, paper §3.1 def. 1).
+//!
+//! `V_D = V_M ∪ V_A ∪ V_R ∪ V_W` (multiplications, additions, input
+//! readings, output writings) plus the caching operations (COPs) the
+//! scheduler may insert. `E_D = E_R ∪ E_W ∪ E_I` (input, output, internal
+//! dependencies).
+//!
+//! Nodes in `V_R`/`V_W` are *operated on buses*; everything else occupies a
+//! PE. Edge timing rules (§3.2 constraint (1)):
+//! * input dep `(r, op)`:   `t(op) = t(r)`   (no buffer on input buses);
+//! * output dep `(op, w)`:  `t(w) = t(op)+1` (no buffer on output buses);
+//! * internal dep `(a, b)`: `t(b) ≥ t(a)+1`; distance `> 1` makes it an
+//!   **MCID**.
+
+pub mod analysis;
+pub mod build;
+
+use crate::error::{Error, Result};
+
+/// Node index inside an [`SDfg`].
+pub type NodeId = usize;
+
+/// What a node is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NodeKind {
+    /// Input reading for channel `ch`. `replica > 0` marks a Mul-CI
+    /// multicast copy (an extra input-bus allocation of the same data).
+    Read { ch: usize, replica: usize },
+    /// Multiplication `x[ch] · w[ch, kr]`.
+    Mul { ch: usize, kr: usize },
+    /// Adder-tree addition inside kernel `kr`.
+    Add { kr: usize },
+    /// Output writing of kernel `kr`.
+    Write { kr: usize },
+    /// Caching operation: occupies a PE to hold a value whose producer and
+    /// consumers could not be co-scheduled. `for_read == true` for input
+    /// caches (paper Fig. 4(b)), false for output-side COPs (§4.1 ③).
+    Cop { for_read: bool },
+}
+
+impl NodeKind {
+    /// Whether this node executes on a PE (counts against `N·M` per slot).
+    pub fn is_pe_op(&self) -> bool {
+        matches!(self, NodeKind::Mul { .. } | NodeKind::Add { .. } | NodeKind::Cop { .. })
+    }
+
+    pub fn is_read(&self) -> bool {
+        matches!(self, NodeKind::Read { .. })
+    }
+
+    pub fn is_write(&self) -> bool {
+        matches!(self, NodeKind::Write { .. })
+    }
+}
+
+/// Dependency class (§3.1 def. 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EdgeKind {
+    /// `E_R`: read → PE-op, scheduling distance exactly 0.
+    Input,
+    /// `E_W`: PE-op → write, scheduling distance exactly 1.
+    Output,
+    /// `E_I`: PE-op → PE-op, distance ≥ 1 (> 1 ⇒ MCID).
+    Internal,
+}
+
+/// A directed dependency.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Edge {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub kind: EdgeKind,
+}
+
+/// The sparse data-flow graph.
+#[derive(Clone, Debug, Default)]
+pub struct SDfg {
+    pub name: String,
+    kinds: Vec<NodeKind>,
+    edges: Vec<Edge>,
+    /// Outgoing edge indices per node.
+    succ: Vec<Vec<usize>>,
+    /// Incoming edge indices per node.
+    pred: Vec<Vec<usize>>,
+}
+
+impl SDfg {
+    pub fn new(name: &str) -> Self {
+        SDfg { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn add_node(&mut self, kind: NodeKind) -> NodeId {
+        self.kinds.push(kind);
+        self.succ.push(Vec::new());
+        self.pred.push(Vec::new());
+        self.kinds.len() - 1
+    }
+
+    pub fn add_edge(&mut self, src: NodeId, dst: NodeId, kind: EdgeKind) -> usize {
+        debug_assert!(src < self.len() && dst < self.len());
+        let idx = self.edges.len();
+        self.edges.push(Edge { src, dst, kind });
+        self.succ[src].push(idx);
+        self.pred[dst].push(idx);
+        idx
+    }
+
+    /// Re-point an edge's source (used by Mul-CI to move a mul's input
+    /// dependency onto a multicast replica, and by COP insertion).
+    pub fn retarget_edge_src(&mut self, edge_idx: usize, new_src: NodeId) {
+        let old_src = self.edges[edge_idx].src;
+        self.succ[old_src].retain(|&e| e != edge_idx);
+        self.edges[edge_idx].src = new_src;
+        self.succ[new_src].push(edge_idx);
+    }
+
+    /// Change an edge's kind (e.g. Input → Internal when a COP interposes).
+    pub fn set_edge_kind(&mut self, edge_idx: usize, kind: EdgeKind) {
+        self.edges[edge_idx].kind = kind;
+    }
+
+    /// Remove all internal edges among the given nodes (RID-AT clears a
+    /// kernel's adder-tree wiring before reconstructing it).
+    pub fn clear_internal_edges_among(&mut self, nodes: &[NodeId]) {
+        let set: std::collections::HashSet<NodeId> = nodes.iter().copied().collect();
+        let keep: Vec<Edge> = self
+            .edges
+            .iter()
+            .copied()
+            .filter(|e| {
+                !(e.kind == EdgeKind::Internal && set.contains(&e.src) && set.contains(&e.dst))
+            })
+            .collect();
+        self.rebuild_from_edges(keep);
+    }
+
+    fn rebuild_from_edges(&mut self, edges: Vec<Edge>) {
+        self.edges = edges;
+        for v in self.succ.iter_mut() {
+            v.clear();
+        }
+        for v in self.pred.iter_mut() {
+            v.clear();
+        }
+        for (idx, e) in self.edges.iter().enumerate() {
+            self.succ[e.src].push(idx);
+            self.pred[e.dst].push(idx);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.kinds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kinds.is_empty()
+    }
+
+    pub fn kind(&self, v: NodeId) -> NodeKind {
+        self.kinds[v]
+    }
+
+    pub fn nodes(&self) -> impl Iterator<Item = NodeId> {
+        0..self.len()
+    }
+
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    pub fn edge(&self, idx: usize) -> Edge {
+        self.edges[idx]
+    }
+
+    /// Outgoing edges of `v`.
+    pub fn out_edges(&self, v: NodeId) -> impl Iterator<Item = (usize, Edge)> + '_ {
+        self.succ[v].iter().map(move |&i| (i, self.edges[i]))
+    }
+
+    /// Incoming edges of `v`.
+    pub fn in_edges(&self, v: NodeId) -> impl Iterator<Item = (usize, Edge)> + '_ {
+        self.pred[v].iter().map(move |&i| (i, self.edges[i]))
+    }
+
+    pub fn successors(&self, v: NodeId) -> impl Iterator<Item = NodeId> + '_ {
+        self.succ[v].iter().map(move |&i| self.edges[i].dst)
+    }
+
+    pub fn predecessors(&self, v: NodeId) -> impl Iterator<Item = NodeId> + '_ {
+        self.pred[v].iter().map(move |&i| self.edges[i].src)
+    }
+
+    // ---- typed node sets -------------------------------------------------
+
+    pub fn reads(&self) -> Vec<NodeId> {
+        self.nodes().filter(|&v| self.kind(v).is_read()).collect()
+    }
+
+    pub fn writes(&self) -> Vec<NodeId> {
+        self.nodes().filter(|&v| self.kind(v).is_write()).collect()
+    }
+
+    /// PE-executed operations (`V_OP ∪ COPs`).
+    pub fn pe_ops(&self) -> Vec<NodeId> {
+        self.nodes().filter(|&v| self.kind(v).is_pe_op()).collect()
+    }
+
+    /// `V_OP` = muls + adds (COPs excluded — the paper counts them
+    /// separately as `|M_C|`).
+    pub fn v_op(&self) -> Vec<NodeId> {
+        self.nodes()
+            .filter(|&v| matches!(self.kind(v), NodeKind::Mul { .. } | NodeKind::Add { .. }))
+            .collect()
+    }
+
+    pub fn cops(&self) -> Vec<NodeId> {
+        self.nodes()
+            .filter(|&v| matches!(self.kind(v), NodeKind::Cop { .. }))
+            .collect()
+    }
+
+    /// Multiplications fed by read `r` (its fanout, paper `fanout(r)`).
+    pub fn fanout_muls(&self, r: NodeId) -> Vec<NodeId> {
+        debug_assert!(self.kind(r).is_read());
+        self.successors(r)
+            .filter(|&v| matches!(self.kind(v), NodeKind::Mul { .. }))
+            .collect()
+    }
+
+    /// All nodes of kernel `kr` that sit on a PE (muls + adds), used by
+    /// RID-AT.
+    pub fn kernel_ops(&self, kr: usize) -> Vec<NodeId> {
+        self.nodes()
+            .filter(|&v| match self.kind(v) {
+                NodeKind::Mul { kr: k2, .. } | NodeKind::Add { kr: k2 } => k2 == kr,
+                _ => false,
+            })
+            .collect()
+    }
+
+    /// Structural sanity: degrees per node class, acyclicity, edge-kind
+    /// consistency. Called by tests and after every rewrite phase.
+    pub fn validate(&self) -> Result<()> {
+        for v in self.nodes() {
+            let ins: Vec<Edge> = self.in_edges(v).map(|(_, e)| e).collect();
+            let outs: Vec<Edge> = self.out_edges(v).map(|(_, e)| e).collect();
+            let fail = |msg: String| -> Result<()> {
+                Err(Error::Workload(format!("{}: node {} ({:?}): {}", self.name, v, self.kind(v), msg)))
+            };
+            match self.kind(v) {
+                NodeKind::Read { .. } => {
+                    if !ins.is_empty() {
+                        return fail("read with incoming edges".into());
+                    }
+                    if outs.iter().any(|e| e.kind != EdgeKind::Input) {
+                        return fail("read with non-input out-edge".into());
+                    }
+                }
+                NodeKind::Mul { .. } => {
+                    if ins.len() != 1 || ins[0].kind != EdgeKind::Input && ins[0].kind != EdgeKind::Internal {
+                        return fail(format!("mul needs exactly 1 in-edge, has {:?}", ins));
+                    }
+                    if outs.len() != 1 {
+                        return fail(format!("mul needs exactly 1 out-edge, has {}", outs.len()));
+                    }
+                }
+                NodeKind::Add { .. } => {
+                    let internal_ins =
+                        ins.iter().filter(|e| e.kind == EdgeKind::Internal).count();
+                    if internal_ins != 2 || ins.len() != 2 {
+                        return fail(format!("add needs exactly 2 internal in-edges, has {:?}", ins));
+                    }
+                    if outs.len() != 1 {
+                        return fail(format!("add needs exactly 1 out-edge, has {}", outs.len()));
+                    }
+                }
+                NodeKind::Write { .. } => {
+                    if ins.len() != 1 || ins[0].kind != EdgeKind::Output {
+                        return fail("write needs exactly 1 output in-edge".into());
+                    }
+                    if !outs.is_empty() {
+                        return fail("write with outgoing edges".into());
+                    }
+                }
+                NodeKind::Cop { for_read } => {
+                    if ins.len() != 1 {
+                        return fail("cop needs exactly 1 in-edge".into());
+                    }
+                    let want_in = if for_read { EdgeKind::Input } else { EdgeKind::Internal };
+                    if ins[0].kind != want_in {
+                        return fail(format!("cop in-edge kind {:?}", ins[0].kind));
+                    }
+                    if outs.is_empty() {
+                        return fail("cop with no consumers".into());
+                    }
+                }
+            }
+        }
+        // Acyclicity via Kahn's algorithm.
+        let mut indeg: Vec<usize> = (0..self.len()).map(|v| self.pred[v].len()).collect();
+        let mut queue: Vec<NodeId> = indeg
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == 0)
+            .map(|(v, _)| v)
+            .collect();
+        let mut seen = 0;
+        while let Some(v) = queue.pop() {
+            seen += 1;
+            for s in self.successors(v) {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    queue.push(s);
+                }
+            }
+        }
+        if seen != self.len() {
+            return Err(Error::Workload(format!("{}: s-DFG has a cycle", self.name)));
+        }
+        Ok(())
+    }
+
+    /// Topological order (panics on cycles — call after `validate`).
+    pub fn topo_order(&self) -> Vec<NodeId> {
+        let mut indeg: Vec<usize> = (0..self.len()).map(|v| self.pred[v].len()).collect();
+        let mut queue: std::collections::VecDeque<NodeId> = indeg
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == 0)
+            .map(|(v, _)| v)
+            .collect();
+        let mut order = Vec::with_capacity(self.len());
+        while let Some(v) = queue.pop_front() {
+            order.push(v);
+            for s in self.successors(v) {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    queue.push_back(s);
+                }
+            }
+        }
+        assert_eq!(order.len(), self.len(), "cycle in s-DFG");
+        order
+    }
+}

@@ -1,0 +1,59 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for the sparsemap crate.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Scheduling could not satisfy the resource/dependency constraints at
+    /// any II up to the configured cap (paper: "Failed" rows of Table 3).
+    #[error("scheduling failed for '{block}': {reason} (II cap {ii_cap})")]
+    ScheduleFailed {
+        block: String,
+        reason: String,
+        ii_cap: usize,
+    },
+
+    /// Binding (MIS on the conflict graph) left nodes unbound and the
+    /// incomplete-mapping handler could not repair it.
+    #[error("binding failed at II={ii}: {bound} of {total} nodes bound")]
+    BindFailed { ii: usize, bound: usize, total: usize },
+
+    /// Routing (GRF/LRF for MCIDs) infeasible at this II.
+    #[error("routing failed at II={ii}: {reason}")]
+    RouteFailed { ii: usize, reason: String },
+
+    /// Config file / CLI problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Artifact manifest / HLO loading problems.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Simulator detected an illegal mapping (resource collision, wrong
+    /// value, dependency violation) — this is a *bug detector*, not a
+    /// recoverable condition.
+    #[error("simulation fault at cycle {cycle}: {reason}")]
+    SimFault { cycle: u64, reason: String },
+
+    /// Workload construction problems (bad block features, empty kernels…).
+    #[error("workload error: {0}")]
+    Workload(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    /// Errors bubbled out of the PJRT runtime (`xla` crate).
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,51 @@
+//! # SparseMap — loop mapping for sparse CNNs on streaming CGRAs
+//!
+//! Production-quality reproduction of *SparseMap: Loop Mapping for Sparse
+//! CNNs on Streaming Coarse-grained Reconfigurable Array* (Ni et al., 2024)
+//! as a three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's contribution and every substrate it
+//!   depends on: the streaming-CGRA architecture model ([`arch`]), sparse
+//!   block workloads ([`sparse`]), the s-DFG IR ([`dfg`]), the SparseMap and
+//!   baseline modulo schedulers ([`sched`]), conflict-graph + SBTS-MIS
+//!   binding ([`bind`]), a cycle-accurate functional simulator ([`sim`]),
+//!   the PJRT runtime that executes AOT-compiled JAX/Pallas artifacts
+//!   ([`runtime`]) and a streaming inference coordinator ([`coordinator`]).
+//! * **L2** — `python/compile/model.py`: the sparse-block / conv-layer
+//!   compute in JAX, lowered once to HLO text in `artifacts/`.
+//! * **L1** — `python/compile/kernels/sparse_block.py`: the Pallas MAC
+//!   kernel embedded in the L2 model.
+//!
+//! Python never runs on the request path; the binary is self-contained once
+//! `make artifacts` has produced the HLO modules.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use sparsemap::arch::StreamingCgra;
+//! use sparsemap::sparse::gen::paper_blocks;
+//! use sparsemap::mapper::{map_block, MapperOptions};
+//!
+//! let cgra = StreamingCgra::paper_default(); // 4x4 PEA, LRF 8, GRF 8
+//! let block = &paper_blocks()[0].block;      // "block1" from Table 2
+//! let out = map_block(block, &cgra, &MapperOptions::sparsemap()).unwrap();
+//! println!("II = {}, COPs = {}, MCIDs = {}",
+//!          out.mapping.ii, out.mapping.cops(), out.mapping.mcids());
+//! ```
+
+pub mod arch;
+pub mod bind;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dfg;
+pub mod error;
+pub mod mapper;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod sparse;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,6 @@
+//! `sparsemap` launcher — see `sparsemap help`.
+
+fn main() {
+    let code = sparsemap::cli::run(std::env::args().skip(1));
+    std::process::exit(code);
+}

@@ -1,0 +1,226 @@
+//! Top-level mapping driver (paper Fig. 2): scheduling (phase ①) → routing
+//! pre-allocation (②) → conflict-graph binding (③) → incomplete-mapping
+//! handling (④).
+//!
+//! Phase ④ is realized as bounded re-scheduling: when routing or binding
+//! fails at an II, the scheduler is re-run with a perturbed read-selection
+//! order (BusMap's incomplete-mapping processing re-maps with modified
+//! priorities); only when every perturbation at an II fails does the II
+//! escalate — Algorithm 1's `II ← II + 1`. An II past `MII + ii_slack` is
+//! the paper's "Failed".
+
+use crate::arch::StreamingCgra;
+use crate::bind::{bind, Mapping};
+use crate::config::{SchedulerKind, SparsemapConfig, Techniques};
+use crate::dfg::analysis::mii;
+use crate::dfg::build::build_sdfg;
+use crate::error::{Error, Result};
+use crate::sched::{baseline, sparsemap, ScheduledSDfg};
+use crate::sparse::SparseBlock;
+
+/// Mapper configuration (a view over [`SparsemapConfig`]).
+#[derive(Clone, Debug)]
+pub struct MapperOptions {
+    pub scheduler: SchedulerKind,
+    pub techniques: Techniques,
+    /// Give up beyond `MII + ii_slack`.
+    pub ii_slack: usize,
+    /// SBTS budget per MIS solve.
+    pub mis_iterations: usize,
+    /// Scheduling perturbations tried per II before escalating (phase ④).
+    pub sched_retries: u64,
+    pub seed: u64,
+}
+
+impl MapperOptions {
+    /// The paper's full pipeline.
+    pub fn sparsemap() -> Self {
+        MapperOptions {
+            scheduler: SchedulerKind::SparseMap,
+            techniques: Techniques::all(),
+            ii_slack: 3,
+            mis_iterations: 60_000,
+            sched_retries: 8,
+            seed: 42,
+        }
+    }
+
+    /// The BusMap [6] / Zhao [12] baseline pipeline (one schedule per II —
+    /// heuristic [23] is deterministic and has no remap phase).
+    pub fn baseline() -> Self {
+        MapperOptions {
+            scheduler: SchedulerKind::Baseline,
+            techniques: Techniques::all(), // ignored by the baseline scheduler
+            ii_slack: 3,
+            mis_iterations: 60_000,
+            sched_retries: 1,
+            seed: 42,
+        }
+    }
+
+    pub fn with_techniques(mut self, t: Techniques) -> Self {
+        self.techniques = t;
+        self
+    }
+
+    pub fn from_config(cfg: &SparsemapConfig) -> Self {
+        MapperOptions {
+            scheduler: cfg.scheduler,
+            techniques: cfg.techniques,
+            ii_slack: cfg.ii_slack,
+            mis_iterations: cfg.mis_iterations,
+            sched_retries: if cfg.scheduler == SchedulerKind::Baseline { 1 } else { 8 },
+            seed: cfg.seed,
+        }
+    }
+}
+
+/// Statistics of the *first mapping attempt* — the `II₀ / |C| / |M| /
+/// Success?` columns of Table 3.
+#[derive(Clone, Copy, Debug)]
+pub struct FirstAttempt {
+    pub ii0: usize,
+    pub cops: usize,
+    pub mcids: usize,
+    pub success: bool,
+}
+
+/// A successful mapping plus its attempt history.
+#[derive(Clone, Debug)]
+pub struct MapOutcome {
+    pub mapping: Mapping,
+    pub first_attempt: FirstAttempt,
+    /// (ii, retry) pairs attempted before success.
+    pub attempts: Vec<(usize, u64)>,
+    pub mii: usize,
+}
+
+impl MapOutcome {
+    /// Speedup vs accelerating the corresponding dense block (Table 3 `S`):
+    /// `MII_dense / II`, where the dense block's MII honours the same
+    /// resource bounds (PEs, input buses, output buses) as §4.1's formula.
+    pub fn speedup(&self, block: &SparseBlock, cgra: &StreamingCgra) -> f64 {
+        let dense_mii = cgra
+            .mii(block.dense_ops(), block.c, block.k)
+            .max(1);
+        dense_mii as f64 / self.mapping.ii as f64
+    }
+}
+
+/// Schedule one attempt with the configured scheduler.
+fn schedule_attempt(
+    g: &crate::dfg::SDfg,
+    cgra: &StreamingCgra,
+    opts: &MapperOptions,
+    ii: usize,
+    retry: u64,
+) -> Result<ScheduledSDfg> {
+    match opts.scheduler {
+        SchedulerKind::SparseMap => {
+            sparsemap::schedule_at_perturbed(g, cgra, opts.techniques, ii, retry)
+        }
+        SchedulerKind::Baseline => baseline::schedule_at(g, cgra, ii),
+    }
+}
+
+/// Map a sparse block onto the CGRA. Returns the first fully bound mapping
+/// (lowest II, then lowest perturbation), plus first-attempt statistics.
+pub fn map_block(
+    block: &SparseBlock,
+    cgra: &StreamingCgra,
+    opts: &MapperOptions,
+) -> Result<MapOutcome> {
+    let (g, _) = build_sdfg(block);
+    let base_ii = mii(&g, cgra);
+    let mut first: Option<FirstAttempt> = None;
+    let mut attempts = Vec::new();
+
+    // Retry order interleaves the packed (bit-2 clear) and spread (bit-2
+    // set) scheduling variants so both I/O policies are probed early.
+    const RETRY_ORDER: [u64; 8] = [0, 4, 1, 5, 2, 6, 3, 7];
+    for ii in base_ii..=base_ii + opts.ii_slack {
+        for &retry in RETRY_ORDER.iter().take(opts.sched_retries.max(1) as usize) {
+            attempts.push((ii, retry));
+            let Ok(s) = schedule_attempt(&g, cgra, opts, ii, retry) else { continue };
+            let bound = bind(&s, cgra, opts.mis_iterations, opts.seed ^ retry);
+            if first.is_none() {
+                first = Some(FirstAttempt {
+                    ii0: ii,
+                    cops: s.cops(),
+                    mcids: s.mcids().len(),
+                    success: bound.is_ok(),
+                });
+            }
+            if let Ok(mapping) = bound {
+                return Ok(MapOutcome {
+                    mapping,
+                    first_attempt: first.unwrap(),
+                    attempts,
+                    mii: base_ii,
+                });
+            }
+        }
+    }
+    Err(Error::ScheduleFailed {
+        block: block.name.clone(),
+        reason: format!(
+            "no valid mapping up to II={} (first attempt: {:?})",
+            base_ii + opts.ii_slack,
+            first
+        ),
+        ii_cap: base_ii + opts.ii_slack,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::paper_blocks;
+
+    #[test]
+    fn sparsemap_maps_every_paper_block() {
+        let cgra = StreamingCgra::paper_default();
+        for nb in paper_blocks() {
+            let out = map_block(&nb.block, &cgra, &MapperOptions::sparsemap())
+                .unwrap_or_else(|e| panic!("{}: {e}", nb.label));
+            // blocks 5/7 (58 ops, 91% PE occupancy at MII) may take up to
+            // MII+2 depending on the SBTS seed; everything else binds at
+            // MII or MII+1.
+            assert!(out.mapping.ii <= out.mii + 2, "{}: II {} vs MII {}",
+                    nb.label, out.mapping.ii, out.mii);
+            out.mapping.verify(&cgra).unwrap();
+        }
+    }
+
+    #[test]
+    fn speedups_match_paper_when_ii_equals_mii() {
+        // Table 3 speedups: 1.5, 1.5, 1.67, 1.5, 2, 2.67, 2 at the paper's
+        // final IIs. Check the formula against blocks where we hit MII.
+        let cgra = StreamingCgra::paper_default();
+        let want = [1.5, 1.5, 1.67, 1.5, 2.0, 2.67, 2.0];
+        for (nb, &s_want) in paper_blocks().iter().zip(&want) {
+            let out = map_block(&nb.block, &cgra, &MapperOptions::sparsemap()).unwrap();
+            if out.mapping.ii == out.mii {
+                let s = out.speedup(&nb.block, &cgra);
+                assert!((s - s_want).abs() < 0.02, "{}: {s} vs {s_want}", nb.label);
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_underperforms_sparsemap() {
+        let cgra = StreamingCgra::paper_default();
+        let (mut base_fail, mut base_cops, mut sm_cops) = (0usize, 0usize, 0usize);
+        for nb in paper_blocks() {
+            match map_block(&nb.block, &cgra, &MapperOptions::baseline()) {
+                Ok(out) => base_cops += out.mapping.cops(),
+                Err(_) => base_fail += 1,
+            }
+            let sm = map_block(&nb.block, &cgra, &MapperOptions::sparsemap()).unwrap();
+            sm_cops += sm.mapping.cops();
+        }
+        // The paper: baselines fail 2 of 7 blocks and pay 40 COPs vs 3.
+        assert!(base_fail >= 1 || base_cops > 4 * sm_cops.max(1),
+                "baseline should visibly underperform: fails={base_fail} cops={base_cops} vs {sm_cops}");
+    }
+}

@@ -1,0 +1,216 @@
+//! Experiment reporting: regenerates every table of the paper's evaluation
+//! (§5) — shared by the CLI, the benches and EXPERIMENTS.md.
+
+use crate::arch::StreamingCgra;
+use crate::config::Techniques;
+use crate::mapper::{map_block, MapperOptions};
+use crate::sparse::gen::{paper_blocks, NamedBlock};
+use crate::util::table::Table;
+
+/// Table 2 — features of the evaluation blocks.
+pub fn table2() -> Table {
+    let mut t = Table::new(["blocks", "sparsity", "CnKm", "|V_OP|", "|V_R|", "|V_W|", "N_FG4"]);
+    for nb in paper_blocks() {
+        let f = nb.block.features();
+        t.row([
+            nb.label.to_string(),
+            format!("{:.2}", f.sparsity),
+            format!("C{}K{}", f.c, f.k),
+            f.v_op.to_string(),
+            f.v_r.to_string(),
+            f.v_w.to_string(),
+            f.n_fg4.to_string(),
+        ]);
+    }
+    t
+}
+
+/// One Table-3 half-row (per scheduler).
+#[derive(Clone, Debug)]
+pub struct MappingRow {
+    pub label: &'static str,
+    pub mii: usize,
+    pub ii0: Option<usize>,
+    pub cops0: Option<usize>,
+    pub mcids0: Option<usize>,
+    pub success0: Option<bool>,
+    pub final_ii: Option<usize>,
+    pub speedup: Option<f64>,
+}
+
+/// Run one scheduler over every paper block.
+pub fn mapping_rows(cgra: &StreamingCgra, opts: &MapperOptions) -> Vec<MappingRow> {
+    paper_blocks()
+        .iter()
+        .map(|nb| mapping_row(nb, cgra, opts))
+        .collect()
+}
+
+fn mapping_row(nb: &NamedBlock, cgra: &StreamingCgra, opts: &MapperOptions) -> MappingRow {
+    let (g, _) = crate::dfg::build::build_sdfg(&nb.block);
+    let mii = crate::dfg::analysis::mii(&g, cgra);
+    match map_block(&nb.block, cgra, opts) {
+        Ok(out) => MappingRow {
+            label: nb.label,
+            mii,
+            ii0: Some(out.first_attempt.ii0),
+            cops0: Some(out.first_attempt.cops),
+            mcids0: Some(out.first_attempt.mcids),
+            success0: Some(out.first_attempt.success),
+            final_ii: Some(out.mapping.ii),
+            speedup: Some(out.speedup(&nb.block, cgra)),
+        },
+        Err(e) => {
+            // Recover the first-attempt statistics from the error message
+            // is fragile; recompute them directly instead.
+            let first = first_attempt_stats(nb, cgra, opts);
+            log::debug!("{}: mapping failed: {e}", nb.label);
+            MappingRow {
+                label: nb.label,
+                mii,
+                ii0: first.map(|f| f.0),
+                cops0: first.map(|f| f.1),
+                mcids0: first.map(|f| f.2),
+                success0: Some(false),
+                final_ii: None,
+                speedup: None,
+            }
+        }
+    }
+}
+
+/// First scheduling attempt's (II0, cops, mcids) even when mapping fails.
+fn first_attempt_stats(
+    nb: &NamedBlock,
+    cgra: &StreamingCgra,
+    opts: &MapperOptions,
+) -> Option<(usize, usize, usize)> {
+    let (g, _) = crate::dfg::build::build_sdfg(&nb.block);
+    let base = crate::dfg::analysis::mii(&g, cgra);
+    for ii in base..=base + opts.ii_slack {
+        let s = match opts.scheduler {
+            crate::config::SchedulerKind::SparseMap => {
+                crate::sched::sparsemap::schedule_at(&g, cgra, opts.techniques, ii).ok()
+            }
+            crate::config::SchedulerKind::Baseline => {
+                crate::sched::baseline::schedule_at(&g, cgra, ii).ok()
+            }
+        };
+        if let Some(s) = s {
+            return Some((ii, s.cops(), s.mcids().len()));
+        }
+    }
+    None
+}
+
+/// Table 3 — mapping comparison, baselines [6][12] vs SparseMap.
+pub fn table3(cgra: &StreamingCgra) -> (Table, Vec<MappingRow>, Vec<MappingRow>) {
+    let base_rows = mapping_rows(cgra, &MapperOptions::baseline());
+    let sm_rows = mapping_rows(cgra, &MapperOptions::sparsemap());
+    let mut t = Table::new([
+        "block", "MII", "B:II0", "B:|C|", "B:|M|", "B:ok?", "B:II", "B:S",
+        "S:II0", "S:|C|", "S:|M|", "S:ok?", "S:II", "S:S",
+    ]);
+    let fmt_opt = |o: Option<usize>| o.map_or("-".into(), |v| v.to_string());
+    let fmt_ok = |o: Option<bool>| o.map_or("-".into(), |v| if v { "Y".into() } else { "N".to_string() });
+    let fmt_ii = |o: Option<usize>| o.map_or("Failed".into(), |v| v.to_string());
+    let fmt_s = |o: Option<f64>| o.map_or("-".into(), |v| format!("{v:.2}"));
+    for (b, s) in base_rows.iter().zip(&sm_rows) {
+        t.row([
+            b.label.to_string(),
+            b.mii.to_string(),
+            fmt_opt(b.ii0),
+            fmt_opt(b.cops0),
+            fmt_opt(b.mcids0),
+            fmt_ok(b.success0),
+            fmt_ii(b.final_ii),
+            fmt_s(b.speedup),
+            fmt_opt(s.ii0),
+            fmt_opt(s.cops0),
+            fmt_opt(s.mcids0),
+            fmt_ok(s.success0),
+            fmt_ii(s.final_ii),
+            fmt_s(s.speedup),
+        ]);
+    }
+    (t, base_rows, sm_rows)
+}
+
+/// Totals row helper for Table 3 (the paper's ↓92.5 % / ↓46.0 % line).
+pub fn totals(rows: &[MappingRow]) -> (usize, usize) {
+    (
+        rows.iter().filter_map(|r| r.cops0).sum(),
+        rows.iter().filter_map(|r| r.mcids0).sum(),
+    )
+}
+
+/// Table 4 — ablation: AIBA / +Mul-CI / +RID-AT.
+pub fn table4(cgra: &StreamingCgra) -> (Table, Vec<Vec<MappingRow>>) {
+    let combos: [(&str, Techniques); 3] = [
+        ("AIBA", Techniques::aiba_only()),
+        ("AIBA+Mul-CI", Techniques::aiba_mulci()),
+        ("AIBA+Mul-CI+RID-AT", Techniques::all()),
+    ];
+    let mut all_rows = Vec::new();
+    let mut t = Table::new([
+        "block",
+        "A:II0", "A:|C|", "A:|M|", "A:II",
+        "AM:II0", "AM:|C|", "AM:|M|", "AM:II",
+        "AMR:II0", "AMR:|C|", "AMR:|M|", "AMR:II",
+    ]);
+    for (_, tech) in &combos {
+        let opts = MapperOptions::sparsemap().with_techniques(*tech);
+        all_rows.push(mapping_rows(cgra, &opts));
+    }
+    let fmt_opt = |o: Option<usize>| o.map_or("-".to_string(), |v| v.to_string());
+    let fmt_ii = |o: Option<usize>| o.map_or("Failed".to_string(), |v| v.to_string());
+    for i in 0..all_rows[0].len() {
+        let mut cells = vec![all_rows[0][i].label.to_string()];
+        for rows in &all_rows {
+            let r = &rows[i];
+            cells.push(fmt_opt(r.ii0));
+            cells.push(fmt_opt(r.cops0));
+            cells.push(fmt_opt(r.mcids0));
+            cells.push(fmt_ii(r.final_ii));
+        }
+        t.row(cells);
+    }
+    (t, all_rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_matches_paper() {
+        let t = table2();
+        let s = t.render();
+        // Spot-check the exact published feature rows.
+        assert!(s.contains("block1") && s.contains("C4K6"), "{s}");
+        assert!(s.contains("block5") && s.contains("C8K8"));
+        assert_eq!(t.num_rows(), 7);
+    }
+
+    #[test]
+    fn table3_shape_holds() {
+        // The paper's headline: SparseMap reduces COPs ≥ 4× and MCIDs vs
+        // the baselines, and maps blocks the baselines cannot.
+        let cgra = StreamingCgra::paper_default();
+        let (_, base_rows, sm_rows) = table3(&cgra);
+        let sm_success = sm_rows.iter().filter(|r| r.final_ii.is_some()).count();
+        let base_success = base_rows.iter().filter(|r| r.final_ii.is_some()).count();
+        assert_eq!(sm_success, 7, "SparseMap must map all blocks");
+        assert!(base_success < 7, "baseline must fail at least one block");
+        let (bc, bm) = totals(&base_rows);
+        let (sc, sm) = totals(&sm_rows);
+        assert!(sc * 4 <= bc, "COPs: {sc} vs {bc}");
+        assert!(sm < bm, "MCIDs: {sm} vs {bm}");
+        // SparseMap's final II never exceeds the baseline's.
+        for (b, s) in base_rows.iter().zip(&sm_rows) {
+            if let (Some(bi), Some(si)) = (b.final_ii, s.final_ii) {
+                assert!(si <= bi, "{}: {si} vs {bi}", s.label);
+            }
+        }
+    }
+}

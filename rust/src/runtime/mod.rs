@@ -1,0 +1,267 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO text
+//! produced by `python/compile/aot.py`) and executes them on the request
+//! path via the `xla` crate's CPU client.
+//!
+//! HLO *text* is the interchange format — jax ≥ 0.5 emits HloModuleProtos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see `/opt/xla-example/README.md`).
+//!
+//! Python never runs here: `Runtime` is self-contained once
+//! `make artifacts` has produced `artifacts/*.hlo.txt` + `manifest.tsv`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// One artifact's manifest row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub dtype: String,
+    /// Input shapes in declaration order.
+    pub in_shapes: Vec<Vec<usize>>,
+    pub out_shape: Vec<usize>,
+}
+
+impl ArtifactSpec {
+    fn parse_shape(s: &str) -> Result<Vec<usize>> {
+        s.split('x')
+            .map(|d| {
+                d.parse::<usize>()
+                    .map_err(|_| Error::Runtime(format!("bad shape component '{d}'")))
+            })
+            .collect()
+    }
+
+    pub fn in_len(&self, i: usize) -> usize {
+        self.in_shapes[i].iter().product()
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.out_shape.iter().product()
+    }
+}
+
+/// Parse `manifest.tsv` (written by aot.py).
+pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
+    let path = dir.join("manifest.tsv");
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        Error::Runtime(format!(
+            "cannot read {} (run `make artifacts` first): {e}",
+            path.display()
+        ))
+    })?;
+    let mut specs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        if cols.len() != 5 {
+            return Err(Error::Runtime(format!(
+                "manifest line {}: expected 5 columns, got {}",
+                lineno + 1,
+                cols.len()
+            )));
+        }
+        let in_shapes = cols[3]
+            .split(';')
+            .map(ArtifactSpec::parse_shape)
+            .collect::<Result<Vec<_>>>()?;
+        specs.push(ArtifactSpec {
+            name: cols[0].to_string(),
+            file: cols[1].to_string(),
+            dtype: cols[2].to_string(),
+            in_shapes,
+            out_shape: ArtifactSpec::parse_shape(cols[4])?,
+        });
+    }
+    Ok(specs)
+}
+
+/// A compiled module ready to execute.
+struct LoadedModule {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+/// The PJRT runtime: one CPU client + lazily compiled modules.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    specs: HashMap<String, ArtifactSpec>,
+    modules: HashMap<String, LoadedModule>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory and index the manifest (no compilation
+    /// happens until a module is first executed).
+    pub fn new(artifacts_dir: &str) -> Result<Self> {
+        let dir = PathBuf::from(artifacts_dir);
+        let specs = load_manifest(&dir)?
+            .into_iter()
+            .map(|s| (s.name.clone(), s))
+            .collect();
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, specs, modules: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.specs.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    fn ensure_compiled(&mut self, name: &str) -> Result<&LoadedModule> {
+        if !self.modules.contains_key(name) {
+            let spec = self
+                .specs
+                .get(name)
+                .ok_or_else(|| Error::Runtime(format!("unknown artifact '{name}'")))?
+                .clone();
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            log::debug!("compiled artifact '{name}' from {}", path.display());
+            self.modules.insert(name.to_string(), LoadedModule { exe, spec });
+        }
+        Ok(&self.modules[name])
+    }
+
+    /// Execute an artifact with flat f32 input buffers (shapes from the
+    /// manifest). Returns the flat f32 output.
+    pub fn execute(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        // Validate against the spec first (better errors than XLA's).
+        let spec = self
+            .specs
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("unknown artifact '{name}'")))?
+            .clone();
+        if inputs.len() != spec.in_shapes.len() {
+            return Err(Error::Runtime(format!(
+                "'{name}' expects {} inputs, got {}",
+                spec.in_shapes.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (buf, shape)) in inputs.iter().zip(&spec.in_shapes).enumerate() {
+            let want: usize = shape.iter().product();
+            if buf.len() != want {
+                return Err(Error::Runtime(format!(
+                    "'{name}' input {i}: {} elements, want {want} ({shape:?})",
+                    buf.len()
+                )));
+            }
+        }
+        let module = self.ensure_compiled(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&module.spec.in_shapes)
+            .map(|(buf, shape)| {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(buf).reshape(&dims).map_err(Error::from)
+            })
+            .collect::<Result<_>>()?;
+        let result = module.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple output.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        if values.len() != spec.out_len() {
+            return Err(Error::Runtime(format!(
+                "'{name}' returned {} elements, want {}",
+                values.len(),
+                spec.out_len()
+            )));
+        }
+        Ok(values)
+    }
+}
+
+/// Locate the artifacts directory: `$SPARSEMAP_ARTIFACTS`, else
+/// `artifacts/` relative to the crate root or cwd.
+pub fn default_artifacts_dir() -> String {
+    if let Ok(d) = std::env::var("SPARSEMAP_ARTIFACTS") {
+        return d;
+    }
+    for cand in ["artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")] {
+        if Path::new(cand).join("manifest.tsv").exists() {
+            return cand.to_string();
+        }
+    }
+    "artifacts".to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Path::new(&default_artifacts_dir()).join("manifest.tsv").exists()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let specs = load_manifest(Path::new(&default_artifacts_dir())).unwrap();
+        assert!(specs.len() >= 5);
+        let sb = specs.iter().find(|s| s.name == "sb_c8k8").expect("sb_c8k8");
+        assert_eq!(sb.in_shapes, vec![vec![64, 8], vec![8, 8], vec![8, 8]]);
+        assert_eq!(sb.out_shape, vec![64, 8]);
+    }
+
+    #[test]
+    fn executes_sparse_block_artifact() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let mut rt = Runtime::new(&default_artifacts_dir()).unwrap();
+        let spec = rt.spec("sb_c4k6").unwrap().clone();
+        let (t, c) = (spec.in_shapes[0][0], spec.in_shapes[0][1]);
+        let k = spec.in_shapes[1][1];
+        let mut rng = crate::util::rng::Pcg64::seeded(3);
+        let x: Vec<f32> = (0..t * c).map(|_| rng.next_normal() as f32).collect();
+        let w: Vec<f32> = (0..c * k).map(|_| rng.next_normal() as f32).collect();
+        let mask: Vec<f32> = (0..c * k).map(|_| (rng.chance(0.6)) as u8 as f32).collect();
+        let y = rt.execute("sb_c4k6", &[&x, &w, &mask]).unwrap();
+        assert_eq!(y.len(), t * k);
+        // Check vs a direct computation.
+        for row in 0..t {
+            for kk in 0..k {
+                let want: f32 = (0..c)
+                    .map(|cc| x[row * c + cc] * w[cc * k + kk] * mask[cc * k + kk])
+                    .sum();
+                let got = y[row * k + kk];
+                assert!((got - want).abs() < 1e-4, "({row},{kk}): {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let mut rt = Runtime::new(&default_artifacts_dir()).unwrap();
+        assert!(rt.execute("nope", &[]).is_err());
+        let bad = vec![0f32; 3];
+        assert!(rt.execute("sb_c4k6", &[&bad, &bad, &bad]).is_err());
+    }
+}

@@ -1,0 +1,315 @@
+//! Modulo scheduling of s-DFGs (paper §3.2 and §4.1).
+//!
+//! Two schedulers share this module's [`ScheduledSDfg`] representation and
+//! verification logic:
+//! * [`sparsemap`] — Algorithm 1 (AIBA + Mul-CI + RID-AT), the paper's
+//!   contribution;
+//! * [`baseline`] — lifetime-sensitive modulo scheduling (Llosa [23]) with
+//!   fixed adder trees and demand-order bus allocation, the policy the
+//!   BusMap [6] / Zhao [12] baselines use.
+
+pub mod baseline;
+pub mod output;
+pub mod ridat;
+pub mod sparsemap;
+
+use crate::arch::StreamingCgra;
+use crate::dfg::{EdgeKind, NodeId, NodeKind, SDfg};
+use crate::error::{Error, Result};
+
+/// A scheduled s-DFG: the (possibly rewritten — COPs, multicast replicas,
+/// reconstructed adder trees) graph plus a scheduling time per node.
+#[derive(Clone, Debug)]
+pub struct ScheduledSDfg {
+    pub g: SDfg,
+    pub ii: usize,
+    /// Scheduling time `t(v)` per node.
+    pub t: Vec<usize>,
+}
+
+/// One multi-cycle internal dependency: `(producer, consumer, distance)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Mcid {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub dist: usize,
+}
+
+impl ScheduledSDfg {
+    /// Modulo scheduling time `m(v) = t(v) % II`.
+    #[inline]
+    pub fn m(&self, v: NodeId) -> usize {
+        self.t[v] % self.ii
+    }
+
+    /// The MCID set (§3.1 Table 1): internal deps with distance > 1.
+    pub fn mcids(&self) -> Vec<Mcid> {
+        self.g
+            .edges()
+            .iter()
+            .filter(|e| e.kind == EdgeKind::Internal)
+            .filter_map(|e| {
+                let dist = self.t[e.dst] - self.t[e.src];
+                (dist > 1).then_some(Mcid { src: e.src, dst: e.dst, dist })
+            })
+            .collect()
+    }
+
+    /// Number of caching operations inserted (the `|C|` column of Table 3).
+    pub fn cops(&self) -> usize {
+        self.g.cops().len()
+    }
+
+    /// COPs caching input readings (Fig. 4(b) kind).
+    pub fn input_cops(&self) -> usize {
+        self.g
+            .cops()
+            .iter()
+            .filter(|&&v| matches!(self.g.kind(v), NodeKind::Cop { for_read: true }))
+            .count()
+    }
+
+    /// COPs buffering results for output writings (§4.1 ③ kind).
+    pub fn output_cops(&self) -> usize {
+        self.cops() - self.input_cops()
+    }
+
+    /// Schedule makespan (cycles from first read to last write of one
+    /// iteration) — the pipeline depth.
+    pub fn makespan(&self) -> usize {
+        self.t.iter().copied().max().map_or(0, |m| m + 1)
+    }
+
+    /// Per-modulo-slot occupancy tables, recomputed from the schedule.
+    pub fn occupancy(&self) -> Occupancy {
+        let mut occ = Occupancy {
+            reads: vec![0; self.ii],
+            writes: vec![0; self.ii],
+            pe_ops: vec![0; self.ii],
+        };
+        for v in self.g.nodes() {
+            let m = self.m(v);
+            match self.g.kind(v) {
+                NodeKind::Read { .. } => occ.reads[m] += 1,
+                NodeKind::Write { .. } => occ.writes[m] += 1,
+                k if k.is_pe_op() => occ.pe_ops[m] += 1,
+                _ => {}
+            }
+        }
+        occ
+    }
+
+    /// Check every constraint of §3.2 (1)–(2) against `cgra`. Returns a
+    /// descriptive error naming the first violated constraint.
+    pub fn verify(&self, cgra: &StreamingCgra) -> Result<()> {
+        self.g.validate()?;
+        if self.t.len() != self.g.len() {
+            return Err(Error::Workload("schedule/graph size mismatch".into()));
+        }
+        // (1) dependency timing.
+        for e in self.g.edges() {
+            let (t1, t2) = (self.t[e.src] as i64, self.t[e.dst] as i64);
+            let ok = match e.kind {
+                EdgeKind::Input => t2 == t1,
+                EdgeKind::Output => t2 == t1 + 1,
+                EdgeKind::Internal => t2 - t1 >= 1,
+            };
+            if !ok {
+                return Err(Error::Workload(format!(
+                    "dependency timing violated: {:?} {}@{} -> {}@{}",
+                    e.kind, e.src, t1, e.dst, t2
+                )));
+            }
+        }
+        // (2) modulo resources.
+        let occ = self.occupancy();
+        for i in 0..self.ii {
+            if occ.reads[i] > cgra.m {
+                return Err(Error::Workload(format!(
+                    "input buses oversubscribed at slot {i}: {} > {}",
+                    occ.reads[i], cgra.m
+                )));
+            }
+            if occ.writes[i] > cgra.n {
+                return Err(Error::Workload(format!(
+                    "output buses oversubscribed at slot {i}: {} > {}",
+                    occ.writes[i], cgra.n
+                )));
+            }
+            if occ.pe_ops[i] > cgra.num_pes() {
+                return Err(Error::Workload(format!(
+                    "PEs oversubscribed at slot {i}: {} > {}",
+                    occ.pe_ops[i],
+                    cgra.num_pes()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Occupancy per modulo slot (reads include multicast replicas; pe_ops
+/// include COPs — exactly the left-hand sides of constraint (2)).
+#[derive(Clone, Debug)]
+pub struct Occupancy {
+    pub reads: Vec<usize>,
+    pub writes: Vec<usize>,
+    pub pe_ops: Vec<usize>,
+}
+
+/// Modulo resource tables used while scheduling (`T_PE`, `T_I`, `T_O` of
+/// Algorithm 1).
+#[derive(Clone, Debug)]
+pub struct ResourceTables {
+    pub ii: usize,
+    pub pe: Vec<usize>,
+    pub ibus: Vec<usize>,
+    pub obus: Vec<usize>,
+    max_pe: usize,
+    max_ibus: usize,
+    max_obus: usize,
+}
+
+impl ResourceTables {
+    pub fn new(cgra: &StreamingCgra, ii: usize) -> Self {
+        ResourceTables {
+            ii,
+            pe: vec![0; ii],
+            ibus: vec![0; ii],
+            obus: vec![0; ii],
+            max_pe: cgra.num_pes(),
+            max_ibus: cgra.m,
+            max_obus: cgra.n,
+        }
+    }
+
+    #[inline]
+    pub fn pe_free(&self, t: usize) -> usize {
+        self.max_pe - self.pe[t % self.ii]
+    }
+
+    #[inline]
+    pub fn ibus_free(&self, t: usize) -> usize {
+        self.max_ibus - self.ibus[t % self.ii]
+    }
+
+    #[inline]
+    pub fn obus_free(&self, t: usize) -> usize {
+        self.max_obus - self.obus[t % self.ii]
+    }
+
+    pub fn take_pe(&mut self, t: usize, k: usize) {
+        let m = t % self.ii;
+        debug_assert!(self.pe[m] + k <= self.max_pe);
+        self.pe[m] += k;
+    }
+
+    pub fn take_ibus(&mut self, t: usize, k: usize) {
+        let m = t % self.ii;
+        debug_assert!(self.ibus[m] + k <= self.max_ibus);
+        self.ibus[m] += k;
+    }
+
+    pub fn take_obus(&mut self, t: usize, k: usize) {
+        let m = t % self.ii;
+        debug_assert!(self.obus[m] + k <= self.max_obus);
+        self.obus[m] += k;
+    }
+}
+
+/// Helper: earliest `t'` in `lo..lo+span` with a free PE slot.
+pub(crate) fn earliest_pe_slot(tables: &ResourceTables, lo: usize, span: usize) -> Option<usize> {
+    (lo..lo + span).find(|&t| tables.pe_free(t) > 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::build::build_sdfg;
+    use crate::sparse::SparseBlock;
+
+    fn tiny() -> (SDfg, Vec<usize>) {
+        // 2 channels, 1 kernel: r0,r1 -> m0,m1 -> a -> w.
+        let b = SparseBlock::from_mask("tiny", 2, 1, vec![true, true]).unwrap();
+        let (g, _) = build_sdfg(&b);
+        // nodes: r0, r1, m0, m1, a, w (construction order).
+        let t = vec![0, 0, 0, 0, 1, 2];
+        (g, t)
+    }
+
+    #[test]
+    fn verify_accepts_legal_schedule() {
+        let (g, t) = tiny();
+        let s = ScheduledSDfg { g, ii: 1, t };
+        s.verify(&StreamingCgra::paper_default()).unwrap();
+        assert_eq!(s.mcids().len(), 0);
+        assert_eq!(s.cops(), 0);
+        assert_eq!(s.makespan(), 3);
+    }
+
+    #[test]
+    fn verify_rejects_input_distance() {
+        let (g, mut t) = tiny();
+        t[2] = 1; // mul not co-scheduled with its read
+        let s = ScheduledSDfg { g, ii: 1, t };
+        assert!(s.verify(&StreamingCgra::paper_default()).is_err());
+    }
+
+    #[test]
+    fn verify_rejects_output_distance() {
+        let (g, mut t) = tiny();
+        t[5] = 3; // write 2 cycles after the root add
+        let s = ScheduledSDfg { g, ii: 1, t };
+        assert!(s.verify(&StreamingCgra::paper_default()).is_err());
+    }
+
+    #[test]
+    fn verify_rejects_bus_oversubscription() {
+        // 5 reads at the same slot on a 4-bus machine (II = 1 forces all
+        // reads into one modulo slot).
+        let b = SparseBlock::from_mask("wide", 5, 1, vec![true; 5]).unwrap();
+        let (g, _) = build_sdfg(&b);
+        let mut t = vec![0; g.len()];
+        let order = g.topo_order();
+        for v in order {
+            let lo = g
+                .in_edges(v)
+                .map(|(_, e)| match e.kind {
+                    EdgeKind::Input => t[e.src],
+                    _ => t[e.src] + 1,
+                })
+                .max();
+            if let Some(lo) = lo {
+                t[v] = lo;
+            }
+        }
+        let s = ScheduledSDfg { g, ii: 1, t };
+        let err = s.verify(&StreamingCgra::paper_default()).unwrap_err();
+        assert!(err.to_string().contains("input buses"), "{err}");
+    }
+
+    #[test]
+    fn mcid_detection() {
+        let (g, mut t) = tiny();
+        // Stretch the add 3 cycles after the muls, write follows it.
+        t[4] = 3;
+        t[5] = 4;
+        let s = ScheduledSDfg { g, ii: 4, t };
+        s.verify(&StreamingCgra::paper_default()).unwrap();
+        let mcids = s.mcids();
+        assert_eq!(mcids.len(), 2); // both mul->add edges now have dist 3
+        assert!(mcids.iter().all(|m| m.dist == 3));
+    }
+
+    #[test]
+    fn resource_tables() {
+        let cgra = StreamingCgra::paper_default();
+        let mut rt = ResourceTables::new(&cgra, 2);
+        assert_eq!(rt.pe_free(0), 16);
+        rt.take_pe(0, 10);
+        rt.take_pe(2, 6); // slot 0 again
+        assert_eq!(rt.pe_free(0), 0);
+        assert_eq!(rt.pe_free(1), 16);
+        assert_eq!(earliest_pe_slot(&rt, 0, 4), Some(1));
+    }
+}

@@ -1,0 +1,137 @@
+//! Output-writing scheduling (paper §4.1 ③).
+//!
+//! The scheduling distance between an output writing and its producer must
+//! be exactly 1 (no buffer on output buses). If the output buses at
+//! `t₂ + 1` are taken, a COP is inserted: it becomes the new producer of
+//! the write and is tried at every later slot until a cycle with both a
+//! free PE (for the COP) and a free output bus (for the write, one cycle
+//! after) is found.
+
+use crate::dfg::{EdgeKind, NodeKind, SDfg};
+use crate::error::{Error, Result};
+use crate::sched::ResourceTables;
+
+/// Schedule all writes. Expects every PE op scheduled. Mutates `g` when
+/// output COPs are needed.
+pub fn schedule_writes(
+    g: &mut SDfg,
+    t: &mut Vec<Option<usize>>,
+    tables: &mut ResourceTables,
+) -> Result<()> {
+    // Deterministic order: by producer time, then node id (kernels whose
+    // result is ready first claim output buses first).
+    let mut writes: Vec<(usize, usize)> = g
+        .nodes()
+        .filter(|&v| g.kind(v).is_write())
+        .map(|v| {
+            let prod = g.predecessors(v).next().expect("write has producer");
+            (t[prod].expect("producer scheduled"), v)
+        })
+        .collect();
+    writes.sort_unstable();
+
+    let span = 4 * tables.ii + 4;
+    for (t2, w) in writes {
+        let t3 = t2 + 1;
+        if tables.obus_free(t3) > 0 {
+            t[w] = Some(t3);
+            tables.take_obus(t3, 1);
+            continue;
+        }
+        // Insert an output-side COP: v_a -> cop (internal), cop -> w (output).
+        let mut placed = false;
+        for tc in t3..t3 + span {
+            if tables.pe_free(tc) > 0 && tables.obus_free(tc + 1) > 0 {
+                let cop = g.add_node(NodeKind::Cop { for_read: false });
+                t.push(None);
+                let out_edge = g
+                    .in_edges(w)
+                    .map(|(i, _)| i)
+                    .next()
+                    .expect("write in-edge");
+                let va = g.edge(out_edge).src;
+                g.retarget_edge_src(out_edge, cop);
+                g.add_edge(va, cop, EdgeKind::Internal);
+                t[cop] = Some(tc);
+                t[w] = Some(tc + 1);
+                tables.take_pe(tc, 1);
+                tables.take_obus(tc + 1, 1);
+                placed = true;
+                break;
+            }
+        }
+        if !placed {
+            return Err(Error::ScheduleFailed {
+                block: g.name.clone(),
+                reason: format!("no slot for output writing {w} (producer at {t2})"),
+                ii_cap: tables.ii,
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::StreamingCgra;
+    use crate::dfg::build::build_sdfg;
+    use crate::sparse::SparseBlock;
+
+    /// 6 kernels all completing at t=1 on a machine with 4 output buses:
+    /// 4 writes go out at t=2, the remaining 2 need COPs.
+    #[test]
+    fn overflow_writes_get_cops() {
+        // 1 channel, 6 kernels, each kernel = single mul.
+        let b = SparseBlock::from_mask("w6", 1, 6, vec![true; 6]).unwrap();
+        let (mut g, _) = build_sdfg(&b);
+        let cgra = StreamingCgra::paper_default();
+        let ii = 2;
+        let mut tables = ResourceTables::new(&cgra, ii);
+        let mut t: Vec<Option<usize>> = vec![None; g.len()];
+        for v in g.nodes() {
+            match g.kind(v) {
+                NodeKind::Read { .. } => t[v] = Some(1),
+                NodeKind::Mul { .. } => {
+                    t[v] = Some(1);
+                    tables.take_pe(1, 1);
+                }
+                _ => {}
+            }
+        }
+        schedule_writes(&mut g, &mut t, &mut tables).unwrap();
+        g.validate().unwrap();
+        assert_eq!(g.cops().len(), 2, "two writes overflow N=4 buses");
+        // All writes scheduled with distance exactly 1 from their producer.
+        for v in g.nodes() {
+            if g.kind(v).is_write() {
+                let p = g.predecessors(v).next().unwrap();
+                assert_eq!(t[v].unwrap(), t[p].unwrap() + 1);
+            }
+        }
+        // Output buses never oversubscribed per modulo slot.
+        let mut occ = vec![0usize; ii];
+        for v in g.nodes() {
+            if g.kind(v).is_write() {
+                occ[t[v].unwrap() % ii] += 1;
+            }
+        }
+        assert!(occ.iter().all(|&o| o <= 4), "{occ:?}");
+    }
+
+    #[test]
+    fn no_cop_when_buses_available() {
+        let b = SparseBlock::from_mask("w2", 1, 2, vec![true, true]).unwrap();
+        let (mut g, _) = build_sdfg(&b);
+        let cgra = StreamingCgra::paper_default();
+        let mut tables = ResourceTables::new(&cgra, 2);
+        let mut t: Vec<Option<usize>> = vec![None; g.len()];
+        for v in g.nodes() {
+            if !g.kind(v).is_write() {
+                t[v] = Some(0);
+            }
+        }
+        schedule_writes(&mut g, &mut t, &mut tables).unwrap();
+        assert_eq!(g.cops().len(), 0);
+    }
+}

@@ -1,0 +1,444 @@
+//! Adder-tree scheduling: RID-AT (paper §4.1 ② / Fig. 6) and the fixed-tree
+//! ASAP policy used when RID-AT is disabled (baselines, ablation).
+//!
+//! RID-AT here is *routing-aware*: the paper's objective (4) minimizes the
+//! MCID count because MCIDs are what the GRF must route (Fig. 3 shows GRF
+//! routing capacity is the scarce resource). When pairing unaccumulated
+//! operations this implementation therefore also tracks the GRF write-port
+//! budget the MCIDs it creates will need, picks partners that avoid
+//! same-modulo MCIDs (which are forced onto the GRF), and defers a pairing
+//! by one cycle when that provably avoids an unroutable dependency.
+
+use crate::arch::StreamingCgra;
+use crate::dfg::{EdgeKind, NodeId, NodeKind, SDfg};
+use crate::error::{Error, Result};
+use crate::sched::ResourceTables;
+
+/// How far past the last scheduled op we will search for a PE slot before
+/// declaring the attempt failed (prevents unbounded loops at tiny IIs —
+/// every modulo slot repeats after `ii` steps, so `4·ii` is generous).
+fn search_span(ii: usize) -> usize {
+    4 * ii + 4
+}
+
+/// Cost of creating an addition at `t1` over producers at `ta`/`tb`:
+/// `(grf_overflow, grf_writes, mcids)` — lexicographically minimized.
+fn pair_cost(
+    ta: usize,
+    tb: usize,
+    t1: usize,
+    ii: usize,
+    grf_writes: &[usize],
+    ports: usize,
+) -> (usize, usize, usize) {
+    let mut mcids = 0usize;
+    // Classify each producer edge: dist 1 → free; MCID same-modulo → GRF
+    // forced; MCID diff-modulo → LRF-eligible.
+    let mut forced: Vec<usize> = Vec::with_capacity(2); // GRF write slots
+    let mut eligible: Vec<usize> = Vec::with_capacity(2);
+    for &tx in &[ta, tb] {
+        let dist = t1 - tx;
+        if dist <= 1 {
+            continue;
+        }
+        mcids += 1;
+        if dist % ii == 0 {
+            forced.push((tx + 1) % ii);
+        } else {
+            eligible.push((tx + 1) % ii);
+        }
+    }
+    // One LRF slot per consumer: drop the single most expensive eligible
+    // write (the consumer sits on that producer's PE instead).
+    if eligible.len() > 1 {
+        // Keep the cheaper one as a GRF write.
+        let (w0, w1) = (eligible[0], eligible[1]);
+        let keep = if grf_writes[w0] <= grf_writes[w1] { w0 } else { w1 };
+        forced.push(keep);
+    }
+    let mut over = 0usize;
+    let mut writes = 0usize;
+    let mut tally = vec![0usize; ii];
+    for w in forced {
+        tally[w] += 1;
+        writes += 1;
+        if grf_writes[w] + tally[w] > ports {
+            over += 1;
+        }
+    }
+    (over, writes, mcids)
+}
+
+/// Commit the GRF writes `pair_cost` predicted for a pairing.
+fn commit_pair(
+    ta: usize,
+    tb: usize,
+    t1: usize,
+    ii: usize,
+    grf_writes: &mut [usize],
+) {
+    let mut eligible: Vec<usize> = Vec::with_capacity(2);
+    for &tx in &[ta, tb] {
+        let dist = t1 - tx;
+        if dist <= 1 {
+            continue;
+        }
+        if dist % ii == 0 {
+            grf_writes[(tx + 1) % ii] += 1;
+        } else {
+            eligible.push((tx + 1) % ii);
+        }
+    }
+    if eligible.len() > 1 {
+        let (w0, w1) = (eligible[0], eligible[1]);
+        let keep = if grf_writes[w0] <= grf_writes[w1] { w0 } else { w1 };
+        grf_writes[keep] += 1;
+    }
+}
+
+/// Per-kernel reduction state during the global time-march.
+struct KernelState {
+    kr: usize,
+    /// Unaccumulated ops, sorted by (time, id).
+    unacc: Vec<(usize, NodeId)>,
+    /// Additions still to be placed.
+    adds_pool: Vec<NodeId>,
+}
+
+/// RID-AT over every kernel, *globally time-marched*: at each cycle `t1`
+/// all kernels compete for the free PEs, pairings anchored by the oldest
+/// unaccumulated op anywhere (its dependency distance grows every cycle we
+/// wait). Per pairing the partner is chosen to minimize
+/// `(GRF overflow, GRF writes, MCIDs)`, and a pairing that would overflow a
+/// GRF write port is deferred one cycle when that provably avoids it.
+///
+/// Expects all muls scheduled, all adds unscheduled. Clears each kernel's
+/// fixed tree, rebuilds it against the realized mul schedule, schedules the
+/// adds and re-points each kernel's output edge at its new root.
+pub fn reconstruct_adder_trees(
+    g: &mut SDfg,
+    t: &mut [Option<usize>],
+    tables: &mut ResourceTables,
+    kernels: &[usize],
+    cgra: &StreamingCgra,
+) -> Result<()> {
+    let ii = tables.ii;
+    let ports = cgra.grf_write_ports;
+    // Shared GRF write-port pressure (mirrors the binder's pre-allocation).
+    let mut grf_writes = vec![0usize; ii];
+
+    let mut states: Vec<KernelState> = Vec::new();
+    for &kr in kernels {
+        let ops = g.kernel_ops(kr);
+        let muls: Vec<NodeId> = ops
+            .iter()
+            .copied()
+            .filter(|&v| matches!(g.kind(v), NodeKind::Mul { .. }))
+            .collect();
+        if muls.is_empty() {
+            continue;
+        }
+        debug_assert!(muls.iter().all(|&m| t[m].is_some()), "RID-AT requires scheduled muls");
+        let adds_pool: Vec<NodeId> = ops
+            .iter()
+            .copied()
+            .filter(|&v| matches!(g.kind(v), NodeKind::Add { .. }))
+            .collect();
+        // Clear the fixed tree's wiring; the Output edge survives and is
+        // re-pointed at the new root at the end.
+        g.clear_internal_edges_among(&ops);
+        let mut unacc: Vec<(usize, NodeId)> = muls.iter().map(|&m| (t[m].unwrap(), m)).collect();
+        unacc.sort_unstable();
+        states.push(KernelState { kr, unacc, adds_pool });
+    }
+    if states.is_empty() {
+        return Ok(());
+    }
+
+    let t_min = states.iter().map(|k| k.unacc[0].0).min().unwrap();
+    let t_max = states.iter().flat_map(|k| k.unacc.iter().map(|&(tm, _)| tm)).max().unwrap();
+    let deadline = t_max + search_span(ii);
+
+    let mut t0 = t_min;
+    while states.iter().any(|k| k.unacc.len() > 1) {
+        if t0 > deadline {
+            return Err(Error::ScheduleFailed {
+                block: g.name.clone(),
+                reason: "RID-AT exceeded its PE-slot search horizon".into(),
+                ii_cap: ii,
+            });
+        }
+        let t1 = t0 + 1;
+        // Commit pairings at t1, oldest anchor first across all kernels.
+        // A kernel whose best pairing would overflow a GRF write port may
+        // sit this cycle out (once per cycle, and only while its anchor is
+        // younger than II cycles — beyond that waiting cannot change the
+        // modulo classes any further).
+        let mut deferred = vec![false; states.len()];
+        loop {
+            if tables.pe_free(t1) == 0 {
+                break;
+            }
+            // Best proposal per kernel: anchor = kernel's oldest ready op.
+            let mut best: Option<(usize, usize, (usize, usize, usize), usize)> = None;
+            // (anchor_time, kernel_idx, cost, partner_j)
+            for (ki, k) in states.iter().enumerate() {
+                if deferred[ki] {
+                    continue;
+                }
+                let ready = k.unacc.partition_point(|&(tm, _)| tm <= t0);
+                if ready < 2 || k.adds_pool.is_empty() {
+                    continue;
+                }
+                let (ta, _) = k.unacc[0];
+                let (j, cost) = (1..ready)
+                    .map(|j| (j, pair_cost(ta, k.unacc[j].0, t1, ii, &grf_writes, ports)))
+                    .min_by_key(|&(j, c)| (c, std::cmp::Reverse(k.unacc[j].0), j))
+                    .expect("ready >= 2");
+                let key = (ta, ki, cost, j);
+                if best.map_or(true, |b| (key.2 .0, key.0, key.2) < (b.2 .0, b.0, b.2)) {
+                    best = Some(key);
+                }
+            }
+            let Some((_, ki, cost, j, )) = best else { break };
+            // Defer an overflowing pairing when the next cycle provably
+            // avoids the overflow (waiting flips the dependency distance's
+            // modulo class, often turning a forced-GRF MCID into an
+            // LRF-routable one). GRF pressure only grows, so a kernel
+            // cannot defer forever: either the later cost stays 0 and it
+            // commits then, or it stops being 0 and the kernel commits now.
+            if cost.0 > 0 && t1 < deadline && tables.pe_free(t1 + 1) > 0 {
+                let k = &states[ki];
+                let ready = k.unacc.partition_point(|&(tm, _)| tm <= t0);
+                let (ta, _) = k.unacc[0];
+                let later = (1..ready)
+                    .map(|jj| pair_cost(ta, k.unacc[jj].0, t1 + 1, ii, &grf_writes, ports))
+                    .min()
+                    .unwrap();
+                if later.0 == 0 {
+                    deferred[ki] = true; // sit this cycle out
+                    continue;
+                }
+            }
+            let k = &mut states[ki];
+            let (ta, a) = k.unacc.remove(0);
+            let (tb, b) = k.unacc.remove(j - 1);
+            let add = k.adds_pool.pop().expect("n-1 adds for n muls");
+            g.add_edge(a, add, EdgeKind::Internal);
+            g.add_edge(b, add, EdgeKind::Internal);
+            t[add] = Some(t1);
+            tables.take_pe(t1, 1);
+            commit_pair(ta, tb, t1, ii, &mut grf_writes);
+            let pos = k.unacc.partition_point(|&(tm, id)| (tm, id) < (t1, add));
+            k.unacc.insert(pos, (t1, add));
+        }
+        t0 = t1;
+    }
+
+    // Re-point each kernel's output dependency at its new root.
+    for k in &states {
+        debug_assert!(k.adds_pool.is_empty(), "all adds consumed");
+        let root = k.unacc[0].1;
+        let write = g
+            .nodes()
+            .find(|&v| matches!(g.kind(v), NodeKind::Write { kr } if kr == k.kr))
+            .expect("kernel has a write");
+        let out_edge = g
+            .in_edges(write)
+            .map(|(i, _)| i)
+            .next()
+            .expect("write has an output in-edge");
+        g.retarget_edge_src(out_edge, root);
+    }
+    Ok(())
+}
+
+/// Fixed-tree policy: schedule each kernel's existing adds ASAP (earliest
+/// `t ≥ max(producers)+1` with a free modulo PE). This is what the baseline
+/// compilers do — the tree wiring is never changed.
+pub fn schedule_adds_fixed(
+    g: &SDfg,
+    t: &mut [Option<usize>],
+    tables: &mut ResourceTables,
+) -> Result<()> {
+    let order = g.topo_order();
+    for v in order {
+        if !matches!(g.kind(v), NodeKind::Add { .. }) || t[v].is_some() {
+            continue;
+        }
+        let lo = g
+            .in_edges(v)
+            .map(|(_, e)| {
+                t[e.src].expect("producers scheduled before adds in topo order") + 1
+            })
+            .max()
+            .expect("add has producers");
+        let span = search_span(tables.ii);
+        let Some(slot) = crate::sched::earliest_pe_slot(tables, lo, span) else {
+            return Err(Error::ScheduleFailed {
+                block: g.name.clone(),
+                reason: format!("no PE slot for add {v} in [{lo}, {})", lo + span),
+                ii_cap: tables.ii,
+            });
+        };
+        t[v] = Some(slot);
+        tables.take_pe(slot, 1);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::StreamingCgra;
+    use crate::dfg::build::build_sdfg;
+    use crate::sparse::SparseBlock;
+
+    /// Fig. 5(a): one kernel with 4 multiplications scheduled at t=0,0,1,2.
+    /// Fixed balanced tree gives ≥2 MCIDs; RID-AT gives ≤1 (Fig. 5(b)-(c)).
+    fn fig5_graph() -> (SDfg, Vec<Option<usize>>, Vec<NodeId>) {
+        let b = SparseBlock::from_mask("fig5", 4, 1, vec![true; 4]).unwrap();
+        let (g, idx) = build_sdfg(&b);
+        let mut t = vec![None; g.len()];
+        let times = [0usize, 0, 1, 2];
+        let mut muls = Vec::new();
+        for ch in 0..4 {
+            let r = idx.read(ch).unwrap();
+            let m = idx.mul(ch, 0).unwrap();
+            t[r] = Some(times[ch]);
+            t[m] = Some(times[ch]);
+            muls.push(m);
+        }
+        (g, t, muls)
+    }
+
+    fn count_mcids(g: &SDfg, t: &[Option<usize>]) -> usize {
+        g.edges()
+            .iter()
+            .filter(|e| e.kind == crate::dfg::EdgeKind::Internal)
+            .filter(|e| t[e.dst].unwrap() - t[e.src].unwrap() > 1)
+            .count()
+    }
+
+    #[test]
+    fn fig5_fixed_tree_has_mcids() {
+        let (g, mut t, _) = fig5_graph();
+        let cgra = StreamingCgra::paper_default();
+        let mut tables = ResourceTables::new(&cgra, 4);
+        schedule_adds_fixed(&g, &mut t, &mut tables).unwrap();
+        assert!(count_mcids(&g, &t) >= 2);
+    }
+
+    #[test]
+    fn fig5_ridat_strictly_beats_fixed_tree() {
+        let (mut g, mut t, _) = fig5_graph();
+        let cgra = StreamingCgra::paper_default();
+        let mut tables = ResourceTables::new(&cgra, 4);
+
+        let (g_fixed, t_fixed) = {
+            let gf = g.clone();
+            let mut tf = t.clone();
+            let mut tb = ResourceTables::new(&cgra, 4);
+            schedule_adds_fixed(&gf, &mut tf, &mut tb).unwrap();
+            (gf, tf)
+        };
+        reconstruct_adder_trees(&mut g, &mut t, &mut tables, &[0], &cgra).unwrap();
+        g.validate().unwrap();
+        assert!(
+            count_mcids(&g, &t) < count_mcids(&g_fixed, &t_fixed),
+            "RID-AT must reduce MCIDs: {} vs fixed {}",
+            count_mcids(&g, &t),
+            count_mcids(&g_fixed, &t_fixed)
+        );
+        assert!(count_mcids(&g, &t) <= 1, "paper reports 1 MCID for Fig. 5(c)");
+        // All adds scheduled.
+        assert!(g.nodes().all(|v| t[v].is_some() || g.kind(v).is_write()));
+    }
+
+    #[test]
+    fn ridat_preserves_tree_invariants() {
+        for seed in 0..10 {
+            let b = crate::sparse::gen::random_block("r", 8, 8, 0.4, seed);
+            let (g0, idx) = build_sdfg(&b);
+            let mut g = g0.clone();
+            let cgra = StreamingCgra::paper_default();
+            let ii = crate::dfg::analysis::mii(&g0, &cgra) + 1;
+            let mut tables = ResourceTables::new(&cgra, ii);
+            let mut t = vec![None; g.len()];
+            // Schedule reads+muls greedily over spread times, respecting the
+            // per-slot PE budget so the tables stay consistent.
+            let mut tt = 0usize;
+            for ch in 0..8 {
+                if let Some(r) = idx.read(ch) {
+                    let fan = g0.fanout_muls(r);
+                    while tables.pe_free(tt) < fan.len() {
+                        tt += 1;
+                    }
+                    t[r] = Some(tt);
+                    for m in fan {
+                        t[m] = Some(tt);
+                        tables.take_pe(tt, 1);
+                    }
+                    tt = (tt + 1) % 3; // spread across early slots
+                }
+            }
+            let kernels: Vec<usize> = (0..8).filter(|&k| b.kernel_size(k) > 0).collect();
+            reconstruct_adder_trees(&mut g, &mut t, &mut tables, &kernels, &cgra).unwrap();
+            g.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            // Every add has exactly 2 producers scheduled strictly earlier.
+            for v in g.nodes() {
+                if matches!(g.kind(v), NodeKind::Add { .. }) {
+                    let tv = t[v].unwrap();
+                    for p in g.predecessors(v) {
+                        assert!(t[p].unwrap() < tv, "seed {seed}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_asap_respects_pe_budget() {
+        let b = crate::sparse::gen::random_block("r", 8, 8, 0.3, 3);
+        let (g, idx) = build_sdfg(&b);
+        let cgra = StreamingCgra::paper_default();
+        let ii = crate::dfg::analysis::mii(&g, &cgra) + 1;
+        let mut tables = ResourceTables::new(&cgra, ii);
+        let mut t = vec![None; g.len()];
+        let mut tt = 0usize;
+        for ch in 0..8 {
+            if let Some(r) = idx.read(ch) {
+                let fan = g.fanout_muls(r);
+                while tables.pe_free(tt) < fan.len() {
+                    tt += 1;
+                }
+                t[r] = Some(tt);
+                for m in fan {
+                    t[m] = Some(tt);
+                    tables.take_pe(tt, 1);
+                }
+            }
+        }
+        let mut t2 = t.clone();
+        schedule_adds_fixed(&g, &mut t2, &mut tables).unwrap();
+        // Occupancy per slot within budget.
+        let mut occ = vec![0usize; ii];
+        for v in g.nodes() {
+            if g.kind(v).is_pe_op() {
+                occ[t2[v].unwrap() % ii] += 1;
+            }
+        }
+        assert!(occ.iter().all(|&o| o <= 16), "{occ:?}");
+    }
+
+    #[test]
+    fn pair_cost_prefers_fresh_partners() {
+        // Producer at 0 and partners at 0 vs 3, add at 4, II=4: the stale
+        // partner (dist 4, same modulo) costs a forced GRF write; the fresh
+        // partner (dist 1) costs none.
+        let grf = vec![0usize; 4];
+        let stale = pair_cost(0, 0, 4, 4, &grf, 1);
+        let fresh = pair_cost(0, 3, 4, 4, &grf, 1);
+        assert!(fresh < stale, "{fresh:?} vs {stale:?}");
+    }
+}

@@ -1,0 +1,523 @@
+//! SparseMap scheduling — Algorithm 1 of the paper.
+//!
+//! Iteratively allocates input buses to input readings and co-schedules
+//! their fan-out multiplications, applying:
+//! * **AIBA** (§2.1): pick the unscheduled reading most associated with the
+//!   readings already allocated in the current cycle, so multiplications of
+//!   the same kernels land together and adder trees stay shallow;
+//! * **Mul-CI** (§2.2): when a reading's fanout exceeds one bus's reach
+//!   (`N` PEs of its column), multicast it over extra input buses via the
+//!   crossbar instead of burning a PE on a caching op;
+//! * **SchedwithCaching**: the fallback — insert a COP that holds the value
+//!   in a PE so the remaining multiplications can run in later cycles;
+//! * **RID-AT** (§2.3): reconstruct the adder trees against the realized
+//!   mul schedule ([`crate::sched::ridat`]).
+//!
+//! The attempt runs at a fixed II; [`crate::mapper`] escalates II on
+//! failure (Algorithm 1 lines 23/27 — `II ← II + 1; goto 2`).
+
+use crate::arch::StreamingCgra;
+use crate::config::Techniques;
+use crate::dfg::analysis::AssociationMatrix;
+use crate::dfg::{EdgeKind, NodeId, NodeKind, SDfg};
+use crate::error::{Error, Result};
+use crate::sched::{output, ridat, ResourceTables, ScheduledSDfg};
+
+/// One scheduling attempt at a fixed `ii`. `g0` is the pristine s-DFG (the
+/// attempt clones it; COPs / multicast replicas / tree rewiring happen on
+/// the clone).
+pub fn schedule_at(
+    g0: &SDfg,
+    cgra: &StreamingCgra,
+    tech: Techniques,
+    ii: usize,
+) -> Result<ScheduledSDfg> {
+    schedule_at_perturbed(g0, cgra, tech, ii, 0)
+}
+
+/// [`schedule_at`] with a perturbation index: retry `k` rotates the AIBA
+/// cycle-opener among the top candidates, giving the incomplete-mapping
+/// handler (mapper phase ④) distinct schedules to rebind at the same II.
+pub fn schedule_at_perturbed(
+    g0: &SDfg,
+    cgra: &StreamingCgra,
+    tech: Techniques,
+    ii: usize,
+    perturb: u64,
+) -> Result<ScheduledSDfg> {
+    let mut g = g0.clone();
+    let am = AssociationMatrix::build(&g);
+    let mut t: Vec<Option<usize>> = vec![None; g.len()];
+    let mut tables = ResourceTables::new(cgra, ii);
+
+    schedule_reads_and_muls(&mut g, cgra, tech, ii, &am, &mut t, &mut tables, perturb)?;
+
+    // Adder trees: RID-AT or fixed ASAP (line 30).
+    let kernels: Vec<usize> = g
+        .nodes()
+        .filter_map(|v| match g.kind(v) {
+            NodeKind::Write { kr } => Some(kr),
+            _ => None,
+        })
+        .collect();
+    if tech.rid_at {
+        ridat::reconstruct_adder_trees(&mut g, &mut t, &mut tables, &kernels, cgra)?;
+    } else {
+        ridat::schedule_adds_fixed(&g, &mut t, &mut tables)?;
+    }
+
+    // Output writings (line 31).
+    output::schedule_writes(&mut g, &mut t, &mut tables)?;
+
+    finish(g, ii, t, cgra)
+}
+
+/// Lines 4–29 of Algorithm 1.
+#[allow(clippy::too_many_arguments)]
+fn schedule_reads_and_muls(
+    g: &mut SDfg,
+    cgra: &StreamingCgra,
+    tech: Techniques,
+    ii: usize,
+    am: &AssociationMatrix,
+    t: &mut Vec<Option<usize>>,
+    tables: &mut ResourceTables,
+    perturb: u64,
+) -> Result<()> {
+    let mut u_r: Vec<NodeId> = g.reads();
+    let horizon = 2 * ii * (u_r.len() + 1) + 16;
+    let mut t_cur = 0usize;
+    let fail = |g: &SDfg, reason: String| Error::ScheduleFailed {
+        block: g.name.clone(),
+        reason,
+        ii_cap: ii,
+    };
+
+    // I/O data management, spread variant (perturbation bit 2 set): a
+    // fully-packed cycle leaves no column bus for the adder trees' internal
+    // transfers (the same physical buses carry both — conflict rule R2(2)),
+    // so when the modulo bus budget has slack, keep one bus per cycle free
+    // for routing. The default variant packs maximally (Algorithm 1 line
+    // 6); the mapper's phase-④ retries switch this bit on when binding
+    // fails. Expected allocations = readings + Mul-CI replicas.
+    let expected_allocs: usize = u_r
+        .iter()
+        .map(|&r| {
+            if tech.mul_ci {
+                g.fanout_muls(r).len().div_ceil(cgra.input_bus_fanout())
+            } else {
+                1
+            }
+        })
+        .sum();
+    let spread = perturb & 0b100 != 0;
+    let per_cycle_cap = if spread && ii * cgra.m >= expected_allocs + ii {
+        cgra.m - 1
+    } else {
+        cgra.m
+    };
+
+    while !u_r.is_empty() {
+        if t_cur > horizon {
+            return Err(fail(g, "bus allocation exceeded horizon".into()));
+        }
+        // Line 6: no input bus left this cycle — advance time.
+        if cgra.m - tables.ibus_free(t_cur) >= per_cycle_cap || tables.ibus_free(t_cur) == 0 {
+            t_cur += 1;
+            continue;
+        }
+        // Line 10: AIBA (or channel order when disabled).
+        let r = pick_read(g, am, &u_r, t, t_cur, tech.aiba, perturb);
+        u_r.retain(|&x| x != r);
+        t[r] = Some(t_cur);
+        tables.take_ibus(t_cur, 1);
+
+        let fanout = g.fanout_muls(r);
+        let n_fan = fanout.len();
+        let bus_reach = cgra.input_bus_fanout();
+
+        if n_fan <= tables.pe_free(t_cur) {
+            if n_fan <= bus_reach {
+                // Line 12–15: direct co-scheduling.
+                for &m in &fanout {
+                    t[m] = Some(t_cur);
+                }
+                tables.take_pe(t_cur, n_fan);
+                continue;
+            }
+            // Line 17: Mul-CI (replicas respect the per-cycle bus cap).
+            let bus_budget = per_cycle_cap - (cgra.m - tables.ibus_free(t_cur));
+            if tech.mul_ci && try_mul_ci(g, cgra, r, &fanout, t, tables, t_cur, bus_budget) {
+                continue;
+            }
+            // Line 20: caching fallback.
+            if try_sched_with_caching(g, cgra, r, &fanout, t, tables, t_cur, ii) {
+                continue;
+            }
+            return Err(fail(g, format!("read {r}: fanout {n_fan} unschedulable")));
+        }
+        // Line 24: not enough modulo PEs this cycle — cache and defer.
+        if try_sched_with_caching(g, cgra, r, &fanout, t, tables, t_cur, ii) {
+            continue;
+        }
+        return Err(fail(g, format!("read {r}: no PEs for fanout {n_fan}")));
+    }
+    Ok(())
+}
+
+/// AIBA (§2.1): among unscheduled readings pick the one with the highest
+/// association to the readings already allocated at `t_cur`; first pick of
+/// a cycle prefers the largest fanout (giving Mul-CI the emptiest PEA),
+/// breaking ties on total association, then node id.
+///
+/// With `aiba == false` (ablations / baseline): plain channel order.
+fn pick_read(
+    g: &SDfg,
+    am: &AssociationMatrix,
+    u_r: &[NodeId],
+    t: &[Option<usize>],
+    t_cur: usize,
+    aiba: bool,
+    perturb: u64,
+) -> NodeId {
+    debug_assert!(!u_r.is_empty());
+    if !aiba {
+        return *u_r.iter().min().unwrap();
+    }
+    // Readings already allocated in this cycle (multicast replicas excluded
+    // — they carry the same channel and would double-count association).
+    let at_t: Vec<NodeId> = g
+        .reads()
+        .into_iter()
+        .filter(|&x| {
+            t[x] == Some(t_cur) && matches!(g.kind(x), NodeKind::Read { replica: 0, .. })
+        })
+        .collect();
+    // Greedy clustering: maximize association with the readings already in
+    // this cycle (ties: fanout, then total association, then channel). The
+    // cycle opener (empty `at_t`) takes the largest fanout so Mul-CI sees
+    // the emptiest PEA (§2.2: Mul-CI "indirectly guarantees the
+    // effectiveness of AIBA").
+    if at_t.is_empty() {
+        // Cycle opener. Perturbation `k` (mapper phase ④) rotates among the
+        // top-ranked openers so rebinding sees genuinely different
+        // schedules at the same II.
+        let mut ranked: Vec<NodeId> = u_r.to_vec();
+        ranked.sort_by_key(|&r| {
+            (
+                std::cmp::Reverse(g.fanout_muls(r).len()),
+                std::cmp::Reverse(am.total(r)),
+                r,
+            )
+        });
+        return ranked[((perturb & 0b11) as usize) % ranked.len()];
+    }
+    *u_r
+        .iter()
+        .max_by_key(|&&r| {
+            let fan = g.fanout_muls(r).len() as i64;
+            let gain = am.sum_with(r, &at_t) as i64;
+            (gain, fan, am.total(r) as i64, -(r as i64))
+        })
+        .unwrap()
+}
+
+/// Mul-CI (§2.2): allocate extra input buses (crossbar multicast replicas)
+/// so all `fanout` multiplications can be fed directly at `t_cur`.
+/// Returns false (without mutating) when buses or PEs are insufficient.
+#[allow(clippy::too_many_arguments)]
+fn try_mul_ci(
+    g: &mut SDfg,
+    cgra: &StreamingCgra,
+    r: NodeId,
+    fanout: &[NodeId],
+    t: &mut Vec<Option<usize>>,
+    tables: &mut ResourceTables,
+    t_cur: usize,
+    bus_budget: usize,
+) -> bool {
+    let reach = cgra.input_bus_fanout();
+    let buses_needed = fanout.len().div_ceil(reach);
+    let extra = buses_needed - 1;
+    if extra == 0
+        || tables.ibus_free(t_cur) < extra
+        || bus_budget < extra
+        || tables.pe_free(t_cur) < fanout.len()
+    {
+        return false;
+    }
+    let NodeKind::Read { ch, .. } = g.kind(r) else { unreachable!("r is a read") };
+    // Partition the fanout into bus groups of `reach`: group 0 keeps its
+    // input dependency on `r`; each later group moves onto a fresh replica
+    // reading (Fig. 4(c)-(d)).
+    for (gi, group) in fanout.chunks(reach).enumerate().skip(1) {
+        let replica = g.add_node(NodeKind::Read { ch, replica: gi });
+        t.push(Some(t_cur));
+        tables.take_ibus(t_cur, 1);
+        for &m in group {
+            let in_edge = g
+                .in_edges(m)
+                .find(|(_, e)| e.kind == EdgeKind::Input)
+                .map(|(i, _)| i)
+                .expect("mul has an input edge");
+            g.retarget_edge_src(in_edge, replica);
+        }
+    }
+    for &m in fanout {
+        t[m] = Some(t_cur);
+    }
+    tables.take_pe(t_cur, fanout.len());
+    true
+}
+
+/// SchedwithCaching: a COP grabs the value off the bus at `t_cur` (using
+/// one of the bus's `N` reachable PEs) and re-exposes it for up to
+/// `II − 1` following cycles. Direct multiplications are limited to
+/// `N − 1` (the COP occupies one fan-out PE); deferred ones read the cache
+/// through internal dependencies (distance > 1 ⇒ MCID).
+#[allow(clippy::too_many_arguments)]
+fn try_sched_with_caching(
+    g: &mut SDfg,
+    cgra: &StreamingCgra,
+    r: NodeId,
+    fanout: &[NodeId],
+    t: &mut Vec<Option<usize>>,
+    tables: &mut ResourceTables,
+    t_cur: usize,
+    ii: usize,
+) -> bool {
+    if tables.pe_free(t_cur) == 0 {
+        return false;
+    }
+    // Plan first (no mutation until the whole fanout fits).
+    let reach = cgra.input_bus_fanout();
+    let direct_cap = (reach - 1).min(tables.pe_free(t_cur) - 1);
+    let n_direct = direct_cap.min(fanout.len());
+    let deferred = &fanout[n_direct..];
+    // The cached value lives in the COP's PE until the next iteration
+    // overwrites it: consumers must sit within (t_cur, t_cur + II).
+    let mut use_slots: Vec<usize> = Vec::with_capacity(deferred.len());
+    {
+        let mut virt = tables.clone();
+        virt.take_pe(t_cur, 1 + n_direct);
+        for _ in deferred {
+            let Some(slot) = crate::sched::earliest_pe_slot(&virt, t_cur + 1, ii.max(2) - 1)
+            else {
+                return false;
+            };
+            virt.take_pe(slot, 1);
+            use_slots.push(slot);
+        }
+    }
+    // Commit.
+    let cop = g.add_node(NodeKind::Cop { for_read: true });
+    t.push(Some(t_cur));
+    tables.take_pe(t_cur, 1);
+    // The COP consumes the bus value like a mul does (distance-0 input dep).
+    g.add_edge(r, cop, EdgeKind::Input);
+    for &m in &fanout[..n_direct] {
+        t[m] = Some(t_cur);
+    }
+    tables.take_pe(t_cur, n_direct);
+    for (&m, &slot) in deferred.iter().zip(&use_slots) {
+        let in_edge = g
+            .in_edges(m)
+            .find(|(_, e)| e.kind == EdgeKind::Input)
+            .map(|(i, _)| i)
+            .expect("mul input edge");
+        g.retarget_edge_src(in_edge, cop);
+        g.set_edge_kind(in_edge, EdgeKind::Internal);
+        t[m] = Some(slot);
+        tables.take_pe(slot, 1);
+    }
+    true
+}
+
+/// Seal an attempt: all nodes scheduled, constraints verified.
+fn finish(
+    g: SDfg,
+    ii: usize,
+    t: Vec<Option<usize>>,
+    cgra: &StreamingCgra,
+) -> Result<ScheduledSDfg> {
+    let name = g.name.clone();
+    let t: Vec<usize> = t
+        .into_iter()
+        .enumerate()
+        .map(|(v, x)| {
+            x.ok_or_else(|| Error::ScheduleFailed {
+                block: name.clone(),
+                reason: format!("node {v} left unscheduled"),
+                ii_cap: ii,
+            })
+        })
+        .collect::<Result<_>>()?;
+    let s = ScheduledSDfg { g, ii, t };
+    s.verify(cgra)?;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::analysis::mii;
+    use crate::dfg::build::build_sdfg;
+    use crate::sparse::gen::{paper_blocks, random_block};
+    use crate::sparse::SparseBlock;
+
+    fn cgra() -> StreamingCgra {
+        StreamingCgra::paper_default()
+    }
+
+    #[test]
+    fn schedules_all_paper_blocks_at_or_near_mii() {
+        // Some perturbation of Algorithm 1 must schedule every paper block
+        // at MII (blocks with saturated output buses may need a different
+        // opener); none may need more than MII+1.
+        for nb in paper_blocks() {
+            let (g, _) = build_sdfg(&nb.block);
+            let base = mii(&g, &cgra());
+            let best = (base..=base + 1)
+                .find_map(|ii| {
+                    (0..8).find_map(|p| {
+                        schedule_at_perturbed(&g, &cgra(), Techniques::all(), ii, p).ok()
+                    })
+                })
+                .unwrap_or_else(|| panic!("{}: unschedulable near MII", nb.label));
+            best.verify(&cgra()).unwrap();
+            assert!(best.ii <= base + 1, "{}: II {} vs MII {base}", nb.label, best.ii);
+        }
+    }
+
+    #[test]
+    fn full_techniques_beat_ablations_on_cops() {
+        // Mul-CI should eliminate nearly all input-side COPs (Table 4).
+        let mut cops_aiba = 0usize;
+        let mut cops_full = 0usize;
+        for nb in paper_blocks() {
+            let (g, _) = build_sdfg(&nb.block);
+            let base_ii = mii(&g, &cgra());
+            // Give each variant slack: take the first II that schedules.
+            let first_ok = |tech: Techniques| -> Option<ScheduledSDfg> {
+                (base_ii..base_ii + 3)
+                    .find_map(|ii| schedule_at(&g, &cgra(), tech, ii).ok())
+            };
+            if let (Some(a), Some(f)) =
+                (first_ok(Techniques::aiba_only()), first_ok(Techniques::all()))
+            {
+                cops_aiba += a.cops();
+                cops_full += f.cops();
+            }
+        }
+        assert!(
+            cops_full < cops_aiba,
+            "Mul-CI must reduce total COPs: full={cops_full} aiba-only={cops_aiba}"
+        );
+    }
+
+    #[test]
+    fn mulci_avoids_cop_fig4() {
+        // Fig. 4: one input with 5 multiplications on a 4x4 PEA.
+        let b = SparseBlock::from_mask("fig4", 1, 5, vec![true; 5]).unwrap();
+        let (g, _) = build_sdfg(&b);
+        // With Mul-CI: no input COP, all muls at the read's time, 2 buses
+        // used. (5 single-mul kernels also need one *output* COP on a
+        // 4-output-bus machine — unrelated to Mul-CI.)
+        let s = schedule_at(&g, &cgra(), Techniques::all(), 2).unwrap();
+        assert_eq!(s.input_cops(), 0, "Mul-CI avoids the caching op");
+        let reads = s.g.reads();
+        assert_eq!(reads.len(), 2, "one replica allocated");
+        // All 5 muls co-scheduled with the reading.
+        for v in s.g.nodes() {
+            if matches!(s.g.kind(v), NodeKind::Mul { .. }) {
+                assert_eq!(s.t[v], s.t[reads[0]]);
+            }
+        }
+        // Without Mul-CI: an input COP appears.
+        let s2 = schedule_at(&g, &cgra(), Techniques::aiba_only(), 2).unwrap();
+        assert_eq!(s2.input_cops(), 1, "caching op required without Mul-CI");
+    }
+
+    #[test]
+    fn caching_defers_muls_within_ii_window() {
+        let b = SparseBlock::from_mask("c6", 1, 6, vec![true; 6]).unwrap();
+        let (g, _) = build_sdfg(&b);
+        let s = schedule_at(&g, &cgra(), Techniques::aiba_only(), 3).unwrap();
+        assert_eq!(s.cops(), 1);
+        // Deferred muls read the cache within the II window.
+        for e in s.g.edges() {
+            if e.kind == EdgeKind::Internal
+                && matches!(s.g.kind(e.src), NodeKind::Cop { for_read: true })
+            {
+                let d = s.t[e.dst] - s.t[e.src];
+                assert!(d >= 1 && d < s.ii, "cache lifetime violated: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let b = random_block("d", 8, 8, 0.4, 5);
+        let (g, _) = build_sdfg(&b);
+        let a = schedule_at(&g, &cgra(), Techniques::all(), 4).unwrap();
+        let b2 = schedule_at(&g, &cgra(), Techniques::all(), 4).unwrap();
+        assert_eq!(a.t, b2.t);
+    }
+
+    #[test]
+    fn aiba_reduces_mcids_vs_no_aiba() {
+        // Aggregate over paper + random blocks, full pipeline: AIBA must
+        // reduce total MCIDs, COPs and II escalations vs channel order.
+        let mut blocks: Vec<_> = paper_blocks().into_iter().map(|nb| nb.block).collect();
+        for seed in 0..24 {
+            blocks.push(random_block(&format!("a{seed}"), 8, 8, 0.45, seed));
+        }
+        let run = |aiba: bool| -> (usize, usize, usize) {
+            let tech = Techniques { aiba, mul_ci: true, rid_at: true };
+            let (mut mcids, mut cops, mut escal) = (0usize, 0usize, 0usize);
+            for b in &blocks {
+                let (g, _) = build_sdfg(b);
+                let base = mii(&g, &cgra());
+                for ii in base..base + 3 {
+                    if let Ok(s) = schedule_at(&g, &cgra(), tech, ii) {
+                        mcids += s.mcids().len();
+                        cops += s.cops();
+                        escal += ii - base;
+                        break;
+                    }
+                }
+            }
+            (mcids, cops, escal)
+        };
+        let (m1, c1, e1) = run(true);
+        let (m0, c0, e0) = run(false);
+        assert!(m1 < m0, "AIBA must reduce MCIDs: {m1} vs {m0}");
+        assert!(c1 <= c0, "AIBA must not increase COPs: {c1} vs {c0}");
+        assert!(e1 <= e0, "AIBA must not increase II escalations: {e1} vs {e0}");
+    }
+
+    #[test]
+    fn aiba_groups_associated_channels() {
+        // Channels c0/c2 share 4 kernels; c1 is a loner. On a machine with
+        // 2 input buses, channel order splits the associated pair across
+        // cycles; AIBA keeps them together.
+        #[rustfmt::skip]
+        let mask = vec![
+            // k0     k1     k2     k3
+            true,  true,  true,  true,  // c0
+            true,  false, false, false, // c1
+            true,  true,  true,  true,  // c2
+            false, true,  false, false, // c3
+        ];
+        let b = SparseBlock::from_mask("assoc", 4, 4, mask).unwrap();
+        let (g, idx) = build_sdfg(&b);
+        let narrow = StreamingCgra::new(4, 2, 8, 8); // 2 input buses
+        let ii = mii(&g, &narrow);
+        let s = schedule_at(&g, &narrow, Techniques::all(), ii).unwrap();
+        let (r0, r2) = (idx.read(0).unwrap(), idx.read(2).unwrap());
+        assert_eq!(
+            s.t[r0], s.t[r2],
+            "AIBA must co-schedule the highly associated pair"
+        );
+    }
+}

@@ -1,0 +1,355 @@
+//! Cycle-accurate functional simulator for the streaming CGRA.
+//!
+//! Executes a verified [`Mapping`] on a stream of input vectors, modelling
+//! the modulo-pipelined machine cycle by cycle: iteration `i`'s node `v`
+//! executes at cycle `i·II + t(v)`. The simulator is a *bug detector* for
+//! the whole mapping stack — it dynamically re-checks what the binder
+//! promised:
+//!
+//! * one op per PE per cycle;
+//! * bus exclusiveness per cycle (reads on their column buses, write-outs
+//!   on their row buses, internal transfers on their claimed row/column
+//!   buses — broadcast of one value allowed);
+//! * GRF write ports per cycle;
+//! * value/iteration consistency: every operand fetched belongs to the
+//!   consumer's iteration (catches pipeline hazards that static checks
+//!   miss).
+//!
+//! Register pressure (LRF per PE, GRF liveness) is analyzed statically and
+//! checked against capacities.
+
+use std::collections::HashMap;
+
+use crate::arch::StreamingCgra;
+use crate::bind::{BusAt, Mapping, Placement, Route};
+use crate::dfg::{EdgeKind, NodeId, NodeKind};
+use crate::error::{Error, Result};
+use crate::sparse::SparseBlock;
+
+/// Result of simulating a mapping over an input stream.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// Output vectors, one per iteration (kernel-indexed).
+    pub outputs: Vec<Vec<f32>>,
+    /// Total cycles from first read to last write-back.
+    pub cycles: u64,
+    /// Iterations executed.
+    pub iterations: usize,
+    /// Busy cycles per PE (row-major), for utilization reporting.
+    pub pe_busy: Vec<u64>,
+    /// Peak LRF registers used on any PE.
+    pub lrf_peak: usize,
+    /// Peak live GRF values.
+    pub grf_peak: usize,
+}
+
+impl SimResult {
+    /// Average PE utilization over the run.
+    pub fn pe_utilization(&self) -> f64 {
+        let busy: u64 = self.pe_busy.iter().sum();
+        busy as f64 / (self.pe_busy.len() as f64 * self.cycles as f64)
+    }
+
+    /// Throughput in iterations per cycle (→ `1/II` in steady state).
+    pub fn throughput(&self) -> f64 {
+        self.iterations as f64 / self.cycles as f64
+    }
+}
+
+/// Simulate `mapping` over `xs` (one input vector per iteration — each of
+/// length `block.c`, indexed by channel).
+pub fn simulate(
+    mapping: &Mapping,
+    block: &SparseBlock,
+    cgra: &StreamingCgra,
+    xs: &[Vec<f32>],
+) -> Result<SimResult> {
+    let s = &mapping.s;
+    let g = &s.g;
+    let ii = s.ii as u64;
+    let n_iters = xs.len();
+    let makespan = s.makespan() as u64;
+    let total_cycles = (n_iters.max(1) as u64 - 1) * ii + makespan;
+
+    // Static register-pressure checks.
+    let (lrf_peak, grf_peak) = register_pressure(mapping, cgra)?;
+
+    // Nodes per modulo slot, topologically ordered within the cycle so a
+    // same-cycle producer (a read) runs before its consumers.
+    let topo_pos: HashMap<NodeId, usize> =
+        g.topo_order().into_iter().enumerate().map(|(i, v)| (v, i)).collect();
+    let mut slot_nodes: Vec<Vec<NodeId>> = vec![Vec::new(); s.ii];
+    for v in g.nodes() {
+        slot_nodes[s.m(v)].push(v);
+    }
+    for nodes in slot_nodes.iter_mut() {
+        nodes.sort_by_key(|&v| topo_pos[&v]);
+    }
+
+    // GRF writers per modulo slot (write fires at t(src)+1).
+    let mut grf_writer_slots: Vec<Vec<(NodeId, u64)>> = vec![Vec::new(); s.ii];
+    for (idx, e) in g.edges().iter().enumerate() {
+        if mapping.route_of_edge(idx) == Some(Route::Grf) {
+            let t_write = s.t[e.src] as u64 + 1;
+            grf_writer_slots[(t_write % ii) as usize].push((e.src, t_write));
+        }
+    }
+
+    // value_of[v][iter] — produced values (functional state; hardware
+    // residency is validated by the pressure stats and hazard checks).
+    let mut value_of: Vec<Vec<Option<f32>>> = vec![vec![None; n_iters]; g.len()];
+    let mut outputs: Vec<Vec<f32>> = vec![vec![0.0; block.k]; n_iters];
+    let mut pe_busy = vec![0u64; cgra.num_pes()];
+
+    for cycle in 0..total_cycles {
+        let slot = (cycle % ii) as usize;
+        // Per-cycle exclusiveness trackers.
+        let mut pe_used: HashMap<crate::arch::PeId, NodeId> = HashMap::new();
+        let mut bus_used: HashMap<BusAt, NodeId> = HashMap::new();
+
+        for &v in &slot_nodes[slot] {
+            let tv = s.t[v] as u64;
+            if cycle < tv {
+                continue;
+            }
+            debug_assert_eq!((cycle - tv) % ii, 0);
+            let iter = ((cycle - tv) / ii) as usize;
+            if iter >= n_iters {
+                continue;
+            }
+
+            // PE exclusiveness.
+            if let Placement::Pe(pe) = mapping.placements[v] {
+                if let Some(prev) = pe_used.insert(pe, v) {
+                    return Err(Error::SimFault {
+                        cycle,
+                        reason: format!("PE {pe} double-booked by {prev} and {v}"),
+                    });
+                }
+                pe_busy[cgra.pe_index(pe)] += 1;
+            }
+
+            // Fetch one operand, enforcing bus exclusiveness and hazards.
+            let fetch = |edge_idx: usize,
+                         bus_used: &mut HashMap<BusAt, NodeId>,
+                         value_of: &Vec<Vec<Option<f32>>>|
+             -> Result<f32> {
+                let e = g.edge(edge_idx);
+                debug_assert_eq!(e.dst, v);
+                let val = value_of[e.src][iter].ok_or_else(|| Error::SimFault {
+                    cycle,
+                    reason: format!(
+                        "operand {}→{} not produced for iteration {iter}",
+                        e.src, e.dst
+                    ),
+                })?;
+                for (bus, value_node) in mapping.bus_claims_of_edge(edge_idx) {
+                    if let Some(prev) = bus_used.insert(bus, value_node) {
+                        if prev != value_node {
+                            return Err(Error::SimFault {
+                                cycle,
+                                reason: format!("bus {bus:?} carries {prev} and {value_node}"),
+                            });
+                        }
+                    }
+                }
+                Ok(val)
+            };
+
+            match g.kind(v) {
+                NodeKind::Read { ch, .. } => {
+                    value_of[v][iter] = Some(xs[iter][ch]);
+                    // The reading itself occupies its column bus this cycle.
+                    if let Placement::InputBus(ib) = mapping.placements[v] {
+                        if let Some(prev) = bus_used.insert(BusAt::Col { slot, col: ib }, v) {
+                            if prev != v {
+                                return Err(Error::SimFault {
+                                    cycle,
+                                    reason: format!("ibus {ib} carries {prev} and {v}"),
+                                });
+                            }
+                        }
+                    }
+                }
+                NodeKind::Mul { ch, kr } => {
+                    let (edge_idx, _) = g.in_edges(v).next().expect("mul in-edge");
+                    let x = fetch(edge_idx, &mut bus_used, &value_of)?;
+                    value_of[v][iter] = Some(x * block.weight(ch, kr));
+                }
+                NodeKind::Add { .. } => {
+                    let idxs: Vec<usize> = g.in_edges(v).map(|(i, _)| i).collect();
+                    let mut acc = 0.0f32;
+                    for edge_idx in idxs {
+                        acc += fetch(edge_idx, &mut bus_used, &value_of)?;
+                    }
+                    value_of[v][iter] = Some(acc);
+                }
+                NodeKind::Cop { .. } => {
+                    let (edge_idx, _) = g.in_edges(v).next().expect("cop in-edge");
+                    let x = fetch(edge_idx, &mut bus_used, &value_of)?;
+                    value_of[v][iter] = Some(x);
+                }
+                NodeKind::Write { kr } => {
+                    let (edge_idx, _) = g.in_edges(v).next().expect("write in-edge");
+                    let y = fetch(edge_idx, &mut bus_used, &value_of)?;
+                    outputs[iter][kr] = y;
+                    value_of[v][iter] = Some(y);
+                }
+            }
+        }
+
+        // GRF write-port accounting for this cycle.
+        let mut writers: Vec<NodeId> = Vec::new();
+        for &(src, t_write) in &grf_writer_slots[slot] {
+            if cycle >= t_write && ((cycle - t_write) / ii) < n_iters as u64 {
+                if !writers.contains(&src) {
+                    writers.push(src);
+                }
+            }
+        }
+        if writers.len() > cgra.grf_write_ports {
+            return Err(Error::SimFault {
+                cycle,
+                reason: format!(
+                    "{} GRF writes in one cycle (ports {})",
+                    writers.len(),
+                    cgra.grf_write_ports
+                ),
+            });
+        }
+    }
+
+    Ok(SimResult { outputs, cycles: total_cycles, iterations: n_iters, pe_busy, lrf_peak, grf_peak })
+}
+
+/// Static register-pressure analysis: per-PE LRF registers (each op's
+/// result needs `ceil(max_out_dist / II)` rotating registers while any
+/// consumer is outstanding) and GRF liveness.
+fn register_pressure(mapping: &Mapping, cgra: &StreamingCgra) -> Result<(usize, usize)> {
+    let s = &mapping.s;
+    let g = &s.g;
+    let ii = s.ii;
+    let mut lrf: HashMap<crate::arch::PeId, usize> = HashMap::new();
+    let mut grf = 0usize;
+    for v in g.nodes() {
+        let Placement::Pe(pe) = mapping.placements[v] else { continue };
+        let max_dist = g
+            .out_edges(v)
+            .filter(|(idx, e)| {
+                e.kind == EdgeKind::Internal
+                    && mapping.route_of_edge(*idx) != Some(Route::Grf)
+            })
+            .map(|(_, e)| s.t[e.dst] - s.t[v])
+            .max()
+            .unwrap_or(1);
+        *lrf.entry(pe).or_insert(0) += max_dist.div_ceil(ii).max(1);
+    }
+    for (idx, e) in g.edges().iter().enumerate() {
+        if mapping.route_of_edge(idx) == Some(Route::Grf) {
+            grf += (s.t[e.dst] - s.t[e.src]).saturating_sub(1).div_ceil(ii).max(1);
+        }
+    }
+    let lrf_peak = lrf.values().copied().max().unwrap_or(0);
+    if lrf_peak > cgra.lrf_capacity {
+        return Err(Error::SimFault {
+            cycle: 0,
+            reason: format!("LRF pressure {lrf_peak} exceeds capacity {}", cgra.lrf_capacity),
+        });
+    }
+    if grf > cgra.grf_capacity {
+        return Err(Error::SimFault {
+            cycle: 0,
+            reason: format!("GRF pressure {grf} exceeds capacity {}", cgra.grf_capacity),
+        });
+    }
+    Ok((lrf_peak, grf))
+}
+
+/// Convenience: simulate with a deterministic synthetic input stream and
+/// verify the outputs against [`SparseBlock::forward`].
+pub fn simulate_and_check(
+    mapping: &Mapping,
+    block: &SparseBlock,
+    cgra: &StreamingCgra,
+    n_iters: usize,
+    seed: u64,
+) -> Result<SimResult> {
+    let mut rng = crate::util::rng::Pcg64::seeded(seed);
+    let xs: Vec<Vec<f32>> = (0..n_iters)
+        .map(|_| (0..block.c).map(|_| rng.next_normal() as f32).collect())
+        .collect();
+    let res = simulate(mapping, block, cgra, &xs)?;
+    for (i, x) in xs.iter().enumerate() {
+        let want = block.forward(x);
+        for (kr, (&got, &w)) in res.outputs[i].iter().zip(&want).enumerate() {
+            if (got - w).abs() > 1e-4 * (1.0 + w.abs()) {
+                return Err(Error::SimFault {
+                    cycle: 0,
+                    reason: format!("output mismatch iter {i} kernel {kr}: {got} vs {w}"),
+                });
+            }
+        }
+    }
+    Ok(res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapper::{map_block, MapperOptions};
+    use crate::sparse::gen::paper_blocks;
+
+    #[test]
+    fn simulates_paper_blocks_correctly() {
+        let cgra = StreamingCgra::paper_default();
+        for nb in paper_blocks().iter().take(4) {
+            let out = map_block(&nb.block, &cgra, &MapperOptions::sparsemap())
+                .unwrap_or_else(|e| panic!("{}: {e}", nb.label));
+            let res = simulate_and_check(&out.mapping, &nb.block, &cgra, 24, 7)
+                .unwrap_or_else(|e| panic!("{}: {e}", nb.label));
+            assert_eq!(res.iterations, 24);
+            // Steady-state throughput approaches 1/II.
+            let want = 1.0 / out.mapping.ii as f64;
+            assert!(
+                (res.throughput() - want).abs() / want < 0.35,
+                "{}: throughput {} vs 1/II {}",
+                nb.label,
+                res.throughput(),
+                want
+            );
+        }
+    }
+
+    #[test]
+    fn detects_corrupted_placement() {
+        let cgra = StreamingCgra::paper_default();
+        let nb = &paper_blocks()[1];
+        let out = map_block(&nb.block, &cgra, &MapperOptions::sparsemap()).unwrap();
+        let mut bad = out.mapping.clone();
+        // Collapse two same-slot ops onto one PE: simulator must fault.
+        let ops: Vec<usize> =
+            bad.s.g.nodes().filter(|&v| bad.s.g.kind(v).is_pe_op()).collect();
+        'outer: for (i, &a) in ops.iter().enumerate() {
+            for &b in ops.iter().skip(i + 1) {
+                if bad.s.m(a) == bad.s.m(b) {
+                    bad.placements[b] = bad.placements[a];
+                    break 'outer;
+                }
+            }
+        }
+        let err = simulate_and_check(&bad, &nb.block, &cgra, 8, 3);
+        assert!(err.is_err(), "simulator must catch PE double-booking");
+    }
+
+    #[test]
+    fn utilization_is_sane() {
+        let cgra = StreamingCgra::paper_default();
+        let nb = &paper_blocks()[2];
+        let out = map_block(&nb.block, &cgra, &MapperOptions::sparsemap()).unwrap();
+        let res = simulate_and_check(&out.mapping, &nb.block, &cgra, 32, 5).unwrap();
+        let u = res.pe_utilization();
+        assert!(u > 0.2 && u <= 1.0, "utilization {u}");
+        assert!(res.lrf_peak <= cgra.lrf_capacity);
+        assert!(res.grf_peak <= cgra.grf_capacity);
+    }
+}

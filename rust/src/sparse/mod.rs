@@ -1,0 +1,240 @@
+//! Sparse CNN workloads: sparse blocks (the unit the mapper consumes),
+//! feature extraction matching the paper's Table 2, generators, and the
+//! partitioning of full conv layers into blocks.
+
+pub mod gen;
+pub mod partition;
+pub mod prune;
+
+use crate::error::{Error, Result};
+
+/// A sparse block: `k` output kernels computed from `c` input channels with
+/// a 0/1 sparsity mask over the `c × k` weight matrix (paper §1: "each
+/// block computes different channels from different kernels").
+///
+/// `mask[ch * k + kr]` / `weights[ch * k + kr]` are row-major over
+/// (channel, kernel). A `true` mask entry is a multiplication in the s-DFG;
+/// zero-weight multiplications are skipped entirely — that is the sparsity
+/// the paper exploits.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseBlock {
+    pub name: String,
+    pub c: usize,
+    pub k: usize,
+    pub mask: Vec<bool>,
+    pub weights: Vec<f32>,
+}
+
+/// The Table-2 feature vector of a block.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BlockFeatures {
+    pub c: usize,
+    pub k: usize,
+    pub nnz: usize,
+    /// Fraction of zero weights (`1 − nnz/(c·k)`).
+    pub sparsity: f64,
+    /// `|V_OP|` = multiplications + adder-tree additions = `2·nnz − k'`
+    /// where `k'` is the number of non-empty kernels.
+    pub v_op: usize,
+    /// `|V_R|` = channels with at least one nonzero.
+    pub v_r: usize,
+    /// `|V_W|` = kernels with at least one nonzero.
+    pub v_w: usize,
+    /// Channels whose fanout (kernels touched) exceeds 4.
+    pub n_fg4: usize,
+}
+
+impl SparseBlock {
+    /// Build from an explicit mask (weights default to a deterministic
+    /// ramp so functional simulation has interesting values).
+    pub fn from_mask(name: &str, c: usize, k: usize, mask: Vec<bool>) -> Result<Self> {
+        if mask.len() != c * k {
+            return Err(Error::Workload(format!(
+                "mask len {} != {}x{}",
+                mask.len(),
+                c,
+                k
+            )));
+        }
+        let weights = mask
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| {
+                if m {
+                    // Deterministic, nonzero, sign-alternating ramp.
+                    let v = 0.25 + 0.5 * ((i % 7) as f32);
+                    if i % 2 == 0 {
+                        v
+                    } else {
+                        -v
+                    }
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        Ok(SparseBlock { name: name.to_string(), c, k, mask, weights })
+    }
+
+    #[inline]
+    pub fn has_weight(&self, ch: usize, kr: usize) -> bool {
+        self.mask[ch * self.k + kr]
+    }
+
+    #[inline]
+    pub fn weight(&self, ch: usize, kr: usize) -> f32 {
+        self.weights[ch * self.k + kr]
+    }
+
+    /// Number of nonzero weights.
+    pub fn nnz(&self) -> usize {
+        self.mask.iter().filter(|&&m| m).count()
+    }
+
+    /// Fanout of a channel: how many kernels consume it (row nonzeros).
+    /// This is `|fanout(r)|` for the channel's input reading.
+    pub fn channel_fanout(&self, ch: usize) -> usize {
+        (0..self.k).filter(|&kr| self.has_weight(ch, kr)).count()
+    }
+
+    /// Multiplication count of a kernel (column nonzeros).
+    pub fn kernel_size(&self, kr: usize) -> usize {
+        (0..self.c).filter(|&ch| self.has_weight(ch, kr)).count()
+    }
+
+    /// Kernels consuming channel `ch`.
+    pub fn kernels_of_channel(&self, ch: usize) -> Vec<usize> {
+        (0..self.k).filter(|&kr| self.has_weight(ch, kr)).collect()
+    }
+
+    /// Channels feeding kernel `kr`.
+    pub fn channels_of_kernel(&self, kr: usize) -> Vec<usize> {
+        (0..self.c).filter(|&ch| self.has_weight(ch, kr)).collect()
+    }
+
+    /// **Association** of two channels (paper §2.1): the number of kernels
+    /// requiring both simultaneously.
+    pub fn association(&self, ch1: usize, ch2: usize) -> usize {
+        (0..self.k)
+            .filter(|&kr| self.has_weight(ch1, kr) && self.has_weight(ch2, kr))
+            .count()
+    }
+
+    /// Table-2 feature extraction.
+    pub fn features(&self) -> BlockFeatures {
+        let nnz = self.nnz();
+        let v_r = (0..self.c).filter(|&ch| self.channel_fanout(ch) > 0).count();
+        let nonempty_kernels = (0..self.k).filter(|&kr| self.kernel_size(kr) > 0).count();
+        let adds: usize = (0..self.k)
+            .map(|kr| self.kernel_size(kr).saturating_sub(1))
+            .sum();
+        BlockFeatures {
+            c: self.c,
+            k: self.k,
+            nnz,
+            sparsity: 1.0 - nnz as f64 / (self.c * self.k) as f64,
+            v_op: nnz + adds,
+            v_r,
+            v_w: nonempty_kernels,
+            n_fg4: (0..self.c).filter(|&ch| self.channel_fanout(ch) > 4).count(),
+        }
+    }
+
+    /// Operation count of the *dense* version of this block (every weight
+    /// nonzero): `c·k` multiplications + `k·(c−1)` additions. Used for the
+    /// speedup column of Table 3.
+    pub fn dense_ops(&self) -> usize {
+        self.c * self.k + self.k * (self.c - 1)
+    }
+
+    /// Reference forward: `y[kr] = Σ_ch x[ch]·w[ch,kr]` with zero skipping.
+    /// The simulator's outputs and the PJRT-executed JAX artifact are both
+    /// checked against this.
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.c);
+        (0..self.k)
+            .map(|kr| {
+                (0..self.c)
+                    .filter(|&ch| self.has_weight(ch, kr))
+                    .map(|ch| x[ch] * self.weight(ch, kr))
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Dense `(c × k)` weight matrix with zeros at masked positions,
+    /// row-major — the layout the AOT'd JAX artifact expects.
+    pub fn dense_weights(&self) -> Vec<f32> {
+        self.weights.clone()
+    }
+
+    /// Mask as f32 0.0/1.0, row-major (the artifact's third input).
+    pub fn mask_f32(&self) -> Vec<f32> {
+        self.mask.iter().map(|&m| if m { 1.0 } else { 0.0 }).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> SparseBlock {
+        // 3 channels × 2 kernels:
+        //        k0 k1
+        //   c0 [  1  0 ]
+        //   c1 [  1  1 ]
+        //   c2 [  0  1 ]
+        SparseBlock::from_mask("toy", 3, 2, vec![true, false, true, true, false, true])
+            .unwrap()
+    }
+
+    #[test]
+    fn feature_extraction() {
+        let b = toy();
+        let f = b.features();
+        assert_eq!(f.nnz, 4);
+        assert_eq!(f.v_op, 4 + 2); // 4 muls + (2-1)+(2-1) adds
+        assert_eq!(f.v_r, 3);
+        assert_eq!(f.v_w, 2);
+        assert_eq!(f.n_fg4, 0);
+        assert!((f.sparsity - (1.0 - 4.0 / 6.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn association_counts_shared_kernels() {
+        let b = toy();
+        assert_eq!(b.association(0, 1), 1); // share k0
+        assert_eq!(b.association(0, 2), 0);
+        assert_eq!(b.association(1, 2), 1); // share k1
+        assert_eq!(b.association(1, 1), 2); // self-association = fanout
+    }
+
+    #[test]
+    fn forward_skips_zeros() {
+        let b = toy();
+        let x = [1.0, 10.0, 100.0];
+        let y = b.forward(&x);
+        let w = |ch: usize, kr: usize| b.weight(ch, kr);
+        assert_eq!(y[0], 1.0 * w(0, 0) + 10.0 * w(1, 0));
+        assert_eq!(y[1], 10.0 * w(1, 1) + 100.0 * w(2, 1));
+    }
+
+    #[test]
+    fn masked_weights_are_zero() {
+        let b = toy();
+        assert_eq!(b.weight(0, 1), 0.0);
+        assert_eq!(b.weight(2, 0), 0.0);
+        assert!(b.weight(1, 1) != 0.0);
+    }
+
+    #[test]
+    fn dense_ops_formula() {
+        let b = toy();
+        assert_eq!(b.dense_ops(), 3 * 2 + 2 * 2);
+    }
+
+    #[test]
+    fn bad_mask_len_rejected() {
+        assert!(SparseBlock::from_mask("bad", 2, 2, vec![true]).is_err());
+    }
+}

@@ -1,0 +1,215 @@
+//! Partitioning a (block-)sparse conv layer into mapper-sized sparse
+//! blocks (paper §1: "the sparse CNN is typically partitioned into multiple
+//! sparse blocks which are handled in a predetermined order").
+//!
+//! A layer is an im2col-flattened weight matrix `(C_total × K_total)` with
+//! a 0/1 mask. We tile it into blocks of at most `max_c` channels ×
+//! `max_k` kernels; blocks in the same kernel-tile accumulate into the same
+//! outputs, which the coordinator sums (the CGRA handles one block at a
+//! time, exactly as in the paper).
+
+use crate::error::{Error, Result};
+use crate::sparse::SparseBlock;
+
+/// A block cut out of a layer, with its placement inside the layer.
+#[derive(Clone, Debug)]
+pub struct LayerBlock {
+    pub block: SparseBlock,
+    /// First layer-channel covered by this block.
+    pub ch_offset: usize,
+    /// First layer-kernel covered.
+    pub kr_offset: usize,
+    /// Index of the kernel tile (blocks sharing it accumulate together).
+    pub kr_tile: usize,
+}
+
+/// A sparse layer: flattened weights + mask.
+#[derive(Clone, Debug)]
+pub struct SparseLayer {
+    pub name: String,
+    pub c_total: usize,
+    pub k_total: usize,
+    pub weights: Vec<f32>,
+    pub mask: Vec<bool>,
+}
+
+impl SparseLayer {
+    pub fn new(
+        name: &str,
+        c_total: usize,
+        k_total: usize,
+        weights: Vec<f32>,
+        mask: Vec<bool>,
+    ) -> Result<Self> {
+        if weights.len() != c_total * k_total || mask.len() != c_total * k_total {
+            return Err(Error::Workload(format!(
+                "layer '{name}': weights/mask size mismatch with {c_total}x{k_total}"
+            )));
+        }
+        Ok(SparseLayer {
+            name: name.to_string(),
+            c_total,
+            k_total,
+            weights,
+            mask,
+        })
+    }
+
+    /// Dense reference forward for one input vector (layer semantics).
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.c_total);
+        (0..self.k_total)
+            .map(|kr| {
+                (0..self.c_total)
+                    .filter(|&ch| self.mask[ch * self.k_total + kr])
+                    .map(|ch| x[ch] * self.weights[ch * self.k_total + kr])
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Tile into blocks of at most `max_c × max_k`. Blocks that end up with
+    /// an all-zero sub-mask are dropped (nothing to compute — this is the
+    /// zero-block skipping a sparse accelerator performs). Channels with no
+    /// nonzero inside a block are compacted out of it so the block's
+    /// `|V_R|` reflects real input demands.
+    pub fn partition(&self, max_c: usize, max_k: usize) -> Vec<LayerBlock> {
+        assert!(max_c > 0 && max_k > 0);
+        let mut out = Vec::new();
+        let kr_tiles = self.k_total.div_ceil(max_k);
+        for kt in 0..kr_tiles {
+            let kr0 = kt * max_k;
+            let kw = max_k.min(self.k_total - kr0);
+            let mut ch0 = 0;
+            while ch0 < self.c_total {
+                let cw = max_c.min(self.c_total - ch0);
+                // Collect live channels of this tile.
+                let live: Vec<usize> = (ch0..ch0 + cw)
+                    .filter(|&ch| {
+                        (kr0..kr0 + kw).any(|kr| self.mask[ch * self.k_total + kr])
+                    })
+                    .collect();
+                if !live.is_empty() {
+                    let mut mask = Vec::with_capacity(live.len() * kw);
+                    let mut weights = Vec::with_capacity(live.len() * kw);
+                    for &ch in &live {
+                        for kr in kr0..kr0 + kw {
+                            mask.push(self.mask[ch * self.k_total + kr]);
+                            weights.push(self.weights[ch * self.k_total + kr]);
+                        }
+                    }
+                    let name = format!("{}_c{}k{}", self.name, ch0, kr0);
+                    let mut block = SparseBlock::from_mask(&name, live.len(), kw, mask)
+                        .expect("sized mask");
+                    block.weights = weights;
+                    out.push(LayerBlock {
+                        block,
+                        // ch_offset is only meaningful together with the
+                        // live-channel list; we store the live channels in
+                        // the block name order. For gather we keep them:
+                        ch_offset: ch0,
+                        kr_offset: kr0,
+                        kr_tile: kt,
+                    });
+                    // Record live channels for gathering inputs.
+                    out.last_mut().unwrap().block.name =
+                        format!("{name}[{}]", join_idx(&live));
+                }
+                ch0 += cw;
+            }
+        }
+        out
+    }
+
+    /// Live channels of a partitioned block, recovered for input gathering.
+    pub fn live_channels(block_name: &str) -> Vec<usize> {
+        let open = block_name.rfind('[').expect("partitioned block name");
+        let close = block_name.rfind(']').expect("partitioned block name");
+        block_name[open + 1..close]
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse().expect("channel index"))
+            .collect()
+    }
+}
+
+fn join_idx(v: &[usize]) -> String {
+    v.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn layer(c: usize, k: usize, p_zero: f64, seed: u64) -> SparseLayer {
+        let mut rng = Pcg64::seeded(seed);
+        let mask: Vec<bool> = (0..c * k).map(|_| !rng.chance(p_zero)).collect();
+        let weights: Vec<f32> = mask
+            .iter()
+            .map(|&m| if m { rng.next_normal() as f32 } else { 0.0 })
+            .collect();
+        SparseLayer::new("L", c, k, weights, mask).unwrap()
+    }
+
+    #[test]
+    fn partition_covers_every_nonzero_exactly_once() {
+        let l = layer(20, 14, 0.4, 3);
+        let blocks = l.partition(8, 8);
+        let mut covered = vec![0usize; 20 * 14];
+        for lb in &blocks {
+            let live = SparseLayer::live_channels(&lb.block.name);
+            assert_eq!(live.len(), lb.block.c);
+            for (bi, &ch) in live.iter().enumerate() {
+                for bk in 0..lb.block.k {
+                    if lb.block.has_weight(bi, bk) {
+                        covered[ch * 14 + (lb.kr_offset + bk)] += 1;
+                    }
+                }
+            }
+        }
+        for ch in 0..20 {
+            for kr in 0..14 {
+                let want = l.mask[ch * 14 + kr] as usize;
+                assert_eq!(covered[ch * 14 + kr], want, "at ({ch},{kr})");
+            }
+        }
+    }
+
+    #[test]
+    fn blocks_respect_size_caps() {
+        let l = layer(30, 17, 0.3, 5);
+        for lb in l.partition(8, 8) {
+            assert!(lb.block.c <= 8 && lb.block.k <= 8);
+            assert!(lb.block.nnz() > 0);
+        }
+    }
+
+    #[test]
+    fn block_accumulation_equals_layer_forward() {
+        let l = layer(20, 14, 0.4, 7);
+        let blocks = l.partition(8, 8);
+        let mut rng = Pcg64::seeded(11);
+        let x: Vec<f32> = (0..20).map(|_| rng.next_normal() as f32).collect();
+        let mut y = vec![0f32; 14];
+        for lb in &blocks {
+            let live = SparseLayer::live_channels(&lb.block.name);
+            let xs: Vec<f32> = live.iter().map(|&ch| x[ch]).collect();
+            let yb = lb.block.forward(&xs);
+            for (bk, v) in yb.iter().enumerate() {
+                y[lb.kr_offset + bk] += v;
+            }
+        }
+        let want = l.forward(&x);
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn empty_tiles_dropped() {
+        let mask = vec![false; 8 * 4];
+        let l = SparseLayer::new("Z", 8, 4, vec![0.0; 32], mask).unwrap();
+        assert!(l.partition(4, 4).is_empty());
+    }
+}

@@ -1,0 +1,119 @@
+//! Magnitude pruning: the path that produces the paper's "sparse models of
+//! VGGNet and AlexNet" blocks (block6/block7). A dense weight tensor is
+//! pruned to a target sparsity by zeroing the smallest-magnitude weights,
+//! then partitioned into mapper-sized sparse blocks.
+
+use crate::error::{Error, Result};
+use crate::sparse::partition::SparseLayer;
+use crate::util::rng::Pcg64;
+
+/// Prune a dense `(c_total × k_total)` weight matrix to `target_sparsity`
+/// (fraction of zeros) by global magnitude thresholding.
+pub fn magnitude_prune(
+    name: &str,
+    c_total: usize,
+    k_total: usize,
+    weights: &[f32],
+    target_sparsity: f64,
+) -> Result<SparseLayer> {
+    if weights.len() != c_total * k_total {
+        return Err(Error::Workload(format!(
+            "prune '{name}': {} weights for {c_total}x{k_total}",
+            weights.len()
+        )));
+    }
+    if !(0.0..1.0).contains(&target_sparsity) {
+        return Err(Error::Workload(format!(
+            "prune '{name}': sparsity {target_sparsity} outside [0,1)"
+        )));
+    }
+    let mut mags: Vec<f32> = weights.iter().map(|w| w.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).expect("no NaN weights"));
+    let cut = ((weights.len() as f64) * target_sparsity).floor() as usize;
+    let threshold = if cut == 0 { -1.0 } else { mags[cut - 1] };
+    let mask: Vec<bool> = weights.iter().map(|w| w.abs() > threshold).collect();
+    let pruned: Vec<f32> = weights
+        .iter()
+        .zip(&mask)
+        .map(|(&w, &m)| if m { w } else { 0.0 })
+        .collect();
+    SparseLayer::new(name, c_total, k_total, pruned, mask)
+}
+
+/// Generate a dense layer with a realistic (heavy-tailed) weight
+/// distribution, prune it, and return the sparse layer — the synthetic
+/// stand-in for a pruned VGG/AlexNet layer (DESIGN.md §Substitutions).
+pub fn synthetic_pruned_layer(
+    name: &str,
+    c_total: usize,
+    k_total: usize,
+    target_sparsity: f64,
+    seed: u64,
+) -> Result<SparseLayer> {
+    let mut rng = Pcg64::seeded(seed);
+    // Product of two normals gives the heavier tail seen in trained nets.
+    let weights: Vec<f32> = (0..c_total * k_total)
+        .map(|_| (rng.next_normal() * rng.next_normal() * 0.5) as f32)
+        .collect();
+    magnitude_prune(name, c_total, k_total, &weights, target_sparsity)
+}
+
+/// Achieved sparsity of a layer.
+pub fn sparsity(layer: &SparseLayer) -> f64 {
+    1.0 - layer.mask.iter().filter(|&&m| m).count() as f64 / layer.mask.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prunes_to_target() {
+        for target in [0.0, 0.3, 0.5, 0.8] {
+            let l = synthetic_pruned_layer("p", 32, 16, target, 1).unwrap();
+            let got = sparsity(&l);
+            assert!(
+                (got - target).abs() < 0.02,
+                "target {target}, got {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let weights: Vec<f32> = (1..=16).map(|i| i as f32).collect();
+        let l = magnitude_prune("m", 4, 4, &weights, 0.5).unwrap();
+        // The smallest 8 weights (1..=8) are zeroed.
+        for (i, &w) in l.weights.iter().enumerate() {
+            if i < 8 {
+                assert_eq!(w, 0.0, "weight {i}");
+            } else {
+                assert_eq!(w, (i + 1) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_layer_partitions_into_mappable_blocks() {
+        use crate::arch::StreamingCgra;
+        use crate::mapper::{map_block, MapperOptions};
+        let l = synthetic_pruned_layer("vggish", 24, 12, 0.55, 7).unwrap();
+        let blocks = l.partition(6, 4);
+        assert!(!blocks.is_empty());
+        let cgra = StreamingCgra::paper_default();
+        let opts = MapperOptions::sparsemap();
+        let mut ok = 0;
+        for lb in &blocks {
+            if map_block(&lb.block, &cgra, &opts).is_ok() {
+                ok += 1;
+            }
+        }
+        assert!(ok * 10 >= blocks.len() * 9, "{ok}/{} blocks mapped", blocks.len());
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(magnitude_prune("b", 2, 2, &[1.0; 3], 0.5).is_err());
+        assert!(magnitude_prune("b", 2, 2, &[1.0; 4], 1.0).is_err());
+    }
+}

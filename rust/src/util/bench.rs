@@ -1,0 +1,127 @@
+//! Criterion-style micro-benchmark harness (criterion itself is not
+//! available offline). Provides warmup, calibrated iteration counts, and
+//! mean/σ/percentile reporting. Used by `rust/benches/*.rs` (which are
+//! `harness = false` bench targets) and by the perf pass.
+
+use std::time::Instant;
+
+use crate::util::stats::{fmt_ns, Summary};
+
+/// One benchmark's configuration.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Wall-clock budget for warmup.
+    pub warmup_ns: u64,
+    /// Wall-clock budget for measurement.
+    pub measure_ns: u64,
+    /// Number of sample batches.
+    pub samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_ns: 200_000_000, measure_ns: 1_000_000_000, samples: 30 }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration nanoseconds.
+    pub summary: Summary,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.summary.mean()
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12} / iter  (σ {:>10}, p95 {:>10}, {} iters/sample)",
+            self.name,
+            fmt_ns(self.summary.mean()),
+            fmt_ns(self.summary.stddev()),
+            fmt_ns(self.summary.percentile(95.0)),
+            self.iters_per_sample,
+        )
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Harness collecting named benchmark results.
+#[derive(Default)]
+pub struct Bencher {
+    pub config: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_config(config: BenchConfig) -> Self {
+        Bencher { config, results: vec![] }
+    }
+
+    /// Run `f` repeatedly; calibrates iterations/sample from the warmup.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + calibration.
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while (start.elapsed().as_nanos() as u64) < self.config.warmup_ns {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = self.config.warmup_ns.max(1) / warm_iters.max(1);
+        let budget_per_sample = self.config.measure_ns / self.config.samples as u64;
+        let iters = (budget_per_sample / per_iter.max(1)).clamp(1, 1_000_000);
+
+        let mut summary = Summary::new();
+        for _ in 0..self.config.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            summary.add(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            summary,
+            iters_per_sample: iters,
+        });
+        let r = self.results.last().unwrap();
+        println!("{}", r.report_line());
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bencher::with_config(BenchConfig {
+            warmup_ns: 2_000_000,
+            measure_ns: 10_000_000,
+            samples: 5,
+        });
+        let mut acc = 0u64;
+        let r = b.bench("spin", || {
+            for i in 0..100u64 {
+                acc = black_box(acc.wrapping_add(i * i));
+            }
+        });
+        assert!(r.mean_ns() > 0.0);
+        assert_eq!(r.summary.count(), 5);
+    }
+}

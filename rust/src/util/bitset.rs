@@ -1,0 +1,188 @@
+//! Dynamic bitset used for conflict-graph adjacency and MIS bookkeeping.
+//!
+//! The SBTS solver's inner loop is dominated by neighbourhood queries;
+//! a word-packed bitset keeps those at a few ns per vertex.
+
+/// Word-packed dynamic bitset with the set operations the binder needs.
+#[derive(Clone, PartialEq, Eq)]
+pub struct BitSet {
+    words: Vec<u64>,
+    nbits: usize,
+}
+
+impl BitSet {
+    /// Empty set over a universe of `nbits` elements.
+    pub fn new(nbits: usize) -> Self {
+        BitSet { words: vec![0; nbits.div_ceil(64)], nbits }
+    }
+
+    /// Universe size.
+    pub fn capacity(&self) -> usize {
+        self.nbits
+    }
+
+    #[inline]
+    pub fn insert(&mut self, i: usize) {
+        debug_assert!(i < self.nbits);
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    pub fn remove(&mut self, i: usize) {
+        debug_assert!(i < self.nbits);
+        self.words[i >> 6] &= !(1u64 << (i & 63));
+    }
+
+    #[inline]
+    pub fn contains(&self, i: usize) -> bool {
+        debug_assert!(i < self.nbits);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    /// Number of set bits.
+    pub fn len(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    pub fn clear(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+    }
+
+    /// `|self ∩ other|` — the SBTS move-evaluation primitive.
+    pub fn intersection_len(&self, other: &BitSet) -> usize {
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a & b).count_ones() as usize)
+            .sum()
+    }
+
+    /// True iff the sets share no element.
+    pub fn is_disjoint(&self, other: &BitSet) -> bool {
+        self.words.iter().zip(&other.words).all(|(a, b)| a & b == 0)
+    }
+
+    /// In-place union.
+    pub fn union_with(&mut self, other: &BitSet) {
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// Iterate set bits in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut bits = w;
+            std::iter::from_fn(move || {
+                if bits == 0 {
+                    None
+                } else {
+                    let b = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+
+    /// Elements of `self ∩ other` (used to list conflicting neighbours).
+    pub fn intersection(&self, other: &BitSet) -> Vec<usize> {
+        self.words
+            .iter()
+            .zip(&other.words)
+            .enumerate()
+            .flat_map(|(wi, (a, b))| {
+                let mut bits = a & b;
+                std::iter::from_fn(move || {
+                    if bits == 0 {
+                        None
+                    } else {
+                        let b = bits.trailing_zeros() as usize;
+                        bits &= bits - 1;
+                        Some(wi * 64 + b)
+                    }
+                })
+            })
+            .collect()
+    }
+}
+
+impl std::fmt::Debug for BitSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_set().entries(self.iter()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn insert_remove_contains() {
+        let mut s = BitSet::new(200);
+        assert!(s.is_empty());
+        s.insert(0);
+        s.insert(63);
+        s.insert(64);
+        s.insert(199);
+        assert!(s.contains(0) && s.contains(63) && s.contains(64) && s.contains(199));
+        assert!(!s.contains(1) && !s.contains(100));
+        assert_eq!(s.len(), 4);
+        s.remove(64);
+        assert!(!s.contains(64));
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn iter_ascending() {
+        let mut s = BitSet::new(300);
+        for i in [5usize, 64, 65, 128, 255, 299] {
+            s.insert(i);
+        }
+        let v: Vec<usize> = s.iter().collect();
+        assert_eq!(v, vec![5, 64, 65, 128, 255, 299]);
+    }
+
+    #[test]
+    fn set_ops_match_naive() {
+        let mut rng = Pcg64::seeded(17);
+        for _ in 0..50 {
+            let n = 1 + rng.index(500);
+            let mut a = BitSet::new(n);
+            let mut b = BitSet::new(n);
+            let mut ha = std::collections::HashSet::new();
+            let mut hb = std::collections::HashSet::new();
+            for _ in 0..n / 2 {
+                let i = rng.index(n);
+                a.insert(i);
+                ha.insert(i);
+                let j = rng.index(n);
+                b.insert(j);
+                hb.insert(j);
+            }
+            assert_eq!(a.len(), ha.len());
+            assert_eq!(a.intersection_len(&b), ha.intersection(&hb).count());
+            assert_eq!(a.is_disjoint(&b), ha.is_disjoint(&hb));
+            let mut inter = a.intersection(&b);
+            inter.sort_unstable();
+            let mut want: Vec<usize> = ha.intersection(&hb).copied().collect();
+            want.sort_unstable();
+            assert_eq!(inter, want);
+        }
+    }
+
+    #[test]
+    fn union_with() {
+        let mut a = BitSet::new(100);
+        let mut b = BitSet::new(100);
+        a.insert(1);
+        b.insert(99);
+        a.union_with(&b);
+        assert!(a.contains(1) && a.contains(99));
+    }
+}

@@ -1,0 +1,70 @@
+//! Minimal `log` backend: level from `SPARSEMAP_LOG` (error..trace),
+//! timestamped stderr output. `env_logger` is unavailable offline.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use once_cell::sync::Lazy;
+
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger;
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.elapsed();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!(
+            "[{:>8.3}s {} {}] {}",
+            t.as_secs_f64(),
+            lvl,
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent). Level comes from `SPARSEMAP_LOG`
+/// (default `info`).
+pub fn init() {
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let level = match std::env::var("SPARSEMAP_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        Ok("off") => LevelFilter::Off,
+        _ => LevelFilter::Info,
+    };
+    let _ = log::set_boxed_logger(Box::new(StderrLogger));
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging works");
+    }
+}

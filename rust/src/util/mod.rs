@@ -1,0 +1,15 @@
+//! Substrate utilities built from scratch (the offline environment ships no
+//! rand/serde/criterion/proptest): a PCG-64 RNG, bitsets, summary
+//! statistics, an ASCII table formatter, a criterion-style micro-bench
+//! harness, a minimal property-testing loop and a tiny logger.
+
+pub mod bench;
+pub mod bitset;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use bitset::BitSet;
+pub use rng::Pcg64;

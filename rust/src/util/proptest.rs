@@ -1,0 +1,72 @@
+//! Minimal property-testing loop (proptest/quickcheck are unavailable
+//! offline): run a property over many seeded random cases and, on failure,
+//! report the failing seed so the case can be replayed deterministically.
+//!
+//! Usage:
+//! ```no_run
+//! use sparsemap::util::proptest::check;
+//! check("sum is commutative", 200, |rng| {
+//!     let a = rng.next_below(1000) as i64;
+//!     let b = rng.next_below(1000) as i64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Run `prop` on `cases` independently-seeded RNGs. Panics (with the failing
+/// case index and seed) if any case panics. Honors `SPARSEMAP_PROP_SEED` to
+/// replay a single failing case.
+pub fn check<F: Fn(&mut Pcg64) + std::panic::RefUnwindSafe>(name: &str, cases: u64, prop: F) {
+    if let Ok(s) = std::env::var("SPARSEMAP_PROP_SEED") {
+        let seed: u64 = s.parse().expect("SPARSEMAP_PROP_SEED must be u64");
+        let mut rng = Pcg64::seeded(seed);
+        prop(&mut rng);
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0x5eed_0000u64 ^ (case.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Pcg64::seeded(seed);
+            prop(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay with SPARSEMAP_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("xor-involution", 64, |rng| {
+            let x = rng.next_u64();
+            let k = rng.next_u64();
+            assert_eq!((x ^ k) ^ k, x);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-fails", 3, |_rng| panic!("boom"));
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("SPARSEMAP_PROP_SEED="), "{msg}");
+        assert!(msg.contains("always-fails"), "{msg}");
+    }
+}

@@ -1,0 +1,143 @@
+//! Property-based tests (seeded mini-proptest, `util::proptest`) over the
+//! coordinator-side invariants: s-DFG structure, schedule constraints,
+//! binding legality and functional equivalence with the reference forward
+//! pass.
+
+use sparsemap::arch::StreamingCgra;
+use sparsemap::config::Techniques;
+use sparsemap::dfg::analysis::mii;
+use sparsemap::dfg::build::build_sdfg;
+use sparsemap::dfg::{EdgeKind, NodeKind};
+use sparsemap::mapper::{map_block, MapperOptions};
+use sparsemap::sched::sparsemap::schedule_at;
+use sparsemap::sim::simulate;
+use sparsemap::sparse::gen::random_block;
+use sparsemap::util::proptest::check;
+use sparsemap::util::rng::Pcg64;
+
+fn arb_block(rng: &mut Pcg64) -> sparsemap::sparse::SparseBlock {
+    let c = 2 + rng.index(7);
+    let k = 2 + rng.index(7);
+    let p = 0.2 + 0.5 * rng.next_f64();
+    random_block("prop", c, k, p, rng.next_u64())
+}
+
+#[test]
+fn prop_sdfg_structure_invariants() {
+    check("sdfg structure", 150, |rng| {
+        let b = arb_block(rng);
+        let (g, _) = build_sdfg(&b);
+        g.validate().unwrap();
+        // Node-count identities (DESIGN.md): |V_M| = nnz, |V_A| = nnz - k'.
+        let f = b.features();
+        let muls = g.nodes().filter(|&v| matches!(g.kind(v), NodeKind::Mul { .. })).count();
+        assert_eq!(muls, f.nnz);
+        assert_eq!(g.v_op().len(), f.v_op);
+        assert_eq!(g.reads().len(), f.v_r);
+        assert_eq!(g.writes().len(), f.v_w);
+    });
+}
+
+#[test]
+fn prop_schedule_respects_all_constraints() {
+    let cgra = StreamingCgra::paper_default();
+    check("schedule constraints", 80, |rng| {
+        let b = arb_block(rng);
+        let (g, _) = build_sdfg(&b);
+        let base = mii(&g, &cgra);
+        for ii in base..base + 3 {
+            if let Ok(s) = schedule_at(&g, &cgra, Techniques::all(), ii) {
+                // verify() re-checks §3.2 (1)-(2) from first principles.
+                s.verify(&cgra).unwrap();
+                // Input deps never stretch: t(mul) == t(read).
+                for e in s.g.edges() {
+                    if e.kind == EdgeKind::Input {
+                        assert_eq!(s.t[e.dst], s.t[e.src]);
+                    }
+                }
+                return;
+            }
+        }
+        // Not all random blocks are schedulable within the slack — fine.
+    });
+}
+
+#[test]
+fn prop_mapping_is_legal_and_functional() {
+    let cgra = StreamingCgra::paper_default();
+    let opts = MapperOptions::sparsemap();
+    check("mapping legality + functional equivalence", 40, |rng| {
+        let b = arb_block(rng);
+        let Ok(out) = map_block(&b, &cgra, &opts) else { return };
+        out.mapping.verify(&cgra).unwrap();
+        // Functional equivalence on a random stream.
+        let xs: Vec<Vec<f32>> = (0..6)
+            .map(|_| (0..b.c).map(|_| rng.next_normal() as f32).collect())
+            .collect();
+        let res = simulate(&out.mapping, &b, &cgra, &xs).unwrap();
+        for (x, y) in xs.iter().zip(&res.outputs) {
+            let want = b.forward(x);
+            for (a, w) in y.iter().zip(&want) {
+                assert!((a - w).abs() <= 1e-4 * (1.0 + w.abs()), "{a} vs {w}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_mcid_count_invariant_under_ii() {
+    // MCIDs never include distance-1 edges, and every counted MCID has a
+    // consistent route (Bus for cop-sourced, else LRF/GRF).
+    let cgra = StreamingCgra::paper_default();
+    check("mcid routing consistency", 60, |rng| {
+        let b = arb_block(rng);
+        let (g, _) = build_sdfg(&b);
+        let base = mii(&g, &cgra);
+        let Ok(s) = schedule_at(&g, &cgra, Techniques::all(), base + 1) else { return };
+        let Ok(plan) = sparsemap::bind::route::preallocate(&s, &cgra) else { return };
+        for (idx, e) in s.g.edges().iter().enumerate() {
+            if e.kind != EdgeKind::Internal {
+                assert!(plan.route(idx).is_none());
+                continue;
+            }
+            let dist = s.t[e.dst] - s.t[e.src];
+            assert!(dist >= 1);
+            let route = plan.route(idx).expect("internal routed");
+            use sparsemap::bind::Route;
+            if matches!(s.g.kind(e.src), NodeKind::Cop { .. }) {
+                assert_eq!(route, Route::Bus, "cop deps ride the cached bus");
+            } else if dist == 1 {
+                assert_eq!(route, Route::Bus);
+            } else if s.m(e.src) == s.m(e.dst) {
+                assert_eq!(route, Route::Grf, "same-modulo MCID forced to GRF");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_simulator_catches_time_corruption() {
+    // Corrupting a node's schedule must break verify() or the simulation.
+    let cgra = StreamingCgra::paper_default();
+    let opts = MapperOptions::sparsemap();
+    check("failure injection", 25, |rng| {
+        let b = arb_block(rng);
+        let Ok(out) = map_block(&b, &cgra, &opts) else { return };
+        let mut bad = out.mapping.clone();
+        // Shift a random PE op's time by +1 (keeps vector sizes intact).
+        let ops: Vec<usize> = bad
+            .s
+            .g
+            .nodes()
+            .filter(|&v| bad.s.g.kind(v).is_pe_op())
+            .collect();
+        let v = ops[rng.index(ops.len())];
+        bad.s.t[v] += 1;
+        let verify_fails = bad.s.verify(&cgra).is_err() || bad.verify(&cgra).is_err();
+        let sim_fails = sparsemap::sim::simulate_and_check(&bad, &b, &cgra, 6, 1).is_err();
+        assert!(
+            verify_fails || sim_fails,
+            "corrupted schedule must be detected (node {v})"
+        );
+    });
+}

@@ -1,0 +1,73 @@
+//! Integration: the PJRT runtime path vs the CGRA simulator path — the two
+//! executions of the same sparse block must agree (L1/L2 artifacts ↔ L3
+//! fabric). Skipped when `make artifacts` has not run.
+
+use sparsemap::arch::StreamingCgra;
+use sparsemap::mapper::{map_block, MapperOptions};
+use sparsemap::runtime::{default_artifacts_dir, Runtime};
+use sparsemap::sim::simulate;
+use sparsemap::sparse::gen::paper_blocks;
+use sparsemap::util::rng::Pcg64;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new(&default_artifacts_dir()).join("manifest.tsv").exists()
+}
+
+#[test]
+fn pjrt_and_simulator_agree_on_sparse_blocks() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let cgra = StreamingCgra::paper_default();
+    let mut rt = Runtime::new(&default_artifacts_dir()).unwrap();
+    let opts = MapperOptions::sparsemap();
+
+    // Pair each artifact variant with a matching paper block.
+    for (artifact, label) in [("sb_c4k6", "block1"), ("sb_c6k6", "block3"), ("sb_c8k8", "block6")]
+    {
+        let nb = paper_blocks().into_iter().find(|n| n.label == label).unwrap();
+        let spec = rt.spec(artifact).unwrap().clone();
+        let t = spec.in_shapes[0][0];
+        assert_eq!(spec.in_shapes[0][1], nb.block.c, "{artifact} vs {label}");
+        assert_eq!(spec.in_shapes[1][1], nb.block.k);
+
+        // One input stream, two execution paths.
+        let mut rng = Pcg64::seeded(9);
+        let xs: Vec<Vec<f32>> = (0..t)
+            .map(|_| (0..nb.block.c).map(|_| rng.next_normal() as f32).collect())
+            .collect();
+
+        // Path 1: PJRT (AOT JAX/Pallas artifact).
+        let flat_x: Vec<f32> = xs.iter().flatten().copied().collect();
+        let w = nb.block.dense_weights();
+        let mask = nb.block.mask_f32();
+        let y_pjrt = rt.execute(artifact, &[&flat_x, &w, &mask]).unwrap();
+
+        // Path 2: SparseMap mapping + cycle-accurate simulation.
+        let out = map_block(&nb.block, &cgra, &opts).unwrap();
+        let res = simulate(&out.mapping, &nb.block, &cgra, &xs).unwrap();
+
+        for (i, row) in res.outputs.iter().enumerate() {
+            for (kr, &got) in row.iter().enumerate() {
+                let want = y_pjrt[i * nb.block.k + kr];
+                assert!(
+                    (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+                    "{label} iter {i} kernel {kr}: sim {got} vs pjrt {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn artifact_shapes_cover_paper_blocks() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new(&default_artifacts_dir()).unwrap();
+    for name in ["sb_c4k6", "sb_c6k6", "sb_c8k8", "conv_l1_c4k6_16x16", "conv_l2_c6k8_16x16"] {
+        assert!(rt.spec(name).is_some(), "missing artifact {name}");
+    }
+}
