@@ -1,20 +1,22 @@
 //! Micro-benchmarks of every stage of the mapping pipeline plus the
 //! simulator — the profile that drives the §Perf optimization loop in
-//! EXPERIMENTS.md.
+//! EXPERIMENTS.md. Results are merged into `BENCH_mapper.json` at the
+//! repo root so the perf trajectory is tracked across PRs.
 //!
 //! ```bash
 //! cargo bench --bench mapper_micro
 //! ```
 
 use sparsemap::arch::StreamingCgra;
-use sparsemap::bind::{bind, conflict, mis, route, BusCostModel};
+use sparsemap::bind::{self, conflict, mis, route, BusCostModel};
 use sparsemap::config::Techniques;
 use sparsemap::dfg::analysis::mii;
 use sparsemap::dfg::build::build_sdfg;
+use sparsemap::mapper::{map_block, MapperOptions};
 use sparsemap::sched::{baseline, sparsemap as sm_sched};
 use sparsemap::sim::simulate_and_check;
 use sparsemap::sparse::gen::paper_blocks;
-use sparsemap::util::bench::{black_box, BenchConfig, Bencher};
+use sparsemap::util::bench::{black_box, repo_root_path, BenchConfig, Bencher};
 
 fn main() {
     let cgra = StreamingCgra::paper_default();
@@ -56,24 +58,54 @@ fn main() {
         b.bench(&format!("{label}/conflict_graph"), || {
             black_box(conflict::build(&s, &cgra, &plan));
         });
+        // The reuse path the mapper actually runs: same graph, recycled
+        // storage.
+        let mut cg_scratch = conflict::ConflictGraph::empty();
+        b.bench(&format!("{label}/conflict_graph_reused"), || {
+            conflict::build_into(&s, &cgra, &plan, &mut cg_scratch);
+            black_box(cg_scratch.num_candidates());
+        });
         let cg = conflict::build(&s, &cgra, &plan);
         let routes: Vec<_> = (0..s.g.edges().len()).map(|i| plan.route(i)).collect();
         b.bench(&format!("{label}/sbts_solve"), || {
             let mut cost = BusCostModel::new(&s, &cg, &routes);
             black_box(mis::solve_with(&cg, 30_000, 42, &mut cost));
         });
-        // The straight-line schedule above may not bind for the densest
-        // blocks; bench the simulator on the mapper's (phase-④) result.
-        let mapping = sparsemap::mapper::map_block(
-            &nb.block,
-            &cgra,
-            &sparsemap::mapper::MapperOptions::sparsemap(),
-        )
-        .expect("map_block")
-        .mapping;
-        let _ = bind; // bind() itself is covered via sbts_solve above
+        let mut solver_scratch = mis::SolverScratch::new();
+        b.bench(&format!("{label}/sbts_solve_scratch"), || {
+            let mut cost = BusCostModel::new(&s, &cg, &routes);
+            black_box(mis::solve_with_scratch(&cg, 30_000, 42, &mut cost, &mut solver_scratch));
+        });
+        // Full bind stage (route + conflict + SBTS + verify) against one
+        // reusable arena — the per-attempt unit of the portfolio.
+        let mut pool = bind::ScratchPool::new();
+        b.bench(&format!("{label}/bind_with_scratch"), || {
+            black_box(bind::bind_with(&s, &cgra, 30_000, 42, &mut pool).ok());
+        });
+
+        // Cold-start mapping: the coordinator's cache-miss path, sequential
+        // vs portfolio (the deterministic parallel search; identical output,
+        // latency is the point).
+        let seq = MapperOptions::sparsemap().with_parallelism(1);
+        b.bench(&format!("{label}/map_block_seq"), || {
+            black_box(map_block(&nb.block, &cgra, &seq).ok());
+        });
+        let par = MapperOptions::sparsemap().with_parallelism(4);
+        b.bench(&format!("{label}/map_block_par4"), || {
+            black_box(map_block(&nb.block, &cgra, &par).ok());
+        });
+
+        let mapping = map_block(&nb.block, &cgra, &MapperOptions::sparsemap())
+            .expect("map_block")
+            .mapping;
         b.bench(&format!("{label}/simulate_64it"), || {
             black_box(simulate_and_check(&mapping, &nb.block, &cgra, 64, 7).unwrap());
         });
+    }
+
+    let json = repo_root_path("BENCH_mapper.json");
+    match b.write_json(&json) {
+        Ok(()) => println!("\nwrote {json}"),
+        Err(e) => eprintln!("\nfailed to write {json}: {e}"),
     }
 }

@@ -1,7 +1,8 @@
 //! Bench: coordinator serving throughput — the end-to-end request path
 //! (mapping cache + CGRA simulation) under a mixed-block request stream,
 //! across worker counts. This is the system-level headline the paper's
-//! throughput claim translates to on this testbed.
+//! throughput claim translates to on this testbed. Per-request wall time
+//! is merged into `BENCH_mapper.json` alongside the mapper micro-benches.
 //!
 //! ```bash
 //! cargo bench --bench serving_throughput
@@ -13,7 +14,9 @@ use std::time::Instant;
 use sparsemap::config::SparsemapConfig;
 use sparsemap::coordinator::{Coordinator, InferRequest};
 use sparsemap::sparse::gen::paper_blocks;
+use sparsemap::util::bench::{repo_root_path, write_json_merged, BenchResult};
 use sparsemap::util::rng::Pcg64;
+use sparsemap::util::stats::Summary;
 
 fn main() {
     let blocks: Vec<Arc<_>> = paper_blocks()
@@ -22,21 +25,34 @@ fn main() {
         .map(|nb| Arc::new(nb.block))
         .collect();
 
+    let mut results: Vec<BenchResult> = Vec::new();
     for workers in [1usize, 2, 4, 8] {
-        let mut cfg = SparsemapConfig::default();
-        cfg.workers = workers;
-        cfg.queue_depth = 32;
+        let cfg = SparsemapConfig { workers, queue_depth: 32, ..SparsemapConfig::default() };
         let coord = Coordinator::new(&cfg);
         let mut rng = Pcg64::seeded(1);
 
-        // Warm the mapping cache (compile path off the measurement).
-        for (id, block) in blocks.iter().enumerate() {
+        // Cold-start request: first job against an empty mapping cache.
+        // This spans submit → queue → map_block (cache miss) → a tiny
+        // simulation → collect, i.e. the user-visible cache-miss request
+        // latency; the isolated map_block cold-start numbers live in
+        // mapper_micro (map_block_seq / map_block_par4).
+        let t_cold = Instant::now();
+        let xs = stream(&blocks[0], 4, 99);
+        coord
+            .submit(InferRequest { id: 10_000, block: Arc::clone(&blocks[0]), xs })
+            .unwrap();
+        let _ = coord.collect(1);
+        let cold = t_cold.elapsed();
+
+        // Warm the rest of the mapping cache (compile path off the
+        // steady-state measurement).
+        for (id, block) in blocks.iter().enumerate().skip(1) {
             let xs = stream(block, 4, id as u64);
             coord
                 .submit(InferRequest { id: id as u64, block: Arc::clone(block), xs })
                 .unwrap();
         }
-        let _ = coord.collect(blocks.len());
+        let _ = coord.collect(blocks.len() - 1);
 
         let n = 200u64;
         let iters = 32;
@@ -58,14 +74,36 @@ fn main() {
         let m = coord.metrics.snapshot();
         println!(
             "workers={workers}: {n} requests ({} iterations each) in {wall:?} → {:.0} req/s, \
-             {:.2} Miter/s, mean latency {:.2} ms (cache hits {})",
+             {:.2} Miter/s, mean latency {:.2} ms, cold-start request {:.2} ms (cache hits {})",
             iters,
             n as f64 / wall.as_secs_f64(),
             (n as f64 * iters as f64) / wall.as_secs_f64() / 1e6,
             m.total_latency_ns as f64 / 1e6 / n as f64,
+            cold.as_secs_f64() * 1e3,
             m.cache_hits,
         );
         assert_eq!(collected, n as usize);
+
+        let mut per_request = Summary::new();
+        per_request.add(wall.as_nanos() as f64 / n as f64);
+        results.push(BenchResult {
+            name: format!("serving/workers={workers}/per_request"),
+            summary: per_request,
+            iters_per_sample: n,
+        });
+        let mut cold_summary = Summary::new();
+        cold_summary.add(cold.as_nanos() as f64);
+        results.push(BenchResult {
+            name: format!("serving/workers={workers}/cold_start_request"),
+            summary: cold_summary,
+            iters_per_sample: 1,
+        });
+    }
+
+    let json = repo_root_path("BENCH_mapper.json");
+    match write_json_merged(&json, &results) {
+        Ok(()) => println!("\nwrote {json}"),
+        Err(e) => eprintln!("\nfailed to write {json}: {e}"),
     }
 }
 

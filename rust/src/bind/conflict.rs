@@ -55,6 +55,12 @@ pub struct ConflictGraph {
 }
 
 impl ConflictGraph {
+    /// An empty graph holding no storage yet — the ScratchPool seed; filled
+    /// (and refilled, reusing allocations) by [`build_into`].
+    pub fn empty() -> Self {
+        ConflictGraph { candidates: Vec::new(), adj: Vec::new(), of_node: Vec::new(), num_nodes: 0 }
+    }
+
     pub fn num_candidates(&self) -> usize {
         self.candidates.len()
     }
@@ -65,13 +71,26 @@ impl ConflictGraph {
 }
 
 /// Build the conflict graph for a scheduled s-DFG + route plan.
-pub fn build(s: &ScheduledSDfg, cgra: &StreamingCgra, _plan: &RoutePlan) -> ConflictGraph {
+pub fn build(s: &ScheduledSDfg, cgra: &StreamingCgra, plan: &RoutePlan) -> ConflictGraph {
+    let mut cg = ConflictGraph::empty();
+    build_into(s, cgra, plan, &mut cg);
+    cg
+}
+
+/// [`build`] into reusable storage: every `Vec` and adjacency `BitSet` of a
+/// previous build is recycled, so the per-attempt cost of the mapper's
+/// retry lattice is the fill, not the allocation.
+pub fn build_into(s: &ScheduledSDfg, cgra: &StreamingCgra, _plan: &RoutePlan, cg: &mut ConflictGraph) {
     let g = &s.g;
     let n_nodes = g.len();
 
     // ---- candidates -------------------------------------------------------
-    let mut candidates = Vec::new();
-    let mut of_node: Vec<Vec<usize>> = vec![Vec::new(); n_nodes];
+    cg.candidates.clear();
+    cg.of_node.resize_with(n_nodes, Vec::new);
+    for v in cg.of_node.iter_mut() {
+        v.clear();
+    }
+    let (candidates, of_node) = (&mut cg.candidates, &mut cg.of_node);
     for v in g.nodes() {
         match g.kind(v) {
             k if k.is_read() => {
@@ -97,7 +116,11 @@ pub fn build(s: &ScheduledSDfg, cgra: &StreamingCgra, _plan: &RoutePlan) -> Conf
 
     // ---- edges ------------------------------------------------------------
     let nc = candidates.len();
-    let mut adj: Vec<BitSet> = (0..nc).map(|_| BitSet::new(nc)).collect();
+    for b in cg.adj.iter_mut() {
+        b.reset(nc);
+    }
+    cg.adj.resize_with(nc, || BitSet::new(nc));
+    let (candidates, adj) = (&cg.candidates, &mut cg.adj);
 
     let input_src = |op: NodeId| -> Option<NodeId> {
         g.in_edges(op)
@@ -150,7 +173,7 @@ pub fn build(s: &ScheduledSDfg, cgra: &StreamingCgra, _plan: &RoutePlan) -> Conf
         }
     }
 
-    ConflictGraph { candidates, adj, of_node, num_nodes: n_nodes }
+    cg.num_nodes = n_nodes;
 }
 
 #[cfg(test)]
@@ -172,6 +195,29 @@ mod tests {
         let plan = preallocate(&s, &cgra).unwrap();
         let cg = build(&s, &cgra, &plan);
         (s, cg)
+    }
+
+    #[test]
+    fn build_into_reuse_matches_fresh() {
+        // Growing and shrinking through the same scratch graph must give
+        // byte-identical results to a fresh build every time.
+        let cgra = StreamingCgra::paper_default();
+        let mut scratch = ConflictGraph::empty();
+        for idx in [0usize, 4, 2] {
+            let nb = &paper_blocks()[idx];
+            let (g, _) = build_sdfg(&nb.block);
+            let s = schedule_at(&g, &cgra, Techniques::all(), mii(&g, &cgra) + 1).unwrap();
+            let plan = preallocate(&s, &cgra).unwrap();
+            build_into(&s, &cgra, &plan, &mut scratch);
+            let fresh = build(&s, &cgra, &plan);
+            assert_eq!(scratch.candidates, fresh.candidates, "{}", nb.label);
+            assert_eq!(scratch.of_node, fresh.of_node);
+            assert_eq!(scratch.num_nodes, fresh.num_nodes);
+            assert_eq!(scratch.adj.len(), fresh.adj.len());
+            for (a, b) in scratch.adj.iter().zip(&fresh.adj) {
+                assert_eq!(a, b);
+            }
+        }
     }
 
     #[test]

@@ -11,6 +11,13 @@
 //! choice. The secondary cost hook carries the derived-bus-collision count
 //! (see `crate::bind::BusCostModel`), so routing quality is optimized in
 //! the same search instead of a post-hoc repair.
+//!
+//! The inner loop is allocation-free: all solver state lives in a reusable
+//! [`SolverScratch`], move candidates fill a recycled buffer, the
+//! hard-conflict counter is maintained incrementally, and the per-move
+//! conflict deltas are computed word-level over the adjacency bitsets
+//! (`adj[old] ∩ chosen` / `adj[new] ∩ chosen`) instead of scanning every
+//! node.
 
 use crate::bind::conflict::ConflictGraph;
 use crate::util::rng::Pcg64;
@@ -27,9 +34,11 @@ pub trait SecondaryCost {
     fn attach(&mut self, v: usize, assign: &[usize]);
     /// Current total cost.
     fn total(&self) -> usize;
-    /// Nodes currently contributing to the cost (move candidates once the
-    /// hard constraints are satisfied).
-    fn hot_nodes(&self, assign: &[usize]) -> Vec<usize>;
+    /// Append the nodes currently contributing to the cost (move candidates
+    /// once the hard constraints are satisfied) to `out`, in ascending node
+    /// order without duplicates. `out` arrives cleared; implementations
+    /// must not allocate beyond growing `out`.
+    fn hot_nodes_into(&self, assign: &[usize], out: &mut Vec<usize>);
 }
 
 /// A no-op secondary cost (pure MIS).
@@ -42,9 +51,7 @@ impl SecondaryCost for NoCost {
     fn total(&self) -> usize {
         0
     }
-    fn hot_nodes(&self, _: &[usize]) -> Vec<usize> {
-        vec![]
-    }
+    fn hot_nodes_into(&self, _: &[usize], _: &mut Vec<usize>) {}
 }
 
 /// Result of a solve.
@@ -68,46 +75,87 @@ impl MisResult {
     }
 }
 
+/// Reusable solver state: every vector and bitset the SBTS search needs,
+/// recycled across solves so the mapper's retry lattice allocates nothing
+/// in the 60k-iteration hot loop. Owned per thread (one per portfolio
+/// worker); never shared.
+#[derive(Default)]
+pub struct SolverScratch {
+    order: Vec<usize>,
+    assign: Vec<usize>,
+    best_assign: Vec<usize>,
+    conf: Vec<usize>,
+    tabu_until: Vec<usize>,
+    pool: Vec<usize>,
+    chosen: BitSet,
+    kept: BitSet,
+}
+
+impl SolverScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// Solve MIS (`cost = NoCost`) or the full binding problem with an
 /// iteration budget. Deterministic for a fixed seed.
 pub fn solve(cg: &ConflictGraph, max_iterations: usize, seed: u64) -> MisResult {
     solve_with(cg, max_iterations, seed, &mut NoCost)
 }
 
+/// [`solve_with_scratch`] with one-shot scratch (tests / one-off callers).
 pub fn solve_with(
     cg: &ConflictGraph,
     max_iterations: usize,
     seed: u64,
     cost: &mut dyn SecondaryCost,
 ) -> MisResult {
+    let mut scratch = SolverScratch::new();
+    solve_with_scratch(cg, max_iterations, seed, cost, &mut scratch)
+}
+
+/// The SBTS solve. Identical trajectory for identical `(cg, seed, cost)`
+/// regardless of what the scratch was previously used for.
+pub fn solve_with_scratch(
+    cg: &ConflictGraph,
+    max_iterations: usize,
+    seed: u64,
+    cost: &mut dyn SecondaryCost,
+    scratch: &mut SolverScratch,
+) -> MisResult {
     let nc = cg.num_candidates();
     let n_nodes = cg.of_node.len();
     let mut rng = Pcg64::seeded(seed);
+    let SolverScratch { order, assign, best_assign, conf, tabu_until, pool, chosen, kept } =
+        scratch;
 
     // ---- greedy init: nodes with fewest candidates first.
-    let mut order: Vec<usize> = (0..n_nodes).collect();
+    order.clear();
+    order.extend(0..n_nodes);
     order.sort_by_key(|&v| cg.of_node[v].len());
-    let mut assign: Vec<usize> = vec![usize::MAX; n_nodes];
-    let mut chosen = BitSet::new(nc);
-    for &v in &order {
+    assign.clear();
+    assign.resize(n_nodes, usize::MAX);
+    chosen.reset(nc);
+    for &v in order.iter() {
         let best = cg.of_node[v]
             .iter()
             .copied()
-            .min_by_key(|&c| (cg.adj[c].intersection_len(&chosen), cg.adj[c].len()))
+            .min_by_key(|&c| (cg.adj[c].intersection_len(chosen), cg.adj[c].len()))
             .expect("every node has candidates");
         assign[v] = best;
         chosen.insert(best);
     }
-    cost.reset(&assign);
+    cost.reset(assign);
 
-    let mut conf: Vec<usize> = (0..n_nodes)
-        .map(|v| cg.adj[assign[v]].intersection_len(&chosen))
-        .collect();
+    conf.clear();
+    conf.extend((0..n_nodes).map(|v| cg.adj[assign[v]].intersection_len(chosen)));
     let mut hard: usize = conf.iter().sum::<usize>() / 2;
 
-    let mut best_assign = assign.clone();
+    best_assign.clear();
+    best_assign.extend_from_slice(assign);
     let mut best_score = hard * 1_000_000 + cost.total();
-    let mut tabu_until = vec![0usize; n_nodes];
+    tabu_until.clear();
+    tabu_until.resize(n_nodes, 0);
     let mut iter = 0usize;
 
     let mut stagnant = 0usize;
@@ -130,23 +178,24 @@ pub fn solve_with(
                 let v = rng.index(n_nodes);
                 let cur = assign[v];
                 chosen.remove(cur);
-                cost.detach(v, &assign);
+                cost.detach(v, assign);
                 let c = cg.of_node[v][rng.index(cg.of_node[v].len())];
                 assign[v] = c;
                 chosen.insert(c);
-                cost.attach(v, &assign);
+                cost.attach(v, assign);
             }
-            conf = (0..n_nodes)
-                .map(|v| cg.adj[assign[v]].intersection_len(&chosen))
-                .collect();
+            for v in 0..n_nodes {
+                conf[v] = cg.adj[assign[v]].intersection_len(chosen);
+            }
             hard = conf.iter().sum::<usize>() / 2;
         }
         // Pick a node to move: hard-conflicted first, else a bus-hot node.
-        let pool: Vec<usize> = if hard > 0 {
-            (0..n_nodes).filter(|&v| conf[v] > 0).collect()
+        pool.clear();
+        if hard > 0 {
+            pool.extend((0..n_nodes).filter(|&v| conf[v] > 0));
         } else {
-            cost.hot_nodes(&assign)
-        };
+            cost.hot_nodes_into(assign, pool);
+        }
         if pool.is_empty() {
             break; // nothing movable contributes — stuck
         }
@@ -163,7 +212,7 @@ pub fn solve_with(
         // Evaluate every candidate of v under (hard, secondary).
         let cur = assign[v];
         chosen.remove(cur);
-        cost.detach(v, &assign);
+        cost.detach(v, assign);
         let noise = rng.chance(0.05);
         let mut best_c = cur;
         let mut best_local = (usize::MAX, u64::MAX);
@@ -171,11 +220,11 @@ pub fn solve_with(
             best_c = cg.of_node[v][rng.index(cg.of_node[v].len())];
         } else {
             for &c in &cg.of_node[v] {
-                let h = cg.adj[c].intersection_len(&chosen);
+                let h = cg.adj[c].intersection_len(chosen);
                 assign[v] = c;
-                cost.attach(v, &assign);
+                cost.attach(v, assign);
                 let s = h * 1_000_000 + cost.total();
-                cost.detach(v, &assign);
+                cost.detach(v, assign);
                 let key = (s, rng.next_below(8));
                 if key < best_local {
                     best_local = key;
@@ -184,51 +233,59 @@ pub fn solve_with(
             }
         }
         assign[v] = best_c;
-        chosen.insert(best_c);
-        cost.attach(v, &assign);
         if best_c != cur {
-            tabu_until[v] = iter + 3 + rng.index(5);
-            // Incremental hard-conflict update.
-            for u in 0..n_nodes {
-                if u == v {
-                    continue;
-                }
-                let c = assign[u];
-                let before = cg.adj[cur].contains(c) as isize;
-                let after = cg.adj[best_c].contains(c) as isize;
-                match after - before {
-                    1 => conf[u] += 1,
-                    -1 => conf[u] -= 1,
-                    _ => {}
-                }
+            // Word-level incremental conflict update: only owners of chosen
+            // candidates adjacent to the old/new placement are affected
+            // (`chosen` here is exactly {assign[u] : u ≠ v}).
+            let conf_v_old = conf[v];
+            for c in cg.adj[cur].iter_intersection(chosen) {
+                conf[cg.candidates[c].node()] -= 1;
             }
-            conf[v] = cg.adj[best_c].intersection_len(&chosen);
-            hard = conf.iter().sum::<usize>() / 2;
+            let mut conf_v_new = 0usize;
+            for c in cg.adj[best_c].iter_intersection(chosen) {
+                conf[cg.candidates[c].node()] += 1;
+                conf_v_new += 1;
+            }
+            chosen.insert(best_c);
+            cost.attach(v, assign);
+            tabu_until[v] = iter + 3 + rng.index(5);
+            conf[v] = conf_v_new;
+            // Each (v, u) conflict is counted in both conf[v] and conf[u],
+            // so the total moves by exactly the conf[v] delta.
+            hard = hard - conf_v_old + conf_v_new;
+            debug_assert_eq!(hard, conf.iter().sum::<usize>() / 2);
             let score = hard * 1_000_000 + cost.total();
             if score < best_score {
                 best_score = score;
-                best_assign = assign.clone();
+                best_assign.copy_from_slice(assign);
                 stagnant = 0;
                 since_best = 0;
             } else {
                 stagnant += 1;
             }
         } else {
+            chosen.insert(best_c);
+            cost.attach(v, assign);
             stagnant += 1;
         }
     }
 
     let clean = hard == 0 && cost.total() == 0;
-    let final_assign = if clean { assign } else { best_assign };
+    let final_assign: &[usize] = if clean { assign } else { best_assign };
     let mut chosen_list = Vec::with_capacity(n_nodes);
-    let mut kept = BitSet::new(nc);
+    kept.reset(nc);
     for &c in final_assign.iter() {
         if kept.is_disjoint(&cg.adj[c]) {
             kept.insert(c);
             chosen_list.push(c);
         }
     }
-    MisResult { chosen: chosen_list, assignment: final_assign, clean, iterations: iter }
+    MisResult {
+        chosen: chosen_list,
+        assignment: final_assign.to_vec(),
+        clean,
+        iterations: iter,
+    }
 }
 
 #[cfg(test)]
@@ -301,6 +358,27 @@ mod tests {
         let a = solve(&cg, 10_000, 7);
         let b = solve(&cg, 10_000, 7);
         assert_eq!(a.chosen, b.chosen);
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        // A shared scratch recycled across differently-sized solves must
+        // reproduce the fresh-scratch result exactly.
+        let cgra = StreamingCgra::paper_default();
+        let mut shared = SolverScratch::new();
+        for idx in [4usize, 0, 6] {
+            let nb = &paper_blocks()[idx];
+            let (g, _) = build_sdfg(&nb.block);
+            let s = schedule_at(&g, &cgra, Techniques::all(), mii(&g, &cgra) + 1).unwrap();
+            let plan = preallocate(&s, &cgra).unwrap();
+            let cg = build(&s, &cgra, &plan);
+            let reused = solve_with_scratch(&cg, 10_000, 11, &mut NoCost, &mut shared);
+            let fresh = solve_with_scratch(&cg, 10_000, 11, &mut NoCost, &mut SolverScratch::new());
+            assert_eq!(reused.chosen, fresh.chosen, "{}", nb.label);
+            assert_eq!(reused.assignment, fresh.assignment);
+            assert_eq!(reused.clean, fresh.clean);
+            assert_eq!(reused.iterations, fresh.iterations);
+        }
     }
 
     #[test]

@@ -8,6 +8,11 @@
 //! consumer's column bus) and re-solves with a fresh seed in the rare case
 //! of a bus collision. Anything less is an incomplete mapping; the mapper
 //! escalates II (see `crate::mapper`).
+//!
+//! The attempt path is allocation-conscious: [`ScratchPool`] carries the
+//! conflict-graph storage, the route table and the SBTS solver state
+//! across attempts, so the mapper's `(II, retry)` lattice reuses one
+//! arena per worker instead of rebuilding every buffer per attempt.
 
 pub mod conflict;
 pub mod mis;
@@ -19,7 +24,7 @@ use crate::error::{Error, Result};
 use crate::sched::ScheduledSDfg;
 
 pub use conflict::{Candidate, ConflictGraph};
-pub use mis::SecondaryCost;
+pub use mis::{SecondaryCost, SolverScratch};
 pub use route::{Route, RoutePlan};
 
 /// Where one s-DFG node landed.
@@ -88,7 +93,7 @@ impl Mapping {
     /// simulator uses the same function to drive its interconnect.
     pub fn bus_claims_of_edge(&self, idx: usize) -> Vec<(BusAt, NodeId)> {
         let place = |v: NodeId| self.placements[v];
-        claims_of_edge(&self.s, &self.plan_routes, &place, idx)
+        claims_of_edge(&self.s, &self.plan_routes, &place, idx).as_slice().to_vec()
     }
 
     /// Re-check every binding constraint from first principles (independent
@@ -201,6 +206,32 @@ impl Mapping {
     }
 }
 
+/// Up to two bus claims of one edge, as a fixed-size value — the SBTS
+/// inner loop asks for claims on every candidate evaluation, so this must
+/// not allocate.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct EdgeClaims {
+    items: [(BusAt, NodeId); 2],
+    len: usize,
+}
+
+impl EdgeClaims {
+    const NONE: EdgeClaims =
+        EdgeClaims { items: [(BusAt::Row { slot: 0, row: 0 }, 0); 2], len: 0 };
+
+    fn one(c: (BusAt, NodeId)) -> Self {
+        EdgeClaims { items: [c, c], len: 1 }
+    }
+
+    fn two(a: (BusAt, NodeId), b: (BusAt, NodeId)) -> Self {
+        EdgeClaims { items: [a, b], len: 2 }
+    }
+
+    pub(crate) fn as_slice(&self) -> &[(BusAt, NodeId)] {
+        &self.items[..self.len]
+    }
+}
+
 /// Claim set of one dependency edge under an arbitrary placement lookup —
 /// shared by [`Mapping::bus_claims_of_edge`] and the in-search bus cost.
 fn claims_of_edge(
@@ -208,52 +239,52 @@ fn claims_of_edge(
     routes: &[Option<Route>],
     place: &dyn Fn(NodeId) -> Placement,
     idx: usize,
-) -> Vec<(BusAt, NodeId)> {
+) -> EdgeClaims {
     let e = s.g.edge(idx);
     match e.kind {
         EdgeKind::Input => {
-            let Placement::InputBus(ibus) = place(e.src) else { return vec![] };
-            vec![(BusAt::Col { slot: s.m(e.dst), col: ibus }, e.src)]
+            let Placement::InputBus(ibus) = place(e.src) else { return EdgeClaims::NONE };
+            EdgeClaims::one((BusAt::Col { slot: s.m(e.dst), col: ibus }, e.src))
         }
         EdgeKind::Output => {
-            let Placement::OutputBus(obus) = place(e.dst) else { return vec![] };
-            vec![(BusAt::Row { slot: s.m(e.dst), row: obus }, e.src)]
+            let Placement::OutputBus(obus) = place(e.dst) else { return EdgeClaims::NONE };
+            EdgeClaims::one((BusAt::Row { slot: s.m(e.dst), row: obus }, e.src))
         }
         EdgeKind::Internal => {
             // Bus-routed deps and LRF-routed MCIDs (value parked in the
             // producer's LRF, forwarded at the consumer's cycle) both ride
             // the interconnect; only GRF routes bypass the PEA buses.
             if routes[idx] == Some(Route::Grf) || routes[idx].is_none() {
-                return vec![];
+                return EdgeClaims::NONE;
             }
             let (Placement::Pe(ps), Placement::Pe(pd)) = (place(e.src), place(e.dst)) else {
-                return vec![];
+                return EdgeClaims::NONE;
             };
             let slot = s.m(e.dst);
             let mesh = ps.row.abs_diff(pd.row) + ps.col.abs_diff(pd.col) == 1;
             if ps == pd || mesh {
                 // Same PE or dedicated mesh-neighbour link: no shared bus.
-                vec![]
+                EdgeClaims::NONE
             } else if ps.row == pd.row {
-                vec![(BusAt::Row { slot, row: ps.row }, e.src)]
+                EdgeClaims::one((BusAt::Row { slot, row: ps.row }, e.src))
             } else if ps.col == pd.col {
-                vec![(BusAt::Col { slot, col: ps.col }, e.src)]
+                EdgeClaims::one((BusAt::Col { slot, col: ps.col }, e.src))
             } else if (e.src ^ e.dst) & 1 == 0 {
                 // Two hops, variant A: producer's row bus → junction
                 // (ps.row, pd.col) → consumer's column bus.
-                vec![
+                EdgeClaims::two(
                     (BusAt::Row { slot, row: ps.row }, e.src),
                     (BusAt::Col { slot, col: pd.col }, e.src),
-                ]
+                )
             } else {
                 // Two hops, variant B: producer's column bus → junction
                 // (pd.row, ps.col) → consumer's row bus. Alternating the
                 // junction corner per edge spreads transfer load over both
                 // bus planes.
-                vec![
+                EdgeClaims::two(
                     (BusAt::Col { slot, col: ps.col }, e.src),
                     (BusAt::Row { slot, row: pd.row }, e.src),
-                ]
+                )
             }
         }
     }
@@ -270,10 +301,12 @@ pub struct BusCostModel<'a> {
     incident: Vec<Vec<usize>>,
     /// Per bus: value -> multiplicity.
     claims: std::collections::HashMap<BusAt, std::collections::HashMap<NodeId, usize>>,
-    /// Per bus: claiming edge indices (multiset) — lets `hot_nodes` find
-    /// the movable endpoints of colliding buses without a full edge scan.
+    /// Per bus: claiming edge indices (multiset) — lets the hot-node
+    /// tracker find the movable endpoints of colliding buses without a
+    /// full edge scan.
     bus_edges: std::collections::HashMap<BusAt, Vec<usize>>,
-    /// Buses currently carrying more than one distinct value.
+    /// Buses currently carrying more than one distinct value — maintained
+    /// incrementally on every claim mutation.
     hot: std::collections::HashSet<BusAt>,
     total: usize,
 }
@@ -314,7 +347,7 @@ impl<'a> BusCostModel<'a> {
         }
     }
 
-    fn edge_claims(&self, idx: usize, assign: &[usize]) -> Vec<(BusAt, NodeId)> {
+    fn edge_claims(&self, idx: usize, assign: &[usize]) -> EdgeClaims {
         let place = |v: NodeId| self.placement_of(assign[v]);
         claims_of_edge(self.s, self.routes, &place, idx)
     }
@@ -355,10 +388,30 @@ impl<'a> BusCostModel<'a> {
         }
     }
 
-    /// Unique edge list incident to `v` (an edge appears once even if both
-    /// endpoints are v-adjacent — claims are computed per edge).
-    fn edges_of(&self, v: usize) -> &[usize] {
-        &self.incident[v]
+    /// Reference implementation of the hot-node set, recomputed from
+    /// scratch — the oracle the incremental tracker is property-tested
+    /// against. Allocates; never called on the search path.
+    pub fn hot_nodes_naive(&self, assign: &[usize]) -> Vec<usize> {
+        use std::collections::{BTreeMap, BTreeSet};
+        let mut by_bus: BTreeMap<BusAt, (BTreeSet<NodeId>, Vec<usize>)> = BTreeMap::new();
+        for idx in 0..self.s.g.edges().len() {
+            for &(bus, value) in self.edge_claims(idx, assign).as_slice() {
+                let slot = by_bus.entry(bus).or_default();
+                slot.0.insert(value);
+                slot.1.push(idx);
+            }
+        }
+        let mut nodes = BTreeSet::new();
+        for (values, edges) in by_bus.values() {
+            if values.len() > 1 {
+                for &idx in edges {
+                    let e = self.s.g.edge(idx);
+                    nodes.insert(e.src);
+                    nodes.insert(e.dst);
+                }
+            }
+        }
+        nodes.into_iter().collect()
     }
 }
 
@@ -369,49 +422,85 @@ impl<'a> SecondaryCost for BusCostModel<'a> {
         self.hot.clear();
         self.total = 0;
         for idx in 0..self.s.g.edges().len() {
-            for (bus, value) in self.edge_claims(idx, assign) {
+            let claims = self.edge_claims(idx, assign);
+            for &(bus, value) in claims.as_slice() {
                 self.add_claim(bus, value, idx, 1);
             }
         }
     }
 
     fn detach(&mut self, v: usize, assign: &[usize]) {
-        for &idx in self.edges_of(v).to_vec().iter() {
-            for (bus, value) in self.edge_claims(idx, assign) {
+        // mem::take sidesteps the self-borrow without cloning the edge
+        // list; the incident sets are static for the model's lifetime.
+        let edges = std::mem::take(&mut self.incident[v]);
+        for &idx in &edges {
+            let claims = self.edge_claims(idx, assign);
+            for &(bus, value) in claims.as_slice() {
                 self.add_claim(bus, value, idx, -1);
             }
         }
+        self.incident[v] = edges;
     }
 
     fn attach(&mut self, v: usize, assign: &[usize]) {
-        for &idx in self.edges_of(v).to_vec().iter() {
-            for (bus, value) in self.edge_claims(idx, assign) {
+        let edges = std::mem::take(&mut self.incident[v]);
+        for &idx in &edges {
+            let claims = self.edge_claims(idx, assign);
+            for &(bus, value) in claims.as_slice() {
                 self.add_claim(bus, value, idx, 1);
             }
         }
+        self.incident[v] = edges;
     }
 
     fn total(&self) -> usize {
         self.total
     }
 
-    fn hot_nodes(&self, _assign: &[usize]) -> Vec<usize> {
+    fn hot_nodes_into(&self, _assign: &[usize], out: &mut Vec<usize>) {
         // Incrementally-maintained: endpoints of the edges claiming any
-        // colliding bus (plus their same-bus rivals).
+        // colliding bus. Sorted + deduped into the caller's buffer so the
+        // order is deterministic (HashSet iteration order is not).
         if self.total == 0 {
-            return vec![];
+            return;
         }
-        let mut nodes = std::collections::BTreeSet::new();
         for bus in &self.hot {
             if let Some(edges) = self.bus_edges.get(bus) {
                 for &idx in edges {
                     let e = self.s.g.edge(idx);
-                    nodes.insert(e.src);
-                    nodes.insert(e.dst);
+                    out.push(e.src);
+                    out.push(e.dst);
                 }
             }
         }
-        nodes.into_iter().collect()
+        out.sort_unstable();
+        out.dedup();
+    }
+}
+
+/// Reusable per-worker binding arena: conflict-graph storage, the route
+/// table and the SBTS solver state. One per portfolio thread; reuse across
+/// attempts is behavior-neutral (asserted by tests) — only the allocations
+/// are recycled.
+pub struct ScratchPool {
+    cg: ConflictGraph,
+    routes: Vec<Option<Route>>,
+    solver: SolverScratch,
+}
+
+impl ScratchPool {
+    pub fn new() -> Self {
+        ScratchPool {
+            cg: ConflictGraph::empty(),
+            routes: Vec::new(),
+            solver: SolverScratch::new(),
+        }
+    }
+}
+
+impl Default for ScratchPool {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -424,18 +513,34 @@ pub fn bind(
     mis_iterations: usize,
     seed: u64,
 ) -> Result<Mapping> {
+    bind_with(s, cgra, mis_iterations, seed, &mut ScratchPool::new())
+}
+
+/// [`bind`] against a reusable [`ScratchPool`] — the mapper's hot path.
+pub fn bind_with(
+    s: &ScheduledSDfg,
+    cgra: &StreamingCgra,
+    mis_iterations: usize,
+    seed: u64,
+    scratch: &mut ScratchPool,
+) -> Result<Mapping> {
     let plan = route::preallocate(s, cgra)?;
-    let cg = conflict::build(s, cgra, &plan);
-    let routes: Vec<Option<Route>> = (0..s.g.edges().len()).map(|i| plan.route(i)).collect();
+    let ScratchPool { cg, routes, solver } = scratch;
+    conflict::build_into(s, cgra, &plan, cg);
+    routes.clear();
+    routes.extend((0..s.g.edges().len()).map(|i| plan.route(i)));
+    let cg: &ConflictGraph = cg;
+    let routes: &[Option<Route>] = routes;
+    let mut cost = BusCostModel::new(s, cg, routes);
     let mut spent = 0usize;
     let mut best_bound = 0usize;
     for attempt in 0..3u64 {
-        let mut cost = BusCostModel::new(s, &cg, &routes);
-        let res = mis::solve_with(
-            &cg,
+        let res = mis::solve_with_scratch(
+            cg,
             mis_iterations,
             seed.wrapping_add(attempt * 0x9e37),
             &mut cost,
+            solver,
         );
         spent += res.iterations;
         best_bound = best_bound.max(res.size());
@@ -454,7 +559,7 @@ pub fn bind(
         let mapping = Mapping {
             s: s.clone(),
             placements,
-            plan_routes: routes.clone(),
+            plan_routes: routes.to_vec(),
             mis_iterations: spent,
             ii: s.ii,
         };
@@ -468,7 +573,7 @@ pub fn bind(
 mod tests {
     use super::*;
     use crate::config::Techniques;
-    use crate::dfg::analysis::mii;
+    use crate::dfg::analysis::{mii, AssociationMatrix};
     use crate::dfg::build::build_sdfg;
     use crate::sched::sparsemap::schedule_at;
     use crate::sparse::gen::paper_blocks;
@@ -478,6 +583,7 @@ mod tests {
         let cgra = StreamingCgra::paper_default();
         for nb in paper_blocks() {
             let (g, _) = build_sdfg(&nb.block);
+            let am = AssociationMatrix::build(&g);
             let base = mii(&g, &cgra);
             // First (II, perturbation) whose schedule binds — the mapper's
             // phase-④ search, inlined. blocks 5/7 need up to MII+2.
@@ -490,6 +596,7 @@ mod tests {
                             Techniques::all(),
                             ii,
                             p,
+                            &am,
                         )
                         .ok()?;
                         let m = bind(&s, &cgra, 60_000, 42 ^ p).ok()?;
@@ -499,6 +606,35 @@ mod tests {
                 .unwrap_or_else(|| panic!("{}: no binding", nb.label));
             m.verify(&cgra).unwrap();
             assert_eq!(m.ii, s.ii);
+        }
+    }
+
+    #[test]
+    fn bind_with_scratch_reuse_matches_fresh() {
+        // One pool carried across blocks of different sizes must yield the
+        // same mappings as fresh pools.
+        let cgra = StreamingCgra::paper_default();
+        let mut pool = ScratchPool::new();
+        for idx in [1usize, 4, 0] {
+            let nb = &paper_blocks()[idx];
+            let (g, _) = build_sdfg(&nb.block);
+            let s = schedule_at(&g, &cgra, Techniques::all(), mii(&g, &cgra) + 1).unwrap();
+            let reused = bind_with(&s, &cgra, 60_000, 42, &mut pool);
+            let fresh = bind(&s, &cgra, 60_000, 42);
+            match (reused, fresh) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.placements, b.placements, "{}", nb.label);
+                    assert_eq!(a.plan_routes, b.plan_routes);
+                    assert_eq!(a.mis_iterations, b.mis_iterations);
+                }
+                (Err(_), Err(_)) => {}
+                (a, b) => panic!(
+                    "{}: scratch reuse changed the outcome: {:?} vs {:?}",
+                    nb.label,
+                    a.is_ok(),
+                    b.is_ok()
+                ),
+            }
         }
     }
 

@@ -64,6 +64,10 @@ pub struct SparsemapConfig {
     pub ii_slack: usize,
     /// SBTS iteration budget per MIS solve.
     pub mis_iterations: usize,
+    /// Portfolio width of the mapper's `(II, retry)` attempt lattice.
+    /// `0` = auto (hardware parallelism), `1` = sequential; the mapping is
+    /// identical for every value (deterministic portfolio).
+    pub parallelism: usize,
     /// Artifacts directory for the PJRT runtime.
     pub artifacts_dir: String,
     /// Coordinator worker threads.
@@ -82,6 +86,7 @@ impl Default for SparsemapConfig {
             techniques: Techniques::all(),
             ii_slack: 2,
             mis_iterations: 20_000,
+            parallelism: 0,
             artifacts_dir: "artifacts".into(),
             workers: 4,
             queue_depth: 16,
@@ -116,6 +121,7 @@ impl SparsemapConfig {
                 ("mapper", "rid_at") => cfg.techniques.rid_at = value.as_bool()?,
                 ("mapper", "ii_slack") => cfg.ii_slack = value.as_int()? as usize,
                 ("mapper", "mis_iterations") => cfg.mis_iterations = value.as_int()? as usize,
+                ("mapper", "parallelism") => cfg.parallelism = value.as_int()? as usize,
                 ("runtime", "artifacts_dir") => cfg.artifacts_dir = value.as_str()?.to_string(),
                 ("coordinator", "workers") => cfg.workers = value.as_int()? as usize,
                 ("coordinator", "queue_depth") => cfg.queue_depth = value.as_int()? as usize,
@@ -161,6 +167,7 @@ grf_capacity = 8
 scheduler = "baseline"
 rid_at = false
 ii_slack = 3
+parallelism = 2
 
 [coordinator]
 workers = 2
@@ -174,6 +181,7 @@ seed = 7
         assert!(!c.techniques.rid_at);
         assert!(c.techniques.aiba);
         assert_eq!(c.ii_slack, 3);
+        assert_eq!(c.parallelism, 2);
         assert_eq!(c.workers, 2);
         assert_eq!(c.seed, 7);
     }

@@ -107,7 +107,16 @@ impl Coordinator {
         let (res_tx, results) = std::sync::mpsc::channel::<Result<InferResult>>();
         let cache: Cache = Arc::new(Mutex::new(std::collections::HashMap::new()));
         let metrics = Arc::new(Metrics::default());
-        let opts = MapperOptions::from_config(cfg);
+        let mut opts = MapperOptions::from_config(cfg);
+        if opts.parallelism == 0 {
+            // Auto portfolio width: split the machine between the worker
+            // pool and each worker's mapping portfolio, so a burst of
+            // cache misses doesn't oversubscribe cores. The mapping itself
+            // is width-independent (deterministic portfolio), so this only
+            // shapes latency.
+            let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            opts.parallelism = (cores / cfg.workers.max(1)).clamp(1, 8);
+        }
         let cgra = cfg.cgra.clone();
 
         let workers = (0..cfg.workers)

@@ -13,6 +13,10 @@ pub struct AssociationMatrix {
     pub reads: Vec<NodeId>,
     assoc: Vec<u32>,
     n: usize,
+    /// Node id → matrix index (usize::MAX for non-reads), so the AIBA
+    /// inner loop's lookups are O(1). Sized to the *pristine* graph; nodes
+    /// added later by the scheduler (replicas, COPs) resolve to None.
+    idx_of: Vec<usize>,
 }
 
 impl AssociationMatrix {
@@ -40,7 +44,11 @@ impl AssociationMatrix {
                 assoc[i * n + j] = (masks[i] & masks[j]).count_ones();
             }
         }
-        AssociationMatrix { reads, assoc, n }
+        let mut idx_of = vec![usize::MAX; g.len()];
+        for (i, &r) in reads.iter().enumerate() {
+            idx_of[r] = i;
+        }
+        AssociationMatrix { reads, assoc, n, idx_of }
     }
 
     /// Association between the i-th and j-th read (matrix order).
@@ -48,9 +56,13 @@ impl AssociationMatrix {
         self.assoc[i * self.n + j]
     }
 
-    /// Index of a read node in matrix order.
+    /// Index of a read node in matrix order (O(1); None for nodes outside
+    /// the pristine graph, e.g. Mul-CI replicas).
     pub fn index_of(&self, r: NodeId) -> Option<usize> {
-        self.reads.iter().position(|&x| x == r)
+        match self.idx_of.get(r) {
+            Some(&i) if i != usize::MAX => Some(i),
+            _ => None,
+        }
     }
 
     /// Association of read `r` summed over a set of reads.

@@ -1,13 +1,11 @@
-//! Crate-wide error type.
-
-use thiserror::Error;
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — the offline
+//! build carries no `thiserror`).
 
 /// Unified error for the sparsemap crate.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Scheduling could not satisfy the resource/dependency constraints at
     /// any II up to the configured cap (paper: "Failed" rows of Table 3).
-    #[error("scheduling failed for '{block}': {reason} (II cap {ii_cap})")]
     ScheduleFailed {
         block: String,
         reason: String,
@@ -16,39 +14,71 @@ pub enum Error {
 
     /// Binding (MIS on the conflict graph) left nodes unbound and the
     /// incomplete-mapping handler could not repair it.
-    #[error("binding failed at II={ii}: {bound} of {total} nodes bound")]
     BindFailed { ii: usize, bound: usize, total: usize },
 
     /// Routing (GRF/LRF for MCIDs) infeasible at this II.
-    #[error("routing failed at II={ii}: {reason}")]
     RouteFailed { ii: usize, reason: String },
 
     /// Config file / CLI problems.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Artifact manifest / HLO loading problems.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Simulator detected an illegal mapping (resource collision, wrong
     /// value, dependency violation) — this is a *bug detector*, not a
     /// recoverable condition.
-    #[error("simulation fault at cycle {cycle}: {reason}")]
     SimFault { cycle: u64, reason: String },
 
     /// Workload construction problems (bad block features, empty kernels…).
-    #[error("workload error: {0}")]
     Workload(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    /// Errors bubbled out of the PJRT runtime (`xla` crate).
-    #[error("xla error: {0}")]
+    /// Errors bubbled out of the PJRT runtime (`xla` crate, `pjrt` feature).
     Xla(String),
 }
 
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::ScheduleFailed { block, reason, ii_cap } => {
+                write!(f, "scheduling failed for '{block}': {reason} (II cap {ii_cap})")
+            }
+            Error::BindFailed { ii, bound, total } => {
+                write!(f, "binding failed at II={ii}: {bound} of {total} nodes bound")
+            }
+            Error::RouteFailed { ii, reason } => {
+                write!(f, "routing failed at II={ii}: {reason}")
+            }
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::SimFault { cycle, reason } => {
+                write!(f, "simulation fault at cycle {cycle}: {reason}")
+            }
+            Error::Workload(msg) => write!(f, "workload error: {msg}"),
+            Error::Io(e) => write!(f, "{e}"),
+            Error::Xla(msg) => write!(f, "xla error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

@@ -17,7 +17,9 @@
 //!   kernel embedded in the L2 model.
 //!
 //! Python never runs on the request path; the binary is self-contained once
-//! `make artifacts` has produced the HLO modules.
+//! `make artifacts` has produced the HLO modules (the XLA executor is
+//! gated behind the `pjrt` cargo feature; the default offline build ships
+//! an API-compatible stub and exercises the full mapping/simulation path).
 //!
 //! ## Quick tour
 //!
@@ -28,10 +30,25 @@
 //!
 //! let cgra = StreamingCgra::paper_default(); // 4x4 PEA, LRF 8, GRF 8
 //! let block = &paper_blocks()[0].block;      // "block1" from Table 2
-//! let out = map_block(block, &cgra, &MapperOptions::sparsemap()).unwrap();
+//!
+//! // map_block explores the (II, retry) attempt lattice as a deterministic
+//! // parallel portfolio: scoped workers race attempts, the lowest-index
+//! // success wins, and the result is byte-identical to the sequential
+//! // order for every width (0 = auto, 1 = sequential).
+//! let opts = MapperOptions::sparsemap().with_parallelism(4);
+//! let out = map_block(block, &cgra, &opts).unwrap();
 //! println!("II = {}, COPs = {}, MCIDs = {}",
 //!          out.mapping.ii, out.mapping.cops(), out.mapping.mcids());
 //! ```
+//!
+//! The per-attempt hot path (schedule → route → conflict graph → SBTS
+//! bind) is allocation-conscious: each portfolio worker owns a
+//! [`bind::ScratchPool`] that recycles the conflict-graph storage, the
+//! route table and the SBTS solver state across attempts, and the SBTS
+//! inner loop itself is allocation-free (incremental hot-node tracking,
+//! reused move buffers, word-level conflict deltas). Bench trajectory
+//! lives in `BENCH_mapper.json` at the repo root (written by
+//! `cargo bench --bench mapper_micro` / `--bench serving_throughput`).
 
 pub mod arch;
 pub mod bind;

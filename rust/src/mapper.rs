@@ -8,15 +8,30 @@
 //! priorities); only when every perturbation at an II fails does the II
 //! escalate — Algorithm 1's `II ← II + 1`. An II past `MII + ii_slack` is
 //! the paper's "Failed".
+//!
+//! ## Parallel portfolio search
+//!
+//! Every `(II, retry)` attempt is independent (schedule + bind from the
+//! pristine s-DFG with a per-attempt seed), so the lattice is explored as
+//! a **deterministic parallel portfolio**: scoped worker threads claim
+//! attempt indices in order, each with its own [`ScratchPool`], and the
+//! winner is the lowest-index success — exactly the sequential order's
+//! answer, byte-identical placements included, for any worker count.
+//! Workers stop claiming once an index beyond the current winner would be
+//! next (attempts after the winner cannot matter; attempts before it must
+//! still finish, since a lower-index success would supersede).
 
 use crate::arch::StreamingCgra;
-use crate::bind::{bind, Mapping};
+use crate::bind::{bind_with, Mapping, ScratchPool};
 use crate::config::{SchedulerKind, SparsemapConfig, Techniques};
-use crate::dfg::analysis::mii;
+use crate::dfg::analysis::{mii, AssociationMatrix};
 use crate::dfg::build::build_sdfg;
+use crate::dfg::SDfg;
 use crate::error::{Error, Result};
 use crate::sched::{baseline, sparsemap, ScheduledSDfg};
 use crate::sparse::SparseBlock;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Mapper configuration (a view over [`SparsemapConfig`]).
 #[derive(Clone, Debug)]
@@ -30,6 +45,10 @@ pub struct MapperOptions {
     /// Scheduling perturbations tried per II before escalating (phase ④).
     pub sched_retries: u64,
     pub seed: u64,
+    /// Portfolio width for the `(II, retry)` attempt lattice. `0` = auto
+    /// (available hardware parallelism, capped at 8); `1` = sequential.
+    /// The result is identical for every value — only latency changes.
+    pub parallelism: usize,
 }
 
 impl MapperOptions {
@@ -42,6 +61,7 @@ impl MapperOptions {
             mis_iterations: 60_000,
             sched_retries: 8,
             seed: 42,
+            parallelism: 0,
         }
     }
 
@@ -55,11 +75,18 @@ impl MapperOptions {
             mis_iterations: 60_000,
             sched_retries: 1,
             seed: 42,
+            parallelism: 0,
         }
     }
 
     pub fn with_techniques(mut self, t: Techniques) -> Self {
         self.techniques = t;
+        self
+    }
+
+    /// Fix the portfolio width (`1` forces the sequential path).
+    pub fn with_parallelism(mut self, parallelism: usize) -> Self {
+        self.parallelism = parallelism;
         self
     }
 
@@ -71,7 +98,21 @@ impl MapperOptions {
             mis_iterations: cfg.mis_iterations,
             sched_retries: if cfg.scheduler == SchedulerKind::Baseline { 1 } else { 8 },
             seed: cfg.seed,
+            parallelism: cfg.parallelism,
         }
+    }
+
+    /// The effective portfolio width for a lattice of `lattice_len`
+    /// attempts.
+    fn width(&self, lattice_len: usize) -> usize {
+        let auto = || {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(8)
+        };
+        let w = if self.parallelism == 0 { auto() } else { self.parallelism };
+        w.clamp(1, lattice_len.max(1))
     }
 }
 
@@ -109,22 +150,57 @@ impl MapOutcome {
 
 /// Schedule one attempt with the configured scheduler.
 fn schedule_attempt(
-    g: &crate::dfg::SDfg,
+    g: &SDfg,
     cgra: &StreamingCgra,
     opts: &MapperOptions,
     ii: usize,
     retry: u64,
+    am: &AssociationMatrix,
 ) -> Result<ScheduledSDfg> {
     match opts.scheduler {
         SchedulerKind::SparseMap => {
-            sparsemap::schedule_at_perturbed(g, cgra, opts.techniques, ii, retry)
+            sparsemap::schedule_at_perturbed(g, cgra, opts.techniques, ii, retry, am)
         }
         SchedulerKind::Baseline => baseline::schedule_at(g, cgra, ii),
     }
 }
 
+/// What one `(II, retry)` attempt produced. Identical for a given index
+/// no matter which thread (or scratch) ran it.
+struct AttemptResult {
+    /// `Some((cops, mcids))` when the schedule succeeded.
+    sched: Option<(usize, usize)>,
+    /// `Some` when schedule + bind both succeeded.
+    mapping: Option<Mapping>,
+}
+
+fn run_attempt(
+    g: &SDfg,
+    cgra: &StreamingCgra,
+    opts: &MapperOptions,
+    ii: usize,
+    retry: u64,
+    am: &AssociationMatrix,
+    scratch: &mut ScratchPool,
+) -> AttemptResult {
+    let Ok(s) = schedule_attempt(g, cgra, opts, ii, retry, am) else {
+        return AttemptResult { sched: None, mapping: None };
+    };
+    let sched = Some((s.cops(), s.mcids().len()));
+    let mapping = bind_with(&s, cgra, opts.mis_iterations, opts.seed ^ retry, scratch).ok();
+    AttemptResult { sched, mapping }
+}
+
+// Retry order interleaves the packed (bit-2 clear) and spread (bit-2
+// set) scheduling variants so both I/O policies are probed early.
+const RETRY_ORDER: [u64; 8] = [0, 4, 1, 5, 2, 6, 3, 7];
+
 /// Map a sparse block onto the CGRA. Returns the first fully bound mapping
 /// (lowest II, then lowest perturbation), plus first-attempt statistics.
+///
+/// Runs the attempt lattice as a parallel portfolio by default
+/// (`opts.parallelism`); the outcome is byte-identical to the sequential
+/// order for every width.
 pub fn map_block(
     block: &SparseBlock,
     cgra: &StreamingCgra,
@@ -132,26 +208,40 @@ pub fn map_block(
 ) -> Result<MapOutcome> {
     let (g, _) = build_sdfg(block);
     let base_ii = mii(&g, cgra);
+    // The association matrix depends only on the pristine s-DFG: build it
+    // once per block, share it across the whole attempt lattice.
+    let am = AssociationMatrix::build(&g);
+
+    let retries = opts.sched_retries.clamp(1, RETRY_ORDER.len() as u64) as usize;
+    let lattice: Vec<(usize, u64)> = (base_ii..=base_ii + opts.ii_slack)
+        .flat_map(|ii| RETRY_ORDER.iter().take(retries).map(move |&r| (ii, r)))
+        .collect();
+
+    let width = opts.width(lattice.len());
+    let results = if width <= 1 {
+        run_lattice_sequential(&g, cgra, opts, &am, &lattice)
+    } else {
+        run_lattice_portfolio(&g, cgra, opts, &am, &lattice, width)
+    };
+
+    // Fold in lattice order — both execution modes fill a prefix that
+    // covers at least everything up to and including the winner.
     let mut first: Option<FirstAttempt> = None;
     let mut attempts = Vec::new();
-
-    // Retry order interleaves the packed (bit-2 clear) and spread (bit-2
-    // set) scheduling variants so both I/O policies are probed early.
-    const RETRY_ORDER: [u64; 8] = [0, 4, 1, 5, 2, 6, 3, 7];
-    for ii in base_ii..=base_ii + opts.ii_slack {
-        for &retry in RETRY_ORDER.iter().take(opts.sched_retries.max(1) as usize) {
-            attempts.push((ii, retry));
-            let Ok(s) = schedule_attempt(&g, cgra, opts, ii, retry) else { continue };
-            let bound = bind(&s, cgra, opts.mis_iterations, opts.seed ^ retry);
+    for (i, res) in results.into_iter().enumerate() {
+        let Some(res) = res else { break };
+        let (ii, retry) = lattice[i];
+        attempts.push((ii, retry));
+        if let Some((cops, mcids)) = res.sched {
             if first.is_none() {
                 first = Some(FirstAttempt {
                     ii0: ii,
-                    cops: s.cops(),
-                    mcids: s.mcids().len(),
-                    success: bound.is_ok(),
+                    cops,
+                    mcids,
+                    success: res.mapping.is_some(),
                 });
             }
-            if let Ok(mapping) = bound {
+            if let Some(mapping) = res.mapping {
                 return Ok(MapOutcome {
                     mapping,
                     first_attempt: first.unwrap(),
@@ -170,6 +260,73 @@ pub fn map_block(
         ),
         ii_cap: base_ii + opts.ii_slack,
     })
+}
+
+/// Sequential reference order: attempt 0, 1, … until the first success.
+fn run_lattice_sequential(
+    g: &SDfg,
+    cgra: &StreamingCgra,
+    opts: &MapperOptions,
+    am: &AssociationMatrix,
+    lattice: &[(usize, u64)],
+) -> Vec<Option<AttemptResult>> {
+    let mut scratch = ScratchPool::new();
+    let mut results: Vec<Option<AttemptResult>> = Vec::with_capacity(lattice.len());
+    for &(ii, retry) in lattice {
+        let res = run_attempt(g, cgra, opts, ii, retry, am, &mut scratch);
+        let won = res.mapping.is_some();
+        results.push(Some(res));
+        if won {
+            break;
+        }
+    }
+    results.resize_with(lattice.len(), || None);
+    results
+}
+
+/// Portfolio order: `width` scoped workers claim indices in sequence; the
+/// lowest successful index wins, later claims are cancelled.
+fn run_lattice_portfolio(
+    g: &SDfg,
+    cgra: &StreamingCgra,
+    opts: &MapperOptions,
+    am: &AssociationMatrix,
+    lattice: &[(usize, u64)],
+    width: usize,
+) -> Vec<Option<AttemptResult>> {
+    let next = AtomicUsize::new(0);
+    let best = AtomicUsize::new(usize::MAX);
+    let slots: Vec<Mutex<Option<AttemptResult>>> =
+        lattice.iter().map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..width {
+            scope.spawn(|| {
+                let mut scratch = ScratchPool::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    // Indices are claimed in order, so everything at or
+                    // below the final winner is guaranteed to be claimed
+                    // (and completed) before the scope joins; anything
+                    // past the current winner can never win.
+                    if i >= lattice.len() || i > best.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let (ii, retry) = lattice[i];
+                    let res = run_attempt(g, cgra, opts, ii, retry, am, &mut scratch);
+                    if res.mapping.is_some() {
+                        best.fetch_min(i, Ordering::AcqRel);
+                    }
+                    *slots[i].lock().expect("portfolio slot") = Some(res);
+                }
+            });
+        }
+    });
+
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().expect("portfolio slot"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -222,5 +379,33 @@ mod tests {
         // The paper: baselines fail 2 of 7 blocks and pay 40 COPs vs 3.
         assert!(base_fail >= 1 || base_cops > 4 * sm_cops.max(1),
                 "baseline should visibly underperform: fails={base_fail} cops={base_cops} vs {sm_cops}");
+    }
+
+    #[test]
+    fn portfolio_matches_sequential_on_block1() {
+        // Smoke-level determinism check (the full 7-block × width sweep
+        // lives in tests/parallel_determinism.rs).
+        let cgra = StreamingCgra::paper_default();
+        let nb = &paper_blocks()[0];
+        let seq = map_block(&nb.block, &cgra, &MapperOptions::sparsemap().with_parallelism(1))
+            .unwrap();
+        let par = map_block(&nb.block, &cgra, &MapperOptions::sparsemap().with_parallelism(3))
+            .unwrap();
+        assert_eq!(seq.mapping.ii, par.mapping.ii);
+        assert_eq!(seq.mapping.placements, par.mapping.placements);
+        assert_eq!(seq.attempts, par.attempts);
+    }
+
+    #[test]
+    fn width_resolution() {
+        let mut o = MapperOptions::sparsemap();
+        o.parallelism = 1;
+        assert_eq!(o.width(32), 1);
+        o.parallelism = 4;
+        assert_eq!(o.width(32), 4);
+        assert_eq!(o.width(2), 2, "width never exceeds the lattice");
+        o.parallelism = 0;
+        assert!(o.width(32) >= 1);
+        assert!(o.width(32) <= 8);
     }
 }

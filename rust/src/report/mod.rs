@@ -64,7 +64,7 @@ fn mapping_row(nb: &NamedBlock, cgra: &StreamingCgra, opts: &MapperOptions) -> M
             // Recover the first-attempt statistics from the error message
             // is fragile; recompute them directly instead.
             let first = first_attempt_stats(nb, cgra, opts);
-            log::debug!("{}: mapping failed: {e}", nb.label);
+            crate::log_debug!("{}: mapping failed: {e}", nb.label);
             MappingRow {
                 label: nb.label,
                 mii,

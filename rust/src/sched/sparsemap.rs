@@ -32,25 +32,31 @@ pub fn schedule_at(
     tech: Techniques,
     ii: usize,
 ) -> Result<ScheduledSDfg> {
-    schedule_at_perturbed(g0, cgra, tech, ii, 0)
+    let am = AssociationMatrix::build(g0);
+    schedule_at_perturbed(g0, cgra, tech, ii, 0, &am)
 }
 
 /// [`schedule_at`] with a perturbation index: retry `k` rotates the AIBA
 /// cycle-opener among the top candidates, giving the incomplete-mapping
 /// handler (mapper phase ④) distinct schedules to rebind at the same II.
+///
+/// `am` is the association matrix of the *pristine* `g0` — it depends only
+/// on the block structure, so the mapper builds it once per block and
+/// shares it across the whole `(II, retry)` attempt lattice instead of
+/// recomputing it per attempt.
 pub fn schedule_at_perturbed(
     g0: &SDfg,
     cgra: &StreamingCgra,
     tech: Techniques,
     ii: usize,
     perturb: u64,
+    am: &AssociationMatrix,
 ) -> Result<ScheduledSDfg> {
     let mut g = g0.clone();
-    let am = AssociationMatrix::build(&g);
     let mut t: Vec<Option<usize>> = vec![None; g.len()];
     let mut tables = ResourceTables::new(cgra, ii);
 
-    schedule_reads_and_muls(&mut g, cgra, tech, ii, &am, &mut t, &mut tables, perturb)?;
+    schedule_reads_and_muls(&mut g, cgra, tech, ii, am, &mut t, &mut tables, perturb)?;
 
     // Adder trees: RID-AT or fixed ASAP (line 30).
     let kernels: Vec<usize> = g
@@ -376,11 +382,12 @@ mod tests {
         // opener); none may need more than MII+1.
         for nb in paper_blocks() {
             let (g, _) = build_sdfg(&nb.block);
+            let am = AssociationMatrix::build(&g);
             let base = mii(&g, &cgra());
             let best = (base..=base + 1)
                 .find_map(|ii| {
                     (0..8).find_map(|p| {
-                        schedule_at_perturbed(&g, &cgra(), Techniques::all(), ii, p).ok()
+                        schedule_at_perturbed(&g, &cgra(), Techniques::all(), ii, p, &am).ok()
                     })
                 })
                 .unwrap_or_else(|| panic!("{}: unschedulable near MII", nb.label));

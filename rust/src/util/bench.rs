@@ -38,6 +38,21 @@ impl BenchResult {
         self.summary.mean()
     }
 
+    /// One flat JSON object per result — the exact line format
+    /// [`write_json_merged`] parses back, so keep the two in sync.
+    pub fn json_line(&self) -> String {
+        format!(
+            "{{\"name\": {:?}, \"ns_per_iter\": {:.1}, \"stddev_ns\": {:.1}, \
+             \"p95_ns\": {:.1}, \"samples\": {}, \"iters_per_sample\": {}}}",
+            self.name,
+            self.summary.mean(),
+            self.summary.stddev(),
+            self.summary.percentile(95.0),
+            self.summary.count(),
+            self.iters_per_sample,
+        )
+    }
+
     pub fn report_line(&self) -> String {
         format!(
             "{:<44} {:>12} / iter  (σ {:>10}, p95 {:>10}, {} iters/sample)",
@@ -102,6 +117,49 @@ impl Bencher {
         println!("{}", r.report_line());
         r
     }
+
+    /// Merge this run's results into the machine-readable trajectory file
+    /// (see [`write_json_merged`]).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        write_json_merged(path, &self.results)
+    }
+}
+
+/// Path of `file` at the repository root (one above the crate root), so
+/// benches and tests agree on where `BENCH_mapper.json` lives regardless
+/// of the working directory cargo gave them.
+pub fn repo_root_path(file: &str) -> String {
+    format!("{}/../{}", env!("CARGO_MANIFEST_DIR"), file)
+}
+
+/// Merge bench results into a JSON array file, one object per line
+/// (`BenchResult::json_line` format). Entries whose `name` matches a new
+/// result are replaced in place; everything else is preserved, so several
+/// bench binaries (mapper_micro, serving_throughput) accumulate into one
+/// `BENCH_mapper.json` that tracks the perf trajectory across PRs. The
+/// line-oriented format is parsed back with plain string handling — this
+/// file is only ever written by this function, never by hand.
+pub fn write_json_merged(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    let mut entries: Vec<(String, String)> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        for line in text.lines() {
+            let t = line.trim().trim_end_matches(',');
+            if let Some(rest) = t.strip_prefix("{\"name\": \"") {
+                if let Some(end) = rest.find('"') {
+                    entries.push((rest[..end].to_string(), t.to_string()));
+                }
+            }
+        }
+    }
+    for r in results {
+        let line = r.json_line();
+        match entries.iter_mut().find(|(n, _)| *n == r.name) {
+            Some(e) => e.1 = line,
+            None => entries.push((r.name.clone(), line)),
+        }
+    }
+    let body: Vec<String> = entries.iter().map(|(_, l)| format!("  {l}")).collect();
+    std::fs::write(path, format!("[\n{}\n]\n", body.join(",\n")))
 }
 
 #[cfg(test)]
@@ -123,5 +181,35 @@ mod tests {
         });
         assert!(r.mean_ns() > 0.0);
         assert_eq!(r.summary.count(), 5);
+    }
+
+    fn result_named(name: &str, ns: f64) -> BenchResult {
+        let mut summary = crate::util::stats::Summary::new();
+        summary.add(ns);
+        BenchResult { name: name.into(), summary, iters_per_sample: 1 }
+    }
+
+    #[test]
+    fn json_merge_replaces_and_preserves() {
+        let path = std::env::temp_dir().join(format!(
+            "sparsemap_bench_merge_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+
+        write_json_merged(&path, &[result_named("a/x", 10.0), result_named("b/y", 20.0)])
+            .unwrap();
+        // Second writer: replaces a/x, adds c/z, must preserve b/y.
+        write_json_merged(&path, &[result_named("a/x", 30.0), result_named("c/z", 5.0)])
+            .unwrap();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("[\n") && text.ends_with("]\n"), "{text}");
+        assert!(text.contains("\"name\": \"a/x\", \"ns_per_iter\": 30.0"), "{text}");
+        assert!(text.contains("\"name\": \"b/y\", \"ns_per_iter\": 20.0"), "{text}");
+        assert!(text.contains("\"name\": \"c/z\", \"ns_per_iter\": 5.0"), "{text}");
+        assert_eq!(text.matches("\"name\"").count(), 3);
+        let _ = std::fs::remove_file(&path);
     }
 }

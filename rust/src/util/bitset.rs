@@ -16,6 +16,15 @@ impl BitSet {
         BitSet { words: vec![0; nbits.div_ceil(64)], nbits }
     }
 
+    /// Re-shape to an empty set over `nbits` elements, reusing the word
+    /// buffer's allocation (the ScratchPool reuse primitive).
+    pub fn reset(&mut self, nbits: usize) {
+        let nwords = nbits.div_ceil(64);
+        self.words.clear();
+        self.words.resize(nwords, 0);
+        self.nbits = nbits;
+    }
+
     /// Universe size.
     pub fn capacity(&self) -> usize {
         self.nbits
@@ -87,6 +96,27 @@ impl BitSet {
                 }
             })
         })
+    }
+
+    /// Iterate `self ∩ other` in ascending order without allocating — the
+    /// word-level conflict-delta primitive of the SBTS inner loop.
+    pub fn iter_intersection<'a>(&'a self, other: &'a BitSet) -> impl Iterator<Item = usize> + 'a {
+        self.words
+            .iter()
+            .zip(&other.words)
+            .enumerate()
+            .flat_map(|(wi, (a, b))| {
+                let mut bits = a & b;
+                std::iter::from_fn(move || {
+                    if bits == 0 {
+                        None
+                    } else {
+                        let b = bits.trailing_zeros() as usize;
+                        bits &= bits - 1;
+                        Some(wi * 64 + b)
+                    }
+                })
+            })
     }
 
     /// Elements of `self ∩ other` (used to list conflicting neighbours).
@@ -173,7 +203,25 @@ mod tests {
             let mut want: Vec<usize> = ha.intersection(&hb).copied().collect();
             want.sort_unstable();
             assert_eq!(inter, want);
+            let lazy: Vec<usize> = a.iter_intersection(&b).collect();
+            assert_eq!(lazy, inter, "iter_intersection must match intersection");
         }
+    }
+
+    #[test]
+    fn reset_reuses_and_clears() {
+        let mut s = BitSet::new(100);
+        s.insert(5);
+        s.insert(99);
+        s.reset(300);
+        assert_eq!(s.capacity(), 300);
+        assert!(s.is_empty());
+        s.insert(299);
+        s.reset(10);
+        assert_eq!(s.capacity(), 10);
+        assert!(s.is_empty());
+        s.insert(9);
+        assert_eq!(s.len(), 1);
     }
 
     #[test]

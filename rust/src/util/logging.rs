@@ -1,44 +1,62 @@
-//! Minimal `log` backend: level from `SPARSEMAP_LOG` (error..trace),
-//! timestamped stderr output. `env_logger` is unavailable offline.
+//! Minimal leveled logger: level from `SPARSEMAP_LOG` (error..trace),
+//! timestamped stderr output. Fully in-crate — the offline build carries
+//! neither `log` nor `env_logger`; call sites use the `log_debug!` /
+//! `log_info!` / `log_warn!` / `log_error!` crate macros.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
-use log::{Level, LevelFilter, Log, Metadata, Record};
-use once_cell::sync::Lazy;
+/// Log severity, ordered so that `level <= max_level` means "emit".
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
 
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 static INSTALLED: AtomicBool = AtomicBool::new(false);
 
-struct StderrLogger;
+fn start() -> &'static Instant {
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now)
+}
 
-impl Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
+/// The current maximum emitted level.
+pub fn max_level() -> u8 {
+    MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn set_max_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Whether a record at `level` would be emitted.
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= max_level()
+}
+
+/// Emit one record (used via the `log_*!` macros).
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
     }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let t = START.elapsed();
-        let lvl = match record.level() {
-            Level::Error => "ERROR",
-            Level::Warn => "WARN ",
-            Level::Info => "INFO ",
-            Level::Debug => "DEBUG",
-            Level::Trace => "TRACE",
-        };
-        eprintln!(
-            "[{:>8.3}s {} {}] {}",
-            t.as_secs_f64(),
-            lvl,
-            record.target(),
-            record.args()
-        );
-    }
-
-    fn flush(&self) {}
+    let t = start().elapsed();
+    let lvl = match level {
+        Level::Off => return,
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{:>8.3}s {} {}] {}", t.as_secs_f64(), lvl, target, args);
 }
 
 /// Install the logger (idempotent). Level comes from `SPARSEMAP_LOG`
@@ -47,24 +65,66 @@ pub fn init() {
     if INSTALLED.swap(true, Ordering::SeqCst) {
         return;
     }
+    let _ = start(); // anchor the timestamp origin
     let level = match std::env::var("SPARSEMAP_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        Ok("off") => LevelFilter::Off,
-        _ => LevelFilter::Info,
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        Ok("off") => Level::Off,
+        _ => Level::Info,
     };
-    let _ = log::set_boxed_logger(Box::new(StderrLogger));
-    log::set_max_level(level);
+    set_max_level(level);
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::info!("logging works");
+        init();
+        init();
+        crate::log_info!("logging works");
+    }
+
+    #[test]
+    fn levels_filter() {
+        init();
+        set_max_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_max_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
     }
 }

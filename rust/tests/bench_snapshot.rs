@@ -1,0 +1,41 @@
+//! Smoke-level perf snapshot: exercises the bench harness → JSON merge
+//! pipeline end-to-end on a tiny budget (against a temp file, so `cargo
+//! test` never dirties the worktree). The tracked `BENCH_mapper.json` at
+//! the repo root is produced by `cargo bench --bench mapper_micro` /
+//! `--bench serving_throughput` in release mode.
+
+use sparsemap::arch::StreamingCgra;
+use sparsemap::mapper::{map_block, MapperOptions};
+use sparsemap::sparse::gen::paper_blocks;
+use sparsemap::util::bench::{black_box, BenchConfig, Bencher};
+
+#[test]
+fn perf_snapshot_exercises_json_pipeline() {
+    let cgra = StreamingCgra::paper_default();
+    let nb = &paper_blocks()[0]; // block1: the cheap representative
+    let mut b = Bencher::with_config(BenchConfig {
+        warmup_ns: 1_000_000,
+        measure_ns: 10_000_000,
+        samples: 2,
+    });
+    let seq = MapperOptions::sparsemap().with_parallelism(1);
+    b.bench("smoke/block1/map_block_seq", || {
+        black_box(map_block(&nb.block, &cgra, &seq).ok());
+    });
+    let par = MapperOptions::sparsemap().with_parallelism(2);
+    b.bench("smoke/block1/map_block_par2", || {
+        black_box(map_block(&nb.block, &cgra, &par).ok());
+    });
+
+    let path = std::env::temp_dir().join(format!(
+        "sparsemap_bench_snapshot_{}.json",
+        std::process::id()
+    ));
+    let path = path.to_str().unwrap().to_string();
+    let _ = std::fs::remove_file(&path);
+    b.write_json(&path).expect("write snapshot json");
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("smoke/block1/map_block_seq"), "{text}");
+    assert!(text.contains("smoke/block1/map_block_par2"), "{text}");
+    let _ = std::fs::remove_file(&path);
+}

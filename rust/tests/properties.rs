@@ -116,6 +116,83 @@ fn prop_mcid_count_invariant_under_ii() {
 }
 
 #[test]
+fn prop_scratch_pool_reuse_is_behavior_neutral() {
+    // One ScratchPool dragged across random blocks and IIs must produce
+    // exactly the mappings fresh pools produce — reuse recycles
+    // allocations, never state.
+    let cgra = StreamingCgra::paper_default();
+    check("scratch pool reuse", 25, |rng| {
+        use sparsemap::bind::{bind, bind_with, ScratchPool};
+        let mut pool = ScratchPool::new();
+        for _ in 0..3 {
+            let b = arb_block(rng);
+            let (g, _) = build_sdfg(&b);
+            let base = mii(&g, &cgra);
+            let Ok(s) = schedule_at(&g, &cgra, Techniques::all(), base + 1) else { continue };
+            let seed = rng.next_u64();
+            let reused = bind_with(&s, &cgra, 8_000, seed, &mut pool);
+            let fresh = bind(&s, &cgra, 8_000, seed);
+            match (reused, fresh) {
+                (Ok(a), Ok(b2)) => {
+                    assert_eq!(a.placements, b2.placements, "{}", b.name);
+                    assert_eq!(a.plan_routes, b2.plan_routes);
+                    assert_eq!(a.mis_iterations, b2.mis_iterations);
+                }
+                (Err(_), Err(_)) => {}
+                (a, b2) => panic!(
+                    "{}: reuse changed outcome: reused ok={} fresh ok={}",
+                    b.name,
+                    a.is_ok(),
+                    b2.is_ok()
+                ),
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_incremental_hot_nodes_match_naive() {
+    // Random walk over assignments: after every detach/reassign/attach the
+    // incrementally tracked hot-node set must equal the from-scratch
+    // recomputation, and the incremental cost must equal a fresh reset.
+    use sparsemap::bind::{conflict, route, BusCostModel, Route, SecondaryCost};
+    let cgra = StreamingCgra::paper_default();
+    check("incremental hot nodes vs naive", 30, |rng| {
+        let b = arb_block(rng);
+        let (g, _) = build_sdfg(&b);
+        let base = mii(&g, &cgra);
+        let Ok(s) = schedule_at(&g, &cgra, Techniques::all(), base + 1) else { return };
+        let Ok(plan) = route::preallocate(&s, &cgra) else { return };
+        let cg = conflict::build(&s, &cgra, &plan);
+        let routes: Vec<Option<Route>> =
+            (0..s.g.edges().len()).map(|i| plan.route(i)).collect();
+
+        let n_nodes = cg.of_node.len();
+        let mut assign: Vec<usize> =
+            (0..n_nodes).map(|v| cg.of_node[v][rng.index(cg.of_node[v].len())]).collect();
+        let mut cost = BusCostModel::new(&s, &cg, &routes);
+        cost.reset(&assign);
+
+        let mut buf = Vec::new();
+        for _ in 0..40 {
+            let v = rng.index(n_nodes);
+            cost.detach(v, &assign);
+            assign[v] = cg.of_node[v][rng.index(cg.of_node[v].len())];
+            cost.attach(v, &assign);
+
+            buf.clear();
+            cost.hot_nodes_into(&assign, &mut buf);
+            let naive = cost.hot_nodes_naive(&assign);
+            assert_eq!(buf, naive, "{}: hot-node sets diverged", b.name);
+
+            let mut fresh = BusCostModel::new(&s, &cg, &routes);
+            fresh.reset(&assign);
+            assert_eq!(cost.total(), fresh.total(), "{}: cost drifted", b.name);
+        }
+    });
+}
+
+#[test]
 fn prop_simulator_catches_time_corruption() {
     // Corrupting a node's schedule must break verify() or the simulation.
     let cgra = StreamingCgra::paper_default();

@@ -9,8 +9,11 @@ use sparsemap::sim::simulate;
 use sparsemap::sparse::gen::paper_blocks;
 use sparsemap::util::rng::Pcg64;
 
+/// The executor needs both `make artifacts` *and* the `pjrt` feature (the
+/// default offline build ships a stub runtime — see `sparsemap::runtime`).
 fn artifacts_available() -> bool {
-    std::path::Path::new(&default_artifacts_dir()).join("manifest.tsv").exists()
+    cfg!(feature = "pjrt")
+        && std::path::Path::new(&default_artifacts_dir()).join("manifest.tsv").exists()
 }
 
 #[test]
