@@ -8,7 +8,8 @@
 //! ```
 
 use sparsemap::arch::StreamingCgra;
-use sparsemap::bind::{self, conflict, mis, route, BusCostModel};
+use sparsemap::bind::oracle;
+use sparsemap::bind::{self, conflict, mis, route, BusCostModel, SecondaryCost};
 use sparsemap::config::Techniques;
 use sparsemap::dfg::analysis::mii;
 use sparsemap::dfg::build::build_sdfg;
@@ -55,25 +56,45 @@ fn main() {
         b.bench(&format!("{label}/route_preallocate"), || {
             black_box(route::preallocate(&s, &cgra).ok());
         });
+        // Bucketed build vs the retired all-pairs oracle: the former must
+        // scale with bucket sizes, the latter is O(nc²) in candidates —
+        // this pair of rows is the trajectory evidence for the rewrite.
         b.bench(&format!("{label}/conflict_graph"), || {
             black_box(conflict::build(&s, &cgra, &plan));
         });
+        b.bench(&format!("{label}/conflict_graph_naive"), || {
+            black_box(oracle::build_naive(&s, &cgra, &plan));
+        });
         // The reuse path the mapper actually runs: same graph, recycled
-        // storage.
+        // storage (graph + candidate buckets).
         let mut cg_scratch = conflict::ConflictGraph::empty();
+        let mut bucket_scratch = conflict::BucketScratch::new();
         b.bench(&format!("{label}/conflict_graph_reused"), || {
-            conflict::build_into(&s, &cgra, &plan, &mut cg_scratch);
+            conflict::build_into(&s, &cgra, &plan, &mut cg_scratch, &mut bucket_scratch);
             black_box(cg_scratch.num_candidates());
         });
         let cg = conflict::build(&s, &cgra, &plan);
         let routes: Vec<_> = (0..s.g.edges().len()).map(|i| plan.route(i)).collect();
+        // Secondary-objective cost model: dense slot-major array vs the
+        // retired HashMap model, exercised through a full claim rebuild.
+        let assign: Vec<usize> = cg.of_node.iter().map(|c| c[0]).collect();
+        let mut dense_cost = BusCostModel::new(&s, &cg, &routes, &cgra);
+        b.bench(&format!("{label}/bus_cost_reset_dense"), || {
+            dense_cost.reset(&assign);
+            black_box(dense_cost.total());
+        });
+        let mut hash_cost = oracle::HashBusCostModel::new(&s, &cg, &routes);
+        b.bench(&format!("{label}/bus_cost_reset_hash"), || {
+            hash_cost.reset(&assign);
+            black_box(hash_cost.total());
+        });
         b.bench(&format!("{label}/sbts_solve"), || {
-            let mut cost = BusCostModel::new(&s, &cg, &routes);
+            let mut cost = BusCostModel::new(&s, &cg, &routes, &cgra);
             black_box(mis::solve_with(&cg, 30_000, 42, &mut cost));
         });
         let mut solver_scratch = mis::SolverScratch::new();
         b.bench(&format!("{label}/sbts_solve_scratch"), || {
-            let mut cost = BusCostModel::new(&s, &cg, &routes);
+            let mut cost = BusCostModel::new(&s, &cg, &routes, &cgra);
             black_box(mis::solve_with_scratch(&cg, 30_000, 42, &mut cost, &mut solver_scratch));
         });
         // Full bind stage (route + conflict + SBTS + verify) against one

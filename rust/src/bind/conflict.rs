@@ -1,4 +1,4 @@
-//! Conflict-graph construction (paper §4.2).
+//! Conflict-graph construction (paper §4.2), bucketed.
 //!
 //! Vertices (`V_CG`):
 //! * `(r^m, ibus_i^m)` — input reading `r` on input bus `i`;
@@ -13,8 +13,23 @@
 //!
 //! Edges are the hard resource conflicts: R1 (I/O bus exclusiveness),
 //! R2(1) (readers sit in their bus's column / writers' producers in their
-//! bus's row), PE exclusiveness per modulo slot, and LRF pinning of
-//! same-PE MCID consumers.
+//! bus's row), PE exclusiveness per modulo slot, and the per-node pick-one
+//! cliques.
+//!
+//! ## Bucketed build
+//!
+//! Every conflict rule is local to either one s-DFG node (cliques), one
+//! dependency edge (R2(1)), or one `(modulo slot, physical resource)`
+//! bucket (R1 / PE exclusiveness): two candidates on *different* buses,
+//! different PEs or different slots can never conflict through R1/PE
+//! rules. [`build_into`] therefore groups candidates into dense slot-major
+//! buckets — `(slot, ibus)`, `(slot, obus)`, `(slot, pe)` — and emits
+//! edges only among bucket-local pairs plus the per-edge R2(1) pairs,
+//! replacing the naive all-pairs `O(nc²)` candidate loop (kept verbatim as
+//! [`crate::bind::oracle::build_naive`], the differential-test oracle in
+//! `tests/conflict_equivalence.rs`). Bucket storage lives in a reusable
+//! [`BucketScratch`] carried by [`crate::bind::ScratchPool`], so portfolio
+//! attempts recycle it along with the graph storage itself.
 
 use crate::arch::{PeId, StreamingCgra};
 use crate::bind::route::RoutePlan;
@@ -70,105 +85,181 @@ impl ConflictGraph {
     }
 }
 
+/// Reusable slot-major candidate buckets for [`build_into`] — one `Vec`
+/// per `(modulo slot, input bus)`, `(slot, output bus)` and `(slot, PE)`.
+/// Carried by [`crate::bind::ScratchPool`] so the mapper's retry lattice
+/// recycles the bucket allocations together with the graph storage.
+pub struct BucketScratch {
+    /// `slot * m + ibus` → read candidates.
+    read: Vec<Vec<usize>>,
+    /// `slot * n + obus` → write candidates.
+    write: Vec<Vec<usize>>,
+    /// `(slot * n + row) * m + col` → op candidates.
+    op: Vec<Vec<usize>>,
+}
+
+impl BucketScratch {
+    pub fn new() -> Self {
+        BucketScratch { read: Vec::new(), write: Vec::new(), op: Vec::new() }
+    }
+
+    /// Size the bucket tables for `(ii, cgra)` and empty them, keeping the
+    /// inner allocations of a previous build alive.
+    fn reset(&mut self, ii: usize, cgra: &StreamingCgra) {
+        self.read.resize_with(ii * cgra.m, Vec::new);
+        self.write.resize_with(ii * cgra.n, Vec::new);
+        self.op.resize_with(ii * cgra.n * cgra.m, Vec::new);
+        for b in self.read.iter_mut().chain(&mut self.write).chain(&mut self.op) {
+            b.clear();
+        }
+    }
+}
+
+impl Default for BucketScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Build the conflict graph for a scheduled s-DFG + route plan.
 pub fn build(s: &ScheduledSDfg, cgra: &StreamingCgra, plan: &RoutePlan) -> ConflictGraph {
     let mut cg = ConflictGraph::empty();
-    build_into(s, cgra, plan, &mut cg);
+    build_into(s, cgra, plan, &mut cg, &mut BucketScratch::new());
     cg
 }
 
-/// [`build`] into reusable storage: every `Vec` and adjacency `BitSet` of a
-/// previous build is recycled, so the per-attempt cost of the mapper's
-/// retry lattice is the fill, not the allocation.
-pub fn build_into(s: &ScheduledSDfg, cgra: &StreamingCgra, _plan: &RoutePlan, cg: &mut ConflictGraph) {
+#[inline]
+fn link(adj: &mut [BitSet], a: usize, b: usize) {
+    adj[a].insert(b);
+    adj[b].insert(a);
+}
+
+/// [`build`] into reusable storage: every `Vec`, adjacency `BitSet` and
+/// candidate bucket of a previous build is recycled, so the per-attempt
+/// cost of the mapper's retry lattice is the fill, not the allocation.
+/// Produces a graph byte-identical to the naive all-pairs oracle
+/// ([`crate::bind::oracle::build_naive`]).
+pub fn build_into(
+    s: &ScheduledSDfg,
+    cgra: &StreamingCgra,
+    _plan: &RoutePlan,
+    cg: &mut ConflictGraph,
+    bk: &mut BucketScratch,
+) {
     let g = &s.g;
     let n_nodes = g.len();
 
-    // ---- candidates -------------------------------------------------------
+    // ---- candidates (bucketed as they are enumerated) ---------------------
     cg.candidates.clear();
     cg.of_node.resize_with(n_nodes, Vec::new);
     for v in cg.of_node.iter_mut() {
         v.clear();
     }
+    bk.reset(s.ii, cgra);
     let (candidates, of_node) = (&mut cg.candidates, &mut cg.of_node);
     for v in g.nodes() {
+        let slot = s.m(v);
         match g.kind(v) {
             k if k.is_read() => {
                 for ibus in 0..cgra.m {
-                    of_node[v].push(candidates.len());
+                    let idx = candidates.len();
+                    of_node[v].push(idx);
                     candidates.push(Candidate::Read { node: v, ibus });
+                    bk.read[slot * cgra.m + ibus].push(idx);
                 }
             }
             k if k.is_write() => {
                 for obus in 0..cgra.n {
-                    of_node[v].push(candidates.len());
+                    let idx = candidates.len();
+                    of_node[v].push(idx);
                     candidates.push(Candidate::Write { node: v, obus });
+                    bk.write[slot * cgra.n + obus].push(idx);
                 }
             }
             _ => {
                 for pe in cgra.pes() {
-                    of_node[v].push(candidates.len());
+                    let idx = candidates.len();
+                    of_node[v].push(idx);
                     candidates.push(Candidate::Op { node: v, pe });
+                    bk.op[(slot * cgra.n + pe.row) * cgra.m + pe.col].push(idx);
                 }
             }
         }
     }
 
     // ---- edges ------------------------------------------------------------
-    let nc = candidates.len();
+    let nc = cg.candidates.len();
     for b in cg.adj.iter_mut() {
         b.reset(nc);
     }
     cg.adj.resize_with(nc, || BitSet::new(nc));
-    let (candidates, adj) = (&cg.candidates, &mut cg.adj);
+    let (candidates, of_node, adj) = (&cg.candidates, &cg.of_node, &mut cg.adj);
 
-    let input_src = |op: NodeId| -> Option<NodeId> {
-        g.in_edges(op)
+    // Pick-one cliques: a node takes exactly one of its candidates.
+    for v in g.nodes() {
+        let c = &of_node[v];
+        for (i, &ca) in c.iter().enumerate() {
+            for &cb in c.iter().skip(i + 1) {
+                link(adj, ca, cb);
+            }
+        }
+    }
+
+    // R1 / PE exclusiveness: same physical resource, same modulo slot —
+    // exactly the bucket-local pairs (one candidate per node per bucket,
+    // so every pair is a genuine cross-node conflict).
+    for bucket in bk.read.iter().chain(&bk.write).chain(&bk.op) {
+        for (i, &ca) in bucket.iter().enumerate() {
+            for &cb in bucket.iter().skip(i + 1) {
+                link(adj, ca, cb);
+            }
+        }
+    }
+
+    // R2(1), input side: the consumers of a reading sit in its bus column.
+    for v in g.nodes() {
+        let k = g.kind(v);
+        if k.is_read() || k.is_write() {
+            continue;
+        }
+        let Some(r) = g
+            .in_edges(v)
             .find(|(_, e)| e.kind == EdgeKind::Input)
             .map(|(_, e)| e.src)
-    };
-    let output_producer = |w: NodeId| -> NodeId {
-        g.predecessors(w).next().expect("write has a producer")
-    };
-
-    for a in 0..nc {
-        for b in (a + 1)..nc {
-            let conflict = {
-                use Candidate::*;
-                let (ca, cb) = (&candidates[a], &candidates[b]);
-                if ca.node() == cb.node() {
-                    true // pick-one clique
-                } else {
-                    let slot = |v: NodeId| s.m(v);
-                    match (*ca, *cb) {
-                        // R1: I/O bus exclusiveness.
-                        (Read { node: r1, ibus: i1 }, Read { node: r2, ibus: i2 }) => {
-                            i1 == i2 && slot(r1) == slot(r2)
-                        }
-                        (Write { node: w1, obus: o1 }, Write { node: w2, obus: o2 }) => {
-                            o1 == o2 && slot(w1) == slot(w2)
-                        }
-                        (Read { .. }, Write { .. }) | (Write { .. }, Read { .. }) => false,
-                        // R2(1): consumers of a reading sit in its column.
-                        (Read { node: r, ibus }, Op { node: op, pe })
-                        | (Op { node: op, pe }, Read { node: r, ibus }) => {
-                            input_src(op) == Some(r) && pe.col != ibus
-                        }
-                        // R2(1): the producer of a writing sits in its row.
-                        (Write { node: w, obus }, Op { node: op, pe })
-                        | (Op { node: op, pe }, Write { node: w, obus }) => {
-                            output_producer(w) == op && pe.row != obus
-                        }
-                        (Op { node: v1, pe: p1 }, Op { node: v2, pe: p2 }) => {
-                            // One PE, one op per modulo slot.
-                            p1 == p2 && slot(v1) == slot(v2)
-                        }
-                    }
+        else {
+            continue;
+        };
+        if !g.kind(r).is_read() {
+            continue; // non-read Input source never yields Read candidates
+        }
+        for &ci in &of_node[r] {
+            let Candidate::Read { ibus, .. } = candidates[ci] else { unreachable!() };
+            for &cj in &of_node[v] {
+                let Candidate::Op { pe, .. } = candidates[cj] else { unreachable!() };
+                if pe.col != ibus {
+                    link(adj, ci, cj);
                 }
-            };
-            if conflict {
-                adj[a].insert(b);
-                adj[b].insert(a);
+            }
+        }
+    }
+
+    // R2(1), output side: the producer of a writing sits in its bus row.
+    for w in g.nodes() {
+        if !g.kind(w).is_write() {
+            continue;
+        }
+        let Some(p) = g.predecessors(w).next() else { continue };
+        let pk = g.kind(p);
+        if pk.is_read() || pk.is_write() {
+            continue;
+        }
+        for &ci in &of_node[w] {
+            let Candidate::Write { obus, .. } = candidates[ci] else { unreachable!() };
+            for &cj in &of_node[p] {
+                let Candidate::Op { pe, .. } = candidates[cj] else { unreachable!() };
+                if pe.row != obus {
+                    link(adj, ci, cj);
+                }
             }
         }
     }
@@ -179,6 +270,7 @@ pub fn build_into(s: &ScheduledSDfg, cgra: &StreamingCgra, _plan: &RoutePlan, cg
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bind::oracle::build_naive;
     use crate::bind::route::preallocate;
     use crate::config::Techniques;
     use crate::dfg::analysis::mii;
@@ -199,16 +291,18 @@ mod tests {
 
     #[test]
     fn build_into_reuse_matches_fresh() {
-        // Growing and shrinking through the same scratch graph must give
-        // byte-identical results to a fresh build every time.
+        // Growing and shrinking through the same scratch graph (and bucket
+        // scratch) must give byte-identical results to a fresh build every
+        // time.
         let cgra = StreamingCgra::paper_default();
         let mut scratch = ConflictGraph::empty();
+        let mut buckets = BucketScratch::new();
         for idx in [0usize, 4, 2] {
             let nb = &paper_blocks()[idx];
             let (g, _) = build_sdfg(&nb.block);
             let s = schedule_at(&g, &cgra, Techniques::all(), mii(&g, &cgra) + 1).unwrap();
             let plan = preallocate(&s, &cgra).unwrap();
-            build_into(&s, &cgra, &plan, &mut scratch);
+            build_into(&s, &cgra, &plan, &mut scratch, &mut buckets);
             let fresh = build(&s, &cgra, &plan);
             assert_eq!(scratch.candidates, fresh.candidates, "{}", nb.label);
             assert_eq!(scratch.of_node, fresh.of_node);
@@ -216,6 +310,27 @@ mod tests {
             assert_eq!(scratch.adj.len(), fresh.adj.len());
             for (a, b) in scratch.adj.iter().zip(&fresh.adj) {
                 assert_eq!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn bucketed_matches_naive_oracle_smoke() {
+        // Full differential coverage (random schedules, varying II) lives
+        // in tests/conflict_equivalence.rs; this is the in-module smoke.
+        let cgra = StreamingCgra::paper_default();
+        for idx in [0usize, 3, 6] {
+            let nb = &paper_blocks()[idx];
+            let (g, _) = build_sdfg(&nb.block);
+            let s = schedule_at(&g, &cgra, Techniques::all(), mii(&g, &cgra) + 1).unwrap();
+            let plan = preallocate(&s, &cgra).unwrap();
+            let fast = build(&s, &cgra, &plan);
+            let slow = build_naive(&s, &cgra, &plan);
+            assert_eq!(fast.candidates, slow.candidates, "{}", nb.label);
+            assert_eq!(fast.of_node, slow.of_node);
+            assert_eq!(fast.num_nodes, slow.num_nodes);
+            for (i, (a, b)) in fast.adj.iter().zip(&slow.adj).enumerate() {
+                assert_eq!(a, b, "{}: adjacency of candidate {i}", nb.label);
             }
         }
     }

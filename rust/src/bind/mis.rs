@@ -9,8 +9,13 @@
 //! view of SBTS's (1, k)-swap neighborhood, where re-assigning a node
 //! inserts one vertex and implicitly evicts every conflicting sibling
 //! choice. The secondary cost hook carries the derived-bus-collision count
-//! (see `crate::bind::BusCostModel`), so routing quality is optimized in
-//! the same search instead of a post-hoc repair.
+//! (see `crate::bind::BusCostModel` — a dense slot-major bus array, so no
+//! hashing happens inside the solve), so routing quality is optimized in
+//! the same search instead of a post-hoc repair. The solver trajectory is
+//! a pure function of `(cg, seed, cost)`; swapping a [`SecondaryCost`]
+//! implementation for a behaviorally identical one (e.g. the `HashMap`
+//! oracle in `crate::bind::oracle`) reproduces it move for move — the
+//! property the differential suite leans on.
 //!
 //! The inner loop is allocation-free: all solver state lives in a reusable
 //! [`SolverScratch`], move candidates fill a recycled buffer, the

@@ -10,12 +10,18 @@
 //! escalates II (see `crate::mapper`).
 //!
 //! The attempt path is allocation-conscious: [`ScratchPool`] carries the
-//! conflict-graph storage, the route table and the SBTS solver state
-//! across attempts, so the mapper's `(II, retry)` lattice reuses one
-//! arena per worker instead of rebuilding every buffer per attempt.
+//! conflict-graph storage (including the slot-major candidate buckets of
+//! the bucketed build), the route table and the SBTS solver state across
+//! attempts, so the mapper's `(II, retry)` lattice reuses one arena per
+//! worker instead of rebuilding every buffer per attempt. The secondary
+//! objective itself is hash-free: [`BusCostModel`] indexes the
+//! `II × (n + m)` physical buses with a dense slot-major array. The
+//! retired implementations (all-pairs conflict build, `HashMap` cost
+//! model) live on in [`oracle`] as differential-test oracles.
 
 pub mod conflict;
 pub mod mis;
+pub mod oracle;
 pub mod route;
 
 use crate::arch::{PeId, StreamingCgra};
@@ -23,7 +29,7 @@ use crate::dfg::{EdgeKind, NodeId, NodeKind};
 use crate::error::{Error, Result};
 use crate::sched::ScheduledSDfg;
 
-pub use conflict::{Candidate, ConflictGraph};
+pub use conflict::{BucketScratch, Candidate, ConflictGraph};
 pub use mis::{SecondaryCost, SolverScratch};
 pub use route::{Route, RoutePlan};
 
@@ -42,6 +48,11 @@ pub enum BusAt {
     Row { slot: usize, row: usize },
     Col { slot: usize, col: usize },
 }
+
+/// Canonical bus-claim state: every claimed bus with its sorted
+/// `(value, multiplicity)` list, ordered by bus — the form the dense cost
+/// model and the `HashMap` oracle are compared in.
+pub type ClaimsSnapshot = Vec<(BusAt, Vec<(NodeId, usize)>)>;
 
 /// A complete, verified mapping of a scheduled s-DFG onto the CGRA.
 #[derive(Clone, Debug)]
@@ -292,6 +303,14 @@ fn claims_of_edge(
 
 /// Incremental bus-collision model plugged into the SBTS solve as the
 /// secondary objective (realizes BusMap's `bus_x`/`bus_y` consistency).
+///
+/// Hash-free: with `II × (n + m)` possible buses the model keys a dense
+/// slot-major array — bus id `slot·(n+m) + row` for row buses,
+/// `slot·(n+m) + n + col` for column buses — so every claim mutation on
+/// the SBTS inner loop is an indexed array update. Per-bus state is a
+/// small `(value, multiplicity)` list plus the claiming edge multiset
+/// (the hot-node tracker's input). Differentially tested against the
+/// retired `HashMap` implementation, [`oracle::HashBusCostModel`].
 pub struct BusCostModel<'a> {
     s: &'a ScheduledSDfg,
     cg: &'a ConflictGraph,
@@ -299,20 +318,40 @@ pub struct BusCostModel<'a> {
     /// Claim-relevant edge indices incident to each node (whose placement
     /// affects the edge's claims).
     incident: Vec<Vec<usize>>,
-    /// Per bus: value -> multiplicity.
-    claims: std::collections::HashMap<BusAt, std::collections::HashMap<NodeId, usize>>,
-    /// Per bus: claiming edge indices (multiset) — lets the hot-node
-    /// tracker find the movable endpoints of colliding buses without a
-    /// full edge scan.
-    bus_edges: std::collections::HashMap<BusAt, Vec<usize>>,
-    /// Buses currently carrying more than one distinct value — maintained
-    /// incrementally on every claim mutation.
-    hot: std::collections::HashSet<BusAt>,
+    /// Row-bus count (`cgra.n`) — column buses start at this offset within
+    /// a slot's stripe.
+    rows: usize,
+    /// Buses per modulo slot (`cgra.n + cgra.m`).
+    stride: usize,
+    /// Dense per-bus claim state, slot-major.
+    buses: Vec<BusState>,
     total: usize,
 }
 
+/// Claim state of one physical bus at one modulo slot.
+#[derive(Default)]
+struct BusState {
+    /// Distinct values riding the bus, with multiplicities.
+    values: Vec<(NodeId, u32)>,
+    /// Claiming edge indices (multiset) — lets the hot-node tracker find
+    /// the movable endpoints of colliding buses without a full edge scan.
+    edges: Vec<usize>,
+}
+
+impl BusState {
+    #[inline]
+    fn contrib(&self) -> usize {
+        self.values.len().saturating_sub(1)
+    }
+}
+
 impl<'a> BusCostModel<'a> {
-    pub fn new(s: &'a ScheduledSDfg, cg: &'a ConflictGraph, routes: &'a [Option<Route>]) -> Self {
+    pub fn new(
+        s: &'a ScheduledSDfg,
+        cg: &'a ConflictGraph,
+        routes: &'a [Option<Route>],
+        cgra: &StreamingCgra,
+    ) -> Self {
         let mut incident: Vec<Vec<usize>> = vec![Vec::new(); s.g.len()];
         for (idx, e) in s.g.edges().iter().enumerate() {
             match e.kind {
@@ -327,15 +366,27 @@ impl<'a> BusCostModel<'a> {
                 }
             }
         }
-        BusCostModel {
-            s,
-            cg,
-            routes,
-            incident,
-            claims: std::collections::HashMap::new(),
-            bus_edges: std::collections::HashMap::new(),
-            hot: std::collections::HashSet::new(),
-            total: 0,
+        let stride = cgra.n + cgra.m;
+        let mut buses = Vec::new();
+        buses.resize_with(s.ii * stride, BusState::default);
+        BusCostModel { s, cg, routes, incident, rows: cgra.n, stride, buses, total: 0 }
+    }
+
+    #[inline]
+    fn bus_index(&self, bus: BusAt) -> usize {
+        match bus {
+            BusAt::Row { slot, row } => slot * self.stride + row,
+            BusAt::Col { slot, col } => slot * self.stride + self.rows + col,
+        }
+    }
+
+    /// Inverse of [`Self::bus_index`] (snapshot/diagnostics only).
+    fn bus_at(&self, idx: usize) -> BusAt {
+        let (slot, off) = (idx / self.stride, idx % self.stride);
+        if off < self.rows {
+            BusAt::Row { slot, row: off }
+        } else {
+            BusAt::Col { slot, col: off - self.rows }
         }
     }
 
@@ -352,40 +403,31 @@ impl<'a> BusCostModel<'a> {
         claims_of_edge(self.s, self.routes, &place, idx)
     }
 
-    fn bus_contrib(values: &std::collections::HashMap<NodeId, usize>) -> usize {
-        values.len().saturating_sub(1)
-    }
-
     fn add_claim(&mut self, bus: BusAt, value: NodeId, edge_idx: usize, delta: isize) {
-        let entry = self.claims.entry(bus).or_default();
-        self.total -= Self::bus_contrib(entry);
+        let idx = self.bus_index(bus);
+        let b = &mut self.buses[idx];
+        self.total -= b.contrib();
         if delta > 0 {
-            *entry.entry(value).or_insert(0) += 1;
+            match b.values.iter_mut().find(|(v, _)| *v == value) {
+                Some(e) => e.1 += 1,
+                None => b.values.push((value, 1)),
+            }
+            b.edges.push(edge_idx);
         } else {
-            let c = entry.get_mut(&value).expect("claim present");
-            *c -= 1;
-            if *c == 0 {
-                entry.remove(&value);
+            let pos = b
+                .values
+                .iter()
+                .position(|(v, _)| *v == value)
+                .expect("claim present");
+            b.values[pos].1 -= 1;
+            if b.values[pos].1 == 0 {
+                b.values.swap_remove(pos);
+            }
+            if let Some(ep) = b.edges.iter().position(|&e| e == edge_idx) {
+                b.edges.swap_remove(ep);
             }
         }
-        self.total += Self::bus_contrib(entry);
-        if Self::bus_contrib(entry) > 0 {
-            self.hot.insert(bus);
-        } else {
-            self.hot.remove(&bus);
-        }
-        if entry.is_empty() {
-            self.claims.remove(&bus);
-        }
-        let edges = self.bus_edges.entry(bus).or_default();
-        if delta > 0 {
-            edges.push(edge_idx);
-        } else if let Some(pos) = edges.iter().position(|&e| e == edge_idx) {
-            edges.swap_remove(pos);
-            if edges.is_empty() {
-                self.bus_edges.remove(&bus);
-            }
-        }
+        self.total += b.contrib();
     }
 
     /// Reference implementation of the hot-node set, recomputed from
@@ -413,13 +455,33 @@ impl<'a> BusCostModel<'a> {
         }
         nodes.into_iter().collect()
     }
+
+    /// Canonical claim state — the differential suite compares this
+    /// against the `HashMap` oracle's snapshot; not on the search path.
+    pub fn claims_snapshot(&self) -> ClaimsSnapshot {
+        let mut out: ClaimsSnapshot = self
+            .buses
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| !b.values.is_empty())
+            .map(|(idx, b)| {
+                let mut vals: Vec<(NodeId, usize)> =
+                    b.values.iter().map(|&(v, c)| (v, c as usize)).collect();
+                vals.sort_unstable();
+                (self.bus_at(idx), vals)
+            })
+            .collect();
+        out.sort_unstable_by_key(|e| e.0);
+        out
+    }
 }
 
 impl<'a> SecondaryCost for BusCostModel<'a> {
     fn reset(&mut self, assign: &[usize]) {
-        self.claims.clear();
-        self.bus_edges.clear();
-        self.hot.clear();
+        for b in &mut self.buses {
+            b.values.clear();
+            b.edges.clear();
+        }
         self.total = 0;
         for idx in 0..self.s.g.edges().len() {
             let claims = self.edge_claims(idx, assign);
@@ -458,15 +520,16 @@ impl<'a> SecondaryCost for BusCostModel<'a> {
     }
 
     fn hot_nodes_into(&self, _assign: &[usize], out: &mut Vec<usize>) {
-        // Incrementally-maintained: endpoints of the edges claiming any
-        // colliding bus. Sorted + deduped into the caller's buffer so the
-        // order is deterministic (HashSet iteration order is not).
+        // Endpoints of the edges claiming any colliding bus. The dense
+        // array is scanned in ascending bus order (a few dozen entries);
+        // sorted + deduped into the caller's buffer for a deterministic,
+        // duplicate-free node list.
         if self.total == 0 {
             return;
         }
-        for bus in &self.hot {
-            if let Some(edges) = self.bus_edges.get(bus) {
-                for &idx in edges {
+        for b in &self.buses {
+            if b.values.len() > 1 {
+                for &idx in &b.edges {
                     let e = self.s.g.edge(idx);
                     out.push(e.src);
                     out.push(e.dst);
@@ -478,12 +541,13 @@ impl<'a> SecondaryCost for BusCostModel<'a> {
     }
 }
 
-/// Reusable per-worker binding arena: conflict-graph storage, the route
-/// table and the SBTS solver state. One per portfolio thread; reuse across
-/// attempts is behavior-neutral (asserted by tests) — only the allocations
-/// are recycled.
+/// Reusable per-worker binding arena: conflict-graph storage, the bucketed
+/// build's candidate buckets, the route table and the SBTS solver state.
+/// One per portfolio thread; reuse across attempts is behavior-neutral
+/// (asserted by tests) — only the allocations are recycled.
 pub struct ScratchPool {
     cg: ConflictGraph,
+    buckets: BucketScratch,
     routes: Vec<Option<Route>>,
     solver: SolverScratch,
 }
@@ -492,6 +556,7 @@ impl ScratchPool {
     pub fn new() -> Self {
         ScratchPool {
             cg: ConflictGraph::empty(),
+            buckets: BucketScratch::new(),
             routes: Vec::new(),
             solver: SolverScratch::new(),
         }
@@ -525,13 +590,12 @@ pub fn bind_with(
     scratch: &mut ScratchPool,
 ) -> Result<Mapping> {
     let plan = route::preallocate(s, cgra)?;
-    let ScratchPool { cg, routes, solver } = scratch;
-    conflict::build_into(s, cgra, &plan, cg);
-    routes.clear();
-    routes.extend((0..s.g.edges().len()).map(|i| plan.route(i)));
+    let ScratchPool { cg, buckets, routes, solver } = scratch;
+    conflict::build_into(s, cgra, &plan, cg, buckets);
+    plan.fill_routes(routes);
     let cg: &ConflictGraph = cg;
     let routes: &[Option<Route>] = routes;
-    let mut cost = BusCostModel::new(s, cg, routes);
+    let mut cost = BusCostModel::new(s, cg, routes, cgra);
     let mut spent = 0usize;
     let mut best_bound = 0usize;
     for attempt in 0..3u64 {

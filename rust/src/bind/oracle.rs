@@ -1,0 +1,314 @@
+//! Reference ("oracle") implementations retired from the binding hot path,
+//! kept alive verbatim so the optimized rewrites stay provably equivalent.
+//!
+//! This is the required workflow for hot-path rewrites in this crate: the
+//! old implementation moves here unchanged, and a differential suite
+//! (`tests/conflict_equivalence.rs`) asserts byte-identical behavior on
+//! all paper blocks plus randomized instances before the fast path ships.
+//!
+//! * [`build_naive`] — the original all-pairs `O(nc²)` conflict-graph edge
+//!   loop, oracle for the bucketed [`crate::bind::conflict::build_into`].
+//! * [`HashBusCostModel`] — the original `HashMap`-backed incremental
+//!   bus-collision model, oracle for the dense slot-major
+//!   [`crate::bind::BusCostModel`].
+//!
+//! Nothing here is on the mapper's search path; allocation and hashing
+//! costs are irrelevant.
+
+use crate::arch::StreamingCgra;
+use crate::bind::conflict::{Candidate, ConflictGraph};
+use crate::bind::mis::SecondaryCost;
+use crate::bind::route::{Route, RoutePlan};
+use crate::bind::{claims_of_edge, BusAt, EdgeClaims, Placement};
+use crate::dfg::{EdgeKind, NodeId};
+use crate::sched::ScheduledSDfg;
+use crate::util::BitSet;
+
+/// The original conflict-graph build: every candidate pair tested against
+/// the full rule set. `O(nc²)` in candidate count — superseded by the
+/// bucketed [`crate::bind::conflict::build_into`], equivalent by the
+/// differential suite.
+pub fn build_naive(s: &ScheduledSDfg, cgra: &StreamingCgra, plan: &RoutePlan) -> ConflictGraph {
+    let mut cg = ConflictGraph::empty();
+    build_naive_into(s, cgra, plan, &mut cg);
+    cg
+}
+
+/// [`build_naive`] into reusable storage (kept for bench comparability
+/// with the bucketed reuse path).
+pub fn build_naive_into(
+    s: &ScheduledSDfg,
+    cgra: &StreamingCgra,
+    _plan: &RoutePlan,
+    cg: &mut ConflictGraph,
+) {
+    let g = &s.g;
+    let n_nodes = g.len();
+
+    // ---- candidates -------------------------------------------------------
+    cg.candidates.clear();
+    cg.of_node.resize_with(n_nodes, Vec::new);
+    for v in cg.of_node.iter_mut() {
+        v.clear();
+    }
+    let (candidates, of_node) = (&mut cg.candidates, &mut cg.of_node);
+    for v in g.nodes() {
+        match g.kind(v) {
+            k if k.is_read() => {
+                for ibus in 0..cgra.m {
+                    of_node[v].push(candidates.len());
+                    candidates.push(Candidate::Read { node: v, ibus });
+                }
+            }
+            k if k.is_write() => {
+                for obus in 0..cgra.n {
+                    of_node[v].push(candidates.len());
+                    candidates.push(Candidate::Write { node: v, obus });
+                }
+            }
+            _ => {
+                for pe in cgra.pes() {
+                    of_node[v].push(candidates.len());
+                    candidates.push(Candidate::Op { node: v, pe });
+                }
+            }
+        }
+    }
+
+    // ---- edges: all candidate pairs against the full rule set -------------
+    let nc = candidates.len();
+    for b in cg.adj.iter_mut() {
+        b.reset(nc);
+    }
+    cg.adj.resize_with(nc, || BitSet::new(nc));
+    let (candidates, adj) = (&cg.candidates, &mut cg.adj);
+
+    let input_src = |op: NodeId| -> Option<NodeId> {
+        g.in_edges(op)
+            .find(|(_, e)| e.kind == EdgeKind::Input)
+            .map(|(_, e)| e.src)
+    };
+    let output_producer = |w: NodeId| -> NodeId {
+        g.predecessors(w).next().expect("write has a producer")
+    };
+
+    for a in 0..nc {
+        for b in (a + 1)..nc {
+            let conflict = {
+                use Candidate::*;
+                let (ca, cb) = (&candidates[a], &candidates[b]);
+                if ca.node() == cb.node() {
+                    true // pick-one clique
+                } else {
+                    let slot = |v: NodeId| s.m(v);
+                    match (*ca, *cb) {
+                        // R1: I/O bus exclusiveness.
+                        (Read { node: r1, ibus: i1 }, Read { node: r2, ibus: i2 }) => {
+                            i1 == i2 && slot(r1) == slot(r2)
+                        }
+                        (Write { node: w1, obus: o1 }, Write { node: w2, obus: o2 }) => {
+                            o1 == o2 && slot(w1) == slot(w2)
+                        }
+                        (Read { .. }, Write { .. }) | (Write { .. }, Read { .. }) => false,
+                        // R2(1): consumers of a reading sit in its column.
+                        (Read { node: r, ibus }, Op { node: op, pe })
+                        | (Op { node: op, pe }, Read { node: r, ibus }) => {
+                            input_src(op) == Some(r) && pe.col != ibus
+                        }
+                        // R2(1): the producer of a writing sits in its row.
+                        (Write { node: w, obus }, Op { node: op, pe })
+                        | (Op { node: op, pe }, Write { node: w, obus }) => {
+                            output_producer(w) == op && pe.row != obus
+                        }
+                        (Op { node: v1, pe: p1 }, Op { node: v2, pe: p2 }) => {
+                            // One PE, one op per modulo slot.
+                            p1 == p2 && slot(v1) == slot(v2)
+                        }
+                    }
+                }
+            };
+            if conflict {
+                adj[a].insert(b);
+                adj[b].insert(a);
+            }
+        }
+    }
+
+    cg.num_nodes = n_nodes;
+}
+
+/// The original incremental bus-collision model: per-bus claim multisets in
+/// `HashMap`s keyed by [`BusAt`]. Superseded by the dense slot-major
+/// [`crate::bind::BusCostModel`]; kept as the oracle the dense model is
+/// differentially tested against (identical totals, claims and hot-node
+/// sets over arbitrary claim/release sequences).
+pub struct HashBusCostModel<'a> {
+    s: &'a ScheduledSDfg,
+    cg: &'a ConflictGraph,
+    routes: &'a [Option<Route>],
+    /// Claim-relevant edge indices incident to each node (whose placement
+    /// affects the edge's claims).
+    incident: Vec<Vec<usize>>,
+    /// Per bus: value -> multiplicity.
+    claims: std::collections::HashMap<BusAt, std::collections::HashMap<NodeId, usize>>,
+    /// Per bus: claiming edge indices (multiset).
+    bus_edges: std::collections::HashMap<BusAt, Vec<usize>>,
+    /// Buses currently carrying more than one distinct value.
+    hot: std::collections::HashSet<BusAt>,
+    total: usize,
+}
+
+impl<'a> HashBusCostModel<'a> {
+    pub fn new(s: &'a ScheduledSDfg, cg: &'a ConflictGraph, routes: &'a [Option<Route>]) -> Self {
+        let mut incident: Vec<Vec<usize>> = vec![Vec::new(); s.g.len()];
+        for (idx, e) in s.g.edges().iter().enumerate() {
+            match e.kind {
+                EdgeKind::Input => incident[e.src].push(idx),
+                EdgeKind::Output => incident[e.dst].push(idx),
+                EdgeKind::Internal => {
+                    // Bus and LRF routes both ride the interconnect.
+                    if matches!(routes[idx], Some(Route::Bus) | Some(Route::Lrf)) {
+                        incident[e.src].push(idx);
+                        incident[e.dst].push(idx);
+                    }
+                }
+            }
+        }
+        HashBusCostModel {
+            s,
+            cg,
+            routes,
+            incident,
+            claims: std::collections::HashMap::new(),
+            bus_edges: std::collections::HashMap::new(),
+            hot: std::collections::HashSet::new(),
+            total: 0,
+        }
+    }
+
+    fn placement_of(&self, cand: usize) -> Placement {
+        match self.cg.candidates[cand] {
+            Candidate::Read { ibus, .. } => Placement::InputBus(ibus),
+            Candidate::Write { obus, .. } => Placement::OutputBus(obus),
+            Candidate::Op { pe, .. } => Placement::Pe(pe),
+        }
+    }
+
+    fn edge_claims(&self, idx: usize, assign: &[usize]) -> EdgeClaims {
+        let place = |v: NodeId| self.placement_of(assign[v]);
+        claims_of_edge(self.s, self.routes, &place, idx)
+    }
+
+    fn bus_contrib(values: &std::collections::HashMap<NodeId, usize>) -> usize {
+        values.len().saturating_sub(1)
+    }
+
+    fn add_claim(&mut self, bus: BusAt, value: NodeId, edge_idx: usize, delta: isize) {
+        let entry = self.claims.entry(bus).or_default();
+        self.total -= Self::bus_contrib(entry);
+        if delta > 0 {
+            *entry.entry(value).or_insert(0) += 1;
+        } else {
+            let c = entry.get_mut(&value).expect("claim present");
+            *c -= 1;
+            if *c == 0 {
+                entry.remove(&value);
+            }
+        }
+        self.total += Self::bus_contrib(entry);
+        if Self::bus_contrib(entry) > 0 {
+            self.hot.insert(bus);
+        } else {
+            self.hot.remove(&bus);
+        }
+        if entry.is_empty() {
+            self.claims.remove(&bus);
+        }
+        let edges = self.bus_edges.entry(bus).or_default();
+        if delta > 0 {
+            edges.push(edge_idx);
+        } else if let Some(pos) = edges.iter().position(|&e| e == edge_idx) {
+            edges.swap_remove(pos);
+            if edges.is_empty() {
+                self.bus_edges.remove(&bus);
+            }
+        }
+    }
+
+    /// Canonical claim state — the differential suite compares this
+    /// against the dense model's snapshot.
+    pub fn claims_snapshot(&self) -> crate::bind::ClaimsSnapshot {
+        let mut out: crate::bind::ClaimsSnapshot = self
+            .claims
+            .iter()
+            .map(|(&bus, values)| {
+                let mut vals: Vec<(NodeId, usize)> =
+                    values.iter().map(|(&v, &c)| (v, c)).collect();
+                vals.sort_unstable();
+                (bus, vals)
+            })
+            .collect();
+        out.sort_unstable_by_key(|e| e.0);
+        out
+    }
+}
+
+impl<'a> SecondaryCost for HashBusCostModel<'a> {
+    fn reset(&mut self, assign: &[usize]) {
+        self.claims.clear();
+        self.bus_edges.clear();
+        self.hot.clear();
+        self.total = 0;
+        for idx in 0..self.s.g.edges().len() {
+            let claims = self.edge_claims(idx, assign);
+            for &(bus, value) in claims.as_slice() {
+                self.add_claim(bus, value, idx, 1);
+            }
+        }
+    }
+
+    fn detach(&mut self, v: usize, assign: &[usize]) {
+        let edges = std::mem::take(&mut self.incident[v]);
+        for &idx in &edges {
+            let claims = self.edge_claims(idx, assign);
+            for &(bus, value) in claims.as_slice() {
+                self.add_claim(bus, value, idx, -1);
+            }
+        }
+        self.incident[v] = edges;
+    }
+
+    fn attach(&mut self, v: usize, assign: &[usize]) {
+        let edges = std::mem::take(&mut self.incident[v]);
+        for &idx in &edges {
+            let claims = self.edge_claims(idx, assign);
+            for &(bus, value) in claims.as_slice() {
+                self.add_claim(bus, value, idx, 1);
+            }
+        }
+        self.incident[v] = edges;
+    }
+
+    fn total(&self) -> usize {
+        self.total
+    }
+
+    fn hot_nodes_into(&self, _assign: &[usize], out: &mut Vec<usize>) {
+        // Endpoints of the edges claiming any colliding bus; sorted +
+        // deduped so HashSet iteration order never leaks out.
+        if self.total == 0 {
+            return;
+        }
+        for bus in &self.hot {
+            if let Some(edges) = self.bus_edges.get(bus) {
+                for &idx in edges {
+                    let e = self.s.g.edge(idx);
+                    out.push(e.src);
+                    out.push(e.dst);
+                }
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+    }
+}

@@ -53,6 +53,14 @@ impl RoutePlan {
         self.routes[edge_idx]
     }
 
+    /// Copy the per-edge route table into a reusable buffer — the
+    /// [`crate::bind::ScratchPool`] path, which recycles one route vector
+    /// across the mapper's whole attempt lattice.
+    pub fn fill_routes(&self, out: &mut Vec<Option<Route>>) {
+        out.clear();
+        out.extend_from_slice(&self.routes);
+    }
+
     /// Number of GRF-routed dependencies.
     pub fn grf_count(&self) -> usize {
         self.routes.iter().filter(|r| **r == Some(Route::Grf)).count()

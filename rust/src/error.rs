@@ -78,7 +78,7 @@ impl From<std::io::Error> for Error {
     }
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "pjrt-xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

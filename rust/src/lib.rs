@@ -42,13 +42,30 @@
 //! ```
 //!
 //! The per-attempt hot path (schedule → route → conflict graph → SBTS
-//! bind) is allocation-conscious: each portfolio worker owns a
-//! [`bind::ScratchPool`] that recycles the conflict-graph storage, the
-//! route table and the SBTS solver state across attempts, and the SBTS
-//! inner loop itself is allocation-free (incremental hot-node tracking,
-//! reused move buffers, word-level conflict deltas). Bench trajectory
-//! lives in `BENCH_mapper.json` at the repo root (written by
-//! `cargo bench --bench mapper_micro` / `--bench serving_throughput`).
+//! bind) is allocation-conscious and hash-free: each portfolio worker owns
+//! a [`bind::ScratchPool`] that recycles the conflict-graph storage, the
+//! bucketed build's candidate buckets, the route table and the SBTS solver
+//! state across attempts; the conflict graph is built bucket-locally
+//! (`(slot, bus)` / `(slot, pe)` groups instead of the naive all-pairs
+//! candidate loop); the bus cost model indexes the `II × (n + m)` physical
+//! buses with a dense slot-major array; and the SBTS inner loop itself is
+//! allocation-free (incremental hot-node tracking, reused move buffers,
+//! word-level conflict deltas). Bench trajectory lives in
+//! `BENCH_mapper.json` at the repo root (written by `cargo bench --bench
+//! mapper_micro` / `--bench serving_throughput`).
+//!
+//! ## Hot-path rewrites are oracle-tested
+//!
+//! The required workflow for optimizing any mapper hot path: move the old
+//! implementation verbatim into [`bind::oracle`] (today:
+//! `oracle::build_naive`, the all-pairs conflict build, and
+//! `oracle::HashBusCostModel`, the HashMap cost model), then lock old and
+//! new together with a differential suite
+//! (`rust/tests/conflict_equivalence.rs` — byte-identical graphs, claim
+//! states and solver trajectories over all paper blocks plus randomized
+//! instances) and pin end-to-end results with golden snapshots
+//! (`rust/tests/golden_mappings.rs`). A rewrite ships only once the
+//! oracle suite proves it behavior-preserving.
 
 pub mod arch;
 pub mod bind;

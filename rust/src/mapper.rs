@@ -20,6 +20,12 @@
 //! Workers stop claiming once an index beyond the current winner would be
 //! next (attempts after the winner cannot matter; attempts before it must
 //! still finish, since a lower-index success would supersede).
+//!
+//! Per attempt, the bind stage runs the bucketed conflict-graph build and
+//! the dense slot-major bus cost model (see `crate::bind`); both recycle
+//! their storage through the worker's [`ScratchPool`], and both are locked
+//! to their retired naive implementations by `tests/conflict_equivalence.rs`
+//! and the golden snapshots in `tests/golden_mappings.rs`.
 
 use crate::arch::StreamingCgra;
 use crate::bind::{bind_with, Mapping, ScratchPool};

@@ -12,11 +12,13 @@
 //! ## Feature gating
 //!
 //! The `xla` crate is not part of the offline build. The real executor is
-//! compiled only with `--features pjrt` (after wiring the `xla` dependency
-//! into `rust/Cargo.toml`); the default build ships an API-compatible stub
-//! whose `Runtime::new` fails with a clear message, so manifest handling,
-//! the CLI and the examples all still compile and the mapping/simulation
-//! path — the paper's contribution — is fully exercised without XLA.
+//! compiled only with `--features pjrt-xla` (which implies `pjrt`, after
+//! wiring the `xla` dependency into `rust/Cargo.toml`); both the default
+//! build and `--features pjrt` alone ship an API-compatible stub whose
+//! `Runtime::new` fails with a clear message, so manifest handling, the
+//! CLI and the examples all still compile — `cargo test --features pjrt`
+//! is a CI-checked configuration — and the mapping/simulation path (the
+//! paper's contribution) is fully exercised without XLA.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -91,14 +93,14 @@ pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
 }
 
 /// A compiled module ready to execute.
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "pjrt-xla")]
 struct LoadedModule {
     exe: xla::PjRtLoadedExecutable,
     spec: ArtifactSpec,
 }
 
 /// The PJRT runtime: one CPU client + lazily compiled modules.
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "pjrt-xla")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -106,7 +108,7 @@ pub struct Runtime {
     modules: HashMap<String, LoadedModule>,
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "pjrt-xla")]
 impl Runtime {
     /// Open the artifacts directory and index the manifest (no compilation
     /// happens until a module is first executed).
@@ -202,17 +204,18 @@ impl Runtime {
     }
 }
 
-/// Stub runtime for builds without the `pjrt` feature: same API surface so
-/// the CLI / examples / integration tests compile; `new` indexes the
-/// manifest (surfacing the usual "run `make artifacts`" error when absent)
-/// and then reports that the executor is unavailable.
-#[cfg(not(feature = "pjrt"))]
+/// Stub runtime for builds without the real executor (default, and
+/// `--features pjrt` without `pjrt-xla`): same API surface so the CLI /
+/// examples / integration tests compile; `new` indexes the manifest
+/// (surfacing the usual "run `make artifacts`" error when absent) and then
+/// reports that the executor is unavailable.
+#[cfg(not(feature = "pjrt-xla"))]
 pub struct Runtime {
     _dir: PathBuf,
     specs: HashMap<String, ArtifactSpec>,
 }
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "pjrt-xla"))]
 impl Runtime {
     pub fn new(artifacts_dir: &str) -> Result<Self> {
         let dir = PathBuf::from(artifacts_dir);
@@ -223,9 +226,9 @@ impl Runtime {
             .map(|s| (s.name.clone(), s))
             .collect();
         Err(Error::Runtime(
-            "PJRT runtime unavailable: built without the `pjrt` feature \
+            "PJRT runtime unavailable: built without the real executor \
              (wire the `xla` crate into rust/Cargo.toml and rebuild with \
-             --features pjrt)"
+             --features pjrt-xla)"
                 .into(),
         ))
     }
@@ -292,7 +295,7 @@ mod tests {
             assert!(err.to_string().contains("make artifacts"), "{err}");
             return;
         }
-        if cfg!(not(feature = "pjrt")) {
+        if cfg!(not(feature = "pjrt-xla")) {
             let err = Runtime::new(&default_artifacts_dir()).unwrap_err();
             assert!(err.to_string().contains("pjrt"), "{err}");
         }
@@ -300,7 +303,7 @@ mod tests {
 
     #[test]
     fn executes_sparse_block_artifact() {
-        if !have_artifacts() || cfg!(not(feature = "pjrt")) {
+        if !have_artifacts() || cfg!(not(feature = "pjrt-xla")) {
             eprintln!("skipping: needs artifacts + the pjrt feature");
             return;
         }
@@ -328,7 +331,7 @@ mod tests {
 
     #[test]
     fn rejects_bad_inputs() {
-        if !have_artifacts() || cfg!(not(feature = "pjrt")) {
+        if !have_artifacts() || cfg!(not(feature = "pjrt-xla")) {
             eprintln!("skipping: needs artifacts + the pjrt feature");
             return;
         }

@@ -132,22 +132,40 @@ pub fn repo_root_path(file: &str) -> String {
     format!("{}/../{}", env!("CARGO_MANIFEST_DIR"), file)
 }
 
+/// The `name` of one merged bench-row line (`BenchResult::json_line`
+/// format), if the line is a row. The single authority for reading the
+/// row format back — used by [`write_json_merged`]'s merge scan and the
+/// schema checks in `tests/bench_snapshot.rs`.
+pub fn row_name(line: &str) -> Option<&str> {
+    let t = line.trim().trim_end_matches(',');
+    t.strip_prefix("{\"name\": \"")
+        .and_then(|rest| rest.find('"').map(|end| &rest[..end]))
+}
+
+/// A named scalar field of one merged bench-row line, as its raw text
+/// (`row_field(r, "ns_per_iter")` → `"12.3"`). Companion of [`row_name`].
+pub fn row_field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\": ");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest.find(|c| c == ',' || c == '}').unwrap_or(rest.len());
+    Some(rest[..end].trim())
+}
+
 /// Merge bench results into a JSON array file, one object per line
 /// (`BenchResult::json_line` format). Entries whose `name` matches a new
 /// result are replaced in place; everything else is preserved, so several
 /// bench binaries (mapper_micro, serving_throughput) accumulate into one
 /// `BENCH_mapper.json` that tracks the perf trajectory across PRs. The
-/// line-oriented format is parsed back with plain string handling — this
-/// file is only ever written by this function, never by hand.
+/// line-oriented format is parsed back with plain string handling
+/// ([`row_name`] / [`row_field`]) — this file is only ever written by this
+/// function, never by hand.
 pub fn write_json_merged(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
     let mut entries: Vec<(String, String)> = Vec::new();
     if let Ok(text) = std::fs::read_to_string(path) {
         for line in text.lines() {
-            let t = line.trim().trim_end_matches(',');
-            if let Some(rest) = t.strip_prefix("{\"name\": \"") {
-                if let Some(end) = rest.find('"') {
-                    entries.push((rest[..end].to_string(), t.to_string()));
-                }
+            if let Some(name) = row_name(line) {
+                entries.push((name.to_string(), line.trim().trim_end_matches(',').to_string()));
             }
         }
     }
@@ -187,6 +205,18 @@ mod tests {
         let mut summary = crate::util::stats::Summary::new();
         summary.add(ns);
         BenchResult { name: name.into(), summary, iters_per_sample: 1 }
+    }
+
+    #[test]
+    fn row_parsers_read_back_json_line() {
+        let line = result_named("a/x", 12.5).json_line();
+        assert_eq!(row_name(&line), Some("a/x"));
+        assert_eq!(row_field(&line, "ns_per_iter"), Some("12.5"));
+        assert_eq!(row_field(&line, "samples"), Some("1"));
+        assert_eq!(row_field(&line, "iters_per_sample"), Some("1"));
+        assert_eq!(row_field(&line, "nope"), None);
+        assert_eq!(row_name("  ]"), None);
+        assert_eq!(row_name("["), None);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 use sparsemap::arch::StreamingCgra;
 use sparsemap::mapper::{map_block, MapperOptions};
 use sparsemap::sparse::gen::paper_blocks;
-use sparsemap::util::bench::{black_box, BenchConfig, Bencher};
+use sparsemap::util::bench::{black_box, repo_root_path, row_field, row_name, BenchConfig, Bencher};
 
 #[test]
 fn perf_snapshot_exercises_json_pipeline() {
@@ -38,4 +38,60 @@ fn perf_snapshot_exercises_json_pipeline() {
     assert!(text.contains("smoke/block1/map_block_seq"), "{text}");
     assert!(text.contains("smoke/block1/map_block_par2"), "{text}");
     let _ = std::fs::remove_file(&path);
+}
+
+/// The tracked `BENCH_mapper.json` is optional (produced by `cargo bench`
+/// in a toolchain-equipped environment), but when it exists it must
+/// conform to the `util::bench::write_json_merged` line format (read back
+/// through the same `row_name`/`row_field` helpers the merger uses) —
+/// this is what keeps the cross-PR perf trajectory parseable. When it's
+/// absent the test says so explicitly instead of passing vacuously.
+#[test]
+fn bench_mapper_json_schema() {
+    let path = repo_root_path("BENCH_mapper.json");
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        eprintln!(
+            "ignored: no bench data ({path} absent — run `cargo bench --bench \
+             mapper_micro` and `--bench serving_throughput` to produce it)"
+        );
+        return;
+    };
+    let trimmed = text.trim();
+    assert!(
+        trimmed.starts_with('[') && trimmed.ends_with(']'),
+        "{path}: not a JSON array:\n{trimmed}"
+    );
+    let mut names = std::collections::HashSet::new();
+    let mut rows = 0usize;
+    for line in text.lines() {
+        let t = line.trim().trim_end_matches(',');
+        if t.is_empty() || t == "[" || t == "]" {
+            continue;
+        }
+        assert!(
+            t.starts_with('{') && t.ends_with('}'),
+            "{path}: row is not a flat object: {t}"
+        );
+        let name =
+            row_name(t).unwrap_or_else(|| panic!("{path}: row has no leading name field: {t}"));
+        assert!(!name.is_empty(), "{path}: empty bench name: {t}");
+        assert!(names.insert(name.to_string()), "{path}: duplicate bench row '{name}'");
+        for key in ["ns_per_iter", "stddev_ns", "p95_ns"] {
+            let v: f64 = row_field(t, key)
+                .unwrap_or_else(|| panic!("{path}: row missing {key}: {t}"))
+                .parse()
+                .unwrap_or_else(|e| panic!("{path}: bad {key} in '{name}': {e}"));
+            assert!(v.is_finite() && v >= 0.0, "{path}: {key} = {v} in '{name}'");
+        }
+        for key in ["samples", "iters_per_sample"] {
+            let v: u64 = row_field(t, key)
+                .unwrap_or_else(|| panic!("{path}: row missing {key}: {t}"))
+                .parse()
+                .unwrap_or_else(|e| panic!("{path}: bad {key} in '{name}': {e}"));
+            assert!(v > 0, "{path}: {key} = 0 in '{name}'");
+        }
+        rows += 1;
+    }
+    assert!(rows > 0, "{path}: exists but holds no bench rows");
+    eprintln!("BENCH_mapper.json schema ok ({rows} rows)");
 }

@@ -1,0 +1,361 @@
+//! Differential suite locking the binding-stage rewrites to their retired
+//! naive implementations (`sparsemap::bind::oracle`):
+//!
+//! * the bucketed conflict-graph build must produce **byte-identical**
+//!   graphs to the all-pairs `O(nc²)` edge loop — candidates, `of_node`,
+//!   and edge sets compared as sorted pair lists — over all 7 paper blocks
+//!   at several IIs plus ≥100 randomized scheduled s-DFG instances;
+//! * the dense slot-major bus cost model must track identical totals,
+//!   per-bus claim multisets and hot-node sets as the `HashMap` model over
+//!   randomized claim/release (detach/reassign/attach) sequences,
+//!   including modulo-slot wraparound at the II boundary;
+//! * with either cost model plugged into the SBTS solve, the trajectory —
+//!   and therefore the final mapping — must be move-for-move identical.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use sparsemap::arch::StreamingCgra;
+use sparsemap::bind::mis::{solve_with_scratch, SolverScratch};
+use sparsemap::bind::oracle::{build_naive, HashBusCostModel};
+use sparsemap::bind::{
+    bind, conflict, route, BucketScratch, BusCostModel, Candidate, ConflictGraph, Placement,
+    Route, SecondaryCost,
+};
+use sparsemap::config::Techniques;
+use sparsemap::dfg::analysis::mii;
+use sparsemap::dfg::build::build_sdfg;
+use sparsemap::dfg::{EdgeKind, NodeKind, SDfg};
+use sparsemap::sched::sparsemap::schedule_at;
+use sparsemap::sched::ScheduledSDfg;
+use sparsemap::sparse::gen::{paper_blocks, random_block};
+use sparsemap::util::proptest::check;
+use sparsemap::util::rng::Pcg64;
+
+/// Edge set as a sorted list of candidate-index pairs `(a < b)` — the
+/// canonical form both builds are compared in.
+fn edge_list(cg: &ConflictGraph) -> Vec<(usize, usize)> {
+    let mut edges = Vec::new();
+    for (a, adj) in cg.adj.iter().enumerate() {
+        for b in adj.iter() {
+            if a < b {
+                edges.push((a, b));
+            }
+        }
+    }
+    edges
+}
+
+fn assert_graphs_identical(fast: &ConflictGraph, slow: &ConflictGraph, label: &str) {
+    assert_eq!(fast.candidates, slow.candidates, "{label}: candidate lists differ");
+    assert_eq!(fast.of_node, slow.of_node, "{label}: of_node differs");
+    assert_eq!(fast.num_nodes, slow.num_nodes, "{label}: num_nodes differs");
+    assert_eq!(
+        fast.adj.len(),
+        slow.adj.len(),
+        "{label}: adjacency table sizes differ"
+    );
+    assert_eq!(edge_list(fast), edge_list(slow), "{label}: edge sets differ");
+}
+
+/// A routable schedule for `(g, cgra)` at the lowest II in `[mii, mii+3)`,
+/// if any.
+fn routable_schedule(
+    g: &SDfg,
+    cgra: &StreamingCgra,
+) -> Option<(ScheduledSDfg, route::RoutePlan)> {
+    let base = mii(g, cgra);
+    (base..base + 3).find_map(|ii| {
+        let s = schedule_at(g, cgra, Techniques::all(), ii).ok()?;
+        let plan = route::preallocate(&s, cgra).ok()?;
+        Some((s, plan))
+    })
+}
+
+#[test]
+fn bucketed_build_matches_naive_on_paper_blocks() {
+    let cgra = StreamingCgra::paper_default();
+    let mut scratch = ConflictGraph::empty();
+    let mut buckets = BucketScratch::new();
+    let mut instances = 0usize;
+    for nb in paper_blocks() {
+        let (g, _) = build_sdfg(&nb.block);
+        let base = mii(&g, &cgra);
+        for ii in base..base + 3 {
+            let Ok(s) = schedule_at(&g, &cgra, Techniques::all(), ii) else { continue };
+            let Ok(plan) = route::preallocate(&s, &cgra) else { continue };
+            // One reused scratch across every block and II — the exact
+            // shape the portfolio mapper drives.
+            conflict::build_into(&s, &cgra, &plan, &mut scratch, &mut buckets);
+            let slow = build_naive(&s, &cgra, &plan);
+            assert_graphs_identical(&scratch, &slow, &format!("{} II={ii}", nb.label));
+            instances += 1;
+        }
+    }
+    assert!(instances >= 7, "only {instances} paper-block instances compared");
+}
+
+#[test]
+fn prop_bucketed_build_matches_naive_on_random_schedules() {
+    let cgra = StreamingCgra::paper_default();
+    let compared = AtomicUsize::new(0);
+    check("bucketed conflict build ≡ all-pairs oracle", 120, |rng| {
+        // Small-to-medium blocks keep the O(nc²) oracle affordable in
+        // debug builds while still covering every node/edge shape.
+        let c = 2 + rng.index(5);
+        let k = 2 + rng.index(5);
+        let p = 0.2 + 0.6 * rng.next_f64();
+        let b = random_block("diff", c, k, p, rng.next_u64());
+        let (g, _) = build_sdfg(&b);
+        let base = mii(&g, &cgra);
+        let mut scratch = ConflictGraph::empty();
+        let mut buckets = BucketScratch::new();
+        // Vary the II per instance — bucket tables must resize correctly
+        // when the same scratch is dragged across IIs.
+        let mut done = 0;
+        for ii in base..base + 3 {
+            if done == 2 {
+                break;
+            }
+            let Ok(s) = schedule_at(&g, &cgra, Techniques::all(), ii) else { continue };
+            let Ok(plan) = route::preallocate(&s, &cgra) else { continue };
+            conflict::build_into(&s, &cgra, &plan, &mut scratch, &mut buckets);
+            let slow = build_naive(&s, &cgra, &plan);
+            assert_graphs_identical(&scratch, &slow, &format!("{} II={ii}", b.name));
+            done += 1;
+            compared.fetch_add(1, Ordering::Relaxed);
+        }
+    });
+    let n = compared.load(Ordering::Relaxed);
+    assert!(n >= 100, "only {n} randomized instances compared (want ≥ 100)");
+}
+
+/// Both cost models, reset to the same assignment; every comparison the
+/// suite makes between them.
+fn assert_models_agree(
+    dense: &BusCostModel,
+    hash: &HashBusCostModel,
+    assign: &[usize],
+    label: &str,
+) {
+    assert_eq!(dense.total(), hash.total(), "{label}: totals diverged");
+    assert_eq!(
+        dense.claims_snapshot(),
+        hash.claims_snapshot(),
+        "{label}: claim states diverged"
+    );
+    let (mut a, mut b) = (Vec::new(), Vec::new());
+    dense.hot_nodes_into(assign, &mut a);
+    hash.hot_nodes_into(assign, &mut b);
+    assert_eq!(a, b, "{label}: hot-node sets diverged");
+}
+
+#[test]
+fn prop_dense_bus_cost_matches_hash_oracle() {
+    let cgra = StreamingCgra::paper_default();
+    let walked = AtomicUsize::new(0);
+    check("dense bus cost ≡ HashMap oracle", 50, |rng| {
+        let c = 2 + rng.index(7);
+        let k = 2 + rng.index(7);
+        let p = 0.2 + 0.6 * rng.next_f64();
+        let b = random_block("cost", c, k, p, rng.next_u64());
+        let (g, _) = build_sdfg(&b);
+        let Some((s, plan)) = routable_schedule(&g, &cgra) else { return };
+        let cg = conflict::build(&s, &cgra, &plan);
+        let routes: Vec<Option<Route>> =
+            (0..s.g.edges().len()).map(|i| plan.route(i)).collect();
+
+        let n_nodes = cg.of_node.len();
+        let mut assign: Vec<usize> =
+            (0..n_nodes).map(|v| cg.of_node[v][rng.index(cg.of_node[v].len())]).collect();
+        let mut dense = BusCostModel::new(&s, &cg, &routes, &cgra);
+        let mut hash = HashBusCostModel::new(&s, &cg, &routes);
+        dense.reset(&assign);
+        hash.reset(&assign);
+        assert_models_agree(&dense, &hash, &assign, &b.name);
+
+        // Random claim/release walk: detach, reassign, attach — with an
+        // occasional mid-walk reset (the solver's restart path).
+        for step in 0..50 {
+            let v = rng.index(n_nodes);
+            dense.detach(v, &assign);
+            hash.detach(v, &assign);
+            assign[v] = cg.of_node[v][rng.index(cg.of_node[v].len())];
+            dense.attach(v, &assign);
+            hash.attach(v, &assign);
+            assert_models_agree(&dense, &hash, &assign, &format!("{} step {step}", b.name));
+            if step % 17 == 16 {
+                dense.reset(&assign);
+                hash.reset(&assign);
+                assert_models_agree(&dense, &hash, &assign, &format!("{} reset {step}", b.name));
+            }
+        }
+        walked.fetch_add(1, Ordering::Relaxed);
+    });
+    assert!(
+        walked.load(Ordering::Relaxed) >= 25,
+        "too few cost-model walks exercised"
+    );
+}
+
+#[test]
+fn dense_bus_cost_handles_ii_wraparound() {
+    // Hand-built schedule whose late nodes wrap past the II boundary:
+    // t(a) = 3, t(w) = 4 at II = 2, so the output claim lands at modulo
+    // slot 0 and one mul→add MCID is GRF-forced (same modulo slot).
+    let cgra = StreamingCgra::paper_default();
+    let mut g = SDfg::new("wrap");
+    let r0 = g.add_node(NodeKind::Read { ch: 0, replica: 0 });
+    let r1 = g.add_node(NodeKind::Read { ch: 1, replica: 0 });
+    let m0 = g.add_node(NodeKind::Mul { ch: 0, kr: 0 });
+    let m1 = g.add_node(NodeKind::Mul { ch: 1, kr: 0 });
+    let a = g.add_node(NodeKind::Add { kr: 0 });
+    let w = g.add_node(NodeKind::Write { kr: 0 });
+    g.add_edge(r0, m0, EdgeKind::Input);
+    g.add_edge(r1, m1, EdgeKind::Input);
+    g.add_edge(m0, a, EdgeKind::Internal);
+    g.add_edge(m1, a, EdgeKind::Internal);
+    g.add_edge(a, w, EdgeKind::Output);
+    let s = ScheduledSDfg { g, ii: 2, t: vec![0, 1, 0, 1, 3, 4] };
+    s.verify(&cgra).unwrap();
+    let plan = route::preallocate(&s, &cgra).unwrap();
+    assert_eq!(plan.grf_count(), 1, "m1→a is same-modulo and GRF-forced");
+    assert_eq!(plan.lrf_count(), 1, "m0→a crosses slots and takes the LRF");
+
+    let cg = conflict::build(&s, &cgra, &plan);
+    assert_graphs_identical(&cg, &build_naive(&s, &cgra, &plan), "wrap");
+
+    let routes: Vec<Option<Route>> = (0..s.g.edges().len()).map(|i| plan.route(i)).collect();
+    let mut rng = Pcg64::seeded(0x77ab_5eed);
+    let n_nodes = cg.of_node.len();
+    let mut assign: Vec<usize> = (0..n_nodes).map(|v| cg.of_node[v][0]).collect();
+    let mut dense = BusCostModel::new(&s, &cg, &routes, &cgra);
+    let mut hash = HashBusCostModel::new(&s, &cg, &routes);
+    dense.reset(&assign);
+    hash.reset(&assign);
+    assert_models_agree(&dense, &hash, &assign, "wrap init");
+    // The write's output claim must have wrapped to slot 0 (t(w) = 4).
+    assert!(
+        dense
+            .claims_snapshot()
+            .iter()
+            .any(|(bus, _)| matches!(bus, sparsemap::bind::BusAt::Row { slot: 0, .. })),
+        "expected a slot-0 row-bus claim from the wrapped write"
+    );
+    for step in 0..120 {
+        let v = rng.index(n_nodes);
+        dense.detach(v, &assign);
+        hash.detach(v, &assign);
+        assign[v] = cg.of_node[v][rng.index(cg.of_node[v].len())];
+        dense.attach(v, &assign);
+        hash.attach(v, &assign);
+        assert_models_agree(&dense, &hash, &assign, &format!("wrap step {step}"));
+    }
+}
+
+#[test]
+fn sbts_trajectory_identical_under_either_cost_model() {
+    // The solve is a pure function of (cg, seed, cost); with behaviorally
+    // identical cost models the whole trajectory — iterations included —
+    // must match, which is what makes final mappings byte-identical.
+    let cgra = StreamingCgra::paper_default();
+    for nb in paper_blocks() {
+        let (g, _) = build_sdfg(&nb.block);
+        let Some((s, plan)) = routable_schedule(&g, &cgra) else {
+            panic!("{}: no routable schedule", nb.label);
+        };
+        let cg = conflict::build(&s, &cgra, &plan);
+        let routes: Vec<Option<Route>> =
+            (0..s.g.edges().len()).map(|i| plan.route(i)).collect();
+        for seed in [1u64, 42, 1337] {
+            let mut dense = BusCostModel::new(&s, &cg, &routes, &cgra);
+            let mut hash = HashBusCostModel::new(&s, &cg, &routes);
+            let a = solve_with_scratch(&cg, 30_000, seed, &mut dense, &mut SolverScratch::new());
+            let b = solve_with_scratch(&cg, 30_000, seed, &mut hash, &mut SolverScratch::new());
+            assert_eq!(a.assignment, b.assignment, "{} seed {seed}", nb.label);
+            assert_eq!(a.chosen, b.chosen, "{} seed {seed}", nb.label);
+            assert_eq!(a.clean, b.clean, "{} seed {seed}", nb.label);
+            assert_eq!(a.iterations, b.iterations, "{} seed {seed}", nb.label);
+        }
+    }
+}
+
+/// bind_with's attempt loop, composed from the oracles: naive all-pairs
+/// conflict graph + HashMap cost model + the same seeds, attempt count and
+/// final verification.
+fn oracle_bind(
+    s: &ScheduledSDfg,
+    cgra: &StreamingCgra,
+    mis_iterations: usize,
+    seed: u64,
+) -> Option<(Vec<Placement>, usize)> {
+    let plan = route::preallocate(s, cgra).ok()?;
+    let cg = build_naive(s, cgra, &plan);
+    let routes: Vec<Option<Route>> = (0..s.g.edges().len()).map(|i| plan.route(i)).collect();
+    let mut cost = HashBusCostModel::new(s, &cg, &routes);
+    let mut spent = 0usize;
+    for attempt in 0..3u64 {
+        let res = solve_with_scratch(
+            &cg,
+            mis_iterations,
+            seed.wrapping_add(attempt * 0x9e37),
+            &mut cost,
+            &mut SolverScratch::new(),
+        );
+        spent += res.iterations;
+        if !res.clean {
+            continue;
+        }
+        let placements: Vec<Placement> = res
+            .assignment
+            .iter()
+            .map(|&c| match cg.candidates[c] {
+                Candidate::Read { ibus, .. } => Placement::InputBus(ibus),
+                Candidate::Write { obus, .. } => Placement::OutputBus(obus),
+                Candidate::Op { pe, .. } => Placement::Pe(pe),
+            })
+            .collect();
+        // Mirror bind_with's final verification step.
+        let mapping = sparsemap::bind::Mapping {
+            s: s.clone(),
+            placements,
+            plan_routes: routes.clone(),
+            mis_iterations: spent,
+            ii: s.ii,
+        };
+        mapping.verify(cgra).ok()?;
+        return Some((mapping.placements, spent));
+    }
+    None
+}
+
+#[test]
+fn production_bind_matches_naive_pipeline_end_to_end() {
+    // bind() (bucketed build + dense cost) vs the same attempt loop
+    // composed from the oracles — placements and iteration counts must be
+    // byte-identical on every paper block.
+    let cgra = StreamingCgra::paper_default();
+    let (mis_iterations, seed) = (60_000usize, 42u64);
+    for nb in paper_blocks() {
+        let (g, _) = build_sdfg(&nb.block);
+        let s = match schedule_at(&g, &cgra, Techniques::all(), mii(&g, &cgra) + 1) {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let fast = bind(&s, &cgra, mis_iterations, seed);
+        let naive = oracle_bind(&s, &cgra, mis_iterations, seed);
+
+        match (fast, naive) {
+            (Ok(m), Some((placements, spent))) => {
+                assert_eq!(m.placements, placements, "{}: placements differ", nb.label);
+                assert_eq!(m.mis_iterations, spent, "{}: iteration counts differ", nb.label);
+            }
+            (Err(_), None) => {}
+            (fast, naive) => panic!(
+                "{}: outcome diverged — production ok={}, oracle ok={}",
+                nb.label,
+                fast.is_ok(),
+                naive.is_some()
+            ),
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Golden mapping snapshots: the full SparseMap pipeline is deterministic,
+//! so the `(II, COPs, MCIDs)` triple plus a placement fingerprint of every
+//! paper block is pinned to a committed snapshot file. Any mapper change
+//! that shifts a result — scheduler, router, conflict graph, SBTS solver,
+//! cost model — fails this test loudly instead of drifting silently.
+//!
+//! Snapshot file: `rust/tests/golden_mappings.txt`, one
+//! `label ii cops mcids placements=<hex fnv64>` line per block.
+//!
+//! * First run (file absent): the snapshot is written and the test passes
+//!   with a loud "bootstrapped — commit it" notice.
+//! * Intentional change: re-bless with `SPARSEMAP_BLESS=1 cargo test`,
+//!   review the diff, commit the updated file alongside the change.
+
+use sparsemap::arch::StreamingCgra;
+use sparsemap::bind::{Mapping, Placement};
+use sparsemap::mapper::{map_block, MapperOptions};
+use sparsemap::sparse::gen::paper_blocks;
+
+fn golden_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden_mappings.txt")
+}
+
+/// FNV-1a 64 over the mapping's II + placement list — platform-independent
+/// and order-stable, so the fingerprint moves iff a placement moves.
+fn fingerprint(m: &Mapping) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |byte: u8| {
+        h ^= byte as u64;
+        h = h.wrapping_mul(PRIME);
+    };
+    for b in (m.ii as u64).to_le_bytes() {
+        eat(b);
+    }
+    for p in &m.placements {
+        let (tag, x, y) = match *p {
+            Placement::InputBus(i) => (1u8, i, 0),
+            Placement::OutputBus(i) => (2u8, i, 0),
+            Placement::Pe(pe) => (3u8, pe.row, pe.col),
+        };
+        eat(tag);
+        for b in (x as u64).to_le_bytes() {
+            eat(b);
+        }
+        for b in (y as u64).to_le_bytes() {
+            eat(b);
+        }
+    }
+    h
+}
+
+fn render_snapshot() -> String {
+    let cgra = StreamingCgra::paper_default();
+    let opts = MapperOptions::sparsemap();
+    let mut out = String::new();
+    for nb in paper_blocks() {
+        let m = map_block(&nb.block, &cgra, &opts)
+            .unwrap_or_else(|e| panic!("{}: paper block must map: {e}", nb.label))
+            .mapping;
+        m.verify(&cgra).unwrap();
+        out.push_str(&format!(
+            "{} ii={} cops={} mcids={} placements={:016x}\n",
+            nb.label,
+            m.ii,
+            m.cops(),
+            m.mcids(),
+            fingerprint(&m)
+        ));
+    }
+    out
+}
+
+#[test]
+fn golden_mappings_match_snapshot() {
+    let actual = render_snapshot();
+    let path = golden_path();
+    let bless = std::env::var("SPARSEMAP_BLESS").is_ok_and(|v| v == "1");
+    if bless || !path.exists() {
+        // On GitHub runners a missing snapshot means it was never
+        // committed — bootstrapping there would silently disable the
+        // check on every (fresh-checkout) run, so fail loudly instead.
+        assert!(
+            bless || std::env::var("GITHUB_ACTIONS").is_err(),
+            "golden snapshot {} is not committed — run the test suite in a \
+             toolchain-equipped checkout and commit the bootstrapped file",
+            path.display()
+        );
+        std::fs::write(&path, &actual).expect("write golden snapshot");
+        eprintln!(
+            "golden_mappings: {} snapshot at {} — review and commit it:\n{actual}",
+            if bless { "re-blessed" } else { "bootstrapped" },
+            path.display()
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(&path).expect("read golden snapshot");
+    assert_eq!(
+        actual, want,
+        "paper-block mappings shifted from the committed snapshot at {}.\n\
+         If this change is intentional, re-bless with `SPARSEMAP_BLESS=1 \
+         cargo test golden` and commit the updated file; otherwise a mapper \
+         change silently altered results.",
+        path.display()
+    );
+}

@@ -170,7 +170,7 @@ fn prop_incremental_hot_nodes_match_naive() {
         let n_nodes = cg.of_node.len();
         let mut assign: Vec<usize> =
             (0..n_nodes).map(|v| cg.of_node[v][rng.index(cg.of_node[v].len())]).collect();
-        let mut cost = BusCostModel::new(&s, &cg, &routes);
+        let mut cost = BusCostModel::new(&s, &cg, &routes, &cgra);
         cost.reset(&assign);
 
         let mut buf = Vec::new();
@@ -185,7 +185,7 @@ fn prop_incremental_hot_nodes_match_naive() {
             let naive = cost.hot_nodes_naive(&assign);
             assert_eq!(buf, naive, "{}: hot-node sets diverged", b.name);
 
-            let mut fresh = BusCostModel::new(&s, &cg, &routes);
+            let mut fresh = BusCostModel::new(&s, &cg, &routes, &cgra);
             fresh.reset(&assign);
             assert_eq!(cost.total(), fresh.total(), "{}: cost drifted", b.name);
         }

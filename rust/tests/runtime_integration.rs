@@ -9,10 +9,11 @@ use sparsemap::sim::simulate;
 use sparsemap::sparse::gen::paper_blocks;
 use sparsemap::util::rng::Pcg64;
 
-/// The executor needs both `make artifacts` *and* the `pjrt` feature (the
-/// default offline build ships a stub runtime — see `sparsemap::runtime`).
+/// The executor needs `make artifacts` *and* the `pjrt` + `pjrt-xla`
+/// features (the default offline build — and the CI-checked
+/// `--features pjrt` leg — ship a stub runtime; see `sparsemap::runtime`).
 fn artifacts_available() -> bool {
-    cfg!(feature = "pjrt")
+    cfg!(feature = "pjrt-xla")
         && std::path::Path::new(&default_artifacts_dir()).join("manifest.tsv").exists()
 }
 
