@@ -8,7 +8,7 @@
 
 use sparsemap::arch::StreamingCgra;
 use sparsemap::mapper::{map_block, MapperOptions};
-use sparsemap::sparse::gen::paper_blocks;
+use sparsemap::sparse::gen::{paper_blocks, wide_blocks};
 use sparsemap::util::table::Table;
 
 fn main() {
@@ -32,4 +32,26 @@ fn main() {
     }
     println!("SparseMap across fabric geometries (II and speedup vs dense):\n{t}");
     println!("\nLarger fabrics buy lower II until the I/O buses (reads/writes per\ncycle) become the binding resource — exactly the paper's MII formula.");
+
+    // The wide-kernel-axis class makes that tradeoff vivid: at k = 128 the
+    // output buses (N per cycle) bind II long before the PEs do, so extra
+    // rows pay off directly while extra columns barely move the needle.
+    let wide_opts = MapperOptions::wide();
+    let mut tw = Table::new(["block", "4x4 II(S)", "4x8 II(S)", "8x8 II(S)"]);
+    for b in wide_blocks() {
+        let mut cells = vec![b.name.clone()];
+        for &(n, m) in &[(4usize, 4usize), (4, 8), (8, 8)] {
+            let cgra = StreamingCgra::new(n, m, 8, 8);
+            match map_block(&b, &cgra, &wide_opts) {
+                Ok(out) => cells.push(format!(
+                    "{} ({:.2}x)",
+                    out.mapping.ii,
+                    out.speedup(&b, &cgra)
+                )),
+                Err(_) => cells.push("fail".into()),
+            }
+        }
+        tw.row(cells);
+    }
+    println!("\nWide blocks (k > 64 kernels / c > 64 channels):\n{tw}");
 }

@@ -11,12 +11,13 @@ use sparsemap::arch::StreamingCgra;
 use sparsemap::bind::oracle;
 use sparsemap::bind::{self, conflict, mis, route, BusCostModel, SecondaryCost};
 use sparsemap::config::Techniques;
-use sparsemap::dfg::analysis::mii;
+use sparsemap::dfg::analysis::{mii, AssociationMatrix};
 use sparsemap::dfg::build::build_sdfg;
+use sparsemap::dfg::oracle as dfg_oracle;
 use sparsemap::mapper::{map_block, MapperOptions};
 use sparsemap::sched::{baseline, sparsemap as sm_sched};
 use sparsemap::sim::simulate_and_check;
-use sparsemap::sparse::gen::paper_blocks;
+use sparsemap::sparse::gen::{paper_blocks, wide_blocks};
 use sparsemap::util::bench::{black_box, repo_root_path, BenchConfig, Bencher};
 
 fn main() {
@@ -35,6 +36,14 @@ fn main() {
 
         b.bench(&format!("{label}/build_sdfg"), || {
             black_box(build_sdfg(&nb.block));
+        });
+        // Association matrix on the k ≤ 64 inline fast path, vs the naive
+        // set-based oracle — the regression guard for the KernelMask spill.
+        b.bench(&format!("{label}/assoc_build"), || {
+            black_box(AssociationMatrix::build(&g));
+        });
+        b.bench(&format!("{label}/assoc_build_naive"), || {
+            black_box(dfg_oracle::build_naive(&g));
         });
         b.bench(&format!("{label}/schedule(sparsemap)"), || {
             let ii = if label == "block1" { base } else { base + 1 };
@@ -123,6 +132,38 @@ fn main() {
             black_box(simulate_and_check(&mapping, &nb.block, &cgra, 64, 7).unwrap());
         });
     }
+
+    // Wide-kernel-axis rows: the KernelMask spill path (k > 64) and the
+    // wide-block cold-start mapping, so the cost of lifting the 64-kernel
+    // limit stays tracked in BENCH_mapper.json. Smaller budget — one wide
+    // map_block is orders of magnitude above the micro rows.
+    let mut bw = Bencher::with_config(BenchConfig {
+        warmup_ns: 20_000_000,
+        measure_ns: 120_000_000,
+        samples: 4,
+    });
+    for wb in wide_blocks() {
+        if !matches!(wb.name.as_str(), "wide_k128" | "wide_k256") {
+            continue;
+        }
+        let (g, _) = build_sdfg(&wb);
+        bw.bench(&format!("{}/assoc_build", wb.name), || {
+            black_box(AssociationMatrix::build(&g));
+        });
+        bw.bench(&format!("{}/assoc_build_naive", wb.name), || {
+            black_box(dfg_oracle::build_naive(&g));
+        });
+    }
+    let wide = wide_blocks().into_iter().find(|wb| wb.name == "wide_k128").unwrap();
+    let wide_opts = MapperOptions::wide().with_parallelism(4);
+    bw.bench("wide_k128/map_block_par4", || {
+        black_box(map_block(&wide, &cgra, &wide_opts).ok());
+    });
+    let wide_mapping = map_block(&wide, &cgra, &wide_opts).expect("wide_k128 maps").mapping;
+    bw.bench("wide_k128/simulate_8it", || {
+        black_box(simulate_and_check(&wide_mapping, &wide, &cgra, 8, 7).unwrap());
+    });
+    b.results.extend(bw.results);
 
     let json = repo_root_path("BENCH_mapper.json");
     match b.write_json(&json) {

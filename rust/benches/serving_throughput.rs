@@ -13,7 +13,7 @@ use std::time::Instant;
 
 use sparsemap::config::SparsemapConfig;
 use sparsemap::coordinator::{Coordinator, InferRequest};
-use sparsemap::sparse::gen::paper_blocks;
+use sparsemap::sparse::gen::{paper_blocks, wide_blocks};
 use sparsemap::util::bench::{repo_root_path, write_json_merged, BenchResult};
 use sparsemap::util::rng::Pcg64;
 use sparsemap::util::stats::Summary;
@@ -95,6 +95,62 @@ fn main() {
         cold_summary.add(cold.as_nanos() as f64);
         results.push(BenchResult {
             name: format!("serving/workers={workers}/cold_start_request"),
+            summary: cold_summary,
+            iters_per_sample: 1,
+        });
+    }
+
+    // Wide-block serving scenario: a k = 128 block (beyond the retired
+    // 64-kernel mask limit) through the full request path. The cold-start
+    // row is the wide mapping cost as a user sees it; the per-request row
+    // is the steady-state (cache-hit) wide simulation cost.
+    {
+        let wide = Arc::new(
+            wide_blocks().into_iter().find(|b| b.name == "wide_k128").expect("wide_k128"),
+        );
+        let wide_point = sparsemap::mapper::MapperOptions::wide();
+        let mut cfg = SparsemapConfig { workers: 4, queue_depth: 32, ..SparsemapConfig::default() };
+        cfg.mis_iterations = wide_point.mis_iterations;
+        cfg.ii_slack = wide_point.ii_slack;
+        let coord = Coordinator::new(&cfg);
+
+        let t_cold = Instant::now();
+        let xs = stream(&wide, 4, 99);
+        coord.submit(InferRequest { id: 20_000, block: Arc::clone(&wide), xs }).unwrap();
+        let _ = coord.collect(1);
+        let cold = t_cold.elapsed();
+
+        let n = 48u64;
+        let iters = 8;
+        let t0 = Instant::now();
+        let mut collected = 0usize;
+        for id in 0..n {
+            let xs = stream(&wide, iters, id);
+            coord.submit(InferRequest { id, block: Arc::clone(&wide), xs }).unwrap();
+            if id % 16 == 15 {
+                collected += coord.collect(8).len();
+            }
+        }
+        collected += coord.collect(n as usize - collected).len();
+        assert_eq!(collected, n as usize);
+        let wall = t0.elapsed();
+        println!(
+            "wide_k128: {n} requests in {wall:?} → {:.0} req/s, cold-start {:.2} ms",
+            n as f64 / wall.as_secs_f64(),
+            cold.as_secs_f64() * 1e3,
+        );
+
+        let mut per_request = Summary::new();
+        per_request.add(wall.as_nanos() as f64 / n as f64);
+        results.push(BenchResult {
+            name: "serving/wide_k128/per_request".into(),
+            summary: per_request,
+            iters_per_sample: n,
+        });
+        let mut cold_summary = Summary::new();
+        cold_summary.add(cold.as_nanos() as f64);
+        results.push(BenchResult {
+            name: "serving/wide_k128/cold_start_request".into(),
             summary: cold_summary,
             iters_per_sample: 1,
         });

@@ -147,8 +147,19 @@ impl Coordinator {
     }
 
     /// Collect exactly `n` results (any order — jobs are tagged by id).
+    /// If the worker pool exits before delivering them all (panic,
+    /// shutdown), the remaining slots come back as `Err(Error::Runtime)`
+    /// instead of poisoning the caller with a panic.
     pub fn collect(&self, n: usize) -> Vec<Result<InferResult>> {
-        (0..n).map(|_| self.results.recv().expect("workers alive")).collect()
+        (0..n)
+            .map(|_| {
+                self.results.recv().unwrap_or_else(|_| {
+                    Err(Error::Runtime(
+                        "worker pool exited before delivering all results".into(),
+                    ))
+                })
+            })
+            .collect()
     }
 }
 
@@ -213,8 +224,16 @@ fn run_one(
 ) -> Result<(Vec<Vec<f32>>, u64, usize, bool)> {
     // Mapping with a compile-once, single-flight cache keyed by block
     // identity: concurrent requests for the same block wait on its slot
-    // instead of mapping twice.
-    let key = format!("{}#{}x{}", req.block.name, req.block.c, req.block.k);
+    // instead of mapping twice. The key carries the mask's content
+    // fingerprint — name and shape alone would silently alias two
+    // differently-pruned blocks onto one mapping.
+    let key = format!(
+        "{}#{}x{}@{:016x}",
+        req.block.name,
+        req.block.c,
+        req.block.k,
+        req.block.mask_fingerprint()
+    );
     let slot: CacheSlot = {
         let mut guard = cache.lock().expect("cache lock");
         Arc::clone(guard.entry(key).or_default())
@@ -296,6 +315,72 @@ mod tests {
             let want = block.forward(x);
             for (a, b) in y.iter().zip(&want) {
                 assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn same_shape_different_masks_do_not_share_mappings() {
+        // Regression: the cache used to key by name#CxK only, so two blocks
+        // with equal name and shape but different sparsity patterns shared
+        // one mapping and returned wrong outputs for the second.
+        let cfg = small_cfg();
+        let coord = Coordinator::new(&cfg);
+        let a = Arc::new(
+            SparseBlock::from_mask(
+                "twin",
+                3,
+                3,
+                vec![true, true, false, false, true, true, true, false, true],
+            )
+            .unwrap(),
+        );
+        let b = Arc::new(
+            SparseBlock::from_mask(
+                "twin",
+                3,
+                3,
+                vec![true, false, true, true, true, false, false, true, true],
+            )
+            .unwrap(),
+        );
+        let xs = stream_for(&a, 6, 3);
+        coord.submit(InferRequest { id: 0, block: Arc::clone(&a), xs: xs.clone() }).unwrap();
+        coord.submit(InferRequest { id: 1, block: Arc::clone(&b), xs: xs.clone() }).unwrap();
+        let results = coord.collect(2);
+        assert_eq!(coord.metrics.snapshot().cache_misses, 2, "one mapping per mask");
+        for r in results {
+            let r = r.expect("job ok");
+            let block = if r.id == 0 { &a } else { &b };
+            for (x, y) in xs.iter().zip(&r.outputs) {
+                let want = block.forward(x);
+                for (got, w) in y.iter().zip(&want) {
+                    assert!(
+                        (got - w).abs() < 1e-4 * (1.0 + w.abs()),
+                        "id {}: {got} vs {w}",
+                        r.id
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn collect_returns_errors_when_workers_gone() {
+        let cfg = small_cfg();
+        let mut coord = Coordinator::new(&cfg);
+        // Shut the pool down out from under collect(): close the queue and
+        // join every worker, exactly the state a panicked pool leaves.
+        coord.tx.take();
+        for w in coord.workers.drain(..) {
+            w.join().unwrap();
+        }
+        let results = coord.collect(3);
+        assert_eq!(results.len(), 3);
+        for r in results {
+            match r {
+                Err(Error::Runtime(msg)) => assert!(msg.contains("worker pool"), "{msg}"),
+                other => panic!("expected Runtime error, got {other:?}"),
             }
         }
     }

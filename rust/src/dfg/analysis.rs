@@ -3,10 +3,19 @@
 
 use crate::arch::StreamingCgra;
 use crate::dfg::{NodeId, NodeKind, SDfg};
+use crate::util::KernelMask;
 
 /// Pairwise channel association (paper §2.1: number of kernels requiring
 /// both channels), computed once per block and consulted by AIBA on every
 /// bus-allocation decision.
+///
+/// Kernel sets are held as [`KernelMask`]s: the association signal is
+/// defined for arbitrary kernel counts, so blocks wider than 64 kernels
+/// (ResNet/VGG layers routinely carry 128–512) spill to multi-word masks
+/// instead of hitting a width assert. The mask-based build is locked
+/// byte-identical to the naive set-based oracle
+/// ([`crate::dfg::oracle::build_naive`]) by
+/// `tests/association_equivalence.rs`.
 #[derive(Clone, Debug)]
 pub struct AssociationMatrix {
     /// Read node ids, in the order rows/cols of `assoc` are laid out.
@@ -25,23 +34,31 @@ impl AssociationMatrix {
     pub fn build(g: &SDfg) -> Self {
         let reads = g.reads();
         let n = reads.len();
-        // kernel set per read, as bit mask over kernels (k ≤ 64 everywhere
-        // in this domain; fall back to a set if ever exceeded).
-        let kernels_of = |r: NodeId| -> u64 {
-            let mut bits = 0u64;
+        // Kernel set per read: inline u64 for k ≤ 64, multi-word above.
+        // One pass over the muls pins the kernel-axis width so every mask
+        // is pre-sized (no spill reallocation during the bulk build).
+        let nk = g
+            .nodes()
+            .filter_map(|v| match g.kind(v) {
+                NodeKind::Mul { kr, .. } => Some(kr + 1),
+                _ => None,
+            })
+            .max()
+            .unwrap_or(0);
+        let kernels_of = |r: NodeId| -> KernelMask {
+            let mut bits = KernelMask::with_kernels(nk);
             for m in g.fanout_muls(r) {
                 if let NodeKind::Mul { kr, .. } = g.kind(m) {
-                    assert!(kr < 64, "kernel index beyond u64 bitmask");
-                    bits |= 1 << kr;
+                    bits.insert(kr);
                 }
             }
             bits
         };
-        let masks: Vec<u64> = reads.iter().map(|&r| kernels_of(r)).collect();
+        let masks: Vec<KernelMask> = reads.iter().map(|&r| kernels_of(r)).collect();
         let mut assoc = vec![0u32; n * n];
         for i in 0..n {
             for j in 0..n {
-                assoc[i * n + j] = (masks[i] & masks[j]).count_ones();
+                assoc[i * n + j] = masks[i].intersection_count(&masks[j]);
             }
         }
         let mut idx_of = vec![usize::MAX; g.len()];

@@ -9,42 +9,77 @@ use crate::dfg::{EdgeKind, NodeId, NodeKind, SDfg};
 use crate::sparse::SparseBlock;
 
 /// Handles into the built graph, used by schedulers.
+///
+/// Lookups (`read`/`mul`/`write`) go through dense tables indexed by
+/// channel, `(channel, kernel)` and kernel — the per-entry linear scans
+/// they replace were O(nnz) per query, which made the adder-tree
+/// construction loop quadratic in nnz on wide (k ≥ 96) blocks.
 #[derive(Clone, Debug, Default)]
 pub struct SDfgIndex {
-    /// Read node per channel (dense over channels with fanout ≥ 1).
-    pub read_of_channel: Vec<(usize, NodeId)>,
-    /// Mul node per (channel, kernel) nonzero.
-    pub mul_of: Vec<((usize, usize), NodeId)>,
     /// Adds per kernel (in construction order).
     pub adds_of_kernel: Vec<(usize, Vec<NodeId>)>,
-    /// Write node per non-empty kernel.
-    pub write_of_kernel: Vec<(usize, NodeId)>,
+    /// O(1) lookup tables (`ABSENT` = no node): per channel, `(c, k)`
+    /// row-major, per kernel.
+    read_lut: Vec<NodeId>,
+    mul_lut: Vec<NodeId>,
+    write_lut: Vec<NodeId>,
+    /// Kernel-axis stride of `mul_lut`.
+    k: usize,
 }
 
+/// Sentinel for "no node" in the dense lookup tables.
+const ABSENT: NodeId = usize::MAX;
+
 impl SDfgIndex {
+    /// Empty index with lookup tables sized for a `c × k` block.
+    fn sized(c: usize, k: usize) -> Self {
+        SDfgIndex {
+            adds_of_kernel: Vec::new(),
+            read_lut: vec![ABSENT; c],
+            mul_lut: vec![ABSENT; c * k],
+            write_lut: vec![ABSENT; k],
+            k,
+        }
+    }
+
+    fn note_read(&mut self, ch: usize, v: NodeId) {
+        self.read_lut[ch] = v;
+    }
+
+    fn note_mul(&mut self, ch: usize, kr: usize, v: NodeId) {
+        self.mul_lut[ch * self.k + kr] = v;
+    }
+
+    fn note_write(&mut self, kr: usize, v: NodeId) {
+        self.write_lut[kr] = v;
+    }
+
     pub fn read(&self, ch: usize) -> Option<NodeId> {
-        self.read_of_channel.iter().find(|(c, _)| *c == ch).map(|&(_, v)| v)
+        self.read_lut.get(ch).copied().filter(|&v| v != ABSENT)
     }
 
     pub fn mul(&self, ch: usize, kr: usize) -> Option<NodeId> {
-        self.mul_of.iter().find(|((c, k), _)| *c == ch && *k == kr).map(|&(_, v)| v)
+        if self.k == 0 || kr >= self.k {
+            return None;
+        }
+        self.mul_lut.get(ch * self.k + kr).copied().filter(|&v| v != ABSENT)
     }
 
     pub fn write(&self, kr: usize) -> Option<NodeId> {
-        self.write_of_kernel.iter().find(|(k, _)| *k == kr).map(|&(_, v)| v)
+        self.write_lut.get(kr).copied().filter(|&v| v != ABSENT)
     }
 }
 
 /// Build the s-DFG of a block with fixed balanced adder trees.
 pub fn build_sdfg(block: &SparseBlock) -> (SDfg, SDfgIndex) {
     let mut g = SDfg::new(&block.name);
-    let mut index = SDfgIndex::default();
+    let mut index = SDfgIndex::sized(block.c, block.k);
 
     // Input readings, channel order.
     for ch in 0..block.c {
         if block.channel_fanout(ch) > 0 {
             let r = g.add_node(NodeKind::Read { ch, replica: 0 });
-            index.read_of_channel.push((ch, r));
+            index.note_read(ch, r);
         }
     }
 
@@ -54,7 +89,7 @@ pub fn build_sdfg(block: &SparseBlock) -> (SDfg, SDfgIndex) {
         for kr in block.kernels_of_channel(ch) {
             let m = g.add_node(NodeKind::Mul { ch, kr });
             g.add_edge(r, m, EdgeKind::Input);
-            index.mul_of.push(((ch, kr), m));
+            index.note_mul(ch, kr, m);
         }
     }
 
@@ -89,7 +124,7 @@ pub fn build_sdfg(block: &SparseBlock) -> (SDfg, SDfgIndex) {
         let w = g.add_node(NodeKind::Write { kr });
         g.add_edge(root, w, EdgeKind::Output);
         index.adds_of_kernel.push((kr, adds));
-        index.write_of_kernel.push((kr, w));
+        index.note_write(kr, w);
     }
 
     debug_assert!(g.validate().is_ok(), "freshly built s-DFG must validate");
@@ -153,6 +188,53 @@ mod tests {
         let prod: Vec<_> = g.predecessors(w1).collect();
         assert_eq!(prod.len(), 1);
         assert!(matches!(g.kind(prod[0]), NodeKind::Mul { kr: 1, .. }));
+    }
+
+    #[test]
+    fn index_lookup_tables_match_graph() {
+        // Every dense-LUT answer must agree with the graph and the mask:
+        // present exactly where the block has structure, with the right
+        // node kind; None on absent slots and out-of-range queries.
+        let b = random_block("lut", 9, 130, 0.8, 3);
+        let (g, idx) = build_sdfg(&b);
+        for ch in 0..b.c {
+            match idx.read(ch) {
+                Some(r) => {
+                    assert!(b.channel_fanout(ch) > 0);
+                    assert!(matches!(g.kind(r), NodeKind::Read { ch: c2, replica: 0 } if c2 == ch));
+                }
+                None => assert_eq!(b.channel_fanout(ch), 0, "read({ch})"),
+            }
+            for kr in 0..b.k {
+                match idx.mul(ch, kr) {
+                    Some(m) => {
+                        assert!(b.has_weight(ch, kr));
+                        assert!(matches!(
+                            g.kind(m),
+                            NodeKind::Mul { ch: c2, kr: k2 } if c2 == ch && k2 == kr
+                        ));
+                    }
+                    None => assert!(!b.has_weight(ch, kr), "mul({ch},{kr})"),
+                }
+            }
+        }
+        for kr in 0..b.k {
+            match idx.write(kr) {
+                Some(w) => {
+                    assert!(b.kernel_size(kr) > 0);
+                    assert!(matches!(g.kind(w), NodeKind::Write { kr: k2 } if k2 == kr));
+                }
+                None => assert_eq!(b.kernel_size(kr), 0, "write({kr})"),
+            }
+        }
+        assert_eq!(idx.read(b.c + 5), None);
+        assert_eq!(idx.mul(b.c + 5, 0), None);
+        assert_eq!(idx.mul(0, b.k + 5), None);
+        assert_eq!(idx.write(b.k + 5), None);
+        let empty = SDfgIndex::default();
+        assert_eq!(empty.read(0), None);
+        assert_eq!(empty.mul(0, 0), None);
+        assert_eq!(empty.write(0), None);
     }
 
     #[test]

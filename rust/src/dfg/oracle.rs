@@ -1,0 +1,116 @@
+//! Reference ("oracle") implementations retired from the s-DFG analysis hot
+//! path, kept alive so the optimized rewrites stay provably equivalent —
+//! the same workflow [`crate::bind::oracle`] established for the binder.
+//!
+//! * [`build_naive`] — set-based association: the kernel set of every read
+//!   as a plain sorted `Vec<usize>`, pairwise association by two-pointer
+//!   intersection counting. Oracle for the [`crate::util::KernelMask`]-based
+//!   [`crate::dfg::analysis::AssociationMatrix::build`], locked
+//!   byte-identical by `tests/association_equivalence.rs` over the paper
+//!   blocks plus randomized wide blocks (k up to 256, c > 64).
+//!
+//! Nothing here is on the mapper's search path; allocation costs are
+//! irrelevant.
+
+use crate::dfg::{NodeId, NodeKind, SDfg};
+
+/// The association matrix as the naive definition computes it: reads in
+/// `SDfg::reads()` order, `assoc[i · n + j]` = number of kernels in which
+/// both read `i` and read `j` have a multiplication.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NaiveAssociation {
+    /// Read node ids, in the order rows/cols of `assoc` are laid out.
+    pub reads: Vec<NodeId>,
+    assoc: Vec<u32>,
+    n: usize,
+}
+
+impl NaiveAssociation {
+    /// Association between the i-th and j-th read (matrix order).
+    pub fn by_index(&self, i: usize, j: usize) -> u32 {
+        self.assoc[i * self.n + j]
+    }
+
+    /// Matrix dimension (number of reads).
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+}
+
+/// Build the association matrix from plain sorted kernel-index sets — no
+/// bitmask, no width limit, no cleverness. This is the paper's §2.1
+/// definition transcribed directly.
+pub fn build_naive(g: &SDfg) -> NaiveAssociation {
+    let reads = g.reads();
+    let n = reads.len();
+    let kernel_set = |r: NodeId| -> Vec<usize> {
+        let mut ks: Vec<usize> = g
+            .fanout_muls(r)
+            .into_iter()
+            .filter_map(|m| match g.kind(m) {
+                NodeKind::Mul { kr, .. } => Some(kr),
+                _ => None,
+            })
+            .collect();
+        ks.sort_unstable();
+        ks.dedup();
+        ks
+    };
+    let sets: Vec<Vec<usize>> = reads.iter().map(|&r| kernel_set(r)).collect();
+    let mut assoc = vec![0u32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            assoc[i * n + j] = sorted_intersection_count(&sets[i], &sets[j]);
+        }
+    }
+    NaiveAssociation { reads, assoc, n }
+}
+
+fn sorted_intersection_count(a: &[usize], b: &[usize]) -> u32 {
+    let (mut ia, mut ib, mut count) = (0usize, 0usize, 0u32);
+    while ia < a.len() && ib < b.len() {
+        match a[ia].cmp(&b[ib]) {
+            std::cmp::Ordering::Less => ia += 1,
+            std::cmp::Ordering::Greater => ib += 1,
+            std::cmp::Ordering::Equal => {
+                count += 1;
+                ia += 1;
+                ib += 1;
+            }
+        }
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::build::build_sdfg;
+    use crate::sparse::gen::random_block;
+
+    #[test]
+    fn naive_association_matches_block_definition() {
+        let b = random_block("n", 7, 9, 0.4, 11);
+        let (g, idx) = build_sdfg(&b);
+        let na = build_naive(&g);
+        for c1 in 0..b.c {
+            for c2 in 0..b.c {
+                let (Some(r1), Some(r2)) = (idx.read(c1), idx.read(c2)) else { continue };
+                let i = na.reads.iter().position(|&r| r == r1).unwrap();
+                let j = na.reads.iter().position(|&r| r == r2).unwrap();
+                assert_eq!(na.by_index(i, j) as usize, b.association(c1, c2), "({c1},{c2})");
+            }
+        }
+    }
+
+    #[test]
+    fn intersection_count_two_pointer() {
+        assert_eq!(sorted_intersection_count(&[1, 3, 5], &[2, 3, 5, 9]), 2);
+        assert_eq!(sorted_intersection_count(&[], &[1]), 0);
+        assert_eq!(sorted_intersection_count(&[64, 128, 200], &[64, 200]), 2);
+    }
+}

@@ -54,18 +54,31 @@
 //! `BENCH_mapper.json` at the repo root (written by `cargo bench --bench
 //! mapper_micro` / `--bench serving_throughput`).
 //!
+//! ## Wide blocks (k > 64, c > 64) are a supported workload class
+//!
+//! The kernel axis carries no width limit: the association analysis keys
+//! its per-read kernel sets on [`util::KernelMask`] — an inline single-word
+//! fast path for k ≤ 64 that spills to multi-word masks for the 96/128/256
+//! kernel counts real ResNet/VGG layers carry — and the s-DFG index
+//! resolves `(channel, kernel)` lookups through dense tables instead of
+//! linear scans. `sparse::gen::wide_blocks()` generates the class,
+//! `tests/wide_blocks.rs` drives a k = 128 block through map → simulate →
+//! serve, and the `wide_k128/*` bench rows track the spill cost.
+//!
 //! ## Hot-path rewrites are oracle-tested
 //!
 //! The required workflow for optimizing any mapper hot path: move the old
-//! implementation verbatim into [`bind::oracle`] (today:
-//! `oracle::build_naive`, the all-pairs conflict build, and
-//! `oracle::HashBusCostModel`, the HashMap cost model), then lock old and
-//! new together with a differential suite
-//! (`rust/tests/conflict_equivalence.rs` — byte-identical graphs, claim
-//! states and solver trajectories over all paper blocks plus randomized
-//! instances) and pin end-to-end results with golden snapshots
-//! (`rust/tests/golden_mappings.rs`). A rewrite ships only once the
-//! oracle suite proves it behavior-preserving.
+//! implementation verbatim into an oracle module ([`bind::oracle`]:
+//! `build_naive`, the all-pairs conflict build, and `HashBusCostModel`,
+//! the HashMap cost model; [`dfg::oracle`]: `build_naive`, the set-based
+//! association builder), then lock old and new together with a
+//! differential suite (`rust/tests/conflict_equivalence.rs` —
+//! byte-identical graphs, claim states and solver trajectories;
+//! `rust/tests/association_equivalence.rs` — byte-identical association
+//! matrices across the 64-kernel boundary — each over all paper blocks
+//! plus randomized instances) and pin end-to-end results with golden
+//! snapshots (`rust/tests/golden_mappings.rs`). A rewrite ships only once
+//! the oracle suite proves it behavior-preserving.
 
 pub mod arch;
 pub mod bind;

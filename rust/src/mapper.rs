@@ -71,6 +71,17 @@ impl MapperOptions {
         }
     }
 
+    /// The wide-block (k > 64 / c > 64) operating point: the paper
+    /// pipeline with a wider II slack (occupancy at MII is ceil-tight for
+    /// wide shapes, so the first few IIs rarely schedule) and a reduced
+    /// SBTS budget (wide conflict graphs are an order of magnitude larger
+    /// per solve). The wide tests, the golden snapshot's `wide_k128` line,
+    /// the `wide_*` bench rows and the design-space example all pin this
+    /// exact configuration — retune it here, then re-bless the snapshot.
+    pub fn wide() -> Self {
+        MapperOptions { ii_slack: 8, mis_iterations: 15_000, ..Self::sparsemap() }
+    }
+
     /// The BusMap [6] / Zhao [12] baseline pipeline (one schedule per II —
     /// heuristic [23] is deterministic and has no remap phase).
     pub fn baseline() -> Self {

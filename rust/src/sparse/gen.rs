@@ -8,6 +8,13 @@
 //!   generate masks with the exact published statistics instead
 //!   (substitution documented in DESIGN.md).
 //! * [`paper_blocks`] — the seven evaluation blocks of Table 2.
+//! * [`wide_blocks`] — the wide-kernel-axis workload class (k = 96, 128,
+//!   256, plus c > 64): real CNN layers whose kernel counts exceed the
+//!   64-bit inline fast path of the association analysis
+//!   ([`crate::util::KernelMask`] spills to multi-word masks). Densities
+//!   are chosen so every shape stays mappable on the paper's 4×4 fabric
+//!   with modest II escalation; `wide_k128` is the end-to-end serving
+//!   scenario exercised by `tests/wide_blocks.rs` and the wide bench rows.
 
 use crate::error::{Error, Result};
 use crate::sparse::SparseBlock;
@@ -146,9 +153,55 @@ pub fn paper_blocks() -> Vec<NamedBlock> {
         .collect()
 }
 
+/// The wide-kernel-axis evaluation blocks: kernel counts past the 64-bit
+/// inline mask (96 / 128 / 256) plus one block with c > 64 channels. The
+/// names encode the wide axis. Deterministic (seeded [`random_block`]), so
+/// tests, benches and golden snapshots all see identical masks.
+///
+/// Sparsities keep per-channel fanouts and per-kernel sizes small: the
+/// point of this class is the *width* of the kernel axis (association
+/// masks, index tables, output-bus pressure at II ≈ k/N), not dense
+/// arithmetic volume.
+pub fn wide_blocks() -> Vec<SparseBlock> {
+    vec![
+        random_block("wide_k96", 12, 96, 0.88, 9601),
+        // Density/seed chosen so the block is PE-bound (MII above the
+        // ⌈k/N⌉ output bound) and both occupancies relax within a few II
+        // escalations — a mappable, representative wide layer rather than
+        // a worst case.
+        random_block("wide_k128", 32, 128, 0.92, 12804),
+        random_block("wide_k256", 24, 256, 0.94, 25601),
+        random_block("wide_c96", 96, 16, 0.90, 9602),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn wide_blocks_shapes_and_liveness() {
+        let blocks = wide_blocks();
+        let want: [(&str, usize, usize); 4] = [
+            ("wide_k96", 12, 96),
+            ("wide_k128", 32, 128),
+            ("wide_k256", 24, 256),
+            ("wide_c96", 96, 16),
+        ];
+        assert_eq!(blocks.len(), want.len());
+        for (b, &(name, c, k)) in blocks.iter().zip(&want) {
+            assert_eq!(b.name, name);
+            assert_eq!((b.c, b.k), (c, k), "{name}");
+            for ch in 0..b.c {
+                assert!(b.channel_fanout(ch) >= 1, "{name}: dead channel {ch}");
+            }
+            for kr in 0..b.k {
+                assert!(b.kernel_size(kr) >= 1, "{name}: dead kernel {kr}");
+            }
+        }
+        // Deterministic across calls (golden snapshots depend on it).
+        assert_eq!(blocks, wide_blocks());
+    }
 
     #[test]
     fn random_block_no_dead_rows_or_cols() {

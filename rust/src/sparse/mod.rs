@@ -172,6 +172,27 @@ impl SparseBlock {
     pub fn mask_f32(&self) -> Vec<f32> {
         self.mask.iter().map(|&m| if m { 1.0 } else { 0.0 }).collect()
     }
+
+    /// FNV-1a 64 fingerprint of the block's *structure*: shape plus the
+    /// packed sparsity mask. A mapping depends on exactly this (weights
+    /// only enter at simulation time), so two same-named, same-shaped
+    /// blocks with different pruning patterns fingerprint apart — the
+    /// coordinator keys its mapping cache on it.
+    pub fn mask_fingerprint(&self) -> u64 {
+        let mut h = crate::util::Fnv64::new();
+        h.eat_u64(self.c as u64);
+        h.eat_u64(self.k as u64);
+        for chunk in self.mask.chunks(8) {
+            let mut byte = 0u8;
+            for (i, &m) in chunk.iter().enumerate() {
+                if m {
+                    byte |= 1 << i;
+                }
+            }
+            h.eat(byte);
+        }
+        h.finish()
+    }
 }
 
 #[cfg(test)]
@@ -236,5 +257,18 @@ mod tests {
     #[test]
     fn bad_mask_len_rejected() {
         assert!(SparseBlock::from_mask("bad", 2, 2, vec![true]).is_err());
+    }
+
+    #[test]
+    fn mask_fingerprint_separates_structure() {
+        let a = toy();
+        assert_eq!(a.mask_fingerprint(), toy().mask_fingerprint(), "deterministic");
+        // Same shape, one flipped mask bit → different fingerprint.
+        let b = SparseBlock::from_mask("toy", 3, 2, vec![true, true, true, true, false, true])
+            .unwrap();
+        assert_ne!(a.mask_fingerprint(), b.mask_fingerprint());
+        // Same flat mask, transposed shape → different fingerprint.
+        let c = SparseBlock::from_mask("toy", 2, 3, a.mask.clone()).unwrap();
+        assert_ne!(a.mask_fingerprint(), c.mask_fingerprint());
     }
 }

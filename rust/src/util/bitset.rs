@@ -1,7 +1,12 @@
-//! Dynamic bitset used for conflict-graph adjacency and MIS bookkeeping.
+//! Dynamic bitset used for conflict-graph adjacency and MIS bookkeeping,
+//! plus the kernel-axis mask of the association analysis.
 //!
 //! The SBTS solver's inner loop is dominated by neighbourhood queries;
-//! a word-packed bitset keeps those at a few ns per vertex.
+//! a word-packed bitset keeps those at a few ns per vertex. [`KernelMask`]
+//! serves the other hot set operation in the mapper — the per-read kernel
+//! sets whose pairwise intersections form the association matrix — with an
+//! inline single-word representation that only spills to heap storage for
+//! blocks wider than 64 kernels.
 
 /// Word-packed dynamic bitset with the set operations the binder needs.
 #[derive(Clone, PartialEq, Eq)]
@@ -147,6 +152,125 @@ impl std::fmt::Debug for BitSet {
     }
 }
 
+/// Kernel-set mask: which kernels consume a given channel, the per-read
+/// signal behind the association matrix (paper §2.1).
+///
+/// The representation is width-adaptive: kernels `0..64` live in one inline
+/// word (the paper's evaluation blocks never leave it, so the common case
+/// stays allocation-free and a single `AND`+`popcount` per pair), while
+/// kernel indices `≥ 64` — real CNN layers carry 128–512 output kernels —
+/// spill into a word vector that grows on demand. The hot operation is
+/// [`KernelMask::intersection_count`].
+#[derive(Clone, Debug, Default)]
+pub struct KernelMask {
+    /// Kernels `0..64` — the inline fast path, always present.
+    word0: u64,
+    /// Kernels `64..`: `spill[i]` holds kernels `64·(i+1) .. 64·(i+2)`.
+    /// Empty until a kernel index ≥ 64 is inserted.
+    spill: Vec<u64>,
+}
+
+/// Equality is over set *content*: trailing all-zero spill words (a
+/// pre-sized but unused capacity) do not distinguish masks.
+impl PartialEq for KernelMask {
+    fn eq(&self, other: &Self) -> bool {
+        if self.word0 != other.word0 {
+            return false;
+        }
+        let n = self.spill.len().max(other.spill.len());
+        (0..n).all(|i| {
+            self.spill.get(i).copied().unwrap_or(0) == other.spill.get(i).copied().unwrap_or(0)
+        })
+    }
+}
+
+impl Eq for KernelMask {}
+
+impl KernelMask {
+    /// Empty mask (inline representation; spills lazily on wide inserts).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Empty mask pre-sized for kernel indices `0..nk`, so bulk builds over
+    /// a known-width block never reallocate the spill vector.
+    pub fn with_kernels(nk: usize) -> Self {
+        KernelMask {
+            word0: 0,
+            spill: vec![0; nk.div_ceil(64).saturating_sub(1)],
+        }
+    }
+
+    #[inline]
+    pub fn insert(&mut self, kr: usize) {
+        if kr < 64 {
+            self.word0 |= 1u64 << kr;
+        } else {
+            let wi = kr / 64 - 1;
+            if self.spill.len() <= wi {
+                self.spill.resize(wi + 1, 0);
+            }
+            self.spill[wi] |= 1u64 << (kr & 63);
+        }
+    }
+
+    #[inline]
+    pub fn contains(&self, kr: usize) -> bool {
+        if kr < 64 {
+            (self.word0 >> kr) & 1 == 1
+        } else {
+            self.spill
+                .get(kr / 64 - 1)
+                .is_some_and(|w| (w >> (kr & 63)) & 1 == 1)
+        }
+    }
+
+    /// Number of kernels in the set.
+    pub fn count(&self) -> u32 {
+        self.word0.count_ones() + self.spill.iter().map(|w| w.count_ones()).sum::<u32>()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.word0 == 0 && self.spill.iter().all(|&w| w == 0)
+    }
+
+    /// Whether the mask left the inline single-word representation (i.e. a
+    /// kernel index ≥ 64 was inserted or capacity for one was reserved).
+    pub fn spilled(&self) -> bool {
+        !self.spill.is_empty()
+    }
+
+    /// `|self ∩ other|` — the association of two channels. Handles masks of
+    /// different spill widths (missing words are empty).
+    #[inline]
+    pub fn intersection_count(&self, other: &KernelMask) -> u32 {
+        let mut n = (self.word0 & other.word0).count_ones();
+        for (a, b) in self.spill.iter().zip(&other.spill) {
+            n += (a & b).count_ones();
+        }
+        n
+    }
+
+    /// Iterate set kernel indices in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        std::iter::once(&self.word0)
+            .chain(self.spill.iter())
+            .enumerate()
+            .flat_map(|(wi, &w)| {
+                let mut bits = w;
+                std::iter::from_fn(move || {
+                    if bits == 0 {
+                        None
+                    } else {
+                        let b = bits.trailing_zeros() as usize;
+                        bits &= bits - 1;
+                        Some(wi * 64 + b)
+                    }
+                })
+            })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -232,5 +356,88 @@ mod tests {
         b.insert(99);
         a.union_with(&b);
         assert!(a.contains(1) && a.contains(99));
+    }
+
+    #[test]
+    fn kernel_mask_inline_fast_path() {
+        let mut m = KernelMask::new();
+        for kr in [0usize, 7, 63] {
+            m.insert(kr);
+        }
+        assert!(!m.spilled(), "k ≤ 64 must stay inline");
+        assert!(m.contains(0) && m.contains(7) && m.contains(63));
+        assert!(!m.contains(1) && !m.contains(64) && !m.contains(200));
+        assert_eq!(m.count(), 3);
+        assert_eq!(m.iter().collect::<Vec<_>>(), vec![0, 7, 63]);
+    }
+
+    #[test]
+    fn kernel_mask_spills_across_word_boundary() {
+        let mut m = KernelMask::new();
+        for kr in [63usize, 64, 65, 127, 128, 255] {
+            m.insert(kr);
+        }
+        assert!(m.spilled());
+        assert_eq!(m.count(), 6);
+        for kr in [63usize, 64, 65, 127, 128, 255] {
+            assert!(m.contains(kr), "kr={kr}");
+        }
+        assert!(!m.contains(62) && !m.contains(66) && !m.contains(256));
+        assert_eq!(m.iter().collect::<Vec<_>>(), vec![63, 64, 65, 127, 128, 255]);
+    }
+
+    #[test]
+    fn kernel_mask_with_kernels_presizes() {
+        assert!(!KernelMask::with_kernels(0).spilled());
+        assert!(!KernelMask::with_kernels(64).spilled());
+        assert!(KernelMask::with_kernels(65).spilled());
+        let mut m = KernelMask::with_kernels(256);
+        m.insert(255);
+        assert!(m.contains(255));
+        assert_eq!(m.count(), 1);
+    }
+
+    #[test]
+    fn kernel_mask_equality_ignores_capacity() {
+        assert_eq!(KernelMask::new(), KernelMask::with_kernels(200));
+        let mut a = KernelMask::new();
+        let mut b = KernelMask::with_kernels(256);
+        a.insert(70);
+        b.insert(70);
+        assert_eq!(a, b);
+        b.insert(130);
+        assert_ne!(a, b);
+        assert_ne!(KernelMask::new(), b);
+    }
+
+    #[test]
+    fn kernel_mask_intersection_matches_naive() {
+        let mut rng = Pcg64::seeded(23);
+        for _ in 0..60 {
+            let nk = 1 + rng.index(300);
+            let mut a = KernelMask::new();
+            let mut b = KernelMask::with_kernels(nk);
+            let mut ha = std::collections::HashSet::new();
+            let mut hb = std::collections::HashSet::new();
+            for _ in 0..nk / 2 {
+                let i = rng.index(nk);
+                a.insert(i);
+                ha.insert(i);
+                let j = rng.index(nk);
+                b.insert(j);
+                hb.insert(j);
+            }
+            assert_eq!(a.count() as usize, ha.len());
+            assert_eq!(
+                a.intersection_count(&b) as usize,
+                ha.intersection(&hb).count(),
+                "nk={nk}"
+            );
+            // Mixed widths: an inline mask against a spilled one.
+            assert_eq!(a.intersection_count(&b), b.intersection_count(&a));
+            let mut sorted: Vec<usize> = ha.iter().copied().collect();
+            sorted.sort_unstable();
+            assert_eq!(a.iter().collect::<Vec<_>>(), sorted);
+        }
     }
 }

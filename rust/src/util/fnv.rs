@@ -1,0 +1,71 @@
+//! FNV-1a 64 — the repo's fingerprint primitive (coordinator cache keys,
+//! golden-snapshot placement fingerprints). One implementation, so the
+//! producers can never drift apart on constants or byte order.
+
+/// Incremental FNV-1a 64 hasher.
+#[derive(Clone, Debug)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    pub fn new() -> Self {
+        Fnv64(Self::OFFSET)
+    }
+
+    #[inline]
+    pub fn eat(&mut self, byte: u8) {
+        self.0 = (self.0 ^ byte as u64).wrapping_mul(Self::PRIME);
+    }
+
+    /// Eat a `u64` as its 8 little-endian bytes.
+    #[inline]
+    pub fn eat_u64(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.eat(b);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // FNV-1a 64 reference values.
+        assert_eq!(Fnv64::new().finish(), 0xcbf2_9ce4_8422_2325);
+        let mut h = Fnv64::new();
+        for b in b"a" {
+            h.eat(*b);
+        }
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+        let mut h = Fnv64::new();
+        for b in b"foobar" {
+            h.eat(*b);
+        }
+        assert_eq!(h.finish(), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn eat_u64_is_le_bytes() {
+        let mut a = Fnv64::new();
+        a.eat_u64(0x0102_0304_0506_0708);
+        let mut b = Fnv64::new();
+        for byte in [0x08, 0x07, 0x06, 0x05, 0x04, 0x03, 0x02, 0x01u8] {
+            b.eat(byte);
+        }
+        assert_eq!(a.finish(), b.finish());
+    }
+}

@@ -5,11 +5,13 @@
 
 pub mod bench;
 pub mod bitset;
+pub mod fnv;
 pub mod logging;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
 pub mod table;
 
-pub use bitset::BitSet;
+pub use bitset::{BitSet, KernelMask};
+pub use fnv::Fnv64;
 pub use rng::Pcg64;

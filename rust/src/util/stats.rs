@@ -47,11 +47,15 @@ impl Summary {
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
-    /// Linear-interpolated percentile, `q` in [0, 100].
+    /// Linear-interpolated percentile. `q` is clamped into [0, 100];
+    /// samples are ordered by `f64::total_cmp`, so NaN samples (e.g. a
+    /// poisoned latency ratio) sort to the extremes instead of panicking
+    /// mid-sort.
     pub fn percentile(&self, q: f64) -> f64 {
         assert!(!self.samples.is_empty(), "percentile of empty summary");
+        let q = q.clamp(0.0, 100.0);
         let mut v = self.samples.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         let pos = (q / 100.0) * (v.len() - 1) as f64;
         let lo = pos.floor() as usize;
         let hi = pos.ceil() as usize;
@@ -105,6 +109,27 @@ mod tests {
         assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
         assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
         assert!((s.percentile(99.0) - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        let mut s = Summary::new();
+        s.add(1.0);
+        s.add(f64::NAN);
+        s.add(2.0);
+        // total_cmp sorts the (positive) NaN last: finite percentiles stay
+        // meaningful and nothing panics.
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.median(), 2.0);
+        assert!(s.percentile(100.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_clamps_q() {
+        let mut s = Summary::new();
+        (1..=10).for_each(|i| s.add(i as f64));
+        assert_eq!(s.percentile(-25.0), 1.0);
+        assert_eq!(s.percentile(250.0), 10.0);
     }
 
     #[test]

@@ -1,0 +1,94 @@
+//! Differential suite for the kernel-axis width lift: the
+//! `KernelMask`-based `AssociationMatrix::build` must be byte-identical to
+//! the naive set-based association oracle (`dfg::oracle::build_naive`) on
+//! the paper blocks, the wide-block generators, and ≥100 randomized wide
+//! blocks straddling the 64-kernel inline/spill boundary — the cases the
+//! retired `assert!(kr < 64)` used to crash on.
+
+use sparsemap::dfg::analysis::AssociationMatrix;
+use sparsemap::dfg::build::build_sdfg;
+use sparsemap::dfg::oracle::build_naive;
+use sparsemap::dfg::SDfg;
+use sparsemap::sparse::gen::{paper_blocks, random_block, wide_blocks};
+use sparsemap::util::rng::Pcg64;
+
+/// Full matrix comparison: read order, every pairwise entry, and the
+/// derived totals the AIBA scheduler consumes.
+fn assert_association_identical(g: &SDfg, label: &str) {
+    let am = AssociationMatrix::build(g);
+    let na = build_naive(g);
+    assert_eq!(am.reads, na.reads, "{label}: read order diverged");
+    let n = na.len();
+    for i in 0..n {
+        for j in 0..n {
+            assert_eq!(
+                am.by_index(i, j),
+                na.by_index(i, j),
+                "{label}: assoc[{i},{j}] diverged"
+            );
+        }
+    }
+    for (i, &r) in na.reads.iter().enumerate() {
+        assert_eq!(am.index_of(r), Some(i), "{label}: index_of({r})");
+        let want_total: u32 = (0..n).filter(|&j| j != i).map(|j| na.by_index(i, j)).sum();
+        assert_eq!(am.total(r), want_total, "{label}: total({r})");
+    }
+}
+
+#[test]
+fn association_matches_oracle_on_paper_blocks() {
+    for nb in paper_blocks() {
+        let (g, _) = build_sdfg(&nb.block);
+        assert_association_identical(&g, nb.label);
+    }
+}
+
+#[test]
+fn association_matches_oracle_on_wide_blocks() {
+    for b in wide_blocks() {
+        let (g, _) = build_sdfg(&b);
+        assert_association_identical(&g, &b.name);
+    }
+}
+
+#[test]
+fn association_matches_oracle_on_randomized_wide_blocks() {
+    // ≥100 randomized blocks at the k widths the old u64 assert hid:
+    // 63 (last inline index), 64/65 (first spill words), 128, 200.
+    let mut rng = Pcg64::seeded(0x51de);
+    let mut cases = 0usize;
+    for &k in &[63usize, 64, 65, 128, 200] {
+        for _ in 0..21 {
+            let c = 3 + rng.index(30);
+            let p_zero = 0.55 + 0.4 * rng.next_f64();
+            let seed = rng.next_u64();
+            let b = random_block(&format!("rw_k{k}_s{seed}"), c, k, p_zero, seed);
+            let (g, _) = build_sdfg(&b);
+            assert_association_identical(&g, &b.name);
+            cases += 1;
+        }
+    }
+    assert!(cases >= 100, "suite shrank: {cases} cases");
+}
+
+#[test]
+fn association_matches_block_definition_across_boundary() {
+    // Ground truth straight from the mask, independent of either builder.
+    let mut rng = Pcg64::seeded(77);
+    for &k in &[63usize, 64, 65, 128] {
+        let b = random_block(&format!("def_k{k}"), 10, k, 0.8, rng.next_u64());
+        let (g, idx) = build_sdfg(&b);
+        let am = AssociationMatrix::build(&g);
+        for c1 in 0..b.c {
+            for c2 in 0..b.c {
+                let (Some(r1), Some(r2)) = (idx.read(c1), idx.read(c2)) else { continue };
+                let (i, j) = (am.index_of(r1).unwrap(), am.index_of(r2).unwrap());
+                assert_eq!(
+                    am.by_index(i, j) as usize,
+                    b.association(c1, c2),
+                    "k={k} ({c1},{c2})"
+                );
+            }
+        }
+    }
+}

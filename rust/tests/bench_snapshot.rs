@@ -93,5 +93,40 @@ fn bench_mapper_json_schema() {
         rows += 1;
     }
     assert!(rows > 0, "{path}: exists but holds no bench rows");
+    // Row-set completeness: a file carrying mapper_micro rows must carry
+    // that bench's wide-block and association rows too (they are written in
+    // the same run — their absence means a stale or truncated merge), and
+    // likewise for serving_throughput's wide scenario. Same guard PR 2
+    // added for the mapper rows.
+    let require = |marker: &str, wanted: &[&str]| {
+        if !names.contains(marker) {
+            return;
+        }
+        for w in wanted {
+            assert!(
+                names.contains(*w),
+                "{path}: has '{marker}' but is missing its sibling row '{w}' — \
+                 stale or malformed merge; re-run the bench that writes both"
+            );
+        }
+    };
+    require(
+        "block1/map_block_seq",
+        &[
+            "block1/assoc_build",
+            "block5/assoc_build",
+            "block5/assoc_build_naive",
+            "wide_k128/assoc_build",
+            "wide_k128/assoc_build_naive",
+            "wide_k256/assoc_build",
+            "wide_k256/assoc_build_naive",
+            "wide_k128/map_block_par4",
+            "wide_k128/simulate_8it",
+        ],
+    );
+    require(
+        "serving/workers=1/per_request",
+        &["serving/wide_k128/per_request", "serving/wide_k128/cold_start_request"],
+    );
     eprintln!("BENCH_mapper.json schema ok ({rows} rows)");
 }

@@ -15,40 +15,29 @@
 use sparsemap::arch::StreamingCgra;
 use sparsemap::bind::{Mapping, Placement};
 use sparsemap::mapper::{map_block, MapperOptions};
-use sparsemap::sparse::gen::paper_blocks;
+use sparsemap::sparse::gen::{paper_blocks, wide_blocks};
 
 fn golden_path() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden_mappings.txt")
 }
 
-/// FNV-1a 64 over the mapping's II + placement list — platform-independent
-/// and order-stable, so the fingerprint moves iff a placement moves.
+/// FNV-1a 64 ([`sparsemap::util::Fnv64`]) over the mapping's II +
+/// placement list — platform-independent and order-stable, so the
+/// fingerprint moves iff a placement moves.
 fn fingerprint(m: &Mapping) -> u64 {
-    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-    const PRIME: u64 = 0x0000_0100_0000_01b3;
-    let mut h = OFFSET;
-    let mut eat = |byte: u8| {
-        h ^= byte as u64;
-        h = h.wrapping_mul(PRIME);
-    };
-    for b in (m.ii as u64).to_le_bytes() {
-        eat(b);
-    }
+    let mut h = sparsemap::util::Fnv64::new();
+    h.eat_u64(m.ii as u64);
     for p in &m.placements {
         let (tag, x, y) = match *p {
             Placement::InputBus(i) => (1u8, i, 0),
             Placement::OutputBus(i) => (2u8, i, 0),
             Placement::Pe(pe) => (3u8, pe.row, pe.col),
         };
-        eat(tag);
-        for b in (x as u64).to_le_bytes() {
-            eat(b);
-        }
-        for b in (y as u64).to_le_bytes() {
-            eat(b);
-        }
+        h.eat(tag);
+        h.eat_u64(x as u64);
+        h.eat_u64(y as u64);
     }
-    h
+    h.finish()
 }
 
 fn render_snapshot() -> String {
@@ -69,6 +58,26 @@ fn render_snapshot() -> String {
             fingerprint(&m)
         ));
     }
+    // One wide-kernel-axis entry (k = 128 > the retired u64 mask width),
+    // pinned at the shared wide operating point (`MapperOptions::wide()`):
+    // its II slack and SBTS budget are part of the snapshot contract —
+    // retuning `wide()` re-blesses this line.
+    let wide_opts = MapperOptions::wide();
+    let wide = wide_blocks()
+        .into_iter()
+        .find(|b| b.name == "wide_k128")
+        .expect("wide_k128 generator");
+    let m = map_block(&wide, &cgra, &wide_opts)
+        .unwrap_or_else(|e| panic!("wide_k128: wide block must map: {e}"))
+        .mapping;
+    m.verify(&cgra).unwrap();
+    out.push_str(&format!(
+        "wide_k128 ii={} cops={} mcids={} placements={:016x}\n",
+        m.ii,
+        m.cops(),
+        m.mcids(),
+        fingerprint(&m)
+    ));
     out
 }
 

@@ -1,0 +1,111 @@
+//! End-to-end coverage of the wide-kernel-axis workload class (k > 64,
+//! c > 64): the blocks the association matrix's retired `u64` kernel mask
+//! used to panic on must now schedule, bind, simulate and serve through
+//! the coordinator on the paper's 4×4 fabric.
+//!
+//! Wide shapes sit far from the paper blocks' operating point (II ≈ k/N
+//! instead of 2–4), so the mapper gets a wider II slack and a reduced SBTS
+//! budget here — the point is that the pipeline is *open* for the class,
+//! not that it hits MII.
+
+use std::sync::Arc;
+
+use sparsemap::arch::StreamingCgra;
+use sparsemap::config::SparsemapConfig;
+use sparsemap::coordinator::{Coordinator, InferRequest};
+use sparsemap::mapper::{map_block, MapperOptions};
+use sparsemap::sim::simulate;
+use sparsemap::sparse::gen::wide_blocks;
+use sparsemap::sparse::SparseBlock;
+use sparsemap::util::rng::Pcg64;
+
+fn wide_block(name: &str) -> SparseBlock {
+    wide_blocks().into_iter().find(|b| b.name == name).unwrap_or_else(|| {
+        panic!("wide block {name} missing from generator")
+    })
+}
+
+fn stream_for(block: &SparseBlock, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..n)
+        .map(|_| (0..block.c).map(|_| rng.next_normal() as f32).collect())
+        .collect()
+}
+
+#[test]
+fn k128_block_maps_simulates_end_to_end() {
+    let cgra = StreamingCgra::paper_default();
+    let b = wide_block("wide_k128");
+    let out = map_block(&b, &cgra, &MapperOptions::wide())
+        .unwrap_or_else(|e| panic!("wide_k128 must map: {e}"));
+    out.mapping.verify(&cgra).unwrap();
+    // The output buses bound II from below at ⌈k/N⌉ regardless of sparsity.
+    assert!(out.mapping.ii >= b.k.div_ceil(cgra.n), "II {} vs k {}", out.mapping.ii, b.k);
+
+    let xs = stream_for(&b, 3, 41);
+    let res = simulate(&out.mapping, &b, &cgra, &xs).unwrap();
+    for (x, y) in xs.iter().zip(&res.outputs) {
+        let want = b.forward(x);
+        assert_eq!(y.len(), want.len());
+        for (a, w) in y.iter().zip(&want) {
+            assert!((a - w).abs() <= 1e-4 * (1.0 + w.abs()), "{a} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn c96_block_maps_and_verifies() {
+    // The channel axis past 64: 96 reads through 4 input buses.
+    let cgra = StreamingCgra::paper_default();
+    let b = wide_block("wide_c96");
+    let out = map_block(&b, &cgra, &MapperOptions::wide())
+        .unwrap_or_else(|e| panic!("wide_c96 must map: {e}"));
+    out.mapping.verify(&cgra).unwrap();
+    assert!(out.mapping.ii >= b.c.div_ceil(cgra.m));
+}
+
+#[test]
+fn coordinator_serves_wide_blocks() {
+    // The serving path end-to-end on a mixed narrow/wide request stream:
+    // mapping cache, worker pool and simulator all see k = 128.
+    let wide_point = MapperOptions::wide();
+    let mut cfg = SparsemapConfig::default();
+    cfg.workers = 2;
+    cfg.queue_depth = 4;
+    cfg.mis_iterations = wide_point.mis_iterations;
+    cfg.ii_slack = wide_point.ii_slack;
+    let coord = Coordinator::new(&cfg);
+
+    let wide = Arc::new(wide_block("wide_k128"));
+    let narrow = Arc::new(sparsemap::sparse::gen::paper_blocks()[0].block.clone());
+    let wide_xs = stream_for(&wide, 2, 7);
+    for id in 0..2u64 {
+        coord
+            .submit(InferRequest { id, block: Arc::clone(&wide), xs: wide_xs.clone() })
+            .unwrap();
+    }
+    coord
+        .submit(InferRequest { id: 2, block: Arc::clone(&narrow), xs: stream_for(&narrow, 4, 8) })
+        .unwrap();
+
+    let results = coord.collect(3);
+    assert_eq!(results.len(), 3);
+    for r in results {
+        let r = r.expect("wide serving job ok");
+        if r.id < 2 {
+            assert_eq!(r.block_name, "wide_k128");
+            assert_eq!(r.outputs.len(), 2);
+            for (x, y) in wide_xs.iter().zip(&r.outputs) {
+                let want = wide.forward(x);
+                for (a, w) in y.iter().zip(&want) {
+                    assert!((a - w).abs() <= 1e-4 * (1.0 + w.abs()), "{a} vs {w}");
+                }
+            }
+        }
+    }
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.jobs, 3);
+    assert_eq!(m.failures, 0);
+    assert_eq!(m.cache_misses, 2, "wide + narrow → exactly two mappings");
+    assert_eq!(m.cache_hits, 1);
+}
