@@ -14,11 +14,13 @@ use sparsemap::config::Techniques;
 use sparsemap::dfg::analysis::{mii, AssociationMatrix};
 use sparsemap::dfg::build::build_sdfg;
 use sparsemap::dfg::oracle as dfg_oracle;
-use sparsemap::mapper::{map_block, MapperOptions};
+use sparsemap::mapper::{map_block, map_bundle, MapperOptions};
 use sparsemap::sched::{baseline, sparsemap as sm_sched};
-use sparsemap::sim::simulate_and_check;
-use sparsemap::sparse::gen::{paper_blocks, wide_blocks};
+use sparsemap::sim::{simulate_and_check, simulate_fused};
+use sparsemap::sparse::gen::{fused3_bundle, paper_blocks, wide_blocks};
+use sparsemap::sparse::SparseBlock;
 use sparsemap::util::bench::{black_box, repo_root_path, BenchConfig, Bencher};
+use sparsemap::util::rng::Pcg64;
 
 fn main() {
     let cgra = StreamingCgra::paper_default();
@@ -162,6 +164,67 @@ fn main() {
     let wide_mapping = map_block(&wide, &cgra, &wide_opts).expect("wide_k128 maps").mapping;
     bw.bench("wide_k128/simulate_8it", || {
         black_box(simulate_and_check(&wide_mapping, &wide, &cgra, 8, 7).unwrap());
+    });
+
+    // Hot-bus query at a wide-class II: wide_k256's II ≈ k/4 makes the
+    // dense bus array (II × 8 states) enormous while the hot set stays a
+    // handful — the regime the incremental hot-bus index (PR 4) targets.
+    // Dense row = incremental index; hash row = the oracle's rescan.
+    let wide256 = wide_blocks().into_iter().find(|wb| wb.name == "wide_k256").unwrap();
+    let (g256, _) = build_sdfg(&wide256);
+    let base256 = mii(&g256, &cgra);
+    let routable256 = (base256..base256 + 16).find_map(|ii| {
+        let s = sm_sched::schedule_at(&g256, &cgra, Techniques::all(), ii).ok()?;
+        let plan = route::preallocate(&s, &cgra).ok()?;
+        Some((s, plan))
+    });
+    if let Some((s256, plan256)) = routable256 {
+        let cg256 = conflict::build(&s256, &cgra, &plan256);
+        let routes256: Vec<_> = (0..s256.g.edges().len()).map(|i| plan256.route(i)).collect();
+        let assign256: Vec<usize> = cg256.of_node.iter().map(|c| c[0]).collect();
+        let mut buf = Vec::new();
+        let mut dense256 = BusCostModel::new(&s256, &cg256, &routes256, &cgra);
+        dense256.reset(&assign256);
+        bw.bench("wide_k256/bus_hot_scan_dense", || {
+            buf.clear();
+            dense256.hot_nodes_into(&assign256, &mut buf);
+            black_box(buf.len());
+        });
+        let mut hash256 = oracle::HashBusCostModel::new(&s256, &cg256, &routes256);
+        hash256.reset(&assign256);
+        bw.bench("wide_k256/bus_hot_scan_hash", || {
+            buf.clear();
+            hash256.hot_nodes_into(&assign256, &mut buf);
+            black_box(buf.len());
+        });
+    } else {
+        eprintln!("wide_k256: no routable schedule in II slack — hot-scan rows skipped");
+    }
+
+    // Fused-bundle rows: the canonical three-small-block bundle's
+    // cold-start mapping and a fused simulation advancing all members.
+    let bundle = fused3_bundle();
+    let fused_opts = MapperOptions::fused().with_parallelism(4);
+    bw.bench("fused3/map_bundle_par4", || {
+        black_box(map_bundle(&bundle, &cgra, &fused_opts).ok());
+    });
+    let fused_out = map_bundle(&bundle, &cgra, &fused_opts).expect("fused3 maps");
+    let mut rng = Pcg64::seeded(7);
+    let streams: Vec<Vec<Vec<f32>>> = bundle
+        .blocks
+        .iter()
+        .map(|blk| {
+            (0..8)
+                .map(|_| (0..blk.c).map(|_| rng.next_normal() as f32).collect())
+                .collect()
+        })
+        .collect();
+    let members: Vec<&SparseBlock> = bundle.blocks.iter().map(|b| b.as_ref()).collect();
+    let xs: Vec<&[Vec<f32>]> = streams.iter().map(|s| s.as_slice()).collect();
+    bw.bench("fused3/simulate_8it", || {
+        black_box(
+            simulate_fused(&fused_out.mapping, &fused_out.tags, &members, &cgra, &xs).unwrap(),
+        );
     });
     b.results.extend(bw.results);
 

@@ -13,7 +13,8 @@ use std::time::Instant;
 
 use sparsemap::config::SparsemapConfig;
 use sparsemap::coordinator::{Coordinator, InferRequest};
-use sparsemap::sparse::gen::{paper_blocks, wide_blocks};
+use sparsemap::sparse::gen::{fused3_bundle, paper_blocks, wide_blocks};
+use sparsemap::sparse::SparseBlock;
 use sparsemap::util::bench::{repo_root_path, write_json_merged, BenchResult};
 use sparsemap::util::rng::Pcg64;
 use sparsemap::util::stats::Summary;
@@ -151,6 +152,66 @@ fn main() {
         cold_summary.add(cold.as_nanos() as f64);
         results.push(BenchResult {
             name: "serving/wide_k128/cold_start_request".into(),
+            summary: cold_summary,
+            iters_per_sample: 1,
+        });
+    }
+
+    // Fused serving scenario: the canonical three-small-block bundle
+    // resident in one fabric configuration. The cold-start row is the
+    // bundle's one-shot fused mapping as a member request sees it; the
+    // per-request row is the steady-state member traffic against the
+    // shared mapping (no reconfiguration between members).
+    {
+        let bundle = Arc::new(fused3_bundle());
+        let members: Vec<Arc<SparseBlock>> = bundle.blocks.clone();
+        let cfg = SparsemapConfig { workers: 4, queue_depth: 32, ..SparsemapConfig::default() };
+        let coord = Coordinator::new(&cfg);
+        coord.register_bundle(bundle);
+
+        let t_cold = Instant::now();
+        let xs = stream(&members[0], 4, 99);
+        coord
+            .submit(InferRequest { id: 30_000, block: Arc::clone(&members[0]), xs })
+            .unwrap();
+        let _ = coord.collect(1);
+        let cold = t_cold.elapsed();
+
+        let n = 120u64;
+        let iters = 16;
+        let t0 = Instant::now();
+        let mut collected = 0usize;
+        for id in 0..n {
+            let block = Arc::clone(&members[(id as usize) % members.len()]);
+            let xs = stream(&block, iters, id);
+            coord.submit(InferRequest { id, block, xs }).unwrap();
+            if id % 16 == 15 {
+                collected += coord.collect(8).len();
+            }
+        }
+        collected += coord.collect(n as usize - collected).len();
+        assert_eq!(collected, n as usize);
+        let wall = t0.elapsed();
+        let m = coord.metrics.snapshot();
+        println!(
+            "fused3: {n} member requests in {wall:?} → {:.0} req/s, cold-start {:.2} ms \
+             (cache misses {} — one fused mapping serves all members)",
+            n as f64 / wall.as_secs_f64(),
+            cold.as_secs_f64() * 1e3,
+            m.cache_misses,
+        );
+
+        let mut per_request = Summary::new();
+        per_request.add(wall.as_nanos() as f64 / n as f64);
+        results.push(BenchResult {
+            name: "serving/fused3/per_request".into(),
+            summary: per_request,
+            iters_per_sample: n,
+        });
+        let mut cold_summary = Summary::new();
+        cold_summary.add(cold.as_nanos() as f64);
+        results.push(BenchResult {
+            name: "serving/fused3/cold_start_request".into(),
             summary: cold_summary,
             iters_per_sample: 1,
         });

@@ -309,8 +309,13 @@ fn claims_of_edge(
 /// `slot·(n+m) + n + col` for column buses — so every claim mutation on
 /// the SBTS inner loop is an indexed array update. Per-bus state is a
 /// small `(value, multiplicity)` list plus the claiming edge multiset
-/// (the hot-node tracker's input). Differentially tested against the
-/// retired `HashMap` implementation, [`oracle::HashBusCostModel`].
+/// (the hot-node tracker's input). The set of *hot* buses (two or more
+/// distinct values) is maintained incrementally on claim/release, so the
+/// per-iteration hot-node query costs O(|hot|) instead of rescanning all
+/// `II × (n + m)` bus states — on wide-class blocks (II ≈ k/N) the scan
+/// dwarfed the usually tiny hot set. Differentially tested against the
+/// retired `HashMap` implementation, [`oracle::HashBusCostModel`], and
+/// the from-scratch recompute ([`Self::hot_nodes_naive`]).
 pub struct BusCostModel<'a> {
     s: &'a ScheduledSDfg,
     cg: &'a ConflictGraph,
@@ -325,6 +330,9 @@ pub struct BusCostModel<'a> {
     stride: usize,
     /// Dense per-bus claim state, slot-major.
     buses: Vec<BusState>,
+    /// Incremental hot-bus index: exactly the bus ids whose state carries
+    /// two or more distinct values (unordered — consumers sort).
+    hot: Vec<usize>,
     total: usize,
 }
 
@@ -369,7 +377,17 @@ impl<'a> BusCostModel<'a> {
         let stride = cgra.n + cgra.m;
         let mut buses = Vec::new();
         buses.resize_with(s.ii * stride, BusState::default);
-        BusCostModel { s, cg, routes, incident, rows: cgra.n, stride, buses, total: 0 }
+        BusCostModel {
+            s,
+            cg,
+            routes,
+            incident,
+            rows: cgra.n,
+            stride,
+            buses,
+            hot: Vec::new(),
+            total: 0,
+        }
     }
 
     #[inline]
@@ -407,6 +425,7 @@ impl<'a> BusCostModel<'a> {
         let idx = self.bus_index(bus);
         let b = &mut self.buses[idx];
         self.total -= b.contrib();
+        let was_hot = b.values.len() > 1;
         if delta > 0 {
             match b.values.iter_mut().find(|(v, _)| *v == value) {
                 Some(e) => e.1 += 1,
@@ -428,6 +447,22 @@ impl<'a> BusCostModel<'a> {
             }
         }
         self.total += b.contrib();
+        // Maintain the hot-bus index on the 1 ↔ 2 distinct-value boundary.
+        // The membership scan is over the hot list itself, which stays a
+        // handful of entries on the search path.
+        let is_hot = b.values.len() > 1;
+        if is_hot != was_hot {
+            if is_hot {
+                self.hot.push(idx);
+            } else {
+                let pos = self
+                    .hot
+                    .iter()
+                    .position(|&h| h == idx)
+                    .expect("cooling bus is indexed hot");
+                self.hot.swap_remove(pos);
+            }
+        }
     }
 
     /// Reference implementation of the hot-node set, recomputed from
@@ -483,6 +518,7 @@ impl<'a> SecondaryCost for BusCostModel<'a> {
             b.edges.clear();
         }
         self.total = 0;
+        self.hot.clear();
         for idx in 0..self.s.g.edges().len() {
             let claims = self.edge_claims(idx, assign);
             for &(bus, value) in claims.as_slice() {
@@ -520,20 +556,21 @@ impl<'a> SecondaryCost for BusCostModel<'a> {
     }
 
     fn hot_nodes_into(&self, _assign: &[usize], out: &mut Vec<usize>) {
-        // Endpoints of the edges claiming any colliding bus. The dense
-        // array is scanned in ascending bus order (a few dozen entries);
-        // sorted + deduped into the caller's buffer for a deterministic,
-        // duplicate-free node list.
+        // Endpoints of the edges claiming any colliding bus, read off the
+        // incrementally maintained hot-bus index — O(|hot|) instead of a
+        // full `II × (n + m)` bus scan. The hot list is unordered (claims
+        // push, releases swap_remove), but the caller-visible node list is
+        // sorted + deduped, so determinism is unaffected.
         if self.total == 0 {
             return;
         }
-        for b in &self.buses {
-            if b.values.len() > 1 {
-                for &idx in &b.edges {
-                    let e = self.s.g.edge(idx);
-                    out.push(e.src);
-                    out.push(e.dst);
-                }
+        for &idx in &self.hot {
+            let b = &self.buses[idx];
+            debug_assert!(b.values.len() > 1, "hot index holds only colliding buses");
+            for &e_idx in &b.edges {
+                let e = self.s.g.edge(e_idx);
+                out.push(e.src);
+                out.push(e.dst);
             }
         }
         out.sort_unstable();

@@ -71,6 +71,31 @@ impl RoutePlan {
     }
 }
 
+/// GRF writes per modulo slot implied by a schedule's GRF-forced MCIDs —
+/// the exact classification [`preallocate`] applies (internal dependency,
+/// not COP-sourced, distance > 1, same modulo slot ⇒ one GRF write at
+/// `(t(src) + 1) mod II`). The fusion composition's offset search
+/// (`crate::mapper`) uses this to keep a bundle's combined write-port
+/// demand feasible; `grf_writes_matches_preallocate` pins it to the table
+/// `preallocate` itself computes, so the two can never drift apart.
+pub fn grf_writes_per_slot(s: &ScheduledSDfg) -> Vec<usize> {
+    let ii = s.ii;
+    let mut writes = vec![0usize; ii];
+    for e in s.g.edges() {
+        if e.kind != EdgeKind::Internal {
+            continue;
+        }
+        let (t1, t2) = (s.t[e.src], s.t[e.dst]);
+        if t2 - t1 <= 1 || matches!(s.g.kind(e.src), NodeKind::Cop { .. }) {
+            continue;
+        }
+        if t1 % ii == t2 % ii {
+            writes[(t1 + 1) % ii] += 1;
+        }
+    }
+    writes
+}
+
 /// Compute the route plan, or fail when GRF ports/capacity are exceeded.
 pub fn preallocate(s: &ScheduledSDfg, cgra: &StreamingCgra) -> Result<RoutePlan> {
     let ii = s.ii;
@@ -179,6 +204,28 @@ mod tests {
         for (idx, e) in s.g.edges().iter().enumerate() {
             if e.kind == EdgeKind::Internal && s.t[e.dst] - s.t[e.src] == 1 {
                 assert_eq!(plan.route(idx), Some(Route::Bus));
+            }
+        }
+    }
+
+    #[test]
+    fn grf_writes_matches_preallocate() {
+        // The standalone per-slot GRF-write table must equal the one
+        // preallocate derives while routing — this is what lets the
+        // fusion offset search pre-check write-port feasibility without
+        // re-running the router.
+        for nb in paper_blocks() {
+            let (g, _) = build_sdfg(&nb.block);
+            let base = mii(&g, &cgra());
+            for ii in base..base + 4 {
+                let Ok(s) = schedule_at(&g, &cgra(), Techniques::all(), ii) else { continue };
+                let Ok(plan) = preallocate(&s, &cgra()) else { continue };
+                assert_eq!(
+                    grf_writes_per_slot(&s),
+                    plan.grf_writes_per_slot,
+                    "{} II={ii}",
+                    nb.label
+                );
             }
         }
     }

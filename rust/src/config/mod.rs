@@ -74,6 +74,13 @@ pub struct SparsemapConfig {
     pub workers: usize,
     /// Coordinator bounded-queue depth (backpressure).
     pub queue_depth: usize,
+    /// Coordinator mapping-cache capacity (entries). `0` = unbounded (the
+    /// pre-LRU behavior); production serving should bound it.
+    pub cache_capacity: usize,
+    /// Maximum member blocks per fused bundle (`1` disables fusion).
+    pub max_fused_blocks: usize,
+    /// Combined-MII budget for the fusion planner.
+    pub fusion_max_ii: usize,
     /// Seed for workload generation.
     pub seed: u64,
 }
@@ -90,6 +97,9 @@ impl Default for SparsemapConfig {
             artifacts_dir: "artifacts".into(),
             workers: 4,
             queue_depth: 16,
+            cache_capacity: 0,
+            max_fused_blocks: 4,
+            fusion_max_ii: 12,
             seed: 42,
         }
     }
@@ -122,9 +132,16 @@ impl SparsemapConfig {
                 ("mapper", "ii_slack") => cfg.ii_slack = value.as_int()? as usize,
                 ("mapper", "mis_iterations") => cfg.mis_iterations = value.as_int()? as usize,
                 ("mapper", "parallelism") => cfg.parallelism = value.as_int()? as usize,
+                ("mapper", "max_fused_blocks") => {
+                    cfg.max_fused_blocks = value.as_int()? as usize
+                }
+                ("mapper", "fusion_max_ii") => cfg.fusion_max_ii = value.as_int()? as usize,
                 ("runtime", "artifacts_dir") => cfg.artifacts_dir = value.as_str()?.to_string(),
                 ("coordinator", "workers") => cfg.workers = value.as_int()? as usize,
                 ("coordinator", "queue_depth") => cfg.queue_depth = value.as_int()? as usize,
+                ("coordinator", "cache_capacity") => {
+                    cfg.cache_capacity = value.as_int()? as usize
+                }
                 ("workload", "seed") => cfg.seed = value.as_int()? as u64,
                 (s, k) => {
                     return Err(Error::Config(format!("unknown config key [{s}] {k}")));
@@ -136,6 +153,11 @@ impl SparsemapConfig {
         }
         if cfg.workers == 0 {
             return Err(Error::Config("coordinator.workers must be >= 1".into()));
+        }
+        if cfg.max_fused_blocks == 0 {
+            return Err(Error::Config(
+                "mapper.max_fused_blocks must be >= 1 (1 disables fusion)".into(),
+            ));
         }
         Ok(cfg)
     }
@@ -172,6 +194,7 @@ parallelism = 2
 [coordinator]
 workers = 2
 queue_depth = 4
+cache_capacity = 64
 
 [workload]
 seed = 7
@@ -183,7 +206,23 @@ seed = 7
         assert_eq!(c.ii_slack, 3);
         assert_eq!(c.parallelism, 2);
         assert_eq!(c.workers, 2);
+        assert_eq!(c.cache_capacity, 64);
         assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn fusion_knobs_parse_and_validate() {
+        let c = SparsemapConfig::from_str_cfg(
+            "[mapper]\nmax_fused_blocks = 3\nfusion_max_ii = 9\n",
+        )
+        .unwrap();
+        assert_eq!(c.max_fused_blocks, 3);
+        assert_eq!(c.fusion_max_ii, 9);
+        // Defaults are fusion-ready, capacity unbounded.
+        let d = SparsemapConfig::default();
+        assert_eq!(d.cache_capacity, 0);
+        assert!(d.max_fused_blocks >= 1);
+        assert!(SparsemapConfig::from_str_cfg("[mapper]\nmax_fused_blocks = 0\n").is_err());
     }
 
     #[test]

@@ -6,20 +6,43 @@
 //! aggregate metrics. The PJRT cross-check (`crate::runtime`) runs on the
 //! caller's thread — XLA executables stay off the worker pool.
 //!
+//! ## Mapping cache
+//!
+//! The cache is single-flight and LRU-bounded: one entry per mapping key,
+//! the first requester builds (maps) while concurrent requesters for the
+//! same key sleep on the entry's `Condvar` — the cache's outer mutex is
+//! never held across a mapping, so unrelated blocks proceed in parallel
+//! and waiters block on nothing but their own entry. Capacity comes from
+//! `[coordinator] cache_capacity` (`0` = unbounded); at capacity the
+//! least-recently-used entry is evicted (in-flight holders keep their
+//! `Arc`).
+//!
+//! ## Multi-block fusion
+//!
+//! Small blocks can be registered as a [`FusedBundle`]
+//! ([`Coordinator::register_bundle`] / [`Coordinator::register_fused`]):
+//! a request for *any* member block routes to the bundle's shared fused
+//! mapping — one cache entry keyed by the bundle's combined mask
+//! fingerprint, mapped once, no reconfiguration between member requests.
+//! Unregistered blocks serve solo through the same cache, so fused and
+//! unfused traffic mix freely.
+//!
 //! tokio is unavailable offline; the pool is built on std threads +
 //! `std::sync::mpsc::sync_channel`, which gives exactly the bounded-queue
 //! semantics the backpressure design needs.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::arch::StreamingCgra;
 use crate::config::SparsemapConfig;
 use crate::error::{Error, Result};
-use crate::mapper::{map_block, MapOutcome, MapperOptions};
-use crate::sim::simulate;
+use crate::mapper::{map_unit, MapOutcome, MapUnit, MapperOptions};
+use crate::sim::{simulate, simulate_fused};
+use crate::sparse::fuse::{plan_bundles, FusedBundle, FusionOptions};
 use crate::sparse::SparseBlock;
 
 /// One inference job: run `xs` (iteration-major input vectors) through a
@@ -42,6 +65,9 @@ pub struct InferResult {
     pub ii: usize,
     /// Whether this job triggered a fresh mapping (cache miss).
     pub mapped_fresh: bool,
+    /// Member blocks resident in the configuration that served this
+    /// request (`1` = unfused).
+    pub fused_members: usize,
     /// End-to-end latency in nanoseconds.
     pub latency_ns: u64,
 }
@@ -80,11 +106,235 @@ pub struct MetricsSnapshot {
     pub total_latency_ns: u64,
 }
 
-/// Single-flight mapping cache: the outer map hands out one slot per block
-/// key; the slot's own mutex serializes mapping of that block while other
-/// blocks proceed in parallel.
-type CacheSlot = Arc<Mutex<Option<Arc<MapOutcome>>>>;
-type Cache = Arc<Mutex<std::collections::HashMap<String, CacheSlot>>>;
+/// A cached, servable mapping: a solo block's or a whole fused bundle's.
+struct ServingMapping {
+    outcome: MapOutcome,
+    /// `Some` when the mapping hosts a bundle — carries the member blocks
+    /// the simulator needs for the co-resident streams.
+    bundle: Option<Arc<FusedBundle>>,
+}
+
+/// State of one cache entry. `Building` marks a mapping in flight; waiters
+/// sleep on the entry's condvar instead of holding any mutex the builder
+/// needs.
+enum EntryState {
+    /// No mapping and no builder in flight.
+    Empty,
+    Building,
+    Ready(Arc<ServingMapping>),
+    /// The build failed. The entry is already detached from the cache map
+    /// (so new requesters get a fresh entry and their own retry); the
+    /// sticky error lets queued waiters fail fast instead of serially
+    /// re-running a deterministically failing mapping.
+    Failed(String),
+}
+
+struct CacheEntry {
+    state: Mutex<EntryState>,
+    ready: Condvar,
+    /// Monotonic use tick for LRU eviction (unique per touch; assigned
+    /// under the cache-map lock so eviction order is race-free).
+    last_use: AtomicU64,
+}
+
+/// Unwind guard for the build phase: if the build closure fails or panics
+/// (a mapper invariant violation), mark the entry `Failed`, wake waiters
+/// so they fail fast instead of deadlocking on a forever-`Building` entry
+/// (or serially re-running a deterministically failing mapping), and drop
+/// the entry from the cache map — `Failed` entries must not be found by
+/// new requesters, and a dead entry would otherwise pin capacity forever
+/// (only `Ready` entries are LRU victims, see [`evict_lru`]). The removal
+/// is pointer-compared so a newer same-key entry created by a later
+/// requester is never clobbered.
+struct BuildGuard<'a> {
+    cache: &'a MappingCache,
+    key: &'a str,
+    entry: &'a Arc<CacheEntry>,
+    armed: bool,
+}
+
+impl BuildGuard<'_> {
+    fn disarm(&mut self) {
+        self.armed = false;
+    }
+
+    /// Mark the entry failed with `reason`, wake waiters, and detach the
+    /// entry from the cache map.
+    fn fail(&mut self, reason: &str) {
+        self.armed = false;
+        {
+            let mut state = self.entry.state.lock().expect("cache entry");
+            *state = EntryState::Failed(reason.to_string());
+            self.entry.ready.notify_all();
+        }
+        // Entry lock released before the map lock — the same order as
+        // every other path (the map lock is never held while waiting
+        // on an entry, and evict_lru only try_locks entry states).
+        let mut map = self.cache.inner.lock().expect("cache map");
+        if map.get(self.key).is_some_and(|e| Arc::ptr_eq(e, self.entry)) {
+            map.remove(self.key);
+        }
+    }
+}
+
+impl Drop for BuildGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            // Panic unwind path; the error path calls `fail` explicitly
+            // with the builder's own message.
+            self.fail("mapping build panicked");
+        }
+    }
+}
+
+/// Single-flight, LRU-bounded mapping cache. The outer map is only ever
+/// locked for entry lookup/insert/evict — mapping happens against the
+/// entry's own state mutex, and waiters for an in-flight mapping sleep on
+/// the entry's `Condvar`.
+struct MappingCache {
+    inner: Mutex<HashMap<String, Arc<CacheEntry>>>,
+    tick: AtomicU64,
+    /// `0` = unbounded.
+    capacity: usize,
+}
+
+impl MappingCache {
+    fn new(capacity: usize) -> Self {
+        MappingCache { inner: Mutex::new(HashMap::new()), tick: AtomicU64::new(0), capacity }
+    }
+
+    /// Fetch `key`'s mapping, building it via `build` on a miss. Exactly
+    /// one requester builds; concurrent requesters for the same key wait
+    /// on the entry and share the result (counted as cache hits). On a
+    /// build failure the entry turns sticky-`Failed` and leaves the map —
+    /// the builder and every queued waiter report the error without
+    /// re-running the (deterministic) mapping, while a later fresh
+    /// requester gets a new entry and its own retry.
+    fn get_or_map<F>(
+        &self,
+        key: &str,
+        metrics: &Metrics,
+        build: F,
+    ) -> Result<(Arc<ServingMapping>, bool)>
+    where
+        F: FnOnce() -> Result<ServingMapping>,
+    {
+        let entry = {
+            let mut map = self.inner.lock().expect("cache map");
+            // The use tick is assigned while the map is locked, so a
+            // concurrent inserter can never observe (and evict) an entry
+            // that has not been stamped yet.
+            let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+            match map.get(key) {
+                Some(e) => {
+                    e.last_use.store(tick, Ordering::Relaxed);
+                    Arc::clone(e)
+                }
+                None => {
+                    // Loop, not a single evict: overshoot accumulated
+                    // while entries were mid-build (unevictable) is
+                    // reclaimed here once those entries turn Ready.
+                    while self.capacity > 0
+                        && map.len() >= self.capacity
+                        && evict_lru(&mut map)
+                    {}
+                    let e = Arc::new(CacheEntry {
+                        state: Mutex::new(EntryState::Empty),
+                        ready: Condvar::new(),
+                        last_use: AtomicU64::new(tick),
+                    });
+                    map.insert(key.to_string(), Arc::clone(&e));
+                    e
+                }
+            }
+        };
+
+        let mut state = entry.state.lock().expect("cache entry");
+        loop {
+            match &*state {
+                EntryState::Ready(m) => {
+                    metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok((Arc::clone(m), false));
+                }
+                EntryState::Building => {
+                    state = entry.ready.wait(state).expect("cache entry");
+                }
+                // The builder failed; the mapping is deterministic, so
+                // re-running it here would pay the whole attempt lattice
+                // again for the same error — fail fast with the builder's
+                // reason instead.
+                EntryState::Failed(reason) => {
+                    return Err(Error::Runtime(format!(
+                        "mapping failed in a concurrent request: {reason}"
+                    )));
+                }
+                EntryState::Empty => break,
+            }
+        }
+        *state = EntryState::Building;
+        drop(state);
+
+        let mut unwind = BuildGuard { cache: self, key, entry: &entry, armed: true };
+        let built = build();
+        match built {
+            Ok(m) => {
+                // A miss is counted only when a fresh mapping actually
+                // lands: a failed build followed by a fallback (e.g. the
+                // fused → solo path) must not report two misses for one
+                // request — failures have their own counter.
+                metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+                let m = Arc::new(m);
+                let mut state = entry.state.lock().expect("cache entry");
+                unwind.disarm();
+                *state = EntryState::Ready(Arc::clone(&m));
+                entry.ready.notify_all();
+                Ok((m, true))
+            }
+            // Waiters fail fast on the sticky error; the detached entry
+            // leaves the map so a *new* requester gets a fresh entry and
+            // its own (deterministic) retry.
+            Err(e) => {
+                unwind.fail(&e.to_string());
+                Err(e)
+            }
+        }
+    }
+}
+
+/// Evict the least-recently-used *evictable* entry. Only `Ready` entries
+/// are victims: a `Building` entry is the single-flight rendezvous for
+/// concurrent requesters, and an `Empty` entry belongs to a requester
+/// that has looked it up but not yet locked it — evicting either would
+/// detach an in-flight mapping from the cache (the result would be built
+/// and then silently dropped, and a concurrent same-key request would map
+/// a second time). At capacity the map may therefore transiently exceed
+/// its bound by the number of in-flight mappings — the insert path loops
+/// eviction, so the overshoot is reclaimed as those entries turn Ready.
+/// Use ticks are unique (every touch bumps a shared counter under the map
+/// lock), so the victim is deterministic for a given request history.
+/// Returns whether a victim was evicted.
+fn evict_lru(map: &mut HashMap<String, Arc<CacheEntry>>) -> bool {
+    let victim = map
+        .iter()
+        .filter(|(_, e)| match e.state.try_lock() {
+            // The state mutex is only ever held briefly (never across a
+            // mapping), so a contended entry is simply skipped this round.
+            Ok(state) => matches!(&*state, EntryState::Ready(_)),
+            Err(_) => false,
+        })
+        .min_by_key(|(_, e)| e.last_use.load(Ordering::Relaxed))
+        .map(|(k, _)| k.clone());
+    match victim {
+        Some(key) => {
+            map.remove(&key);
+            true
+        }
+        None => false,
+    }
+}
+
+/// Member-fingerprint → bundle routing table.
+type BundleRegistry = Arc<Mutex<HashMap<u64, Arc<FusedBundle>>>>;
 
 enum Job {
     Infer(InferRequest),
@@ -96,6 +346,9 @@ pub struct Coordinator {
     results: Receiver<Result<InferResult>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
+    bundles: BundleRegistry,
+    fusion: FusionOptions,
+    cgra: StreamingCgra,
 }
 
 impl Coordinator {
@@ -105,7 +358,8 @@ impl Coordinator {
         let (tx, rx) = sync_channel::<Job>(cfg.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let (res_tx, results) = std::sync::mpsc::channel::<Result<InferResult>>();
-        let cache: Cache = Arc::new(Mutex::new(std::collections::HashMap::new()));
+        let cache = Arc::new(MappingCache::new(cfg.cache_capacity));
+        let bundles: BundleRegistry = Arc::new(Mutex::new(HashMap::new()));
         let metrics = Arc::new(Metrics::default());
         let mut opts = MapperOptions::from_config(cfg);
         if opts.parallelism == 0 {
@@ -117,6 +371,7 @@ impl Coordinator {
             let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
             opts.parallelism = (cores / cfg.workers.max(1)).clamp(1, 8);
         }
+        let fusion = opts.fusion;
         let cgra = cfg.cgra.clone();
 
         let workers = (0..cfg.workers)
@@ -124,17 +379,44 @@ impl Coordinator {
                 let rx = Arc::clone(&rx);
                 let res_tx = res_tx.clone();
                 let cache = Arc::clone(&cache);
+                let bundles = Arc::clone(&bundles);
                 let metrics = Arc::clone(&metrics);
                 let opts = opts.clone();
                 let cgra = cgra.clone();
                 std::thread::Builder::new()
                     .name(format!("sparsemap-worker-{wid}"))
-                    .spawn(move || worker_loop(rx, res_tx, cache, metrics, opts, cgra))
+                    .spawn(move || worker_loop(rx, res_tx, cache, bundles, metrics, opts, cgra))
                     .expect("spawn worker")
             })
             .collect();
 
-        Coordinator { tx: Some(tx), results, workers, metrics }
+        Coordinator { tx: Some(tx), results, workers, metrics, bundles, fusion, cgra }
+    }
+
+    /// Register a fused bundle: from now on a request for *any* member
+    /// block is served through the bundle's shared fused mapping (one
+    /// cache entry keyed by the bundle's combined mask fingerprint).
+    /// Requests already served solo keep their solo cache entries — fused
+    /// and unfused traffic mix freely.
+    pub fn register_bundle(&self, bundle: Arc<FusedBundle>) {
+        let mut reg = self.bundles.lock().expect("bundle registry");
+        for b in &bundle.blocks {
+            reg.insert(b.mask_fingerprint(), Arc::clone(&bundle));
+        }
+    }
+
+    /// Plan fusion over `blocks` with the configured knobs
+    /// (`[mapper] max_fused_blocks` / `[mapper] fusion_max_ii`) and
+    /// register every multi-block bundle. Returns the full plan
+    /// (singletons included — they stay unregistered and serve solo).
+    pub fn register_fused(&self, blocks: &[Arc<SparseBlock>]) -> Vec<FusedBundle> {
+        let plan = plan_bundles(blocks, &self.cgra, &self.fusion);
+        for bundle in &plan {
+            if bundle.len() > 1 {
+                self.register_bundle(Arc::new(bundle.clone()));
+            }
+        }
+        plan
     }
 
     /// Submit a job; blocks when the queue is full (backpressure).
@@ -172,10 +454,12 @@ impl Drop for Coordinator {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     rx: Arc<Mutex<Receiver<Job>>>,
     res_tx: Sender<Result<InferResult>>,
-    cache: Cache,
+    cache: Arc<MappingCache>,
+    bundles: BundleRegistry,
     metrics: Arc<Metrics>,
     opts: MapperOptions,
     cgra: StreamingCgra,
@@ -187,10 +471,10 @@ fn worker_loop(
         };
         let Ok(Job::Infer(req)) = job else { return };
         let started = Instant::now();
-        let outcome = run_one(&req, &cache, &metrics, &opts, &cgra);
+        let outcome = run_one(&req, &cache, &bundles, &metrics, &opts, &cgra);
         metrics.jobs.fetch_add(1, Ordering::Relaxed);
         let out = match outcome {
-            Ok((outputs, cycles, ii, fresh)) => {
+            Ok((outputs, cycles, ii, fresh, fused_members)) => {
                 metrics.total_cycles.fetch_add(cycles, Ordering::Relaxed);
                 let latency_ns = started.elapsed().as_nanos() as u64;
                 metrics.total_latency_ns.fetch_add(latency_ns, Ordering::Relaxed);
@@ -201,6 +485,7 @@ fn worker_loop(
                     cycles,
                     ii,
                     mapped_fresh: fresh,
+                    fused_members,
                     latency_ns,
                 })
             }
@@ -217,44 +502,135 @@ fn worker_loop(
 
 fn run_one(
     req: &InferRequest,
-    cache: &Cache,
+    cache: &MappingCache,
+    bundles: &BundleRegistry,
     metrics: &Metrics,
     opts: &MapperOptions,
     cgra: &StreamingCgra,
-) -> Result<(Vec<Vec<f32>>, u64, usize, bool)> {
-    // Mapping with a compile-once, single-flight cache keyed by block
-    // identity: concurrent requests for the same block wait on its slot
-    // instead of mapping twice. The key carries the mask's content
-    // fingerprint — name and shape alone would silently alias two
-    // differently-pruned blocks onto one mapping.
-    let key = format!(
-        "{}#{}x{}@{:016x}",
-        req.block.name,
-        req.block.c,
-        req.block.k,
-        req.block.mask_fingerprint()
-    );
-    let slot: CacheSlot = {
-        let mut guard = cache.lock().expect("cache lock");
-        Arc::clone(guard.entry(key).or_default())
-    };
-    let (outcome, fresh) = {
-        let mut slot_guard = slot.lock().expect("slot lock");
-        match slot_guard.as_ref() {
-            Some(o) => {
-                metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
-                (Arc::clone(o), false)
-            }
-            None => {
-                metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
-                let o = Arc::new(map_block(&req.block, cgra, opts)?);
-                *slot_guard = Some(Arc::clone(&o));
-                (o, true)
+) -> Result<(Vec<Vec<f32>>, u64, usize, bool, usize)> {
+    let fp = req.block.mask_fingerprint();
+    let bundle = bundles.lock().expect("bundle registry").get(&fp).cloned();
+    if let Some(bundle) = bundle {
+        match fused_serving(&bundle, cache, metrics, opts, cgra) {
+            Ok((serving, fresh)) => return run_fused(req, fp, &serving, fresh, cgra),
+            // The planner admits bundles by the MII estimate, not bind
+            // feasibility, so a registered bundle can turn out unmappable.
+            // The mapper is deterministic — it would fail (and re-pay the
+            // whole attempt lattice) on every member request forever —
+            // so drop the registration and serve this and all future
+            // member traffic through the working solo path below. Loudly:
+            // the silently-lost residency win would otherwise be
+            // undiagnosable (requests succeed, failures stays 0).
+            Err(e) => {
+                crate::log_warn!(
+                    "bundle {} is unmappable ({e}); deregistering — its {} members fall \
+                     back to solo serving",
+                    bundle.name,
+                    bundle.len()
+                );
+                deregister_bundle(bundles, &bundle);
             }
         }
-    };
-    let res = simulate(&outcome.mapping, &req.block, cgra, &req.xs)?;
-    Ok((res.outputs, res.cycles, outcome.mapping.ii, fresh))
+    }
+
+    // Solo path: compile-once mapping keyed by block identity. The key
+    // carries the mask's content fingerprint — name and shape alone would
+    // silently alias two differently-pruned blocks onto one mapping.
+    let key = format!("{}#{}x{}@{fp:016x}", req.block.name, req.block.c, req.block.k);
+    let (serving, fresh) = cache.get_or_map(&key, metrics, || {
+        let outcome = map_unit(MapUnit::Single(&req.block), cgra, opts)?;
+        Ok(ServingMapping { outcome, bundle: None })
+    })?;
+    let res = simulate(&serving.outcome.mapping, &req.block, cgra, &req.xs)?;
+    Ok((res.outputs, res.cycles, serving.outcome.mapping.ii, fresh, 1))
+}
+
+/// Map (or fetch from cache) a registered bundle's shared fused mapping.
+/// A mapping error here means the bundle cannot map on this fabric at
+/// all — the caller falls back to solo serving; request-specific errors
+/// never originate here.
+fn fused_serving(
+    bundle: &Arc<FusedBundle>,
+    cache: &MappingCache,
+    metrics: &Metrics,
+    opts: &MapperOptions,
+    cgra: &StreamingCgra,
+) -> Result<(Arc<ServingMapping>, bool)> {
+    let key = format!("{}@bundle:{:016x}", bundle.name, bundle.fingerprint());
+    cache.get_or_map(&key, metrics, || {
+        // A bundle's combined MII sits far above the members' own MIIs and
+        // the slot-offset composition needs II headroom: widen the slack
+        // to the fused operating point unless the config is already wider.
+        let mut bopts = opts.clone();
+        bopts.ii_slack = bopts.ii_slack.max(MapperOptions::fused().ii_slack);
+        let outcome = map_unit(MapUnit::Bundle(bundle), cgra, &bopts)?;
+        Ok(ServingMapping { outcome, bundle: Some(Arc::clone(bundle)) })
+    })
+}
+
+/// Drop `bundle`'s member routes from the registry, pointer-compared so a
+/// newer bundle that re-claimed a member fingerprint is left alone.
+/// Idempotent — the mapper is deterministic, so every worker that sees
+/// the bundle fail converges on the same deregistered state.
+fn deregister_bundle(bundles: &BundleRegistry, bundle: &Arc<FusedBundle>) {
+    let mut reg = bundles.lock().expect("bundle registry");
+    for b in &bundle.blocks {
+        if reg.get(&b.mask_fingerprint()).is_some_and(|r| Arc::ptr_eq(r, bundle)) {
+            reg.remove(&b.mask_fingerprint());
+        }
+    }
+}
+
+/// Serve a member request through its bundle's shared fused mapping: the
+/// whole bundle maps once (cache keyed by the combined mask fingerprint);
+/// the member's stream runs with zero inputs on the co-resident blocks and
+/// the member's output plane is returned.
+fn run_fused(
+    req: &InferRequest,
+    fp: u64,
+    serving: &ServingMapping,
+    fresh: bool,
+    cgra: &StreamingCgra,
+) -> Result<(Vec<Vec<f32>>, u64, usize, bool, usize)> {
+    let resident = serving.bundle.as_ref().expect("fused entry carries its bundle");
+    let member = resident
+        .member_index_of(fp)
+        .expect("registry routes only to bundles holding the member");
+    let n_iters = req.xs.len();
+    // The member's weights come from the request (same mask structure —
+    // that is what the fingerprint matched); co-residents stream zeros.
+    let blocks: Vec<&SparseBlock> = resident
+        .blocks
+        .iter()
+        .enumerate()
+        .map(|(i, b)| if i == member { req.block.as_ref() } else { b.as_ref() })
+        .collect();
+    let zeros: Vec<Vec<Vec<f32>>> = resident
+        .blocks
+        .iter()
+        .enumerate()
+        .map(|(i, b)| {
+            if i == member {
+                Vec::new()
+            } else {
+                vec![vec![0.0; b.c]; n_iters]
+            }
+        })
+        .collect();
+    let xs: Vec<&[Vec<f32>]> = zeros
+        .iter()
+        .enumerate()
+        .map(|(i, z)| if i == member { req.xs.as_slice() } else { z.as_slice() })
+        .collect();
+    let res =
+        simulate_fused(&serving.outcome.mapping, &serving.outcome.tags, &blocks, cgra, &xs)?;
+    let outputs = res
+        .per_block
+        .into_iter()
+        .nth(member)
+        .expect("member output plane")
+        .outputs;
+    Ok((outputs, res.cycles, serving.outcome.mapping.ii, fresh, resident.blocks.len()))
 }
 
 #[cfg(test)]
@@ -383,6 +759,229 @@ mod tests {
                 other => panic!("expected Runtime error, got {other:?}"),
             }
         }
+    }
+
+    fn tiny(name: &str, c: usize, k: usize, mask: Vec<bool>) -> Arc<SparseBlock> {
+        Arc::new(SparseBlock::from_mask(name, c, k, mask).unwrap())
+    }
+
+    fn tiny_members() -> Vec<Arc<SparseBlock>> {
+        vec![
+            tiny("f1", 2, 2, vec![true, false, true, true]),
+            tiny("f2", 3, 2, vec![true, true, false, true, true, false]),
+            tiny("f3", 2, 3, vec![true, false, true, false, true, true]),
+        ]
+    }
+
+    #[test]
+    fn fused_bundle_serves_member_requests_through_one_mapping() {
+        let cfg = small_cfg();
+        let coord = Coordinator::new(&cfg);
+        let members = tiny_members();
+        let bundle = Arc::new(FusedBundle::new(members.clone()).unwrap());
+        coord.register_bundle(Arc::clone(&bundle));
+
+        let mut id = 0u64;
+        let mut streams = Vec::new();
+        for member in &members {
+            let xs = stream_for(member, 5, 100 + id);
+            coord
+                .submit(InferRequest { id, block: Arc::clone(member), xs: xs.clone() })
+                .unwrap();
+            streams.push(xs);
+            id += 1;
+        }
+        let results = coord.collect(id as usize);
+        for r in results {
+            let r = r.expect("fused job ok");
+            let member = &members[r.id as usize];
+            assert_eq!(r.block_name, member.name);
+            assert_eq!(r.fused_members, 3, "served through the bundle");
+            for (x, y) in streams[r.id as usize].iter().zip(&r.outputs) {
+                let want = member.forward(x);
+                assert_eq!(y.len(), want.len());
+                for (a, w) in y.iter().zip(&want) {
+                    assert!((a - w).abs() < 1e-4 * (1.0 + w.abs()), "{}: {a} vs {w}", r.id);
+                }
+            }
+        }
+        let m = coord.metrics.snapshot();
+        assert_eq!(m.jobs, 3);
+        assert_eq!(m.failures, 0);
+        assert_eq!(m.cache_misses, 1, "three member blocks → one fused mapping");
+        assert_eq!(m.cache_hits, 2);
+    }
+
+    #[test]
+    fn mixed_fused_and_unfused_traffic() {
+        let cfg = small_cfg();
+        let coord = Coordinator::new(&cfg);
+        let members = tiny_members();
+        let bundle = Arc::new(FusedBundle::new(members[..2].to_vec()).unwrap());
+        coord.register_bundle(bundle);
+        let solo = Arc::clone(&members[2]); // unregistered → serves solo
+
+        let mut streams = Vec::new();
+        for (id, block) in members.iter().enumerate() {
+            let xs = stream_for(block, 4, 7 + id as u64);
+            coord
+                .submit(InferRequest { id: id as u64, block: Arc::clone(block), xs: xs.clone() })
+                .unwrap();
+            streams.push(xs);
+        }
+        let results = coord.collect(3);
+        for r in results {
+            let r = r.expect("mixed job ok");
+            let member = &members[r.id as usize];
+            let want_members = if r.id < 2 { 2 } else { 1 };
+            assert_eq!(r.fused_members, want_members, "{}", member.name);
+            for (x, y) in streams[r.id as usize].iter().zip(&r.outputs) {
+                let want = member.forward(x);
+                for (a, w) in y.iter().zip(&want) {
+                    assert!((a - w).abs() < 1e-4 * (1.0 + w.abs()), "{}: {a} vs {w}", r.id);
+                }
+            }
+        }
+        let m = coord.metrics.snapshot();
+        assert_eq!(m.cache_misses, 2, "one fused + one solo mapping");
+        assert_eq!(solo.name, "f3");
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_mapping() {
+        // Serialized single-worker traffic so the use order is exact:
+        // A, B fill a capacity-2 cache; touching A makes B the LRU victim
+        // when C arrives; B then re-maps on its next request.
+        let mut cfg = small_cfg();
+        cfg.workers = 1;
+        cfg.cache_capacity = 2;
+        let coord = Coordinator::new(&cfg);
+        let blocks = tiny_members(); // a, b, c stand-ins
+        let mut id = 0u64;
+        let mut run = |bi: usize| -> InferResult {
+            let block = &blocks[bi];
+            let xs = stream_for(block, 2, id);
+            coord.submit(InferRequest { id, block: Arc::clone(block), xs }).unwrap();
+            id += 1;
+            coord.collect(1).pop().unwrap().expect("job ok")
+        };
+        assert!(run(0).mapped_fresh); // A miss
+        assert!(run(1).mapped_fresh); // B miss
+        assert!(!run(0).mapped_fresh); // A hit (bumps A)
+        assert!(run(2).mapped_fresh); // C miss → evicts B (LRU)
+        assert!(!run(0).mapped_fresh); // A survived
+        assert!(run(1).mapped_fresh, "B was evicted and must re-map");
+        let m = coord.metrics.snapshot();
+        assert_eq!(m.cache_misses, 4);
+        assert_eq!(m.cache_hits, 2);
+    }
+
+    #[test]
+    fn concurrent_cold_start_maps_once() {
+        // Many concurrent requests for one cold block: single-flight must
+        // map exactly once while waiters sleep on the entry's condvar
+        // (not on the cache map), then share the result.
+        let mut cfg = small_cfg();
+        cfg.workers = 4;
+        cfg.queue_depth = 8;
+        let coord = Coordinator::new(&cfg);
+        let block = Arc::new(paper_blocks()[0].block.clone());
+        for id in 0..8u64 {
+            let xs = stream_for(&block, 4, id);
+            coord.submit(InferRequest { id, block: Arc::clone(&block), xs }).unwrap();
+        }
+        let results = coord.collect(8);
+        assert!(results.iter().all(|r| r.is_ok()));
+        let m = coord.metrics.snapshot();
+        assert_eq!(m.cache_misses, 1, "one mapping for 8 concurrent requests");
+        assert_eq!(m.cache_hits, 7);
+    }
+
+    #[test]
+    fn failed_build_leaves_no_dead_cache_entry() {
+        // A failed (deterministically re-failing) mapping must not leave a
+        // permanent Empty entry behind: Empty entries are not LRU victims,
+        // so a dead one would pin cache_capacity forever.
+        let cache = MappingCache::new(1);
+        let metrics = Metrics::default();
+        let err = cache.get_or_map("dead", &metrics, || {
+            Err(Error::Workload("unmappable".into()))
+        });
+        assert!(err.is_err());
+        assert_eq!(
+            cache.inner.lock().unwrap().len(),
+            0,
+            "failed build must remove its cache entry"
+        );
+        // The capacity-1 cache is free again: a successful build for the
+        // same key caches normally and subsequent requests hit.
+        let block = tiny("cachetest", 2, 2, vec![true, false, true, true]);
+        let cgra = StreamingCgra::paper_default();
+        let opts = MapperOptions::sparsemap();
+        let build = || {
+            let outcome = map_unit(MapUnit::Single(&block), &cgra, &opts)?;
+            Ok(ServingMapping { outcome, bundle: None })
+        };
+        let (_, fresh) = cache.get_or_map("dead", &metrics, build).unwrap();
+        assert!(fresh);
+        let (_, fresh) =
+            cache.get_or_map("dead", &metrics, || unreachable!("second request must hit")).unwrap();
+        assert!(!fresh);
+        assert_eq!(cache.inner.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn deregister_bundle_removes_only_its_own_routes() {
+        // The unmappable-bundle fallback must not clobber routes a newer
+        // bundle has re-claimed for a shared member (latest wins).
+        let reg: BundleRegistry = Arc::new(Mutex::new(HashMap::new()));
+        let members = tiny_members();
+        let b1 = Arc::new(FusedBundle::new(members[..2].to_vec()).unwrap());
+        let b2 = Arc::new(FusedBundle::new(members[1..].to_vec()).unwrap());
+        {
+            let mut r = reg.lock().unwrap();
+            for b in &b1.blocks {
+                r.insert(b.mask_fingerprint(), Arc::clone(&b1));
+            }
+            for b in &b2.blocks {
+                r.insert(b.mask_fingerprint(), Arc::clone(&b2));
+            }
+        }
+        deregister_bundle(&reg, &b1);
+        let r = reg.lock().unwrap();
+        assert!(
+            !r.contains_key(&members[0].mask_fingerprint()),
+            "b1's exclusive route is removed"
+        );
+        assert!(
+            r.get(&members[1].mask_fingerprint()).is_some_and(|x| Arc::ptr_eq(x, &b2)),
+            "the shared member stays routed to the newer bundle"
+        );
+        assert!(r.contains_key(&members[2].mask_fingerprint()));
+        // Idempotent.
+        drop(r);
+        deregister_bundle(&reg, &b1);
+        assert_eq!(reg.lock().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn register_fused_plans_with_configured_knobs() {
+        let mut cfg = small_cfg();
+        cfg.max_fused_blocks = 2;
+        cfg.fusion_max_ii = 12;
+        let coord = Coordinator::new(&cfg);
+        let members = tiny_members();
+        let plan = coord.register_fused(&members);
+        assert!(plan.iter().all(|b| b.len() <= 2));
+        assert_eq!(plan.iter().map(|b| b.len()).sum::<usize>(), members.len());
+        // First planned pair is registered: a member request serves fused.
+        let first = &plan[0];
+        assert!(first.len() == 2, "tiny blocks must pack in pairs");
+        let member = Arc::clone(&first.blocks[0]);
+        let xs = stream_for(&member, 2, 3);
+        coord.submit(InferRequest { id: 0, block: member, xs }).unwrap();
+        let r = coord.collect(1).pop().unwrap().expect("fused job ok");
+        assert_eq!(r.fused_members, 2);
     }
 
     #[test]

@@ -1,0 +1,162 @@
+//! Composition of per-block s-DFGs into one block-tagged graph — the IR
+//! side of multi-block fusion.
+//!
+//! A fused bundle's members are independent computations: the composed
+//! graph is the disjoint union of the member graphs with **no cross-block
+//! dependencies**, plus a [`BlockTags`] provenance table (node → member
+//! index). Member node ids are offset contiguously (member `i` occupies
+//! `offsets[i]..offsets[i+1]`, in the member's own node order), so a
+//! member's subgraph inside the composition is byte-identical to the
+//! standalone graph up to a constant id shift — the property the
+//! fused-vs-solo differential suite (`tests/fusion_equivalence.rs`) leans
+//! on.
+//!
+//! Downstream stages need no fusion awareness: the conflict-graph build,
+//! the SBTS solve and the simulator all operate on the composed graph
+//! as-is; only per-block *reporting* (COPs/MCIDs, per-member outputs)
+//! consults the tags.
+
+use crate::dfg::{NodeId, SDfg};
+
+/// Node → member-block provenance of a composed graph. For an unfused
+/// block the tags are trivial ([`BlockTags::single`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockTags {
+    /// Member index per node.
+    of_node: Vec<usize>,
+    /// Node-id offset per member plus a total-length sentinel:
+    /// member `i` owns `offsets[i]..offsets[i+1]`.
+    offsets: Vec<usize>,
+}
+
+impl BlockTags {
+    /// Trivial tags for a single (unfused) graph of `n_nodes` nodes.
+    pub fn single(n_nodes: usize) -> Self {
+        BlockTags { of_node: vec![0; n_nodes], offsets: vec![0, n_nodes] }
+    }
+
+    /// Number of member blocks.
+    pub fn members(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Member index of node `v`.
+    #[inline]
+    pub fn block_of(&self, v: NodeId) -> usize {
+        self.of_node[v]
+    }
+
+    /// Total node count tagged.
+    pub fn len(&self) -> usize {
+        self.of_node.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.of_node.is_empty()
+    }
+
+    /// Node-id range of member `i` inside the composed graph.
+    pub fn range_of(&self, i: usize) -> std::ops::Range<NodeId> {
+        self.offsets[i]..self.offsets[i + 1]
+    }
+}
+
+/// Compose disjoint member graphs into one block-tagged graph: nodes of
+/// member `i` keep their relative order at offset `offsets[i]`; edges are
+/// re-based per member (grouped by member, in member edge order). Node
+/// kinds carry *member-local* channel/kernel indices — the tags
+/// disambiguate which block they refer to.
+pub fn compose(name: &str, parts: &[&SDfg]) -> (SDfg, BlockTags) {
+    let mut g = SDfg::new(name);
+    let total: usize = parts.iter().map(|p| p.len()).sum();
+    let mut of_node = Vec::with_capacity(total);
+    let mut offsets = Vec::with_capacity(parts.len() + 1);
+    for (bi, p) in parts.iter().enumerate() {
+        offsets.push(g.len());
+        for v in p.nodes() {
+            let nv = g.add_node(p.kind(v));
+            debug_assert_eq!(nv, offsets[bi] + v);
+            of_node.push(bi);
+        }
+    }
+    offsets.push(g.len());
+    for (bi, p) in parts.iter().enumerate() {
+        let off = offsets[bi];
+        for e in p.edges() {
+            g.add_edge(e.src + off, e.dst + off, e.kind);
+        }
+    }
+    (g, BlockTags { of_node, offsets })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::build::build_sdfg;
+    use crate::sparse::gen::random_block;
+
+    #[test]
+    fn single_tags_are_trivial() {
+        let t = BlockTags::single(5);
+        assert_eq!(t.members(), 1);
+        assert_eq!(t.len(), 5);
+        assert!(!t.is_empty());
+        assert_eq!(t.range_of(0), 0..5);
+        assert!((0..5).all(|v| t.block_of(v) == 0));
+    }
+
+    #[test]
+    fn compose_is_disjoint_union_with_provenance() {
+        let a = build_sdfg(&random_block("a", 3, 3, 0.4, 1)).0;
+        let b = build_sdfg(&random_block("b", 4, 2, 0.5, 2)).0;
+        let c = build_sdfg(&random_block("c", 2, 4, 0.3, 3)).0;
+        let parts = [&a, &b, &c];
+        let (g, tags) = compose("fused(a+b+c)", &parts);
+
+        assert_eq!(g.len(), a.len() + b.len() + c.len());
+        assert_eq!(tags.len(), g.len());
+        assert_eq!(tags.members(), 3);
+        assert_eq!(
+            g.edges().len(),
+            a.edges().len() + b.edges().len() + c.edges().len()
+        );
+        // Per-member subgraph is the member graph shifted by a constant.
+        for (bi, p) in parts.iter().enumerate() {
+            let range = tags.range_of(bi);
+            assert_eq!(range.len(), p.len());
+            let off = range.start;
+            for v in p.nodes() {
+                assert_eq!(g.kind(off + v), p.kind(v), "member {bi} node {v}");
+                assert_eq!(tags.block_of(off + v), bi);
+            }
+        }
+        // No cross-block edges, and every edge maps back to a member edge.
+        for e in g.edges() {
+            let bs = tags.block_of(e.src);
+            assert_eq!(bs, tags.block_of(e.dst), "cross-block edge {e:?}");
+            let off = tags.range_of(bs).start;
+            let member = parts[bs];
+            assert!(
+                member
+                    .edges()
+                    .iter()
+                    .any(|me| me.src == e.src - off && me.dst == e.dst - off && me.kind == e.kind),
+                "edge {e:?} missing from member {bs}"
+            );
+        }
+        // The union of valid members is valid.
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn compose_single_part_matches_original() {
+        let a = build_sdfg(&random_block("solo", 4, 4, 0.4, 7)).0;
+        let (g, tags) = compose("solo", &[&a]);
+        assert_eq!(g.len(), a.len());
+        assert_eq!(tags.range_of(0), 0..a.len());
+        for v in a.nodes() {
+            assert_eq!(g.kind(v), a.kind(v));
+        }
+        assert_eq!(g.edges(), a.edges());
+    }
+}

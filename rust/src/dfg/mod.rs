@@ -14,6 +14,7 @@
 
 pub mod analysis;
 pub mod build;
+pub mod fuse;
 pub mod oracle;
 
 use crate::error::{Error, Result};

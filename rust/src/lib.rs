@@ -65,6 +65,34 @@
 //! `tests/wide_blocks.rs` drives a k = 128 block through map → simulate →
 //! serve, and the `wide_k128/*` bench rows track the spill cost.
 //!
+//! ## Multi-block fusion: bundles of small blocks on one configuration
+//!
+//! Real pruned networks are dominated by small blocks that leave most of
+//! the fabric idle; reconfiguring per block wastes streaming throughput.
+//! The fusion pipeline maps a whole bundle onto **one** configuration:
+//!
+//! * [`sparse::fuse`] plans bundles (`plan_bundles`: deterministic greedy
+//!   first-fit over estimated PE/bus demand, capped by a combined-MII
+//!   budget — `MapperOptions::fusion` / `[mapper] max_fused_blocks`,
+//!   `fusion_max_ii`);
+//! * [`mapper::map_unit`] maps a [`sparse::fuse::FusedBundle`] exactly
+//!   like a block: every member is scheduled *solo* at the shared
+//!   `(II, retry)` and the solo schedules are composed by per-member
+//!   modulo-slot time shifts, so each member's COPs/MCIDs/routes inside
+//!   the bundle are byte-identical to its solo schedule
+//!   (`tests/fusion_equivalence.rs` locks this, `golden_mappings` pins
+//!   the canonical `fused3` bundle);
+//! * [`bind`] needs no fusion awareness — the conflict graph's
+//!   `(slot, resource)` buckets span members, so cross-block
+//!   exclusiveness is the same machinery that separates nodes of one
+//!   block ([`dfg::fuse::BlockTags`] carries node → member provenance);
+//! * [`sim::simulate_fused`] runs all members in lockstep and reports
+//!   per-block outputs and COPs/MCIDs;
+//! * the [`coordinator`] routes a request for *any* registered member
+//!   block to the shared fused mapping (`register_bundle` /
+//!   `register_fused`; one LRU cache entry keyed by the bundle's combined
+//!   mask fingerprint) and serves mixed fused/unfused traffic.
+//!
 //! ## Hot-path rewrites are oracle-tested
 //!
 //! The required workflow for optimizing any mapper hot path: move the old

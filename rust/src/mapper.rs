@@ -26,15 +26,35 @@
 //! their storage through the worker's [`ScratchPool`], and both are locked
 //! to their retired naive implementations by `tests/conflict_equivalence.rs`
 //! and the golden snapshots in `tests/golden_mappings.rs`.
+//!
+//! ## Mapping units and multi-block fusion
+//!
+//! The lattice operates on a [`MapUnit`]: a single block or a
+//! [`FusedBundle`] of small blocks destined for one fabric configuration.
+//! Per attempt, every bundle member is scheduled *solo* at the shared
+//! `(II, retry)`; the solo schedules are then composed by per-member
+//! modulo-slot time shifts (greedy smallest-fit offsets over the combined
+//! reads/writes/PE/GRF-port occupancy — `compose_scheduled`). A constant
+//! shift changes no dependency distance and no modulo-slot equality, so
+//! each member's COPs, MCIDs and route classes inside the bundle are
+//! byte-identical to its solo schedule at that attempt
+//! (`tests/fusion_equivalence.rs` asserts this). The composed graph then
+//! binds exactly like a single block: the conflict-graph's
+//! `(slot, resource)` buckets span members, so cross-block exclusiveness
+//! falls out of the existing machinery and SBTS needs no structural
+//! changes. [`map_block`] is a thin wrapper over [`map_unit`] and its
+//! results are unchanged by the refactor.
 
 use crate::arch::StreamingCgra;
 use crate::bind::{bind_with, Mapping, ScratchPool};
 use crate::config::{SchedulerKind, SparsemapConfig, Techniques};
-use crate::dfg::analysis::{mii, AssociationMatrix};
+use crate::dfg::analysis::AssociationMatrix;
 use crate::dfg::build::build_sdfg;
-use crate::dfg::SDfg;
+use crate::dfg::fuse::{compose, BlockTags};
+use crate::dfg::{EdgeKind, NodeKind, SDfg};
 use crate::error::{Error, Result};
 use crate::sched::{baseline, sparsemap, ScheduledSDfg};
+use crate::sparse::fuse::{FusedBundle, FusionOptions};
 use crate::sparse::SparseBlock;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -55,6 +75,11 @@ pub struct MapperOptions {
     /// (available hardware parallelism, capped at 8); `1` = sequential.
     /// The result is identical for every value — only latency changes.
     pub parallelism: usize,
+    /// Multi-block fusion knobs (consumed by the fusion planner — see
+    /// [`crate::sparse::fuse::plan_bundles`] and the coordinator's
+    /// `register_fused`); `map_unit` itself maps whatever bundle it is
+    /// handed.
+    pub fusion: FusionOptions,
 }
 
 impl MapperOptions {
@@ -68,6 +93,7 @@ impl MapperOptions {
             sched_retries: 8,
             seed: 42,
             parallelism: 0,
+            fusion: FusionOptions::default(),
         }
     }
 
@@ -82,6 +108,20 @@ impl MapperOptions {
         MapperOptions { ii_slack: 8, mis_iterations: 15_000, ..Self::sparsemap() }
     }
 
+    /// The fused-bundle operating point: the paper pipeline with a much
+    /// wider II slack. A bundle's combined MII sits well above each
+    /// member's own MII, and the slot-offset composition (see
+    /// `compose_scheduled`) needs enough II headroom to interleave the
+    /// members' occupancy profiles — once `II ≥ Σ member makespans` a
+    /// fully disjoint offset assignment exists, so a generous slack makes
+    /// the lattice's success a matter of *when*, not *if* (the lattice is
+    /// lazy: unused slack costs nothing once an earlier attempt wins).
+    /// The fused golden line, `tests/fusion_equivalence.rs` and the
+    /// `fused3/*` bench rows all pin this configuration.
+    pub fn fused() -> Self {
+        MapperOptions { ii_slack: 16, ..Self::sparsemap() }
+    }
+
     /// The BusMap [6] / Zhao [12] baseline pipeline (one schedule per II —
     /// heuristic [23] is deterministic and has no remap phase).
     pub fn baseline() -> Self {
@@ -93,6 +133,7 @@ impl MapperOptions {
             sched_retries: 1,
             seed: 42,
             parallelism: 0,
+            fusion: FusionOptions::default(),
         }
     }
 
@@ -116,6 +157,7 @@ impl MapperOptions {
             sched_retries: if cfg.scheduler == SchedulerKind::Baseline { 1 } else { 8 },
             seed: cfg.seed,
             parallelism: cfg.parallelism,
+            fusion: FusionOptions { max_blocks: cfg.max_fused_blocks, max_ii: cfg.fusion_max_ii },
         }
     }
 
@@ -147,10 +189,38 @@ pub struct FirstAttempt {
 #[derive(Clone, Debug)]
 pub struct MapOutcome {
     pub mapping: Mapping,
+    /// Node → member-block provenance (trivial single-member tags for an
+    /// unfused block) — the key to per-block reporting out of a fused
+    /// mapping.
+    pub tags: BlockTags,
     pub first_attempt: FirstAttempt,
     /// (ii, retry) pairs attempted before success.
     pub attempts: Vec<(usize, u64)>,
     pub mii: usize,
+}
+
+/// Per-member scheduling statistics of a (possibly fused) mapping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockStats {
+    pub cops: usize,
+    pub mcids: usize,
+}
+
+/// Split a scheduled graph's COPs and MCIDs by member-block provenance.
+/// For trivial tags this returns one entry equal to the global counts.
+pub fn per_block_stats(s: &ScheduledSDfg, tags: &BlockTags) -> Vec<BlockStats> {
+    let mut out = vec![BlockStats { cops: 0, mcids: 0 }; tags.members()];
+    for v in s.g.nodes() {
+        if matches!(s.g.kind(v), NodeKind::Cop { .. }) {
+            out[tags.block_of(v)].cops += 1;
+        }
+    }
+    for e in s.g.edges() {
+        if e.kind == EdgeKind::Internal && s.t[e.dst] - s.t[e.src] > 1 {
+            out[tags.block_of(e.src)].mcids += 1;
+        }
+    }
+    out
 }
 
 impl MapOutcome {
@@ -162,6 +232,19 @@ impl MapOutcome {
             .mii(block.dense_ops(), block.c, block.k)
             .max(1);
         dense_mii as f64 / self.mapping.ii as f64
+    }
+
+    /// COPs / MCIDs split by member block. Inside a bundle each member's
+    /// values equal its solo schedule at the winning `(II, retry)` — the
+    /// slot-offset composition preserves member schedules exactly
+    /// (asserted by `tests/fusion_equivalence.rs`).
+    pub fn per_block_stats(&self) -> Vec<BlockStats> {
+        per_block_stats(&self.mapping.s, &self.tags)
+    }
+
+    /// The `(II, retry)` pair that produced the winning mapping.
+    pub fn winning_attempt(&self) -> (usize, u64) {
+        *self.attempts.last().expect("a successful outcome records its winning attempt")
     }
 }
 
@@ -182,52 +265,210 @@ fn schedule_attempt(
     }
 }
 
+/// The unit a mapping attempt operates on: one sparse block, or a fused
+/// bundle of blocks destined for a single fabric configuration.
+pub enum MapUnit<'a> {
+    Single(&'a SparseBlock),
+    Bundle(&'a FusedBundle),
+}
+
+/// Per-unit state shared across the whole attempt lattice: each member's
+/// pristine s-DFG and its association matrix (both depend only on block
+/// structure).
+struct UnitCtx {
+    name: String,
+    parts: Vec<(SDfg, AssociationMatrix)>,
+}
+
+impl UnitCtx {
+    fn build(unit: &MapUnit<'_>) -> Self {
+        let (name, blocks): (String, Vec<&SparseBlock>) = match unit {
+            MapUnit::Single(b) => (b.name.clone(), vec![*b]),
+            MapUnit::Bundle(bu) => {
+                (bu.name.clone(), bu.blocks.iter().map(|b| b.as_ref()).collect())
+            }
+        };
+        let parts = blocks
+            .into_iter()
+            .map(|b| {
+                let (g, _) = build_sdfg(b);
+                // The fusion planner budgets bundles by feature-derived
+                // node counts (`FusedBundle::mii`) while the lattice below
+                // starts from graph-derived ones; pin the two count
+                // sources together so any future build_sdfg/features drift
+                // fails loudly here instead of skewing planner admission
+                // against the mapper's base II.
+                debug_assert_eq!(g.v_op().len(), b.features().v_op, "{}: v_op drift", b.name);
+                debug_assert_eq!(g.reads().len(), b.features().v_r, "{}: v_r drift", b.name);
+                debug_assert_eq!(g.writes().len(), b.features().v_w, "{}: v_w drift", b.name);
+                let am = AssociationMatrix::build(&g);
+                (g, am)
+            })
+            .collect();
+        UnitCtx { name, parts }
+    }
+
+    /// Combined MII (§4.1 bound over the members' summed node counts —
+    /// identical to the per-graph MII for a single block).
+    fn mii(&self, cgra: &StreamingCgra) -> usize {
+        let (ops, reads, writes) = self.parts.iter().fold((0, 0, 0), |acc, (g, _)| {
+            (acc.0 + g.v_op().len(), acc.1 + g.reads().len(), acc.2 + g.writes().len())
+        });
+        cgra.mii(ops, reads, writes)
+    }
+}
+
 /// What one `(II, retry)` attempt produced. Identical for a given index
 /// no matter which thread (or scratch) ran it.
 struct AttemptResult {
-    /// `Some((cops, mcids))` when the schedule succeeded.
+    /// `Some((cops, mcids))` when every member scheduled and (for bundles)
+    /// the slot-offset composition fit the fabric.
     sched: Option<(usize, usize)>,
     /// `Some` when schedule + bind both succeeded.
-    mapping: Option<Mapping>,
+    mapping: Option<(Mapping, BlockTags)>,
 }
 
+const ATTEMPT_FAILED: AttemptResult = AttemptResult { sched: None, mapping: None };
+
 fn run_attempt(
-    g: &SDfg,
+    ctx: &UnitCtx,
     cgra: &StreamingCgra,
     opts: &MapperOptions,
     ii: usize,
     retry: u64,
-    am: &AssociationMatrix,
     scratch: &mut ScratchPool,
 ) -> AttemptResult {
-    let Ok(s) = schedule_attempt(g, cgra, opts, ii, retry, am) else {
-        return AttemptResult { sched: None, mapping: None };
+    // Every member schedules solo at the shared (ii, retry): a bundle
+    // shares the II but each block keeps exactly the schedule it would get
+    // alone at that attempt.
+    let mut parts = Vec::with_capacity(ctx.parts.len());
+    for (g, am) in &ctx.parts {
+        match schedule_attempt(g, cgra, opts, ii, retry, am) {
+            Ok(s) => parts.push(s),
+            Err(_) => return ATTEMPT_FAILED,
+        }
+    }
+    let (s, tags) = if parts.len() == 1 {
+        let s = parts.pop().expect("one part");
+        let tags = BlockTags::single(s.g.len());
+        (s, tags)
+    } else {
+        match compose_scheduled(&ctx.name, &parts, cgra) {
+            Some(st) => st,
+            None => return ATTEMPT_FAILED,
+        }
     };
     let sched = Some((s.cops(), s.mcids().len()));
     let mapping = bind_with(&s, cgra, opts.mis_iterations, opts.seed ^ retry, scratch).ok();
-    AttemptResult { sched, mapping }
+    AttemptResult { sched, mapping: mapping.map(|m| (m, tags)) }
+}
+
+/// Compose solo member schedules into one fused schedule at the shared II.
+///
+/// Each member is time-shifted by a per-member slot offset (greedy
+/// smallest-fit, fixed member order) so the combined per-slot occupancy —
+/// input buses, output buses, PEs and GRF write ports — fits the fabric. A
+/// constant time shift leaves every dependency distance and every
+/// modulo-slot equality untouched, so a member's COPs, MCIDs and route
+/// classes inside the bundle are byte-identical to its solo schedule;
+/// only the modulo phase moves. Returns `None` when no offset assignment
+/// fits (the attempt fails and the mapper escalates the lattice).
+fn compose_scheduled(
+    name: &str,
+    parts: &[ScheduledSDfg],
+    cgra: &StreamingCgra,
+) -> Option<(ScheduledSDfg, BlockTags)> {
+    let ii = parts[0].ii;
+    debug_assert!(parts.iter().all(|s| s.ii == ii), "bundle members share the II");
+    let mut reads = vec![0usize; ii];
+    let mut writes = vec![0usize; ii];
+    let mut pe_ops = vec![0usize; ii];
+    let mut grf_w = vec![0usize; ii];
+    let mut shifts = Vec::with_capacity(parts.len());
+    for s in parts {
+        let occ = s.occupancy();
+        // Same GRF-forced-MCID classification the route pre-allocator
+        // applies (pinned together by `route::tests`).
+        let grf = crate::bind::route::grf_writes_per_slot(s);
+        let off = (0..ii).find(|&off| {
+            (0..ii).all(|slot| {
+                let src = (slot + ii - off) % ii;
+                reads[slot] + occ.reads[src] <= cgra.m
+                    && writes[slot] + occ.writes[src] <= cgra.n
+                    && pe_ops[slot] + occ.pe_ops[src] <= cgra.num_pes()
+                    && grf_w[slot] + grf[src] <= cgra.grf_write_ports
+            })
+        })?;
+        for slot in 0..ii {
+            let src = (slot + ii - off) % ii;
+            reads[slot] += occ.reads[src];
+            writes[slot] += occ.writes[src];
+            pe_ops[slot] += occ.pe_ops[src];
+            grf_w[slot] += grf[src];
+        }
+        shifts.push(off);
+    }
+    let gs: Vec<&SDfg> = parts.iter().map(|s| &s.g).collect();
+    let (g, tags) = compose(name, &gs);
+    let mut t = Vec::with_capacity(g.len());
+    for (s, &off) in parts.iter().zip(&shifts) {
+        t.extend(s.t.iter().map(|&x| x + off));
+    }
+    let s = ScheduledSDfg { g, ii, t };
+    // The offset search already guarantees constraint (2); this re-checks
+    // (1)+(2) from first principles and refuses rather than binding an
+    // inconsistent composition.
+    if let Err(e) = s.verify(cgra) {
+        if cfg!(debug_assertions) {
+            panic!("offset-composed schedule must verify: {e}");
+        }
+        return None;
+    }
+    Some((s, tags))
 }
 
 // Retry order interleaves the packed (bit-2 clear) and spread (bit-2
 // set) scheduling variants so both I/O policies are probed early.
 const RETRY_ORDER: [u64; 8] = [0, 4, 1, 5, 2, 6, 3, 7];
 
-/// Map a sparse block onto the CGRA. Returns the first fully bound mapping
-/// (lowest II, then lowest perturbation), plus first-attempt statistics.
-///
-/// Runs the attempt lattice as a parallel portfolio by default
-/// (`opts.parallelism`); the outcome is byte-identical to the sequential
-/// order for every width.
+/// Map a sparse block onto the CGRA — a thin wrapper over [`map_unit`].
+/// Returns the first fully bound mapping (lowest II, then lowest
+/// perturbation), plus first-attempt statistics.
 pub fn map_block(
     block: &SparseBlock,
     cgra: &StreamingCgra,
     opts: &MapperOptions,
 ) -> Result<MapOutcome> {
-    let (g, _) = build_sdfg(block);
-    let base_ii = mii(&g, cgra);
-    // The association matrix depends only on the pristine s-DFG: build it
-    // once per block, share it across the whole attempt lattice.
-    let am = AssociationMatrix::build(&g);
+    map_unit(MapUnit::Single(block), cgra, opts)
+}
+
+/// Map a fused bundle onto one fabric configuration — a thin wrapper over
+/// [`map_unit`]. See [`MapperOptions::fused`] for the recommended
+/// operating point.
+pub fn map_bundle(
+    bundle: &FusedBundle,
+    cgra: &StreamingCgra,
+    opts: &MapperOptions,
+) -> Result<MapOutcome> {
+    map_unit(MapUnit::Bundle(bundle), cgra, opts)
+}
+
+/// Map one unit (a single block or a fused bundle) onto the CGRA.
+///
+/// The `(II, retry)` attempt lattice starts at the unit's combined MII and
+/// runs as a deterministic parallel portfolio (`opts.parallelism`); the
+/// outcome is byte-identical to the sequential order for every width, and
+/// `map_block`'s results are bit-for-bit what they were before fusion
+/// existed (a single-member unit takes exactly the old code path).
+pub fn map_unit(
+    unit: MapUnit<'_>,
+    cgra: &StreamingCgra,
+    opts: &MapperOptions,
+) -> Result<MapOutcome> {
+    // Pristine graphs + association matrices depend only on the block
+    // structures: build them once, share them across the whole lattice.
+    let ctx = UnitCtx::build(&unit);
+    let base_ii = ctx.mii(cgra);
 
     let retries = opts.sched_retries.clamp(1, RETRY_ORDER.len() as u64) as usize;
     let lattice: Vec<(usize, u64)> = (base_ii..=base_ii + opts.ii_slack)
@@ -236,9 +477,9 @@ pub fn map_block(
 
     let width = opts.width(lattice.len());
     let results = if width <= 1 {
-        run_lattice_sequential(&g, cgra, opts, &am, &lattice)
+        run_lattice_sequential(&ctx, cgra, opts, &lattice)
     } else {
-        run_lattice_portfolio(&g, cgra, opts, &am, &lattice, width)
+        run_lattice_portfolio(&ctx, cgra, opts, &lattice, width)
     };
 
     // Fold in lattice order — both execution modes fill a prefix that
@@ -258,9 +499,10 @@ pub fn map_block(
                     success: res.mapping.is_some(),
                 });
             }
-            if let Some(mapping) = res.mapping {
+            if let Some((mapping, tags)) = res.mapping {
                 return Ok(MapOutcome {
                     mapping,
+                    tags,
                     first_attempt: first.unwrap(),
                     attempts,
                     mii: base_ii,
@@ -269,7 +511,7 @@ pub fn map_block(
         }
     }
     Err(Error::ScheduleFailed {
-        block: block.name.clone(),
+        block: ctx.name.clone(),
         reason: format!(
             "no valid mapping up to II={} (first attempt: {:?})",
             base_ii + opts.ii_slack,
@@ -281,16 +523,15 @@ pub fn map_block(
 
 /// Sequential reference order: attempt 0, 1, … until the first success.
 fn run_lattice_sequential(
-    g: &SDfg,
+    ctx: &UnitCtx,
     cgra: &StreamingCgra,
     opts: &MapperOptions,
-    am: &AssociationMatrix,
     lattice: &[(usize, u64)],
 ) -> Vec<Option<AttemptResult>> {
     let mut scratch = ScratchPool::new();
     let mut results: Vec<Option<AttemptResult>> = Vec::with_capacity(lattice.len());
     for &(ii, retry) in lattice {
-        let res = run_attempt(g, cgra, opts, ii, retry, am, &mut scratch);
+        let res = run_attempt(ctx, cgra, opts, ii, retry, &mut scratch);
         let won = res.mapping.is_some();
         results.push(Some(res));
         if won {
@@ -304,10 +545,9 @@ fn run_lattice_sequential(
 /// Portfolio order: `width` scoped workers claim indices in sequence; the
 /// lowest successful index wins, later claims are cancelled.
 fn run_lattice_portfolio(
-    g: &SDfg,
+    ctx: &UnitCtx,
     cgra: &StreamingCgra,
     opts: &MapperOptions,
-    am: &AssociationMatrix,
     lattice: &[(usize, u64)],
     width: usize,
 ) -> Vec<Option<AttemptResult>> {
@@ -330,7 +570,7 @@ fn run_lattice_portfolio(
                         break;
                     }
                     let (ii, retry) = lattice[i];
-                    let res = run_attempt(g, cgra, opts, ii, retry, am, &mut scratch);
+                    let res = run_attempt(ctx, cgra, opts, ii, retry, &mut scratch);
                     if res.mapping.is_some() {
                         best.fetch_min(i, Ordering::AcqRel);
                     }
@@ -411,6 +651,53 @@ mod tests {
         assert_eq!(seq.mapping.ii, par.mapping.ii);
         assert_eq!(seq.mapping.placements, par.mapping.placements);
         assert_eq!(seq.attempts, par.attempts);
+    }
+
+    fn tiny_bundle() -> FusedBundle {
+        use std::sync::Arc;
+        let blocks = [
+            ("t1", 2, 2, vec![true, false, true, true]),
+            ("t2", 3, 2, vec![true, true, false, true, true, false]),
+            ("t3", 2, 3, vec![true, false, true, false, true, true]),
+        ]
+        .into_iter()
+        .map(|(name, c, k, mask)| {
+            Arc::new(SparseBlock::from_mask(name, c, k, mask).unwrap())
+        })
+        .collect();
+        FusedBundle::new(blocks).unwrap()
+    }
+
+    #[test]
+    fn tiny_bundle_maps_onto_one_configuration() {
+        let cgra = StreamingCgra::paper_default();
+        let bundle = tiny_bundle();
+        let out = map_bundle(&bundle, &cgra, &MapperOptions::fused())
+            .unwrap_or_else(|e| panic!("tiny bundle must map: {e}"));
+        out.mapping.verify(&cgra).unwrap();
+        assert_eq!(out.tags.members(), 3);
+        assert!(out.mapping.ii >= bundle.mii(&cgra));
+        // Per-block stats partition the global counts.
+        let stats = out.per_block_stats();
+        assert_eq!(stats.len(), 3);
+        assert_eq!(stats.iter().map(|s| s.cops).sum::<usize>(), out.mapping.cops());
+        assert_eq!(stats.iter().map(|s| s.mcids).sum::<usize>(), out.mapping.mcids());
+        // The winning attempt is recorded last.
+        assert_eq!(out.winning_attempt().0, out.mapping.ii);
+    }
+
+    #[test]
+    fn fused_portfolio_matches_sequential() {
+        let cgra = StreamingCgra::paper_default();
+        let bundle = tiny_bundle();
+        let seq = map_bundle(&bundle, &cgra, &MapperOptions::fused().with_parallelism(1))
+            .unwrap();
+        let par = map_bundle(&bundle, &cgra, &MapperOptions::fused().with_parallelism(4))
+            .unwrap();
+        assert_eq!(seq.mapping.ii, par.mapping.ii);
+        assert_eq!(seq.mapping.placements, par.mapping.placements);
+        assert_eq!(seq.attempts, par.attempts);
+        assert_eq!(seq.tags, par.tags);
     }
 
     #[test]

@@ -17,13 +17,24 @@
 //!
 //! Register pressure (LRF per PE, GRF liveness) is analyzed statically and
 //! checked against capacities.
+//!
+//! ## Fused bundles
+//!
+//! The core loop is fusion-aware: [`simulate_fused`] runs a multi-block
+//! mapping (see `crate::mapper::map_unit`) with one input stream per
+//! member block, resolving every node's channel/kernel indices and weights
+//! through its [`BlockTags`] provenance, and reports per-block outputs and
+//! per-block COPs/MCIDs. [`simulate`] is the single-block wrapper over the
+//! same core.
 
 use std::collections::HashMap;
 
 use crate::arch::StreamingCgra;
 use crate::bind::{BusAt, Mapping, Placement, Route};
+use crate::dfg::fuse::BlockTags;
 use crate::dfg::{EdgeKind, NodeId, NodeKind};
 use crate::error::{Error, Result};
+use crate::mapper::per_block_stats;
 use crate::sparse::SparseBlock;
 
 /// Result of simulating a mapping over an input stream.
@@ -56,18 +67,118 @@ impl SimResult {
     }
 }
 
+/// One member block's share of a fused simulation.
+#[derive(Clone, Debug)]
+pub struct BlockSim {
+    /// Output vectors, one per iteration (member-kernel-indexed).
+    pub outputs: Vec<Vec<f32>>,
+    /// Caching operations the member's schedule carries.
+    pub cops: usize,
+    /// Multi-cycle internal dependencies the member's schedule carries.
+    pub mcids: usize,
+}
+
+/// Result of simulating a fused mapping: per-member outputs and schedule
+/// statistics plus the fabric-global counters.
+#[derive(Clone, Debug)]
+pub struct FusedSimResult {
+    /// One entry per member block, in bundle order.
+    pub per_block: Vec<BlockSim>,
+    pub cycles: u64,
+    pub iterations: usize,
+    pub pe_busy: Vec<u64>,
+    pub lrf_peak: usize,
+    pub grf_peak: usize,
+}
+
+impl FusedSimResult {
+    /// Average PE utilization over the run — the quantity fusion exists to
+    /// raise.
+    pub fn pe_utilization(&self) -> f64 {
+        let busy: u64 = self.pe_busy.iter().sum();
+        busy as f64 / (self.pe_busy.len() as f64 * self.cycles as f64)
+    }
+
+    /// Throughput in (fused) iterations per cycle (→ `1/II` in steady
+    /// state — one fused iteration advances *every* member by one).
+    pub fn throughput(&self) -> f64 {
+        self.iterations as f64 / self.cycles as f64
+    }
+}
+
 /// Simulate `mapping` over `xs` (one input vector per iteration — each of
-/// length `block.c`, indexed by channel).
+/// length `block.c`, indexed by channel). Single-block wrapper over
+/// [`simulate_fused`].
 pub fn simulate(
     mapping: &Mapping,
     block: &SparseBlock,
     cgra: &StreamingCgra,
     xs: &[Vec<f32>],
 ) -> Result<SimResult> {
+    let tags = BlockTags::single(mapping.s.g.len());
+    let res = simulate_fused(mapping, &tags, &[block], cgra, &[xs])?;
+    let outputs = res
+        .per_block
+        .into_iter()
+        .next()
+        .map(|b| b.outputs)
+        .unwrap_or_default();
+    Ok(SimResult {
+        outputs,
+        cycles: res.cycles,
+        iterations: res.iterations,
+        pe_busy: res.pe_busy,
+        lrf_peak: res.lrf_peak,
+        grf_peak: res.grf_peak,
+    })
+}
+
+/// Simulate a (possibly fused) mapping: `blocks` and `xs` carry one entry
+/// per member in bundle order, `tags` is the mapping's node → member
+/// provenance, and every member's stream must run the same number of
+/// iterations (the fabric advances all members in lockstep).
+pub fn simulate_fused(
+    mapping: &Mapping,
+    tags: &BlockTags,
+    blocks: &[&SparseBlock],
+    cgra: &StreamingCgra,
+    xs: &[&[Vec<f32>]],
+) -> Result<FusedSimResult> {
     let s = &mapping.s;
     let g = &s.g;
+    if tags.len() != g.len() {
+        return Err(Error::Workload(format!(
+            "block tags cover {} nodes but the mapping has {}",
+            tags.len(),
+            g.len()
+        )));
+    }
+    if blocks.len() != tags.members() || xs.len() != tags.members() {
+        return Err(Error::Workload(format!(
+            "fused simulation of {} members got {} blocks and {} streams",
+            tags.members(),
+            blocks.len(),
+            xs.len()
+        )));
+    }
+    let n_iters = xs.first().map_or(0, |x| x.len());
+    for (bi, (b, stream)) in blocks.iter().zip(xs).enumerate() {
+        if stream.len() != n_iters {
+            return Err(Error::Workload(format!(
+                "member {bi} stream runs {} iterations, member 0 runs {n_iters}",
+                stream.len()
+            )));
+        }
+        if let Some(bad) = stream.iter().find(|x| x.len() != b.c) {
+            return Err(Error::Workload(format!(
+                "member {bi} ('{}') input vector of length {} for {} channels",
+                b.name,
+                bad.len(),
+                b.c
+            )));
+        }
+    }
     let ii = s.ii as u64;
-    let n_iters = xs.len();
     let makespan = s.makespan() as u64;
     let total_cycles = (n_iters.max(1) as u64 - 1) * ii + makespan;
 
@@ -98,7 +209,9 @@ pub fn simulate(
     // value_of[v][iter] — produced values (functional state; hardware
     // residency is validated by the pressure stats and hazard checks).
     let mut value_of: Vec<Vec<Option<f32>>> = vec![vec![None; n_iters]; g.len()];
-    let mut outputs: Vec<Vec<f32>> = vec![vec![0.0; block.k]; n_iters];
+    // Per-member output planes, member-kernel-indexed.
+    let mut outputs: Vec<Vec<Vec<f32>>> =
+        blocks.iter().map(|b| vec![vec![0.0; b.k]; n_iters]).collect();
     let mut pe_busy = vec![0u64; cgra.num_pes()];
 
     for cycle in 0..total_cycles {
@@ -158,7 +271,7 @@ pub fn simulate(
 
             match g.kind(v) {
                 NodeKind::Read { ch, .. } => {
-                    value_of[v][iter] = Some(xs[iter][ch]);
+                    value_of[v][iter] = Some(xs[tags.block_of(v)][iter][ch]);
                     // The reading itself occupies its column bus this cycle.
                     if let Placement::InputBus(ib) = mapping.placements[v] {
                         if let Some(prev) = bus_used.insert(BusAt::Col { slot, col: ib }, v) {
@@ -174,7 +287,7 @@ pub fn simulate(
                 NodeKind::Mul { ch, kr } => {
                     let (edge_idx, _) = g.in_edges(v).next().expect("mul in-edge");
                     let x = fetch(edge_idx, &mut bus_used, &value_of)?;
-                    value_of[v][iter] = Some(x * block.weight(ch, kr));
+                    value_of[v][iter] = Some(x * blocks[tags.block_of(v)].weight(ch, kr));
                 }
                 NodeKind::Add { .. } => {
                     let idxs: Vec<usize> = g.in_edges(v).map(|(i, _)| i).collect();
@@ -192,7 +305,7 @@ pub fn simulate(
                 NodeKind::Write { kr } => {
                     let (edge_idx, _) = g.in_edges(v).next().expect("write in-edge");
                     let y = fetch(edge_idx, &mut bus_used, &value_of)?;
-                    outputs[iter][kr] = y;
+                    outputs[tags.block_of(v)][iter][kr] = y;
                     value_of[v][iter] = Some(y);
                 }
             }
@@ -219,17 +332,41 @@ pub fn simulate(
         }
     }
 
-    Ok(SimResult { outputs, cycles: total_cycles, iterations: n_iters, pe_busy, lrf_peak, grf_peak })
+    // Per-member schedule statistics out of the fused mapping.
+    let stats = per_block_stats(s, tags);
+    let per_block = outputs
+        .into_iter()
+        .zip(stats)
+        .map(|(outputs, st)| BlockSim { outputs, cops: st.cops, mcids: st.mcids })
+        .collect();
+    Ok(FusedSimResult {
+        per_block,
+        cycles: total_cycles,
+        iterations: n_iters,
+        pe_busy,
+        lrf_peak,
+        grf_peak,
+    })
 }
 
-/// Static register-pressure analysis: per-PE LRF registers (each op's
-/// result needs `ceil(max_out_dist / II)` rotating registers while any
-/// consumer is outstanding) and GRF liveness.
+/// Static register-pressure analysis: per-PE LRF liveness and GRF
+/// liveness, both in the modulo-pipelined steady state.
+///
+/// An op's result lives in its producer PE's LRF from `t(v)` until its
+/// last LRF/bus-forwarded consumer fires at `t(v) + max_dist`; with
+/// iterations overlapping every `II` cycles, modulo slot `m` holds one
+/// copy per offset `j ∈ [0, max_dist)` with `(t(v) + j) ≡ m (mod II)`.
+/// The per-PE peak is the maximum over slots of the summed live copies —
+/// slot-accurate, unlike a per-op register sum, which would misreport
+/// many short-lived values in *different* slots of one PE (the normal
+/// shape of wide and fused mappings, where a PE hosts an op in most
+/// slots) as simultaneous pressure.
 fn register_pressure(mapping: &Mapping, cgra: &StreamingCgra) -> Result<(usize, usize)> {
     let s = &mapping.s;
     let g = &s.g;
     let ii = s.ii;
-    let mut lrf: HashMap<crate::arch::PeId, usize> = HashMap::new();
+    // lrf[pe][slot] — live LRF values on `pe` during modulo slot `slot`.
+    let mut lrf: Vec<Vec<usize>> = vec![vec![0; ii]; cgra.num_pes()];
     let mut grf = 0usize;
     for v in g.nodes() {
         let Placement::Pe(pe) = mapping.placements[v] else { continue };
@@ -242,14 +379,17 @@ fn register_pressure(mapping: &Mapping, cgra: &StreamingCgra) -> Result<(usize, 
             .map(|(_, e)| s.t[e.dst] - s.t[v])
             .max()
             .unwrap_or(1);
-        *lrf.entry(pe).or_insert(0) += max_dist.div_ceil(ii).max(1);
+        let row = &mut lrf[cgra.pe_index(pe)];
+        for j in 0..max_dist {
+            row[(s.t[v] + j) % ii] += 1;
+        }
     }
     for (idx, e) in g.edges().iter().enumerate() {
         if mapping.route_of_edge(idx) == Some(Route::Grf) {
             grf += (s.t[e.dst] - s.t[e.src]).saturating_sub(1).div_ceil(ii).max(1);
         }
     }
-    let lrf_peak = lrf.values().copied().max().unwrap_or(0);
+    let lrf_peak = lrf.iter().flatten().copied().max().unwrap_or(0);
     if lrf_peak > cgra.lrf_capacity {
         return Err(Error::SimFault {
             cycle: 0,
@@ -351,5 +491,53 @@ mod tests {
         assert!(u > 0.2 && u <= 1.0, "utilization {u}");
         assert!(res.lrf_peak <= cgra.lrf_capacity);
         assert!(res.grf_peak <= cgra.grf_capacity);
+    }
+
+    #[test]
+    fn fused_simulation_reports_per_member_outputs() {
+        use crate::mapper::map_bundle;
+        use crate::sparse::fuse::FusedBundle;
+        use std::sync::Arc;
+        let cgra = StreamingCgra::paper_default();
+        let members: Vec<Arc<SparseBlock>> = paper_blocks()
+            .into_iter()
+            .take(2)
+            .map(|nb| Arc::new(nb.block))
+            .collect();
+        let bundle = FusedBundle::new(members.clone()).unwrap();
+        let out = map_bundle(&bundle, &cgra, &MapperOptions::fused())
+            .unwrap_or_else(|e| panic!("two-block bundle must map: {e}"));
+        let mut rng = crate::util::rng::Pcg64::seeded(11);
+        let streams: Vec<Vec<Vec<f32>>> = members
+            .iter()
+            .map(|b| {
+                (0..6)
+                    .map(|_| (0..b.c).map(|_| rng.next_normal() as f32).collect())
+                    .collect()
+            })
+            .collect();
+        let blocks: Vec<&SparseBlock> = members.iter().map(|b| b.as_ref()).collect();
+        let xs: Vec<&[Vec<f32>]> = streams.iter().map(|s| s.as_slice()).collect();
+        let res = simulate_fused(&out.mapping, &out.tags, &blocks, &cgra, &xs).unwrap();
+        assert_eq!(res.per_block.len(), 2);
+        assert_eq!(res.iterations, 6);
+        for (bi, (b, stream)) in blocks.iter().zip(&streams).enumerate() {
+            let got = &res.per_block[bi].outputs;
+            assert_eq!(got.len(), 6);
+            for (x, y) in stream.iter().zip(got) {
+                let want = b.forward(x);
+                for (a, w) in y.iter().zip(&want) {
+                    assert!((a - w).abs() < 1e-4 * (1.0 + w.abs()), "member {bi}: {a} vs {w}");
+                }
+            }
+        }
+        // Per-member statistics partition the mapping's global counts.
+        let cops: usize = res.per_block.iter().map(|b| b.cops).sum();
+        let mcids: usize = res.per_block.iter().map(|b| b.mcids).sum();
+        assert_eq!(cops, out.mapping.cops());
+        assert_eq!(mcids, out.mapping.mcids());
+        // Mismatched member/stream counts are rejected.
+        assert!(simulate_fused(&out.mapping, &out.tags, &blocks[..1], &cgra, &xs).is_err());
+        assert!(simulate_fused(&out.mapping, &out.tags, &blocks, &cgra, &xs[..1]).is_err());
     }
 }

@@ -1,0 +1,257 @@
+//! Multi-block fusion planning — the second half of the scale axis.
+//!
+//! Real pruned networks are dominated by *small* sparse blocks whose s-DFGs
+//! leave most of a streaming CGRA's PEs and buses idle; reconfiguring the
+//! fabric per block throws away the throughput the streaming architecture
+//! exists to provide. A [`FusedBundle`] packs several small blocks so one
+//! fabric configuration hosts all of them simultaneously: the bundle maps
+//! once (shared II, per-block resources kept disjoint by the binder's
+//! conflict buckets — see `crate::mapper::map_unit`) and every member block
+//! is then served without reconfiguration.
+//!
+//! [`plan_bundles`] is the planner: deterministic greedy first-fit
+//! bin-packing in input order, with each block's estimated PE/bus demand
+//! (its `|V_OP|` / `|V_R|` / `|V_W|` node counts — exactly the quantities
+//! the §4.1 MII bound consumes) accumulated per bundle and capped by the
+//! combined-MII budget of [`FusionOptions`].
+
+use std::sync::Arc;
+
+use crate::arch::StreamingCgra;
+use crate::error::{Error, Result};
+use crate::sparse::SparseBlock;
+use crate::util::Fnv64;
+
+/// Fusion planning knobs (the mapper carries a copy as
+/// `MapperOptions::fusion`; `[mapper] max_fused_blocks` /
+/// `[mapper] fusion_max_ii` in the config file).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FusionOptions {
+    /// Maximum member blocks per bundle. `1` disables fusion entirely.
+    pub max_blocks: usize,
+    /// Combined-MII budget: a block joins a bundle only while the bundle's
+    /// estimated MII (§4.1 bound over the summed node counts) stays at or
+    /// below this. Larger budgets pack more work per configuration at the
+    /// cost of a longer shared II.
+    pub max_ii: usize,
+}
+
+impl FusionOptions {
+    /// No fusion: every block is its own bundle.
+    pub fn disabled() -> Self {
+        FusionOptions { max_blocks: 1, max_ii: 0 }
+    }
+}
+
+impl Default for FusionOptions {
+    fn default() -> Self {
+        // Up to four paper-scale small blocks fit a combined MII of 12 on
+        // the 4×4 fabric with room for the slot-offset composition.
+        FusionOptions { max_blocks: 4, max_ii: 12 }
+    }
+}
+
+/// A bundle of sparse blocks destined for one fabric configuration.
+/// Member order is the planner order and is part of the bundle's identity
+/// (the composed graph, the mapping and the fingerprint all follow it).
+#[derive(Clone, Debug)]
+pub struct FusedBundle {
+    /// `fused(<member>+<member>+…)` — diagnostic label carried into the
+    /// composed s-DFG and error messages.
+    pub name: String,
+    pub blocks: Vec<Arc<SparseBlock>>,
+}
+
+impl FusedBundle {
+    pub fn new(blocks: Vec<Arc<SparseBlock>>) -> Result<Self> {
+        if blocks.is_empty() {
+            return Err(Error::Workload("fusion bundle needs at least one block".into()));
+        }
+        let name = format!(
+            "fused({})",
+            blocks.iter().map(|b| b.name.as_str()).collect::<Vec<_>>().join("+")
+        );
+        Ok(FusedBundle { name, blocks })
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    /// Combined-structure fingerprint: member count plus each member's
+    /// cached [`SparseBlock::mask_fingerprint`], order-sensitive. The
+    /// coordinator keys the shared fused mapping on it — two bundles with
+    /// the same members in the same order share one cache entry no matter
+    /// which member a request names.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.eat_u64(self.blocks.len() as u64);
+        for b in &self.blocks {
+            h.eat_u64(b.mask_fingerprint());
+        }
+        h.finish()
+    }
+
+    /// Index of the member whose mask fingerprint is `fp` (first match).
+    pub fn member_index_of(&self, fp: u64) -> Option<usize> {
+        self.blocks.iter().position(|b| b.mask_fingerprint() == fp)
+    }
+
+    /// Estimated MII of the whole bundle on `cgra`: the §4.1 resource
+    /// bound over the members' summed node counts. Exact for pristine
+    /// graphs (COPs are a scheduling artifact and excluded from MII).
+    pub fn mii(&self, cgra: &StreamingCgra) -> usize {
+        let (ops, reads, writes) = self.blocks.iter().fold((0, 0, 0), |acc, b| {
+            let f = b.features();
+            (acc.0 + f.v_op, acc.1 + f.v_r, acc.2 + f.v_w)
+        });
+        cgra.mii(ops, reads, writes)
+    }
+}
+
+/// Greedy first-fit fusion planning, deterministic in input order: each
+/// block joins the first open bundle that stays within `opts.max_blocks`
+/// members and the `opts.max_ii` combined-MII budget, else opens a new
+/// bundle. Every block lands in exactly one bundle; blocks too large to
+/// share a configuration come back as singletons (serve them unfused).
+pub fn plan_bundles(
+    blocks: &[Arc<SparseBlock>],
+    cgra: &StreamingCgra,
+    opts: &FusionOptions,
+) -> Vec<FusedBundle> {
+    struct Open {
+        members: Vec<Arc<SparseBlock>>,
+        ops: usize,
+        reads: usize,
+        writes: usize,
+    }
+    let mut open: Vec<Open> = Vec::new();
+    for b in blocks {
+        let f = b.features();
+        let mut placed = false;
+        if opts.max_blocks > 1 {
+            for o in open.iter_mut() {
+                if o.members.len() >= opts.max_blocks {
+                    continue;
+                }
+                let mii =
+                    cgra.mii(o.ops + f.v_op, o.reads + f.v_r, o.writes + f.v_w);
+                if mii <= opts.max_ii {
+                    o.members.push(Arc::clone(b));
+                    o.ops += f.v_op;
+                    o.reads += f.v_r;
+                    o.writes += f.v_w;
+                    placed = true;
+                    break;
+                }
+            }
+        }
+        if !placed {
+            open.push(Open {
+                members: vec![Arc::clone(b)],
+                ops: f.v_op,
+                reads: f.v_r,
+                writes: f.v_w,
+            });
+        }
+    }
+    open.into_iter()
+        .map(|o| FusedBundle::new(o.members).expect("planner bundles are non-empty"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::paper_blocks;
+
+    fn small_three() -> Vec<Arc<SparseBlock>> {
+        // The three c = 4 paper blocks (block1/2/4) — the canonical small set.
+        paper_blocks()
+            .into_iter()
+            .filter(|nb| matches!(nb.label, "block1" | "block2" | "block4"))
+            .map(|nb| Arc::new(nb.block))
+            .collect()
+    }
+
+    #[test]
+    fn bundle_identity_and_fingerprint() {
+        let blocks = small_three();
+        let a = FusedBundle::new(blocks.clone()).unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.name, "fused(block1+block2+block4)");
+        assert_eq!(a.fingerprint(), FusedBundle::new(blocks.clone()).unwrap().fingerprint());
+        // Order-sensitive.
+        let mut rev = blocks.clone();
+        rev.reverse();
+        assert_ne!(a.fingerprint(), FusedBundle::new(rev).unwrap().fingerprint());
+        // Member lookup by mask fingerprint.
+        for (i, b) in blocks.iter().enumerate() {
+            assert_eq!(a.member_index_of(b.mask_fingerprint()), Some(i));
+        }
+        assert_eq!(a.member_index_of(0xdead_beef), None);
+        assert!(FusedBundle::new(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn combined_mii_is_bound_over_summed_counts() {
+        let cgra = StreamingCgra::paper_default();
+        let blocks = small_three();
+        let bundle = FusedBundle::new(blocks.clone()).unwrap();
+        // block1/2/4: v_op 26+26+32 = 84 → ⌈84/16⌉ = 6; reads 12 → 3;
+        // writes 18 → 5. Bound = 6.
+        assert_eq!(bundle.mii(&cgra), 6);
+        for b in &blocks {
+            let f = b.features();
+            assert!(bundle.mii(&cgra) >= cgra.mii(f.v_op, f.v_r, f.v_w));
+        }
+    }
+
+    #[test]
+    fn planner_is_deterministic_first_fit() {
+        let cgra = StreamingCgra::paper_default();
+        let blocks: Vec<Arc<SparseBlock>> =
+            paper_blocks().into_iter().map(|nb| Arc::new(nb.block)).collect();
+        let opts = FusionOptions::default();
+        let a = plan_bundles(&blocks, &cgra, &opts);
+        let b = plan_bundles(&blocks, &cgra, &opts);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.fingerprint(), y.fingerprint());
+        }
+        // Every block lands in exactly one bundle, in input order.
+        let flat: Vec<&str> =
+            a.iter().flat_map(|bu| bu.blocks.iter().map(|b| b.name.as_str())).collect();
+        let want: Vec<&str> = blocks.iter().map(|b| b.name.as_str()).collect();
+        assert_eq!(flat, want);
+        // Budgets respected.
+        for bu in &a {
+            assert!(bu.len() <= opts.max_blocks);
+            assert!(bu.len() == 1 || bu.mii(&cgra) <= opts.max_ii);
+        }
+    }
+
+    #[test]
+    fn planner_fuses_small_blocks_and_isolates_large() {
+        let cgra = StreamingCgra::paper_default();
+        let blocks: Vec<Arc<SparseBlock>> =
+            paper_blocks().into_iter().map(|nb| Arc::new(nb.block)).collect();
+        let plan = plan_bundles(&blocks, &cgra, &FusionOptions { max_blocks: 3, max_ii: 8 });
+        assert!(
+            plan.iter().any(|bu| bu.len() >= 2),
+            "small paper blocks must fuse under an MII-8 budget"
+        );
+        // A tight budget forces singletons.
+        let solo = plan_bundles(&blocks, &cgra, &FusionOptions { max_blocks: 3, max_ii: 1 });
+        assert!(solo.iter().all(|bu| bu.len() == 1));
+        // Disabled fusion: one bundle per block.
+        let off = plan_bundles(&blocks, &cgra, &FusionOptions::disabled());
+        assert_eq!(off.len(), blocks.len());
+        assert!(off.iter().all(|bu| bu.len() == 1));
+    }
+}

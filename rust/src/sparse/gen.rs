@@ -16,7 +16,10 @@
 //!   with modest II escalation; `wide_k128` is the end-to-end serving
 //!   scenario exercised by `tests/wide_blocks.rs` and the wide bench rows.
 
+use std::sync::Arc;
+
 use crate::error::{Error, Result};
+use crate::sparse::fuse::FusedBundle;
 use crate::sparse::SparseBlock;
 use crate::util::rng::Pcg64;
 
@@ -151,6 +154,21 @@ pub fn paper_blocks() -> Vec<NamedBlock> {
             NamedBlock { block, label, expect_nnz: nnz, expect_v_op: v_op, expect_n_fg4: n_fg4 }
         })
         .collect()
+}
+
+/// The canonical fused bundle: the three c = 4 paper blocks (block1 /
+/// block2 / block4) destined for one fabric configuration. The `fused3`
+/// golden line, `tests/fusion_equivalence.rs` and the `fused3/*` bench
+/// rows all pin exactly this bundle — they share this constructor so the
+/// member set cannot silently drift apart between them.
+pub fn fused3_bundle() -> FusedBundle {
+    let members: Vec<Arc<SparseBlock>> = paper_blocks()
+        .into_iter()
+        .filter(|nb| matches!(nb.label, "block1" | "block2" | "block4"))
+        .map(|nb| Arc::new(nb.block))
+        .collect();
+    debug_assert_eq!(members.len(), 3);
+    FusedBundle::new(members).expect("canonical bundle members exist")
 }
 
 /// The wide-kernel-axis evaluation blocks: kernel counts past the 64-bit

@@ -2,6 +2,7 @@
 //! feature extraction matching the paper's Table 2, generators, and the
 //! partitioning of full conv layers into blocks.
 
+pub mod fuse;
 pub mod gen;
 pub mod partition;
 pub mod prune;
@@ -23,6 +24,13 @@ pub struct SparseBlock {
     pub k: usize,
     pub mask: Vec<bool>,
     pub weights: Vec<f32>,
+    /// Cached [`Self::mask_fingerprint`] value, computed once at
+    /// construction. The mapper-relevant structure (shape + mask) is
+    /// immutable after `from_mask` — post-construction mutation is limited
+    /// to `name` and `weights` (see `partition`) — so the cache can never
+    /// go stale. Private so the only construction path is `from_mask`;
+    /// debug builds re-verify the cache on every access.
+    fp: u64,
 }
 
 /// The Table-2 feature vector of a block.
@@ -73,7 +81,8 @@ impl SparseBlock {
                 }
             })
             .collect();
-        Ok(SparseBlock { name: name.to_string(), c, k, mask, weights })
+        let fp = fingerprint_of(c, k, &mask);
+        Ok(SparseBlock { name: name.to_string(), c, k, mask, weights, fp })
     }
 
     #[inline]
@@ -177,22 +186,42 @@ impl SparseBlock {
     /// packed sparsity mask. A mapping depends on exactly this (weights
     /// only enter at simulation time), so two same-named, same-shaped
     /// blocks with different pruning patterns fingerprint apart — the
-    /// coordinator keys its mapping cache on it.
+    /// coordinator keys its mapping cache on it, and fused-bundle keys
+    /// ([`fuse::FusedBundle::fingerprint`]) build on it. Cached at
+    /// construction, so the request path never rehashes the O(c·k/8) mask
+    /// bytes.
+    #[inline]
     pub fn mask_fingerprint(&self) -> u64 {
-        let mut h = crate::util::Fnv64::new();
-        h.eat_u64(self.c as u64);
-        h.eat_u64(self.k as u64);
-        for chunk in self.mask.chunks(8) {
-            let mut byte = 0u8;
-            for (i, &m) in chunk.iter().enumerate() {
-                if m {
-                    byte |= 1 << i;
-                }
-            }
-            h.eat(byte);
-        }
-        h.finish()
+        // The cached value is only valid while (c, k, mask) stay what
+        // `from_mask` saw; those fields are pub, so debug builds verify
+        // the cache against a recompute to catch any in-place structure
+        // mutation that would silently alias cache keys.
+        debug_assert_eq!(
+            self.fp,
+            fingerprint_of(self.c, self.k, &self.mask),
+            "{}: mask_fingerprint stale — (c, k, mask) mutated after from_mask",
+            self.name
+        );
+        self.fp
     }
+}
+
+/// The fingerprint computation behind [`SparseBlock::mask_fingerprint`],
+/// evaluated once per block in [`SparseBlock::from_mask`].
+fn fingerprint_of(c: usize, k: usize, mask: &[bool]) -> u64 {
+    let mut h = crate::util::Fnv64::new();
+    h.eat_u64(c as u64);
+    h.eat_u64(k as u64);
+    for chunk in mask.chunks(8) {
+        let mut byte = 0u8;
+        for (i, &m) in chunk.iter().enumerate() {
+            if m {
+                byte |= 1 << i;
+            }
+        }
+        h.eat(byte);
+    }
+    h.finish()
 }
 
 #[cfg(test)]
@@ -257,6 +286,18 @@ mod tests {
     #[test]
     fn bad_mask_len_rejected() {
         assert!(SparseBlock::from_mask("bad", 2, 2, vec![true]).is_err());
+    }
+
+    #[test]
+    fn mask_fingerprint_is_cached_and_matches_recompute() {
+        let a = toy();
+        assert_eq!(a.mask_fingerprint(), fingerprint_of(a.c, a.k, &a.mask));
+        // The partitioner's post-construction edits (name, weights) leave
+        // the structure untouched, so the cached value stays valid.
+        let mut b = a.clone();
+        b.name = "renamed".into();
+        b.weights[0] = 99.0;
+        assert_eq!(b.mask_fingerprint(), a.mask_fingerprint());
     }
 
     #[test]

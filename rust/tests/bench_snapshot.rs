@@ -122,11 +122,22 @@ fn bench_mapper_json_schema() {
             "wide_k256/assoc_build_naive",
             "wide_k128/map_block_par4",
             "wide_k128/simulate_8it",
+            "fused3/map_bundle_par4",
+            "fused3/simulate_8it",
         ],
     );
+    // The hot-scan rows are emitted pairwise (both or neither — the bench
+    // skips them only when wide_k256 has no routable schedule).
+    require("wide_k256/bus_hot_scan_dense", &["wide_k256/bus_hot_scan_hash"]);
+    require("wide_k256/bus_hot_scan_hash", &["wide_k256/bus_hot_scan_dense"]);
     require(
         "serving/workers=1/per_request",
-        &["serving/wide_k128/per_request", "serving/wide_k128/cold_start_request"],
+        &[
+            "serving/wide_k128/per_request",
+            "serving/wide_k128/cold_start_request",
+            "serving/fused3/per_request",
+            "serving/fused3/cold_start_request",
+        ],
     );
     eprintln!("BENCH_mapper.json schema ok ({rows} rows)");
 }

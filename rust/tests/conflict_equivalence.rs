@@ -253,6 +253,63 @@ fn dense_bus_cost_handles_ii_wraparound() {
 }
 
 #[test]
+fn prop_incremental_hot_index_matches_oracles_at_inflated_ii() {
+    // The dense model maintains its hot-bus set incrementally on every
+    // claim/release (PR 4) instead of rescanning all II × (n + m) bus
+    // states per SBTS iteration. Inflated IIs are where a stale index
+    // would hide (a huge, mostly-cold bus array — the wide-block regime);
+    // walk randomized reassignments there and compare the incremental set
+    // against the from-scratch recompute (hot_nodes_naive) and the
+    // HashMap oracle on every step.
+    let cgra = StreamingCgra::paper_default();
+    let walked = AtomicUsize::new(0);
+    check("incremental hot index ≡ naive recompute ≡ hash oracle", 40, |rng| {
+        let c = 2 + rng.index(6);
+        let k = 2 + rng.index(6);
+        let p = 0.2 + 0.6 * rng.next_f64();
+        let b = random_block("hot", c, k, p, rng.next_u64());
+        let (g, _) = build_sdfg(&b);
+        let ii = mii(&g, &cgra) + 4 + rng.index(8);
+        let Ok(s) = schedule_at(&g, &cgra, Techniques::all(), ii) else { return };
+        let Ok(plan) = route::preallocate(&s, &cgra) else { return };
+        let cg = conflict::build(&s, &cgra, &plan);
+        let routes: Vec<Option<Route>> =
+            (0..s.g.edges().len()).map(|i| plan.route(i)).collect();
+
+        let n_nodes = cg.of_node.len();
+        let mut assign: Vec<usize> =
+            (0..n_nodes).map(|v| cg.of_node[v][rng.index(cg.of_node[v].len())]).collect();
+        let mut dense = BusCostModel::new(&s, &cg, &routes, &cgra);
+        let mut hash = HashBusCostModel::new(&s, &cg, &routes);
+        dense.reset(&assign);
+        hash.reset(&assign);
+        for step in 0..60 {
+            let v = rng.index(n_nodes);
+            dense.detach(v, &assign);
+            hash.detach(v, &assign);
+            assign[v] = cg.of_node[v][rng.index(cg.of_node[v].len())];
+            dense.attach(v, &assign);
+            hash.attach(v, &assign);
+            let mut inc = Vec::new();
+            dense.hot_nodes_into(&assign, &mut inc);
+            assert_eq!(
+                inc,
+                dense.hot_nodes_naive(&assign),
+                "II={ii} step {step}: incremental hot set ≠ naive recompute"
+            );
+            let mut oracle_hot = Vec::new();
+            hash.hot_nodes_into(&assign, &mut oracle_hot);
+            assert_eq!(
+                inc, oracle_hot,
+                "II={ii} step {step}: incremental hot set ≠ hash oracle"
+            );
+        }
+        walked.fetch_add(1, Ordering::Relaxed);
+    });
+    assert!(walked.load(Ordering::Relaxed) >= 20, "too few hot-index walks exercised");
+}
+
+#[test]
 fn sbts_trajectory_identical_under_either_cost_model() {
     // The solve is a pure function of (cg, seed, cost); with behaviorally
     // identical cost models the whole trajectory — iterations included —

@@ -1,0 +1,263 @@
+//! Fused-vs-solo differential suite for multi-block fusion.
+//!
+//! The fusion pipeline composes *solo* member schedules by per-member
+//! modulo-slot time shifts (see `mapper::map_unit`), so inside a bundle
+//! every block must carry exactly the COPs/MCIDs — and produce exactly the
+//! simulated values — of its solo schedule at the bundle's winning
+//! `(II, retry)`. This suite locks that property on the canonical bundle
+//! of three small paper blocks and on randomized small-block bundles, and
+//! drives mixed fused/unfused traffic through the coordinator at several
+//! parallelism settings to pin end-to-end determinism.
+
+use std::sync::Arc;
+
+use sparsemap::arch::StreamingCgra;
+use sparsemap::bind::bind;
+use sparsemap::config::SparsemapConfig;
+use sparsemap::coordinator::{Coordinator, InferRequest};
+use sparsemap::dfg::analysis::AssociationMatrix;
+use sparsemap::dfg::build::build_sdfg;
+use sparsemap::mapper::{map_bundle, map_unit, MapUnit, MapperOptions};
+use sparsemap::sched::sparsemap::schedule_at_perturbed;
+use sparsemap::sim::{simulate, simulate_fused};
+use sparsemap::sparse::fuse::{plan_bundles, FusedBundle, FusionOptions};
+use sparsemap::sparse::gen::{fused3_bundle, paper_blocks, random_block};
+use sparsemap::sparse::SparseBlock;
+use sparsemap::util::rng::Pcg64;
+
+/// The canonical bundle (block1/2/4 — `sparse::gen::fused3_bundle`), also
+/// pinned by `golden_mappings` and the `fused3/*` bench rows.
+fn canonical_bundle() -> FusedBundle {
+    let bundle = fused3_bundle();
+    assert_eq!(bundle.len(), 3);
+    bundle
+}
+
+fn stream_for(block: &SparseBlock, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..n)
+        .map(|_| (0..block.c).map(|_| rng.next_normal() as f32).collect())
+        .collect()
+}
+
+#[test]
+fn canonical_bundle_maps_deterministically_at_any_width() {
+    let cgra = StreamingCgra::paper_default();
+    let bundle = canonical_bundle();
+    let seq = map_bundle(&bundle, &cgra, &MapperOptions::fused().with_parallelism(1))
+        .unwrap_or_else(|e| panic!("canonical bundle must map: {e}"));
+    seq.mapping.verify(&cgra).unwrap();
+    assert_eq!(seq.tags.members(), 3);
+    assert!(seq.mapping.ii >= bundle.mii(&cgra), "shared II covers the combined MII");
+    for width in [2usize, 4] {
+        let par = map_unit(
+            MapUnit::Bundle(&bundle),
+            &cgra,
+            &MapperOptions::fused().with_parallelism(width),
+        )
+        .unwrap();
+        assert_eq!(seq.mapping.ii, par.mapping.ii, "width {width}");
+        assert_eq!(seq.mapping.placements, par.mapping.placements, "width {width}");
+        assert_eq!(seq.attempts, par.attempts, "width {width}");
+        assert_eq!(seq.tags, par.tags, "width {width}");
+    }
+}
+
+#[test]
+fn fused_member_schedules_are_solo_schedules_shifted() {
+    // Each member's COPs/MCIDs inside the bundle must be byte-identical to
+    // its solo schedule at the bundle's winning (II, retry), and the
+    // member's time vector must be that solo schedule's shifted by a
+    // constant.
+    let cgra = StreamingCgra::paper_default();
+    let opts = MapperOptions::fused();
+    let bundle = canonical_bundle();
+    let out = map_bundle(&bundle, &cgra, &opts).unwrap();
+    let (ii, retry) = out.winning_attempt();
+    let stats = out.per_block_stats();
+    assert_eq!(stats.len(), 3);
+
+    for (bi, member) in bundle.blocks.iter().enumerate() {
+        let (g, _) = build_sdfg(member);
+        let am = AssociationMatrix::build(&g);
+        let solo = schedule_at_perturbed(&g, &cgra, opts.techniques, ii, retry, &am)
+            .unwrap_or_else(|e| panic!("{}: solo schedule at winning attempt: {e}", member.name));
+        assert_eq!(stats[bi].cops, solo.cops(), "{}: COPs", member.name);
+        assert_eq!(stats[bi].mcids, solo.mcids().len(), "{}: MCIDs", member.name);
+
+        let range = out.tags.range_of(bi);
+        let fused_t = &out.mapping.s.t[range];
+        assert_eq!(fused_t.len(), solo.t.len(), "{}: node counts", member.name);
+        let shift = fused_t[0] as i64 - solo.t[0] as i64;
+        assert!(shift >= 0, "{}: shift {shift}", member.name);
+        for (v, (&ft, &st)) in fused_t.iter().zip(&solo.t).enumerate() {
+            assert_eq!(
+                ft as i64 - st as i64,
+                shift,
+                "{}: node {v} not shifted by the member constant",
+                member.name
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_simulation_is_bitwise_identical_to_solo() {
+    // Placements differ between the fused and solo binds, but values
+    // depend only on graph structure + weights — and the member graphs are
+    // identical (shifted), so outputs must match bit for bit.
+    let cgra = StreamingCgra::paper_default();
+    let opts = MapperOptions::fused();
+    let bundle = canonical_bundle();
+    let out = map_bundle(&bundle, &cgra, &opts).unwrap();
+    let (ii, retry) = out.winning_attempt();
+
+    let streams: Vec<Vec<Vec<f32>>> = bundle
+        .blocks
+        .iter()
+        .enumerate()
+        .map(|(i, b)| stream_for(b, 8, 40 + i as u64))
+        .collect();
+    let blocks: Vec<&SparseBlock> = bundle.blocks.iter().map(|b| b.as_ref()).collect();
+    let xs: Vec<&[Vec<f32>]> = streams.iter().map(|s| s.as_slice()).collect();
+    let fused = simulate_fused(&out.mapping, &out.tags, &blocks, &cgra, &xs).unwrap();
+    assert_eq!(fused.iterations, 8);
+
+    for (bi, member) in bundle.blocks.iter().enumerate() {
+        let (g, _) = build_sdfg(member);
+        let am = AssociationMatrix::build(&g);
+        let solo_s = schedule_at_perturbed(&g, &cgra, opts.techniques, ii, retry, &am).unwrap();
+        let solo_m = bind(&solo_s, &cgra, opts.mis_iterations, opts.seed ^ retry)
+            .unwrap_or_else(|e| panic!("{}: solo bind at II {ii}: {e}", member.name));
+        let solo = simulate(&solo_m, member, &cgra, &streams[bi]).unwrap();
+        assert_eq!(solo.outputs.len(), fused.per_block[bi].outputs.len());
+        for (it, (sv, fv)) in solo.outputs.iter().zip(&fused.per_block[bi].outputs).enumerate()
+        {
+            for (kr, (a, b)) in sv.iter().zip(fv).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{}: iter {it} kernel {kr}: solo {a} vs fused {b}",
+                    member.name
+                );
+            }
+        }
+        // And the simulator's per-block statistics echo the schedule's.
+        assert_eq!(fused.per_block[bi].cops, solo_s.cops(), "{}", member.name);
+        assert_eq!(fused.per_block[bi].mcids, solo_s.mcids().len(), "{}", member.name);
+    }
+}
+
+#[test]
+fn randomized_small_block_bundles_map_and_simulate() {
+    let cgra = StreamingCgra::paper_default();
+    let opts = MapperOptions::fused();
+    let mut rng = Pcg64::seeded(0xF05E);
+    let mut fused_bundles = 0usize;
+    for round in 0..5u64 {
+        let blocks: Vec<Arc<SparseBlock>> = (0..4 + rng.index(3))
+            .map(|i| {
+                let c = 2 + rng.index(4);
+                let k = 2 + rng.index(4);
+                let p = 0.3 + 0.4 * rng.next_f64();
+                Arc::new(random_block(&format!("rb{round}_{i}"), c, k, p, rng.next_u64()))
+            })
+            .collect();
+        let plan =
+            plan_bundles(&blocks, &cgra, &FusionOptions { max_blocks: 3, max_ii: 6 });
+        // The plan covers every block exactly once, in input order.
+        let flat: Vec<&str> =
+            plan.iter().flat_map(|bu| bu.blocks.iter().map(|b| b.name.as_str())).collect();
+        assert_eq!(flat, blocks.iter().map(|b| b.name.as_str()).collect::<Vec<_>>());
+        for bundle in plan.iter().filter(|bu| bu.len() > 1) {
+            fused_bundles += 1;
+            let out = map_bundle(bundle, &cgra, &opts)
+                .unwrap_or_else(|e| panic!("{}: random bundle must map: {e}", bundle.name));
+            out.mapping.verify(&cgra).unwrap();
+            // Per-member outputs match the reference forward.
+            let streams: Vec<Vec<Vec<f32>>> = bundle
+                .blocks
+                .iter()
+                .enumerate()
+                .map(|(i, b)| stream_for(b, 4, round * 31 + i as u64))
+                .collect();
+            let members: Vec<&SparseBlock> = bundle.blocks.iter().map(|b| b.as_ref()).collect();
+            let xs: Vec<&[Vec<f32>]> = streams.iter().map(|s| s.as_slice()).collect();
+            let res = simulate_fused(&out.mapping, &out.tags, &members, &cgra, &xs)
+                .unwrap_or_else(|e| panic!("{}: fused sim: {e}", bundle.name));
+            for (bi, b) in members.iter().enumerate() {
+                for (x, y) in streams[bi].iter().zip(&res.per_block[bi].outputs) {
+                    let want = b.forward(x);
+                    for (a, w) in y.iter().zip(&want) {
+                        assert!(
+                            (a - w).abs() < 1e-4 * (1.0 + w.abs()),
+                            "{} member {bi}: {a} vs {w}",
+                            bundle.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+    assert!(fused_bundles >= 5, "only {fused_bundles} fused bundles exercised");
+}
+
+#[test]
+fn coordinator_serves_mixed_traffic_deterministically_at_any_parallelism() {
+    // The acceptance scenario end-to-end: a registered 3-block bundle plus
+    // an unfused block, served concurrently; outputs must be bit-identical
+    // across coordinator/portfolio parallelism settings.
+    let bundle_blocks: Vec<Arc<SparseBlock>> = canonical_bundle().blocks;
+    let solo = Arc::new(paper_blocks()[2].block.clone()); // block3, unfused
+
+    let run = |parallelism: usize, workers: usize| -> Vec<Vec<Vec<f32>>> {
+        let mut cfg = SparsemapConfig::default();
+        cfg.workers = workers;
+        cfg.queue_depth = 8;
+        cfg.parallelism = parallelism;
+        cfg.ii_slack = 3;
+        let coord = Coordinator::new(&cfg);
+        coord.register_bundle(Arc::new(FusedBundle::new(bundle_blocks.clone()).unwrap()));
+        let mut requests: Vec<(u64, Arc<SparseBlock>)> = Vec::new();
+        for (i, b) in bundle_blocks.iter().enumerate() {
+            requests.push((i as u64, Arc::clone(b)));
+        }
+        requests.push((3, Arc::clone(&solo)));
+        // A second wave over the same blocks exercises the warm cache.
+        for (i, b) in bundle_blocks.iter().enumerate() {
+            requests.push((4 + i as u64, Arc::clone(b)));
+        }
+        for (id, block) in &requests {
+            let xs = stream_for(block, 3, *id % 4);
+            coord.submit(InferRequest { id: *id, block: Arc::clone(block), xs }).unwrap();
+        }
+        let mut results: Vec<_> = coord
+            .collect(requests.len())
+            .into_iter()
+            .map(|r| r.expect("mixed job ok"))
+            .collect();
+        results.sort_by_key(|r| r.id);
+        for r in &results {
+            let want_members = if r.id == 3 { 1 } else { 3 };
+            assert_eq!(r.fused_members, want_members, "id {}", r.id);
+        }
+        results.into_iter().map(|r| r.outputs).collect()
+    };
+
+    let base = run(1, 1);
+    for (parallelism, workers) in [(2, 2), (4, 3)] {
+        let other = run(parallelism, workers);
+        assert_eq!(base.len(), other.len());
+        for (id, (a, b)) in base.iter().zip(&other).enumerate() {
+            for (x, y) in a.iter().zip(b) {
+                for (va, vb) in x.iter().zip(y) {
+                    assert_eq!(
+                        va.to_bits(),
+                        vb.to_bits(),
+                        "request {id}: outputs diverge at parallelism {parallelism}"
+                    );
+                }
+            }
+        }
+    }
+}

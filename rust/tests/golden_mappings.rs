@@ -14,8 +14,8 @@
 
 use sparsemap::arch::StreamingCgra;
 use sparsemap::bind::{Mapping, Placement};
-use sparsemap::mapper::{map_block, MapperOptions};
-use sparsemap::sparse::gen::{paper_blocks, wide_blocks};
+use sparsemap::mapper::{map_block, map_bundle, MapperOptions};
+use sparsemap::sparse::gen::{fused3_bundle, paper_blocks, wide_blocks};
 
 fn golden_path() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden_mappings.txt")
@@ -77,6 +77,29 @@ fn render_snapshot() -> String {
         m.cops(),
         m.mcids(),
         fingerprint(&m)
+    ));
+    // The canonical fused bundle (the three c = 4 paper blocks on one
+    // fabric configuration) at the shared fused operating point
+    // (`MapperOptions::fused()`). `per_block` pins each member's
+    // cops/mcids — inside a bundle these equal the member's solo schedule
+    // at the winning attempt (tests/fusion_equivalence.rs), so a drift
+    // here means the fusion composition changed.
+    let bundle = fused3_bundle();
+    let fused = map_bundle(&bundle, &cgra, &MapperOptions::fused())
+        .unwrap_or_else(|e| panic!("fused3: canonical bundle must map: {e}"));
+    fused.mapping.verify(&cgra).unwrap();
+    let per_block: Vec<String> = fused
+        .per_block_stats()
+        .iter()
+        .map(|s| format!("{}/{}", s.cops, s.mcids))
+        .collect();
+    out.push_str(&format!(
+        "fused3 ii={} cops={} mcids={} per_block={} placements={:016x}\n",
+        fused.mapping.ii,
+        fused.mapping.cops(),
+        fused.mapping.mcids(),
+        per_block.join(","),
+        fingerprint(&fused.mapping)
     ));
     out
 }
