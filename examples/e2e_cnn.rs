@@ -22,7 +22,7 @@ use std::time::Instant;
 
 use sparsemap::arch::StreamingCgra;
 use sparsemap::config::SparsemapConfig;
-use sparsemap::coordinator::{Coordinator, InferRequest};
+use sparsemap::coordinator::Coordinator;
 use sparsemap::runtime::{default_artifacts_dir, Runtime};
 use sparsemap::sparse::partition::{SparseLayer, LayerBlock};
 use sparsemap::util::rng::Pcg64;
@@ -95,25 +95,23 @@ fn run_layer_on_cgra(
     patches: &[Vec<f32>],
 ) -> (Vec<Vec<f32>>, u64) {
     let mut acc = vec![vec![0f32; layer.cout]; T];
-    let mut id = 0u64;
-    // Submit one job per block (the coordinator maps it once and streams
-    // all positions).
+    // Enqueue one request per block (the coordinator maps it once and
+    // streams all positions); tickets come back in block order.
+    let mut session = coord.session();
+    let mut tickets = Vec::with_capacity(layer.blocks.len());
     for lb in &layer.blocks {
         let live = SparseLayer::live_channels(&lb.block.name);
         let xs: Vec<Vec<f32>> = patches
             .iter()
             .map(|p| live.iter().map(|&ch| p[ch]).collect())
             .collect();
-        coord
-            .submit(InferRequest { id, block: Arc::new(lb.block.clone()), xs })
-            .expect("submit");
-        id += 1;
+        tickets.push(session.enqueue(Arc::new(lb.block.clone()), xs));
     }
+    session.flush();
     let mut cycles = 0u64;
-    for r in coord.collect(id as usize) {
-        let r = r.expect("block inference");
+    for (bi, ticket) in tickets.into_iter().enumerate() {
+        let r = ticket.wait().expect("block inference");
         cycles += r.cycles;
-        let bi = r.id as usize;
         let lb = &layer.blocks[bi];
         for (pos, y) in r.outputs.iter().enumerate() {
             for (bk, v) in y.iter().enumerate() {

@@ -4,6 +4,12 @@
 //! throughput claim translates to on this testbed. Per-request wall time
 //! is merged into `BENCH_mapper.json` alongside the mapper micro-benches.
 //!
+//! All traffic goes through the session/ticket API. The fused3 scenario
+//! carries three rows: `per_request` (window size 1 — the old
+//! per-member-serial semantics, one whole-bundle pass per request),
+//! `batched_request` (default batching — requests amortize one lockstep
+//! pass per window) and `window8` (one full 8-request window end to end).
+//!
 //! ```bash
 //! cargo bench --bench serving_throughput
 //! ```
@@ -12,7 +18,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use sparsemap::config::SparsemapConfig;
-use sparsemap::coordinator::{Coordinator, InferRequest};
+use sparsemap::coordinator::{Coordinator, Ticket};
 use sparsemap::sparse::gen::{fused3_bundle, paper_blocks, wide_blocks};
 use sparsemap::sparse::SparseBlock;
 use sparsemap::util::bench::{repo_root_path, write_json_merged, BenchResult};
@@ -33,44 +39,44 @@ fn main() {
         let mut rng = Pcg64::seeded(1);
 
         // Cold-start request: first job against an empty mapping cache.
-        // This spans submit → queue → map_block (cache miss) → a tiny
-        // simulation → collect, i.e. the user-visible cache-miss request
+        // This spans enqueue → queue → map_block (cache miss) → a tiny
+        // simulation → wait, i.e. the user-visible cache-miss request
         // latency; the isolated map_block cold-start numbers live in
         // mapper_micro (map_block_seq / map_block_par4).
         let t_cold = Instant::now();
+        let mut session = coord.session();
         let xs = stream(&blocks[0], 4, 99);
-        coord
-            .submit(InferRequest { id: 10_000, block: Arc::clone(&blocks[0]), xs })
-            .unwrap();
-        let _ = coord.collect(1);
+        let _ = session.enqueue(Arc::clone(&blocks[0]), xs).wait();
         let cold = t_cold.elapsed();
 
         // Warm the rest of the mapping cache (compile path off the
         // steady-state measurement).
-        for (id, block) in blocks.iter().enumerate().skip(1) {
-            let xs = stream(block, 4, id as u64);
-            coord
-                .submit(InferRequest { id: id as u64, block: Arc::clone(block), xs })
-                .unwrap();
+        for (i, block) in blocks.iter().enumerate().skip(1) {
+            let xs = stream(block, 4, i as u64);
+            let _ = session.enqueue(Arc::clone(block), xs).wait();
         }
-        let _ = coord.collect(blocks.len() - 1);
 
         let n = 200u64;
         let iters = 32;
         let t0 = Instant::now();
-        let mut submitted = 0u64;
+        let mut tickets: Vec<Ticket> = Vec::with_capacity(n as usize);
         let mut collected = 0usize;
         for id in 0..n {
             let block = Arc::clone(&blocks[rng.index(blocks.len())]);
             let xs = stream(&block, iters, id);
-            coord.submit(InferRequest { id, block, xs }).unwrap();
-            submitted += 1;
+            tickets.push(session.enqueue(block, xs));
             // Drain opportunistically to keep the pipeline full.
-            if submitted % 16 == 0 {
-                collected += coord.collect(8).len();
+            if tickets.len() >= 16 {
+                for t in tickets.drain(..8) {
+                    let _ = t.wait();
+                    collected += 1;
+                }
             }
         }
-        collected += coord.collect(n as usize - collected).len();
+        for t in tickets.drain(..) {
+            let _ = t.wait();
+            collected += 1;
+        }
         let wall = t0.elapsed();
         let m = coord.metrics.snapshot();
         println!(
@@ -114,25 +120,32 @@ fn main() {
         cfg.mis_iterations = wide_point.mis_iterations;
         cfg.ii_slack = wide_point.ii_slack;
         let coord = Coordinator::new(&cfg);
+        let mut session = coord.session();
 
         let t_cold = Instant::now();
         let xs = stream(&wide, 4, 99);
-        coord.submit(InferRequest { id: 20_000, block: Arc::clone(&wide), xs }).unwrap();
-        let _ = coord.collect(1);
+        let _ = session.enqueue(Arc::clone(&wide), xs).wait();
         let cold = t_cold.elapsed();
 
         let n = 48u64;
         let iters = 8;
         let t0 = Instant::now();
+        let mut tickets: Vec<Ticket> = Vec::new();
         let mut collected = 0usize;
         for id in 0..n {
             let xs = stream(&wide, iters, id);
-            coord.submit(InferRequest { id, block: Arc::clone(&wide), xs }).unwrap();
-            if id % 16 == 15 {
-                collected += coord.collect(8).len();
+            tickets.push(session.enqueue(Arc::clone(&wide), xs));
+            if tickets.len() >= 16 {
+                for t in tickets.drain(..8) {
+                    let _ = t.wait();
+                    collected += 1;
+                }
             }
         }
-        collected += coord.collect(n as usize - collected).len();
+        for t in tickets.drain(..) {
+            let _ = t.wait();
+            collected += 1;
+        }
         assert_eq!(collected, n as usize);
         let wall = t0.elapsed();
         println!(
@@ -160,45 +173,56 @@ fn main() {
     // Fused serving scenario: the canonical three-small-block bundle
     // resident in one fabric configuration. The cold-start row is the
     // bundle's one-shot fused mapping as a member request sees it; the
-    // per-request row is the steady-state member traffic against the
-    // shared mapping (no reconfiguration between members).
+    // per_request row serves member traffic one window-of-1 at a time
+    // (the pre-batching semantics: one whole-bundle pass per request);
+    // the batched_request and window8 rows measure the same traffic
+    // amortized through 8-request batching windows — the residency win
+    // turned into a throughput win.
     {
         let bundle = Arc::new(fused3_bundle());
         let members: Vec<Arc<SparseBlock>> = bundle.blocks.clone();
-        let cfg = SparsemapConfig { workers: 4, queue_depth: 32, ..SparsemapConfig::default() };
+
+        // --- window size 1: per-member-serial fused serving ------------
+        let mut cfg = SparsemapConfig { workers: 4, queue_depth: 32, ..SparsemapConfig::default() };
+        cfg.batch_window_requests = 1;
         let coord = Coordinator::new(&cfg);
-        coord.register_bundle(bundle);
+        coord.register_bundle(Arc::clone(&bundle));
+        let mut session = coord.session();
 
         let t_cold = Instant::now();
         let xs = stream(&members[0], 4, 99);
-        coord
-            .submit(InferRequest { id: 30_000, block: Arc::clone(&members[0]), xs })
-            .unwrap();
-        let _ = coord.collect(1);
+        let _ = session.enqueue(Arc::clone(&members[0]), xs).wait();
         let cold = t_cold.elapsed();
 
         let n = 120u64;
         let iters = 16;
         let t0 = Instant::now();
+        let mut tickets: Vec<Ticket> = Vec::new();
         let mut collected = 0usize;
         for id in 0..n {
-            let block = Arc::clone(&members[(id as usize) % members.len()]);
-            let xs = stream(&block, iters, id);
-            coord.submit(InferRequest { id, block, xs }).unwrap();
-            if id % 16 == 15 {
-                collected += coord.collect(8).len();
+            let member = &members[(id as usize) % members.len()];
+            tickets.push(session.enqueue(Arc::clone(member), stream(member, iters, id)));
+            if tickets.len() >= 16 {
+                for t in tickets.drain(..8) {
+                    let _ = t.wait();
+                    collected += 1;
+                }
             }
         }
-        collected += coord.collect(n as usize - collected).len();
+        for t in tickets.drain(..) {
+            let _ = t.wait();
+            collected += 1;
+        }
         assert_eq!(collected, n as usize);
         let wall = t0.elapsed();
         let m = coord.metrics.snapshot();
         println!(
-            "fused3: {n} member requests in {wall:?} → {:.0} req/s, cold-start {:.2} ms \
-             (cache misses {} — one fused mapping serves all members)",
+            "fused3 (window 1): {n} member requests in {wall:?} → {:.0} req/s, cold-start \
+             {:.2} ms (cache misses {}, windows {})",
             n as f64 / wall.as_secs_f64(),
             cold.as_secs_f64() * 1e3,
             m.cache_misses,
+            m.windows,
         );
 
         let mut per_request = Summary::new();
@@ -214,6 +238,73 @@ fn main() {
             name: "serving/fused3/cold_start_request".into(),
             summary: cold_summary,
             iters_per_sample: 1,
+        });
+
+        // --- 8-request batching windows --------------------------------
+        let mut cfg = SparsemapConfig { workers: 4, queue_depth: 32, ..SparsemapConfig::default() };
+        cfg.batch_window_requests = 8;
+        cfg.batch_window_max = 0;
+        let coord = Coordinator::new(&cfg);
+        coord.register_bundle(Arc::clone(&bundle));
+        let mut session = coord.session();
+        // Warm the fused mapping off the measurement.
+        let _ = session
+            .enqueue(Arc::clone(&members[0]), stream(&members[0], 2, 98))
+            .wait();
+
+        let t0 = Instant::now();
+        let mut tickets: Vec<Ticket> = Vec::new();
+        for id in 0..n {
+            let member = &members[(id as usize) % members.len()];
+            tickets.push(session.enqueue(Arc::clone(member), stream(member, iters, id)));
+        }
+        session.flush();
+        for t in tickets.drain(..) {
+            let _ = t.wait();
+        }
+        let wall = t0.elapsed();
+        let m = coord.metrics.snapshot();
+        println!(
+            "fused3 (batched): {n} member requests in {wall:?} → {:.0} req/s \
+             ({} windows — one lockstep pass each)",
+            n as f64 / wall.as_secs_f64(),
+            m.windows,
+        );
+        let mut batched = Summary::new();
+        batched.add(wall.as_nanos() as f64 / n as f64);
+        results.push(BenchResult {
+            name: "serving/fused3/batched_request".into(),
+            summary: batched,
+            iters_per_sample: n,
+        });
+
+        // One full 8-request window, end to end (enqueue → seal → one
+        // fused pass → all 8 tickets resolved), averaged over rounds.
+        let rounds = 16u64;
+        let t0 = Instant::now();
+        for round in 0..rounds {
+            let mut window: Vec<Ticket> = (0..8u64)
+                .map(|i| {
+                    let member = &members[(i as usize) % members.len()];
+                    let xs = stream(member, iters, round * 8 + i);
+                    session.enqueue(Arc::clone(member), xs)
+                })
+                .collect();
+            for t in window.drain(..) {
+                let _ = t.wait();
+            }
+        }
+        let wall = t0.elapsed();
+        println!(
+            "fused3 window8: {rounds} windows in {wall:?} → {:.2} ms/window",
+            wall.as_secs_f64() * 1e3 / rounds as f64,
+        );
+        let mut window8 = Summary::new();
+        window8.add(wall.as_nanos() as f64 / rounds as f64);
+        results.push(BenchResult {
+            name: "serving/fused3/window8".into(),
+            summary: window8,
+            iters_per_sample: rounds,
         });
     }
 

@@ -11,6 +11,7 @@
 //!   map        --block <name>   map one paper block and print the result
 //!   simulate   --block <name>   map + simulate + verify one block
 //!   serve      --requests <n>   run the streaming coordinator demo
+//!              --fuse <0|1>     register fused bundles (batching windows)
 //!   artifacts                   list AOT artifacts and smoke-run one
 //! common flags:
 //!   --config <path>             TOML-subset config file
@@ -22,7 +23,7 @@
 use std::collections::HashMap;
 
 use crate::config::SparsemapConfig;
-use crate::coordinator::{Coordinator, InferRequest};
+use crate::coordinator::Coordinator;
 use crate::error::{Error, Result};
 use crate::mapper::{map_block, MapperOptions};
 use crate::report;
@@ -224,28 +225,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let n = args.get_usize("requests", 32)?;
     let iters = args.get_usize("iters", 16)?;
+    let fuse = args.get_usize("fuse", 0)? != 0;
     let coord = Coordinator::new(&cfg);
     let blocks: Vec<std::sync::Arc<crate::sparse::SparseBlock>> = paper_blocks()
         .into_iter()
         .take(4)
         .map(|nb| std::sync::Arc::new(nb.block))
         .collect();
+    if fuse {
+        let plan = coord.register_fused(&blocks);
+        let fused = plan.iter().filter(|b| b.len() > 1).count();
+        println!("fusion planned {} bundle(s); member traffic batches into windows", fused);
+    }
     let mut rng = crate::util::rng::Pcg64::seeded(cfg.seed);
     let t0 = std::time::Instant::now();
-    for id in 0..n as u64 {
+    let mut session = coord.session();
+    let mut tickets = Vec::with_capacity(n);
+    for _ in 0..n {
         let block = std::sync::Arc::clone(&blocks[rng.index(blocks.len())]);
         let xs: Vec<Vec<f32>> = (0..iters)
             .map(|_| (0..block.c).map(|_| rng.next_normal() as f32).collect())
             .collect();
-        coord.submit(InferRequest { id, block, xs })?;
+        tickets.push(session.enqueue(block, xs));
     }
-    let results = coord.collect(n);
+    session.flush(); // seal any open batching windows
+    let ok = tickets.into_iter().map(|t| t.wait()).filter(|r| r.is_ok()).count();
     let wall = t0.elapsed();
-    let ok = results.iter().filter(|r| r.is_ok()).count();
     let m = coord.metrics.snapshot();
     println!(
-        "served {ok}/{n} requests in {wall:?}: cache hits {} misses {} total CGRA cycles {}",
-        m.cache_hits, m.cache_misses, m.total_cycles
+        "served {ok}/{n} requests in {wall:?}: cache hits {} misses {} windows {} \
+         total CGRA cycles {}",
+        m.cache_hits, m.cache_misses, m.windows, m.total_cycles
     );
     println!(
         "mean latency {:.2} ms, throughput {:.1} req/s",

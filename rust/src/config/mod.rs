@@ -77,6 +77,17 @@ pub struct SparsemapConfig {
     /// Coordinator mapping-cache capacity (entries). `0` = unbounded (the
     /// pre-LRU behavior); production serving should bound it.
     pub cache_capacity: usize,
+    /// Fused request batching: a bundle's open window seals (and is
+    /// dispatched as ONE lockstep simulation pass) once it holds this many
+    /// member requests. `0` or `1` disables aggregation — every member
+    /// request becomes its own window.
+    pub batch_window_requests: usize,
+    /// Cap on a window's lockstep iteration count (the maximum, over
+    /// members, of the summed request stream lengths): a request that
+    /// would push the window to the cap seals it first and opens a fresh
+    /// window, bounding the zero-padding cost a short request pays for
+    /// riding with long ones. `0` = uncapped.
+    pub batch_window_max: usize,
     /// Maximum member blocks per fused bundle (`1` disables fusion).
     pub max_fused_blocks: usize,
     /// Combined-MII budget for the fusion planner.
@@ -98,6 +109,8 @@ impl Default for SparsemapConfig {
             workers: 4,
             queue_depth: 16,
             cache_capacity: 0,
+            batch_window_requests: 8,
+            batch_window_max: 1024,
             max_fused_blocks: 4,
             fusion_max_ii: 12,
             seed: 42,
@@ -141,6 +154,12 @@ impl SparsemapConfig {
                 ("coordinator", "queue_depth") => cfg.queue_depth = value.as_int()? as usize,
                 ("coordinator", "cache_capacity") => {
                     cfg.cache_capacity = value.as_int()? as usize
+                }
+                ("coordinator", "batch_window_requests") => {
+                    cfg.batch_window_requests = value.as_int()? as usize
+                }
+                ("coordinator", "batch_window_max") => {
+                    cfg.batch_window_max = value.as_int()? as usize
                 }
                 ("workload", "seed") => cfg.seed = value.as_int()? as u64,
                 (s, k) => {
@@ -208,6 +227,24 @@ seed = 7
         assert_eq!(c.workers, 2);
         assert_eq!(c.cache_capacity, 64);
         assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn batching_knobs_parse() {
+        let c = SparsemapConfig::from_str_cfg(
+            "[coordinator]\nbatch_window_requests = 3\nbatch_window_max = 64\n",
+        )
+        .unwrap();
+        assert_eq!(c.batch_window_requests, 3);
+        assert_eq!(c.batch_window_max, 64);
+        // Defaults batch; 0/1 are the documented opt-outs, not errors.
+        let d = SparsemapConfig::default();
+        assert!(d.batch_window_requests > 1);
+        assert!(d.batch_window_max > 0);
+        assert!(SparsemapConfig::from_str_cfg(
+            "[coordinator]\nbatch_window_requests = 0\nbatch_window_max = 0\n"
+        )
+        .is_ok());
     }
 
     #[test]

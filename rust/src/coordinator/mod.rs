@@ -1,10 +1,40 @@
 //! Streaming inference coordinator (L3 runtime).
 //!
-//! Owns the request path of the system: a bounded job queue (backpressure),
-//! a worker-thread pool that maps blocks (with a compile-once mapping
-//! cache) and executes them on the cycle-accurate CGRA simulator, and
-//! aggregate metrics. The PJRT cross-check (`crate::runtime`) runs on the
-//! caller's thread — XLA executables stay off the worker pool.
+//! Owns the request path of the system: a typed **session API** over a
+//! bounded job queue (backpressure), a worker-thread pool that maps blocks
+//! (with a compile-once mapping cache) and executes them on the
+//! cycle-accurate CGRA simulator, and aggregate metrics. The PJRT
+//! cross-check (`crate::runtime`) runs on the caller's thread — XLA
+//! executables stay off the worker pool.
+//!
+//! ## Sessions and tickets
+//!
+//! [`Coordinator::session`] opens a [`ServeSession`];
+//! [`ServeSession::enqueue`] hands in one request (a block plus its
+//! iteration-major input vectors) and returns a [`Ticket`] — the handle
+//! the result is retrieved by ([`Ticket::wait`] / [`Ticket::try_wait`]),
+//! in any order, independent of completion order. Per-request failures
+//! come back as a structured [`ServeError`] (queue closed / mapping
+//! failed / simulator fault / worker gone) instead of a stringly runtime
+//! error. The pre-session `submit`/`collect` fire-hose survives one
+//! release as `#[deprecated]` thin wrappers over an internal session.
+//!
+//! ## Batching windows
+//!
+//! Requests targeting members of the same registered [`FusedBundle`]
+//! aggregate into a **batching window**: the window seals once it holds
+//! `[coordinator] batch_window_requests` requests (or its lockstep
+//! iteration count reaches `[coordinator] batch_window_max`), on
+//! [`ServeSession::flush`]/[`ServeSession::drain`], or when a member
+//! ticket is waited on — and the whole window is dispatched as ONE job
+//! running ONE lockstep simulation pass ([`crate::sim::simulate_fused_batch`])
+//! with a real iteration stream per member (zero inputs only for members
+//! absent from the window). The window is charged for the resident
+//! configuration once: `Metrics::total_cycles` grows by the pass total,
+//! the `windows` counter by one, and each request's `InferResult::cycles`
+//! is its proportional share of the pass. Window contents are a pure
+//! function of the session's enqueue order (plus the two knobs), so
+//! serving is deterministic at any worker count.
 //!
 //! ## Mapping cache
 //!
@@ -14,39 +44,43 @@
 //! never held across a mapping, so unrelated blocks proceed in parallel
 //! and waiters block on nothing but their own entry. Capacity comes from
 //! `[coordinator] cache_capacity` (`0` = unbounded); at capacity the
-//! least-recently-used entry is evicted (in-flight holders keep their
-//! `Arc`).
+//! least-recently-used entry is evicted through a tick-ordered
+//! `BTreeMap` index maintained on the touch path (no full-map scans;
+//! in-flight holders keep their `Arc`).
 //!
 //! ## Multi-block fusion
 //!
 //! Small blocks can be registered as a [`FusedBundle`]
 //! ([`Coordinator::register_bundle`] / [`Coordinator::register_fused`]):
-//! a request for *any* member block routes to the bundle's shared fused
-//! mapping — one cache entry keyed by the bundle's combined mask
-//! fingerprint, mapped once, no reconfiguration between member requests.
-//! Unregistered blocks serve solo through the same cache, so fused and
-//! unfused traffic mix freely.
+//! a request for *any* member block routes — at enqueue time, through
+//! [`BundleRoutes`] — into the bundle's batching window and is served by
+//! the bundle's shared fused mapping (one cache entry keyed by the
+//! bundle's combined mask fingerprint). Unregistered blocks serve solo
+//! through the same cache, so fused and unfused traffic mix freely.
 //!
 //! tokio is unavailable offline; the pool is built on std threads +
 //! `std::sync::mpsc::sync_channel`, which gives exactly the bounded-queue
-//! semantics the backpressure design needs.
+//! semantics the backpressure design needs. A batching window occupies a
+//! single queue slot however many requests it carries.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::mpsc::{sync_channel, Receiver, SendError, SyncSender};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::Instant;
 
 use crate::arch::StreamingCgra;
 use crate::config::SparsemapConfig;
 use crate::error::{Error, Result};
 use crate::mapper::{map_unit, MapOutcome, MapUnit, MapperOptions};
-use crate::sim::{simulate, simulate_fused};
-use crate::sparse::fuse::{plan_bundles, FusedBundle, FusionOptions};
+use crate::sim::{simulate, simulate_fused_batch, MemberSegment, SegmentSim};
+use crate::sparse::fuse::{plan_bundles, BundleRoutes, FusedBundle, FusionOptions};
 use crate::sparse::SparseBlock;
 
 /// One inference job: run `xs` (iteration-major input vectors) through a
-/// sparse block on the CGRA.
+/// sparse block on the CGRA. Legacy envelope of the deprecated
+/// `submit`/`collect` path — the session API takes the block and inputs
+/// directly and allocates ids itself.
 pub struct InferRequest {
     pub id: u64,
     pub block: Arc<SparseBlock>,
@@ -56,31 +90,86 @@ pub struct InferRequest {
 /// The coordinator's answer.
 #[derive(Clone, Debug)]
 pub struct InferResult {
+    /// Request id: the session-scoped enqueue sequence number (or the
+    /// caller-chosen id on the deprecated `submit` path).
     pub id: u64,
     pub block_name: String,
-    pub outputs: Vec<Vec<f32>>,
-    /// CGRA cycles consumed.
+    /// CGRA cycles this request is charged for. A request served through a
+    /// batching window is charged its proportional share of the window's
+    /// single pass — the shares of a window sum exactly to the pass total.
     pub cycles: u64,
+    pub outputs: Vec<Vec<f32>>,
     /// II of the mapping used.
     pub ii: usize,
-    /// Whether this job triggered a fresh mapping (cache miss).
+    /// Whether this job triggered a fresh mapping (cache miss). In a
+    /// batching window, the window's first request carries the flag.
     pub mapped_fresh: bool,
     /// Member blocks resident in the configuration that served this
     /// request (`1` = unfused).
     pub fused_members: usize,
-    /// End-to-end latency in nanoseconds.
+    /// End-to-end latency in nanoseconds, measured from worker pickup
+    /// (window members share their window's value).
     pub latency_ns: u64,
+}
+
+/// Structured per-request serving failure, delivered through [`Ticket`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The job queue closed (worker pool shut down) before the request
+    /// could be dispatched or delivered.
+    QueueClosed,
+    /// Mapping the request's block — or its bundle's shared fused mapping
+    /// with no solo fallback left — failed. Carries the mapper's reason;
+    /// concurrent requests for the same key fail fast on the cache's
+    /// sticky error without re-running the deterministic mapping.
+    MappingFailed(String),
+    /// The simulator faulted while serving the request (a mapping-stack
+    /// bug detector firing, or malformed request inputs).
+    Sim(String),
+    /// The worker pool dropped the request without completing it (worker
+    /// panic or teardown mid-flight).
+    WorkerGone,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::QueueClosed => {
+                write!(f, "serving queue closed before the request was dispatched")
+            }
+            ServeError::MappingFailed(msg) => write!(f, "mapping failed: {msg}"),
+            ServeError::Sim(msg) => write!(f, "simulation failed: {msg}"),
+            ServeError::WorkerGone => {
+                write!(f, "worker pool dropped the request without completing it")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<ServeError> for Error {
+    /// The deprecated `collect` shim (and other legacy surfaces) report
+    /// serve errors the way the old API did: as stringly runtime errors.
+    fn from(e: ServeError) -> Self {
+        Error::Runtime(e.to_string())
+    }
 }
 
 /// Aggregate counters (lock-free reads).
 #[derive(Default)]
 pub struct Metrics {
+    /// Requests processed by the worker pool (each window member counts).
     pub jobs: AtomicU64,
     pub failures: AtomicU64,
     pub cache_hits: AtomicU64,
     pub cache_misses: AtomicU64,
+    /// CGRA cycles charged: per-request pass totals for solo serving, ONE
+    /// pass total per batching window for fused serving.
     pub total_cycles: AtomicU64,
     pub total_latency_ns: AtomicU64,
+    /// Batching windows simulated (one fused lockstep pass each).
+    pub windows: AtomicU64,
 }
 
 impl Metrics {
@@ -92,6 +181,7 @@ impl Metrics {
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             total_cycles: self.total_cycles.load(Ordering::Relaxed),
             total_latency_ns: self.total_latency_ns.load(Ordering::Relaxed),
+            windows: self.windows.load(Ordering::Relaxed),
         }
     }
 }
@@ -104,7 +194,444 @@ pub struct MetricsSnapshot {
     pub cache_misses: u64,
     pub total_cycles: u64,
     pub total_latency_ns: u64,
+    pub windows: u64,
 }
+
+/// Fused request batching knobs (see `[coordinator] batch_window_requests`
+/// / `batch_window_max`).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchOptions {
+    /// A window seals once it holds this many member requests (`0`/`1` =
+    /// every member request is its own window).
+    pub window_requests: usize,
+    /// Cap on a window's lockstep iteration count (max over members of
+    /// the summed request stream lengths): a request that would push the
+    /// window to the cap seals it *first* and starts a fresh one, so
+    /// requests already aboard never pay an oversized rider's padding.
+    /// `0` = uncapped.
+    pub window_max_iters: usize,
+}
+
+impl BatchOptions {
+    pub fn from_config(cfg: &SparsemapConfig) -> Self {
+        BatchOptions {
+            window_requests: cfg.batch_window_requests,
+            window_max_iters: cfg.batch_window_max,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tickets
+
+/// Resolution state shared between a [`Ticket`] and its worker-side
+/// completer.
+enum TicketInner {
+    Pending,
+    Done(std::result::Result<InferResult, ServeError>),
+    /// `wait` consumed the result (tombstone — unreachable through the
+    /// public API afterwards, since `wait` takes the ticket by value).
+    Taken,
+}
+
+struct TicketState {
+    inner: Mutex<TicketInner>,
+    ready: Condvar,
+}
+
+impl TicketState {
+    fn new() -> Arc<Self> {
+        Arc::new(TicketState { inner: Mutex::new(TicketInner::Pending), ready: Condvar::new() })
+    }
+
+    /// First completion wins; later calls (e.g. the completer's drop guard
+    /// after an explicit fulfill) are no-ops.
+    fn complete(&self, res: std::result::Result<InferResult, ServeError>) {
+        let mut inner = self.inner.lock().expect("ticket state");
+        if matches!(&*inner, TicketInner::Pending) {
+            *inner = TicketInner::Done(res);
+            self.ready.notify_all();
+        }
+    }
+
+    /// Block until the ticket is resolved (without consuming the result).
+    fn wait_done(&self) {
+        let mut inner = self.inner.lock().expect("ticket state");
+        while matches!(&*inner, TicketInner::Pending) {
+            inner = self.ready.wait(inner).expect("ticket state");
+        }
+    }
+
+    /// Block until resolved, then take the result.
+    fn take(&self) -> std::result::Result<InferResult, ServeError> {
+        let mut inner = self.inner.lock().expect("ticket state");
+        while matches!(&*inner, TicketInner::Pending) {
+            inner = self.ready.wait(inner).expect("ticket state");
+        }
+        match std::mem::replace(&mut *inner, TicketInner::Taken) {
+            TicketInner::Done(res) => res,
+            // `wait` consumes the ticket, so a taken state cannot be
+            // observed again through the public API.
+            _ => Err(ServeError::WorkerGone),
+        }
+    }
+
+    /// Non-blocking peek (clones the result, leaving it claimable).
+    fn peek(&self) -> Option<std::result::Result<InferResult, ServeError>> {
+        let inner = self.inner.lock().expect("ticket state");
+        match &*inner {
+            TicketInner::Done(res) => Some(res.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Worker-side handle to a pending ticket: fulfills it exactly once, and
+/// resolves it to [`ServeError::WorkerGone`] if dropped unfulfilled
+/// (worker panic, queue teardown with jobs still aboard) so a `wait` can
+/// never hang on a request the pool lost.
+struct TicketCompleter {
+    state: Arc<TicketState>,
+}
+
+impl TicketCompleter {
+    fn fulfill(self, res: std::result::Result<InferResult, ServeError>) {
+        self.state.complete(res);
+        // Drop runs next and no-ops: completion is first-wins.
+    }
+}
+
+impl Drop for TicketCompleter {
+    fn drop(&mut self) {
+        self.state.complete(Err(ServeError::WorkerGone));
+    }
+}
+
+/// Handle to one enqueued request. Results are retrieved by ticket, in any
+/// order — waiting also seals the request's batching window (if it is
+/// still open) so a ticket can never block on a window nobody else would
+/// close.
+pub struct Ticket {
+    id: u64,
+    block_name: String,
+    state: Arc<TicketState>,
+    window: Option<WindowHandle>,
+}
+
+impl Ticket {
+    /// The request's id (session-scoped enqueue sequence number).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Name of the block the request targets.
+    pub fn block_name(&self) -> &str {
+        &self.block_name
+    }
+
+    /// Block until the request resolves and take the result. Seals the
+    /// request's batching window first if it is still open.
+    pub fn wait(mut self) -> std::result::Result<InferResult, ServeError> {
+        self.flush_window();
+        self.state.take()
+    }
+
+    /// Non-blocking poll: `None` while the request is in flight, a clone
+    /// of the result once resolved (the result stays claimable by `wait`).
+    /// Also seals the request's still-open batching window — the poll
+    /// would otherwise never turn `Some`.
+    pub fn try_wait(&mut self) -> Option<std::result::Result<InferResult, ServeError>> {
+        self.flush_window();
+        self.state.peek()
+    }
+
+    fn flush_window(&mut self) {
+        if let Some(w) = self.window.take() {
+            w.flush();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batching windows
+
+/// A not-yet-dispatched batching window for one registered bundle.
+struct WindowCell {
+    bundle: Arc<FusedBundle>,
+    requests: Vec<WindowRequest>,
+    sealed: bool,
+}
+
+struct WindowRequest {
+    id: u64,
+    /// Member index inside the bundle (resolved at enqueue time).
+    member: usize,
+    block: Arc<SparseBlock>,
+    xs: Vec<Vec<f32>>,
+    done: TicketCompleter,
+}
+
+/// Shared handle to an open window: the session and every member ticket
+/// hold one, and whoever seals first dispatches. The queue sender is held
+/// weakly so stray tickets can never keep the worker pool alive past the
+/// coordinator's drop.
+#[derive(Clone)]
+struct WindowHandle {
+    cell: Arc<Mutex<WindowCell>>,
+    tx: Weak<SyncSender<Job>>,
+}
+
+impl WindowHandle {
+    /// Seal the window (if still open and non-empty) and dispatch it as
+    /// one job; on a closed queue every member ticket resolves to
+    /// [`ServeError::QueueClosed`] instead of hanging.
+    fn flush(&self) {
+        let job = {
+            let mut cell = self.cell.lock().expect("window cell");
+            if cell.sealed || cell.requests.is_empty() {
+                return;
+            }
+            cell.sealed = true;
+            WindowJob {
+                bundle: Arc::clone(&cell.bundle),
+                requests: std::mem::take(&mut cell.requests),
+            }
+        };
+        let Some(tx) = self.tx.upgrade() else {
+            for r in job.requests {
+                r.done.fulfill(Err(ServeError::QueueClosed));
+            }
+            return;
+        };
+        if let Err(SendError(sent)) = tx.send(Job::Window(job)) {
+            if let Job::Window(w) = sent {
+                for r in w.requests {
+                    r.done.fulfill(Err(ServeError::QueueClosed));
+                }
+            }
+        }
+    }
+}
+
+/// Lockstep iteration count of the window's current contents, optionally
+/// with one more candidate request aboard.
+fn lockstep_len(cell: &WindowCell, extra: Option<&WindowRequest>) -> usize {
+    let mut totals = vec![0usize; cell.bundle.len()];
+    for r in cell.requests.iter().chain(extra) {
+        totals[r.member] += r.xs.len();
+    }
+    totals.into_iter().max().unwrap_or(0)
+}
+
+/// Whether admitting `request` would push the window's lockstep iteration
+/// count to (or past) `batch_window_max` — checked *before* admission so
+/// requests already aboard never pay the oversized rider's padding.
+fn would_exceed_cap(cell: &WindowCell, request: &WindowRequest, batching: &BatchOptions) -> bool {
+    batching.window_max_iters > 0
+        && lockstep_len(cell, Some(request)) >= batching.window_max_iters
+}
+
+/// Whether the window should seal now that its contents are final for
+/// this enqueue: the request-count knob, or (for a window whose sole
+/// request alone reaches it — a cap breach no split can avoid) the
+/// iteration cap.
+fn window_full(cell: &WindowCell, batching: &BatchOptions) -> bool {
+    if cell.requests.len() >= batching.window_requests.max(1) {
+        return true;
+    }
+    batching.window_max_iters > 0
+        && lockstep_len(cell, None) >= batching.window_max_iters
+}
+
+// ---------------------------------------------------------------------------
+// Sessions
+
+/// Session bookkeeping shared by [`ServeSession`] and the deprecated
+/// `submit`/`collect` shims: id allocation plus the open windows, in
+/// creation order (so flush order — and therefore window formation — is a
+/// pure function of enqueue order).
+struct SessionCore {
+    next_id: u64,
+    /// Open windows keyed by bundle fingerprint (small linear map).
+    open: Vec<(u64, WindowHandle)>,
+}
+
+impl SessionCore {
+    fn new() -> Self {
+        SessionCore { next_id: 0, open: Vec::new() }
+    }
+
+    fn enqueue(
+        &mut self,
+        coord: &Coordinator,
+        id: u64,
+        block: Arc<SparseBlock>,
+        xs: Vec<Vec<f32>>,
+    ) -> Ticket {
+        let state = TicketState::new();
+        let done = TicketCompleter { state: Arc::clone(&state) };
+        let block_name = block.name.clone();
+        let route = coord.bundles.route(block.mask_fingerprint());
+        let window = match (route, coord.sender()) {
+            (_, None) => {
+                done.fulfill(Err(ServeError::QueueClosed));
+                None
+            }
+            (None, Some(tx)) => {
+                if let Err(SendError(sent)) =
+                    tx.send(Job::Single(SingleJob { id, block, xs, done }))
+                {
+                    if let Job::Single(j) = sent {
+                        j.done.fulfill(Err(ServeError::QueueClosed));
+                    }
+                }
+                None
+            }
+            (Some((bundle, member)), Some(tx)) => Some(self.window_enqueue(
+                &tx,
+                &coord.batching,
+                bundle,
+                WindowRequest { id, member, block, xs, done },
+            )),
+        };
+        Ticket { id, block_name, state, window }
+    }
+
+    /// Append a member request to its bundle's open window (creating one
+    /// if none is open), sealing and dispatching the window when it fills.
+    /// A request that would push the window's lockstep iteration count
+    /// past `batch_window_max` seals the window *first* and starts a fresh
+    /// one — members already aboard never pay unbounded padding for a
+    /// late oversized rider.
+    fn window_enqueue(
+        &mut self,
+        tx: &Arc<SyncSender<Job>>,
+        batching: &BatchOptions,
+        bundle: Arc<FusedBundle>,
+        request: WindowRequest,
+    ) -> WindowHandle {
+        let fp = bundle.fingerprint();
+        loop {
+            let handle = match self.open.iter().find(|(k, _)| *k == fp) {
+                Some((_, h)) => h.clone(),
+                None => {
+                    let h = WindowHandle {
+                        cell: Arc::new(Mutex::new(WindowCell {
+                            bundle: Arc::clone(&bundle),
+                            requests: Vec::new(),
+                            sealed: false,
+                        })),
+                        tx: Arc::downgrade(tx),
+                    };
+                    self.open.push((fp, h.clone()));
+                    h
+                }
+            };
+            let full = {
+                let mut cell = handle.cell.lock().expect("window cell");
+                if cell.sealed {
+                    // A concurrent `Ticket::wait` (tickets are `Send` and
+                    // may be waited from any thread) sealed and dispatched
+                    // this window between our lookup and this lock: forget
+                    // the stale handle and open a fresh window. The seal
+                    // decision and the push share one critical section, so
+                    // a request can never land in an already-dispatched
+                    // cell.
+                    drop(cell);
+                    self.open.retain(|(k, _)| *k != fp);
+                    continue;
+                }
+                if !cell.requests.is_empty() && would_exceed_cap(&cell, &request, batching) {
+                    drop(cell);
+                    handle.flush();
+                    self.open.retain(|(k, _)| *k != fp);
+                    continue;
+                }
+                cell.requests.push(request);
+                window_full(&cell, batching)
+            };
+            if full {
+                handle.flush();
+            }
+            // `request` is moved only on this returning path; every
+            // `continue` above runs before the move, so the loop re-enters
+            // with the request still in hand.
+            return handle;
+        }
+    }
+
+    /// Seal and dispatch every open window, in creation order.
+    fn flush_all(&mut self) {
+        for (_, h) in self.open.drain(..) {
+            h.flush();
+        }
+    }
+}
+
+/// A serving session: the enqueue side of the coordinator's typed API.
+/// Dropping the session seals its open batching windows (requests are
+/// never stranded); issued [`Ticket`]s stay valid past the session.
+pub struct ServeSession<'a> {
+    coord: &'a Coordinator,
+    core: SessionCore,
+    /// Weak handles to every issued ticket, for `drain`. Weak (the
+    /// worker-side completer keeps in-flight states alive, a resolved and
+    /// dropped ticket's state dies) and pruned amortized on enqueue, so a
+    /// long-lived session's bookkeeping stays proportional to its *live*
+    /// tickets, not its lifetime request count.
+    issued: Vec<std::sync::Weak<TicketState>>,
+}
+
+impl ServeSession<'_> {
+    /// Enqueue one request; blocks when the job queue is full
+    /// (backpressure). The returned [`Ticket`] is the result handle.
+    ///
+    /// A request for a member of a registered bundle joins the bundle's
+    /// open batching window; it is dispatched when the window seals (see
+    /// the module docs) — at the latest when its ticket is waited on or
+    /// the session flushes, drains or drops.
+    pub fn enqueue(&mut self, block: Arc<SparseBlock>, xs: Vec<Vec<f32>>) -> Ticket {
+        let id = self.core.next_id;
+        self.core.next_id += 1;
+        let ticket = self.core.enqueue(self.coord, id, block, xs);
+        if self.issued.len() == self.issued.capacity() {
+            // Amortized prune before the Vec would grow: drop bookkeeping
+            // for tickets that have resolved and been discarded.
+            self.issued.retain(|w| w.strong_count() > 0);
+        }
+        self.issued.push(Arc::downgrade(&ticket.state));
+        ticket
+    }
+
+    /// Seal and dispatch every open batching window without waiting.
+    pub fn flush(&mut self) {
+        self.core.flush_all();
+    }
+
+    /// Seal and dispatch every open batching window, then block until
+    /// every ticket issued by this session has resolved. Results stay
+    /// claimable through their tickets.
+    pub fn drain(&mut self) {
+        self.core.flush_all();
+        for state in self.issued.drain(..) {
+            // In-flight states are kept alive by the worker-side
+            // completer; a dead Weak means the request already resolved
+            // and its ticket is gone.
+            if let Some(state) = state.upgrade() {
+                state.wait_done();
+            }
+        }
+    }
+}
+
+impl Drop for ServeSession<'_> {
+    fn drop(&mut self) {
+        self.core.flush_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mapping cache
 
 /// A cached, servable mapping: a solo block's or a whole fused bundle's.
 struct ServingMapping {
@@ -133,7 +660,8 @@ struct CacheEntry {
     state: Mutex<EntryState>,
     ready: Condvar,
     /// Monotonic use tick for LRU eviction (unique per touch; assigned
-    /// under the cache-map lock so eviction order is race-free).
+    /// under the cache-map lock so eviction order is race-free and the
+    /// tick index can be maintained in lockstep).
     last_use: AtomicU64,
 }
 
@@ -159,7 +687,7 @@ impl BuildGuard<'_> {
     }
 
     /// Mark the entry failed with `reason`, wake waiters, and detach the
-    /// entry from the cache map.
+    /// entry (map and tick index) from the cache.
     fn fail(&mut self, reason: &str) {
         self.armed = false;
         {
@@ -170,9 +698,14 @@ impl BuildGuard<'_> {
         // Entry lock released before the map lock — the same order as
         // every other path (the map lock is never held while waiting
         // on an entry, and evict_lru only try_locks entry states).
-        let mut map = self.cache.inner.lock().expect("cache map");
-        if map.get(self.key).is_some_and(|e| Arc::ptr_eq(e, self.entry)) {
-            map.remove(self.key);
+        let mut inner = self.cache.inner.lock().expect("cache map");
+        if inner.map.get(self.key).is_some_and(|e| Arc::ptr_eq(e, self.entry)) {
+            inner.map.remove(self.key);
+            // The entry's latest tick is authoritative: every touch
+            // restamps it under the map lock we are holding.
+            let tick = self.entry.last_use.load(Ordering::Relaxed);
+            let removed = inner.by_tick.remove(&tick);
+            debug_assert_eq!(removed.as_deref(), Some(self.key));
         }
     }
 }
@@ -187,12 +720,23 @@ impl Drop for BuildGuard<'_> {
     }
 }
 
+/// The cache's locked state: the key → entry map plus the tick-ordered
+/// LRU index. Both are maintained together under one mutex — every touch
+/// restamps the entry's tick and moves its index row, so eviction walks
+/// the index in use order instead of scanning the whole map.
+struct CacheInner {
+    map: HashMap<String, Arc<CacheEntry>>,
+    /// Use tick → key. Ticks are unique (assigned under this lock), so
+    /// this is a total LRU order over the resident entries.
+    by_tick: BTreeMap<u64, String>,
+}
+
 /// Single-flight, LRU-bounded mapping cache. The outer map is only ever
 /// locked for entry lookup/insert/evict — mapping happens against the
 /// entry's own state mutex, and waiters for an in-flight mapping sleep on
 /// the entry's `Condvar`.
 struct MappingCache {
-    inner: Mutex<HashMap<String, Arc<CacheEntry>>>,
+    inner: Mutex<CacheInner>,
     tick: AtomicU64,
     /// `0` = unbounded.
     capacity: usize,
@@ -200,7 +744,11 @@ struct MappingCache {
 
 impl MappingCache {
     fn new(capacity: usize) -> Self {
-        MappingCache { inner: Mutex::new(HashMap::new()), tick: AtomicU64::new(0), capacity }
+        MappingCache {
+            inner: Mutex::new(CacheInner { map: HashMap::new(), by_tick: BTreeMap::new() }),
+            tick: AtomicU64::new(0),
+            capacity,
+        }
     }
 
     /// Fetch `key`'s mapping, building it via `build` on a miss. Exactly
@@ -220,30 +768,39 @@ impl MappingCache {
         F: FnOnce() -> Result<ServingMapping>,
     {
         let entry = {
-            let mut map = self.inner.lock().expect("cache map");
+            let mut inner = self.inner.lock().expect("cache map");
             // The use tick is assigned while the map is locked, so a
             // concurrent inserter can never observe (and evict) an entry
-            // that has not been stamped yet.
+            // that has not been stamped yet — and the tick index moves in
+            // the same critical section.
             let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
-            match map.get(key) {
+            match inner.map.get(key) {
                 Some(e) => {
-                    e.last_use.store(tick, Ordering::Relaxed);
-                    Arc::clone(e)
+                    let e = Arc::clone(e);
+                    let prev = e.last_use.swap(tick, Ordering::Relaxed);
+                    // Reuse the removed key String — the hit path stays
+                    // allocation-free.
+                    let moved =
+                        inner.by_tick.remove(&prev).unwrap_or_else(|| key.to_string());
+                    debug_assert_eq!(moved, key);
+                    inner.by_tick.insert(tick, moved);
+                    e
                 }
                 None => {
                     // Loop, not a single evict: overshoot accumulated
                     // while entries were mid-build (unevictable) is
                     // reclaimed here once those entries turn Ready.
                     while self.capacity > 0
-                        && map.len() >= self.capacity
-                        && evict_lru(&mut map)
+                        && inner.map.len() >= self.capacity
+                        && evict_lru(&mut inner)
                     {}
                     let e = Arc::new(CacheEntry {
                         state: Mutex::new(EntryState::Empty),
                         ready: Condvar::new(),
                         last_use: AtomicU64::new(tick),
                     });
-                    map.insert(key.to_string(), Arc::clone(&e));
+                    inner.map.insert(key.to_string(), Arc::clone(&e));
+                    inner.by_tick.insert(tick, key.to_string());
                     e
                 }
             }
@@ -301,65 +858,90 @@ impl MappingCache {
     }
 }
 
-/// Evict the least-recently-used *evictable* entry. Only `Ready` entries
-/// are victims: a `Building` entry is the single-flight rendezvous for
-/// concurrent requesters, and an `Empty` entry belongs to a requester
-/// that has looked it up but not yet locked it — evicting either would
-/// detach an in-flight mapping from the cache (the result would be built
-/// and then silently dropped, and a concurrent same-key request would map
-/// a second time). At capacity the map may therefore transiently exceed
-/// its bound by the number of in-flight mappings — the insert path loops
-/// eviction, so the overshoot is reclaimed as those entries turn Ready.
-/// Use ticks are unique (every touch bumps a shared counter under the map
-/// lock), so the victim is deterministic for a given request history.
-/// Returns whether a victim was evicted.
-fn evict_lru(map: &mut HashMap<String, Arc<CacheEntry>>) -> bool {
-    let victim = map
-        .iter()
-        .filter(|(_, e)| match e.state.try_lock() {
+/// Evict the least-recently-used *evictable* entry by walking the tick
+/// index in use order — O(victim position in the index), not a full-map
+/// scan. Only `Ready` entries are victims: a `Building` entry is the
+/// single-flight rendezvous for concurrent requesters, and an `Empty`
+/// entry belongs to a requester that has looked it up but not yet locked
+/// it — evicting either would detach an in-flight mapping from the cache
+/// (the result would be built and then silently dropped, and a concurrent
+/// same-key request would map a second time). Non-victims stay in the
+/// index and are skipped. At capacity the map may therefore transiently
+/// exceed its bound by the number of in-flight mappings — the insert path
+/// loops eviction, so the overshoot is reclaimed as those entries turn
+/// Ready. Use ticks are unique, so the victim is deterministic for a
+/// given request history. Returns whether a victim was evicted.
+fn evict_lru(inner: &mut CacheInner) -> bool {
+    let victim = inner.by_tick.iter().find_map(|(&tick, key)| {
+        let e = inner.map.get(key)?;
+        match e.state.try_lock() {
             // The state mutex is only ever held briefly (never across a
             // mapping), so a contended entry is simply skipped this round.
-            Ok(state) => matches!(&*state, EntryState::Ready(_)),
-            Err(_) => false,
-        })
-        .min_by_key(|(_, e)| e.last_use.load(Ordering::Relaxed))
-        .map(|(k, _)| k.clone());
+            Ok(state) if matches!(&*state, EntryState::Ready(_)) => Some((tick, key.clone())),
+            _ => None,
+        }
+    });
     match victim {
-        Some(key) => {
-            map.remove(&key);
+        Some((tick, key)) => {
+            inner.by_tick.remove(&tick);
+            inner.map.remove(&key);
             true
         }
         None => false,
     }
 }
 
-/// Member-fingerprint → bundle routing table.
-type BundleRegistry = Arc<Mutex<HashMap<u64, Arc<FusedBundle>>>>;
+// ---------------------------------------------------------------------------
+// The coordinator
 
 enum Job {
-    Infer(InferRequest),
+    Single(SingleJob),
+    Window(WindowJob),
+}
+
+struct SingleJob {
+    id: u64,
+    block: Arc<SparseBlock>,
+    xs: Vec<Vec<f32>>,
+    done: TicketCompleter,
+}
+
+struct WindowJob {
+    bundle: Arc<FusedBundle>,
+    /// Member requests in window (enqueue) order.
+    requests: Vec<WindowRequest>,
+}
+
+/// Legacy `submit`/`collect` shim state: an internal session core plus the
+/// submission-order ticket queue `collect` drains.
+struct LegacyState {
+    core: SessionCore,
+    fifo: VecDeque<Ticket>,
 }
 
 /// The streaming coordinator.
 pub struct Coordinator {
-    tx: Option<SyncSender<Job>>,
-    results: Receiver<Result<InferResult>>,
+    /// The only strong reference to the job-queue sender: dropping it (in
+    /// `Drop`) closes the queue. Sessions and tickets hold weak refs only,
+    /// so stray handles can never keep the pool alive.
+    tx: Option<Arc<SyncSender<Job>>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
-    bundles: BundleRegistry,
+    bundles: Arc<BundleRoutes>,
     fusion: FusionOptions,
+    batching: BatchOptions,
     cgra: StreamingCgra,
+    legacy: Mutex<LegacyState>,
 }
 
 impl Coordinator {
     /// Spawn `cfg.workers` worker threads with a queue of depth
-    /// `cfg.queue_depth`.
+    /// `cfg.queue_depth` (a batching window occupies one slot).
     pub fn new(cfg: &SparsemapConfig) -> Self {
         let (tx, rx) = sync_channel::<Job>(cfg.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
-        let (res_tx, results) = std::sync::mpsc::channel::<Result<InferResult>>();
         let cache = Arc::new(MappingCache::new(cfg.cache_capacity));
-        let bundles: BundleRegistry = Arc::new(Mutex::new(HashMap::new()));
+        let bundles = Arc::new(BundleRoutes::new());
         let metrics = Arc::new(Metrics::default());
         let mut opts = MapperOptions::from_config(cfg);
         if opts.parallelism == 0 {
@@ -372,12 +954,12 @@ impl Coordinator {
             opts.parallelism = (cores / cfg.workers.max(1)).clamp(1, 8);
         }
         let fusion = opts.fusion;
+        let batching = BatchOptions::from_config(cfg);
         let cgra = cfg.cgra.clone();
 
         let workers = (0..cfg.workers)
             .map(|wid| {
                 let rx = Arc::clone(&rx);
-                let res_tx = res_tx.clone();
                 let cache = Arc::clone(&cache);
                 let bundles = Arc::clone(&bundles);
                 let metrics = Arc::clone(&metrics);
@@ -385,24 +967,42 @@ impl Coordinator {
                 let cgra = cgra.clone();
                 std::thread::Builder::new()
                     .name(format!("sparsemap-worker-{wid}"))
-                    .spawn(move || worker_loop(rx, res_tx, cache, bundles, metrics, opts, cgra))
+                    .spawn(move || worker_loop(rx, cache, bundles, metrics, opts, cgra))
                     .expect("spawn worker")
             })
             .collect();
 
-        Coordinator { tx: Some(tx), results, workers, metrics, bundles, fusion, cgra }
+        Coordinator {
+            tx: Some(Arc::new(tx)),
+            workers,
+            metrics,
+            bundles,
+            fusion,
+            batching,
+            cgra,
+            legacy: Mutex::new(LegacyState { core: SessionCore::new(), fifo: VecDeque::new() }),
+        }
+    }
+
+    /// Open a serving session: the enqueue side of the ticket API. A
+    /// coordinator serves any number of sessions (each forms its own
+    /// batching windows).
+    pub fn session(&self) -> ServeSession<'_> {
+        ServeSession { coord: self, core: SessionCore::new(), issued: Vec::new() }
+    }
+
+    fn sender(&self) -> Option<Arc<SyncSender<Job>>> {
+        self.tx.clone()
     }
 
     /// Register a fused bundle: from now on a request for *any* member
-    /// block is served through the bundle's shared fused mapping (one
-    /// cache entry keyed by the bundle's combined mask fingerprint).
-    /// Requests already served solo keep their solo cache entries — fused
-    /// and unfused traffic mix freely.
+    /// block batches into the bundle's windows and is served through the
+    /// bundle's shared fused mapping (one cache entry keyed by the
+    /// bundle's combined mask fingerprint). Requests already served solo
+    /// keep their solo cache entries — fused and unfused traffic mix
+    /// freely.
     pub fn register_bundle(&self, bundle: Arc<FusedBundle>) {
-        let mut reg = self.bundles.lock().expect("bundle registry");
-        for b in &bundle.blocks {
-            reg.insert(b.mask_fingerprint(), Arc::clone(&bundle));
-        }
+        self.bundles.register(bundle);
     }
 
     /// Plan fusion over `blocks` with the configured knobs
@@ -420,26 +1020,41 @@ impl Coordinator {
     }
 
     /// Submit a job; blocks when the queue is full (backpressure).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use Coordinator::session(): enqueue() returns a Ticket to wait on"
+    )]
     pub fn submit(&self, req: InferRequest) -> Result<()> {
-        self.tx
-            .as_ref()
-            .expect("coordinator live")
-            .send(Job::Infer(req))
-            .map_err(|_| Error::Runtime("coordinator shut down".into()))
+        let mut legacy = self.legacy.lock().expect("legacy serve state");
+        let ticket = legacy.core.enqueue(self, req.id, req.block, req.xs);
+        // Preserve the old contract: a queue that is already closed at
+        // submission time surfaces here, not only at collect.
+        if matches!(ticket.state.peek(), Some(Err(ServeError::QueueClosed))) {
+            return Err(Error::Runtime("coordinator shut down".into()));
+        }
+        legacy.fifo.push_back(ticket);
+        Ok(())
     }
 
-    /// Collect exactly `n` results (any order — jobs are tagged by id).
-    /// If the worker pool exits before delivering them all (panic,
-    /// shutdown), the remaining slots come back as `Err(Error::Runtime)`
-    /// instead of poisoning the caller with a panic.
+    /// Collect exactly `n` results, in submission order (jobs are tagged
+    /// by id). Waiting seals any batching window a pending submission sits
+    /// in; slots beyond the outstanding submissions come back as
+    /// `Err(Error::Runtime)`.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use Coordinator::session(): enqueue() returns a Ticket to wait on"
+    )]
     pub fn collect(&self, n: usize) -> Vec<Result<InferResult>> {
         (0..n)
             .map(|_| {
-                self.results.recv().unwrap_or_else(|_| {
-                    Err(Error::Runtime(
+                let ticket =
+                    self.legacy.lock().expect("legacy serve state").fifo.pop_front();
+                match ticket {
+                    Some(t) => t.wait().map_err(Error::from),
+                    None => Err(Error::Runtime(
                         "worker pool exited before delivering all results".into(),
-                    ))
-                })
+                    )),
+                }
             })
             .collect()
     }
@@ -447,19 +1062,26 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.tx.take(); // close the queue; workers drain and exit
+        // Dispatch legacy windows still open (their tickets hold weak
+        // senders only), then close the queue; workers drain and exit.
+        if let Ok(mut legacy) = self.legacy.lock() {
+            legacy.core.flush_all();
+            legacy.fifo.clear();
+        }
+        self.tx.take();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-#[allow(clippy::too_many_arguments)]
+// ---------------------------------------------------------------------------
+// Workers
+
 fn worker_loop(
     rx: Arc<Mutex<Receiver<Job>>>,
-    res_tx: Sender<Result<InferResult>>,
     cache: Arc<MappingCache>,
-    bundles: BundleRegistry,
+    bundles: Arc<BundleRoutes>,
     metrics: Arc<Metrics>,
     opts: MapperOptions,
     cgra: StreamingCgra,
@@ -469,80 +1091,124 @@ fn worker_loop(
             let guard = rx.lock().expect("queue lock");
             guard.recv()
         };
-        let Ok(Job::Infer(req)) = job else { return };
-        let started = Instant::now();
-        let outcome = run_one(&req, &cache, &bundles, &metrics, &opts, &cgra);
-        metrics.jobs.fetch_add(1, Ordering::Relaxed);
-        let out = match outcome {
-            Ok((outputs, cycles, ii, fresh, fused_members)) => {
-                metrics.total_cycles.fetch_add(cycles, Ordering::Relaxed);
-                let latency_ns = started.elapsed().as_nanos() as u64;
-                metrics.total_latency_ns.fetch_add(latency_ns, Ordering::Relaxed);
-                Ok(InferResult {
-                    id: req.id,
-                    block_name: req.block.name.clone(),
-                    outputs,
-                    cycles,
-                    ii,
-                    mapped_fresh: fresh,
-                    fused_members,
-                    latency_ns,
-                })
+        match job {
+            Ok(Job::Single(job)) => serve_single(job, &cache, &metrics, &opts, &cgra),
+            Ok(Job::Window(job)) => {
+                serve_window(job, &cache, &bundles, &metrics, &opts, &cgra)
             }
-            Err(e) => {
-                metrics.failures.fetch_add(1, Ordering::Relaxed);
-                Err(e)
-            }
-        };
-        if res_tx.send(out).is_err() {
-            return; // caller gone
+            Err(_) => return,
         }
     }
 }
 
-fn run_one(
-    req: &InferRequest,
+/// Serve one solo request end to end and fulfill its ticket.
+fn serve_single(
+    job: SingleJob,
     cache: &MappingCache,
-    bundles: &BundleRegistry,
     metrics: &Metrics,
     opts: &MapperOptions,
     cgra: &StreamingCgra,
-) -> Result<(Vec<Vec<f32>>, u64, usize, bool, usize)> {
-    let fp = req.block.mask_fingerprint();
-    let bundle = bundles.lock().expect("bundle registry").get(&fp).cloned();
-    if let Some(bundle) = bundle {
-        match fused_serving(&bundle, cache, metrics, opts, cgra) {
-            Ok((serving, fresh)) => return run_fused(req, fp, &serving, fresh, cgra),
-            // The planner admits bundles by the MII estimate, not bind
-            // feasibility, so a registered bundle can turn out unmappable.
-            // The mapper is deterministic — it would fail (and re-pay the
-            // whole attempt lattice) on every member request forever —
-            // so drop the registration and serve this and all future
-            // member traffic through the working solo path below. Loudly:
-            // the silently-lost residency win would otherwise be
-            // undiagnosable (requests succeed, failures stays 0).
-            Err(e) => {
-                crate::log_warn!(
-                    "bundle {} is unmappable ({e}); deregistering — its {} members fall \
-                     back to solo serving",
-                    bundle.name,
-                    bundle.len()
+) {
+    let started = Instant::now();
+    metrics.jobs.fetch_add(1, Ordering::Relaxed);
+    let SingleJob { id, block, xs, done } = job;
+    match serve_solo(&block, &xs, cache, metrics, opts, cgra) {
+        Ok((outputs, cycles, ii, fresh)) => {
+            metrics.total_cycles.fetch_add(cycles, Ordering::Relaxed);
+            let latency_ns = started.elapsed().as_nanos() as u64;
+            metrics.total_latency_ns.fetch_add(latency_ns, Ordering::Relaxed);
+            done.fulfill(Ok(InferResult {
+                id,
+                block_name: block.name.clone(),
+                outputs,
+                cycles,
+                ii,
+                mapped_fresh: fresh,
+                fused_members: 1,
+                latency_ns,
+            }));
+        }
+        Err(e) => {
+            metrics.failures.fetch_add(1, Ordering::Relaxed);
+            done.fulfill(Err(e));
+        }
+    }
+}
+
+/// Solo path: compile-once mapping keyed by block identity. The key
+/// carries the mask's content fingerprint — name and shape alone would
+/// silently alias two differently-pruned blocks onto one mapping.
+fn serve_solo(
+    block: &Arc<SparseBlock>,
+    xs: &[Vec<f32>],
+    cache: &MappingCache,
+    metrics: &Metrics,
+    opts: &MapperOptions,
+    cgra: &StreamingCgra,
+) -> std::result::Result<(Vec<Vec<f32>>, u64, usize, bool), ServeError> {
+    let fp = block.mask_fingerprint();
+    let key = format!("{}#{}x{}@{fp:016x}", block.name, block.c, block.k);
+    let (serving, fresh) = cache
+        .get_or_map(&key, metrics, || {
+            let outcome = map_unit(MapUnit::Single(block), cgra, opts)?;
+            Ok(ServingMapping { outcome, bundle: None })
+        })
+        .map_err(|e| ServeError::MappingFailed(e.to_string()))?;
+    let res = simulate(&serving.outcome.mapping, block, cgra, xs)
+        .map_err(|e| ServeError::Sim(e.to_string()))?;
+    Ok((res.outputs, res.cycles, serving.outcome.mapping.ii, fresh))
+}
+
+/// Serve one batching window: fetch (or build) the bundle's shared fused
+/// mapping, run ONE lockstep pass for the whole window, and split results
+/// back per request. An unmappable bundle deregisters loudly and its
+/// member requests fall back to solo serving.
+fn serve_window(
+    job: WindowJob,
+    cache: &MappingCache,
+    bundles: &BundleRoutes,
+    metrics: &Metrics,
+    opts: &MapperOptions,
+    cgra: &StreamingCgra,
+) {
+    let started = Instant::now();
+    match fused_serving(&job.bundle, cache, metrics, opts, cgra) {
+        Ok((serving, fresh)) => {
+            // One cache access served the whole window: count the other
+            // member requests as hits so `jobs == hits + misses` keeps
+            // holding for successful traffic.
+            metrics
+                .cache_hits
+                .fetch_add(job.requests.len() as u64 - 1, Ordering::Relaxed);
+            run_window(job.requests, &serving, fresh, started, metrics, cgra);
+        }
+        // The planner admits bundles by the MII estimate, not bind
+        // feasibility, so a registered bundle can turn out unmappable.
+        // The mapper is deterministic — it would fail (and re-pay the
+        // whole attempt lattice) on every member window forever — so drop
+        // the registration and serve this window's and all future member
+        // traffic through the working solo path. Loudly: the silently-lost
+        // residency win would otherwise be undiagnosable (requests
+        // succeed, failures stays 0).
+        Err(e) => {
+            crate::log_warn!(
+                "bundle {} is unmappable ({e}); deregistering — its {} members fall \
+                 back to solo serving",
+                job.bundle.name,
+                job.bundle.len()
+            );
+            bundles.deregister(&job.bundle);
+            for r in job.requests {
+                serve_single(
+                    SingleJob { id: r.id, block: r.block, xs: r.xs, done: r.done },
+                    cache,
+                    metrics,
+                    opts,
+                    cgra,
                 );
-                deregister_bundle(bundles, &bundle);
             }
         }
     }
-
-    // Solo path: compile-once mapping keyed by block identity. The key
-    // carries the mask's content fingerprint — name and shape alone would
-    // silently alias two differently-pruned blocks onto one mapping.
-    let key = format!("{}#{}x{}@{fp:016x}", req.block.name, req.block.c, req.block.k);
-    let (serving, fresh) = cache.get_or_map(&key, metrics, || {
-        let outcome = map_unit(MapUnit::Single(&req.block), cgra, opts)?;
-        Ok(ServingMapping { outcome, bundle: None })
-    })?;
-    let res = simulate(&serving.outcome.mapping, &req.block, cgra, &req.xs)?;
-    Ok((res.outputs, res.cycles, serving.outcome.mapping.ii, fresh, 1))
 }
 
 /// Map (or fetch from cache) a registered bundle's shared fused mapping.
@@ -568,69 +1234,90 @@ fn fused_serving(
     })
 }
 
-/// Drop `bundle`'s member routes from the registry, pointer-compared so a
-/// newer bundle that re-claimed a member fingerprint is left alone.
-/// Idempotent — the mapper is deterministic, so every worker that sees
-/// the bundle fail converges on the same deregistered state.
-fn deregister_bundle(bundles: &BundleRegistry, bundle: &Arc<FusedBundle>) {
-    let mut reg = bundles.lock().expect("bundle registry");
-    for b in &bundle.blocks {
-        if reg.get(&b.mask_fingerprint()).is_some_and(|r| Arc::ptr_eq(r, bundle)) {
-            reg.remove(&b.mask_fingerprint());
-        }
-    }
-}
-
-/// Serve a member request through its bundle's shared fused mapping: the
-/// whole bundle maps once (cache keyed by the combined mask fingerprint);
-/// the member's stream runs with zero inputs on the co-resident blocks and
-/// the member's output plane is returned.
-fn run_fused(
-    req: &InferRequest,
-    fp: u64,
+/// Run one sealed window through the fused mapping and fulfill every
+/// member ticket with its own output slice and cycle share.
+fn run_window(
+    requests: Vec<WindowRequest>,
     serving: &ServingMapping,
     fresh: bool,
+    started: Instant,
+    metrics: &Metrics,
     cgra: &StreamingCgra,
-) -> Result<(Vec<Vec<f32>>, u64, usize, bool, usize)> {
+) {
     let resident = serving.bundle.as_ref().expect("fused entry carries its bundle");
-    let member = resident
-        .member_index_of(fp)
-        .expect("registry routes only to bundles holding the member");
-    let n_iters = req.xs.len();
-    // The member's weights come from the request (same mask structure —
-    // that is what the fingerprint matched); co-residents stream zeros.
-    let blocks: Vec<&SparseBlock> = resident
-        .blocks
-        .iter()
-        .enumerate()
-        .map(|(i, b)| if i == member { req.block.as_ref() } else { b.as_ref() })
-        .collect();
-    let zeros: Vec<Vec<Vec<f32>>> = resident
-        .blocks
-        .iter()
-        .enumerate()
-        .map(|(i, b)| {
-            if i == member {
-                Vec::new()
-            } else {
-                vec![vec![0.0; b.c]; n_iters]
+    let w = requests.len();
+    metrics.jobs.fetch_add(w as u64, Ordering::Relaxed);
+    // Member → request indices, in window order (the per-member segment
+    // order the batched pass preserves).
+    let mut member_reqs: Vec<Vec<usize>> = vec![Vec::new(); resident.len()];
+    for (ri, r) in requests.iter().enumerate() {
+        debug_assert!(r.member < resident.len(), "routed member index in range");
+        member_reqs[r.member].push(ri);
+    }
+    let sim = {
+        // The member's weights come from each request (same mask
+        // structure — that is what the fingerprint routing matched);
+        // members absent from the window stream zeros via padding.
+        let blocks: Vec<&SparseBlock> =
+            resident.blocks.iter().map(|b| b.as_ref()).collect();
+        let batches: Vec<Vec<MemberSegment<'_>>> = member_reqs
+            .iter()
+            .map(|idxs| {
+                idxs.iter()
+                    .map(|&ri| MemberSegment {
+                        block: requests[ri].block.as_ref(),
+                        xs: requests[ri].xs.as_slice(),
+                    })
+                    .collect()
+            })
+            .collect();
+        simulate_fused_batch(
+            &serving.outcome.mapping,
+            &serving.outcome.tags,
+            &blocks,
+            cgra,
+            &batches,
+        )
+    };
+    match sim {
+        Ok(res) => {
+            metrics.windows.fetch_add(1, Ordering::Relaxed);
+            // The window pays for the resident configuration ONCE — this
+            // is the fused double-count fix: W member requests no longer
+            // charge W whole-bundle passes.
+            metrics.total_cycles.fetch_add(res.cycles, Ordering::Relaxed);
+            let latency_ns = started.elapsed().as_nanos() as u64;
+            let ii = serving.outcome.mapping.ii;
+            let mut per_request: Vec<Option<SegmentSim>> = Vec::new();
+            per_request.resize_with(w, || None);
+            for (mi, m) in res.per_member.into_iter().enumerate() {
+                for (seg, &ri) in m.segments.into_iter().zip(&member_reqs[mi]) {
+                    per_request[ri] = Some(seg);
+                }
             }
-        })
-        .collect();
-    let xs: Vec<&[Vec<f32>]> = zeros
-        .iter()
-        .enumerate()
-        .map(|(i, z)| if i == member { req.xs.as_slice() } else { z.as_slice() })
-        .collect();
-    let res =
-        simulate_fused(&serving.outcome.mapping, &serving.outcome.tags, &blocks, cgra, &xs)?;
-    let outputs = res
-        .per_block
-        .into_iter()
-        .nth(member)
-        .expect("member output plane")
-        .outputs;
-    Ok((outputs, res.cycles, serving.outcome.mapping.ii, fresh, resident.blocks.len()))
+            for (ri, r) in requests.into_iter().enumerate() {
+                let seg = per_request[ri].take().expect("one segment per request");
+                metrics.total_latency_ns.fetch_add(latency_ns, Ordering::Relaxed);
+                r.done.fulfill(Ok(InferResult {
+                    id: r.id,
+                    block_name: r.block.name.clone(),
+                    outputs: seg.outputs,
+                    cycles: seg.cycles,
+                    ii,
+                    mapped_fresh: fresh && ri == 0,
+                    fused_members: resident.len(),
+                    latency_ns,
+                }));
+            }
+        }
+        Err(e) => {
+            metrics.failures.fetch_add(w as u64, Ordering::Relaxed);
+            let err = ServeError::Sim(e.to_string());
+            for r in requests {
+                r.done.fulfill(Err(err.clone()));
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -657,36 +1344,34 @@ mod tests {
     fn processes_jobs_and_caches_mappings() {
         let cfg = small_cfg();
         let coord = Coordinator::new(&cfg);
+        let mut session = coord.session();
         let block = Arc::new(paper_blocks()[1].block.clone());
-        for id in 0..6 {
-            let xs = stream_for(&block, 8, id);
-            coord
-                .submit(InferRequest { id, block: Arc::clone(&block), xs })
-                .unwrap();
-        }
-        let results = coord.collect(6);
-        assert_eq!(results.len(), 6);
-        for r in &results {
-            let r = r.as_ref().expect("job ok");
+        let tickets: Vec<Ticket> = (0..6u64)
+            .map(|seed| session.enqueue(Arc::clone(&block), stream_for(&block, 8, seed)))
+            .collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            assert_eq!(t.id(), i as u64);
+            assert_eq!(t.block_name(), block.name);
+            let r = t.wait().expect("job ok");
             assert_eq!(r.outputs.len(), 8);
+            assert_eq!(r.fused_members, 1);
         }
         let m = coord.metrics.snapshot();
         assert_eq!(m.jobs, 6);
         assert_eq!(m.failures, 0);
         assert_eq!(m.cache_misses, 1, "one block → one mapping");
         assert_eq!(m.cache_hits, 5);
+        assert_eq!(m.windows, 0, "solo traffic forms no windows");
     }
 
     #[test]
     fn outputs_match_reference_forward() {
         let cfg = small_cfg();
         let coord = Coordinator::new(&cfg);
+        let mut session = coord.session();
         let block = Arc::new(paper_blocks()[2].block.clone());
         let xs = stream_for(&block, 12, 9);
-        coord
-            .submit(InferRequest { id: 0, block: Arc::clone(&block), xs: xs.clone() })
-            .unwrap();
-        let r = coord.collect(1).pop().unwrap().unwrap();
+        let r = session.enqueue(Arc::clone(&block), xs.clone()).wait().unwrap();
         for (x, y) in xs.iter().zip(&r.outputs) {
             let want = block.forward(x);
             for (a, b) in y.iter().zip(&want) {
@@ -702,6 +1387,7 @@ mod tests {
         // one mapping and returned wrong outputs for the second.
         let cfg = small_cfg();
         let coord = Coordinator::new(&cfg);
+        let mut session = coord.session();
         let a = Arc::new(
             SparseBlock::from_mask(
                 "twin",
@@ -721,44 +1407,22 @@ mod tests {
             .unwrap(),
         );
         let xs = stream_for(&a, 6, 3);
-        coord.submit(InferRequest { id: 0, block: Arc::clone(&a), xs: xs.clone() }).unwrap();
-        coord.submit(InferRequest { id: 1, block: Arc::clone(&b), xs: xs.clone() }).unwrap();
-        let results = coord.collect(2);
-        assert_eq!(coord.metrics.snapshot().cache_misses, 2, "one mapping per mask");
-        for r in results {
-            let r = r.expect("job ok");
-            let block = if r.id == 0 { &a } else { &b };
+        let ta = session.enqueue(Arc::clone(&a), xs.clone());
+        let tb = session.enqueue(Arc::clone(&b), xs.clone());
+        for (block, ticket) in [(&a, ta), (&b, tb)] {
+            let r = ticket.wait().expect("job ok");
             for (x, y) in xs.iter().zip(&r.outputs) {
                 let want = block.forward(x);
                 for (got, w) in y.iter().zip(&want) {
                     assert!(
                         (got - w).abs() < 1e-4 * (1.0 + w.abs()),
-                        "id {}: {got} vs {w}",
-                        r.id
+                        "{}: {got} vs {w}",
+                        block.name
                     );
                 }
             }
         }
-    }
-
-    #[test]
-    fn collect_returns_errors_when_workers_gone() {
-        let cfg = small_cfg();
-        let mut coord = Coordinator::new(&cfg);
-        // Shut the pool down out from under collect(): close the queue and
-        // join every worker, exactly the state a panicked pool leaves.
-        coord.tx.take();
-        for w in coord.workers.drain(..) {
-            w.join().unwrap();
-        }
-        let results = coord.collect(3);
-        assert_eq!(results.len(), 3);
-        for r in results {
-            match r {
-                Err(Error::Runtime(msg)) => assert!(msg.contains("worker pool"), "{msg}"),
-                other => panic!("expected Runtime error, got {other:?}"),
-            }
-        }
+        assert_eq!(coord.metrics.snapshot().cache_misses, 2, "one mapping per mask");
     }
 
     fn tiny(name: &str, c: usize, k: usize, mask: Vec<bool>) -> Arc<SparseBlock> {
@@ -774,34 +1438,74 @@ mod tests {
     }
 
     #[test]
-    fn fused_bundle_serves_member_requests_through_one_mapping() {
+    fn tickets_resolve_queue_closed_when_pool_is_shut_down() {
+        let cfg = small_cfg();
+        let mut coord = Coordinator::new(&cfg);
+        // Shut the pool down out from under the session: close the queue
+        // and join every worker, exactly the state a torn-down pool leaves.
+        coord.tx.take();
+        for w in coord.workers.drain(..) {
+            w.join().unwrap();
+        }
+        let mut session = coord.session();
+        let block = tiny("late", 2, 2, vec![true, false, true, true]);
+        let t = session.enqueue(Arc::clone(&block), stream_for(&block, 2, 1));
+        match t.wait() {
+            Err(ServeError::QueueClosed) => {}
+            other => panic!("expected QueueClosed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dropped_completer_resolves_worker_gone() {
+        // A worker that dies mid-job (panic/teardown) drops the completer
+        // unfulfilled: the ticket must resolve instead of hanging.
+        let state = TicketState::new();
+        let done = TicketCompleter { state: Arc::clone(&state) };
+        let mut t = Ticket { id: 7, block_name: "x".into(), state, window: None };
+        assert!(t.try_wait().is_none(), "pending ticket polls None");
+        drop(done);
+        assert!(matches!(t.try_wait(), Some(Err(ServeError::WorkerGone))));
+        assert!(matches!(t.wait(), Err(ServeError::WorkerGone)));
+    }
+
+    #[test]
+    fn completion_is_first_wins() {
+        let state = TicketState::new();
+        let done = TicketCompleter { state: Arc::clone(&state) };
+        done.fulfill(Err(ServeError::QueueClosed));
+        // The drop guard ran after fulfill and must not overwrite.
+        let t = Ticket { id: 0, block_name: "x".into(), state, window: None };
+        assert!(matches!(t.wait(), Err(ServeError::QueueClosed)));
+    }
+
+    #[test]
+    fn fused_bundle_serves_member_requests_through_one_window() {
         let cfg = small_cfg();
         let coord = Coordinator::new(&cfg);
         let members = tiny_members();
         let bundle = Arc::new(FusedBundle::new(members.clone()).unwrap());
         coord.register_bundle(Arc::clone(&bundle));
 
-        let mut id = 0u64;
+        let mut session = coord.session();
+        let mut tickets = Vec::new();
         let mut streams = Vec::new();
-        for member in &members {
-            let xs = stream_for(member, 5, 100 + id);
-            coord
-                .submit(InferRequest { id, block: Arc::clone(member), xs: xs.clone() })
-                .unwrap();
+        for (i, member) in members.iter().enumerate() {
+            let xs = stream_for(member, 5, 100 + i as u64);
+            tickets.push(session.enqueue(Arc::clone(member), xs.clone()));
             streams.push(xs);
-            id += 1;
         }
-        let results = coord.collect(id as usize);
-        for r in results {
-            let r = r.expect("fused job ok");
-            let member = &members[r.id as usize];
+        session.drain();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let r = t.wait().expect("fused job ok");
+            let member = &members[i];
             assert_eq!(r.block_name, member.name);
             assert_eq!(r.fused_members, 3, "served through the bundle");
-            for (x, y) in streams[r.id as usize].iter().zip(&r.outputs) {
+            for (x, y) in streams[i].iter().zip(&r.outputs) {
                 let want = member.forward(x);
                 assert_eq!(y.len(), want.len());
                 for (a, w) in y.iter().zip(&want) {
-                    assert!((a - w).abs() < 1e-4 * (1.0 + w.abs()), "{}: {a} vs {w}", r.id);
+                    assert!((a - w).abs() < 1e-4 * (1.0 + w.abs()), "{i}: {a} vs {w}");
                 }
             }
         }
@@ -810,6 +1514,7 @@ mod tests {
         assert_eq!(m.failures, 0);
         assert_eq!(m.cache_misses, 1, "three member blocks → one fused mapping");
         assert_eq!(m.cache_hits, 2);
+        assert_eq!(m.windows, 1, "three member requests → ONE lockstep pass");
     }
 
     #[test]
@@ -819,32 +1524,107 @@ mod tests {
         let members = tiny_members();
         let bundle = Arc::new(FusedBundle::new(members[..2].to_vec()).unwrap());
         coord.register_bundle(bundle);
-        let solo = Arc::clone(&members[2]); // unregistered → serves solo
 
+        let mut session = coord.session();
+        let mut tickets = Vec::new();
         let mut streams = Vec::new();
-        for (id, block) in members.iter().enumerate() {
-            let xs = stream_for(block, 4, 7 + id as u64);
-            coord
-                .submit(InferRequest { id: id as u64, block: Arc::clone(block), xs: xs.clone() })
-                .unwrap();
+        for (i, block) in members.iter().enumerate() {
+            let xs = stream_for(block, 4, 7 + i as u64);
+            tickets.push(session.enqueue(Arc::clone(block), xs.clone()));
             streams.push(xs);
         }
-        let results = coord.collect(3);
-        for r in results {
-            let r = r.expect("mixed job ok");
-            let member = &members[r.id as usize];
-            let want_members = if r.id < 2 { 2 } else { 1 };
+        session.drain();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let r = t.wait().expect("mixed job ok");
+            let member = &members[i];
+            let want_members = if i < 2 { 2 } else { 1 };
             assert_eq!(r.fused_members, want_members, "{}", member.name);
-            for (x, y) in streams[r.id as usize].iter().zip(&r.outputs) {
+            for (x, y) in streams[i].iter().zip(&r.outputs) {
                 let want = member.forward(x);
                 for (a, w) in y.iter().zip(&want) {
-                    assert!((a - w).abs() < 1e-4 * (1.0 + w.abs()), "{}: {a} vs {w}", r.id);
+                    assert!((a - w).abs() < 1e-4 * (1.0 + w.abs()), "{i}: {a} vs {w}");
                 }
             }
         }
         let m = coord.metrics.snapshot();
         assert_eq!(m.cache_misses, 2, "one fused + one solo mapping");
-        assert_eq!(solo.name, "f3");
+        assert_eq!(m.windows, 1, "the two member requests share one window");
+    }
+
+    #[test]
+    fn windows_form_deterministically_from_enqueue_order() {
+        // Window contents are a pure function of enqueue order and the
+        // two knobs — no timing involved.
+        let run = |window_requests: usize, window_max: usize, n: usize| -> (u64, u64) {
+            let mut cfg = small_cfg();
+            cfg.batch_window_requests = window_requests;
+            cfg.batch_window_max = window_max;
+            let coord = Coordinator::new(&cfg);
+            let members = tiny_members();
+            coord.register_bundle(Arc::new(FusedBundle::new(members.clone()).unwrap()));
+            let mut session = coord.session();
+            let tickets: Vec<Ticket> = (0..n)
+                .map(|i| {
+                    let b = &members[i % members.len()];
+                    session.enqueue(Arc::clone(b), stream_for(b, 2, i as u64))
+                })
+                .collect();
+            session.drain();
+            for t in tickets {
+                t.wait().expect("windowed job ok");
+            }
+            let m = coord.metrics.snapshot();
+            (m.windows, m.jobs)
+        };
+        // 7 requests at window size 3 → 3 + 3 + 1 (trailing flush).
+        assert_eq!(run(3, 0, 7), (3, 7));
+        assert_eq!(run(3, 0, 7), (3, 7), "repeat runs form identical windows");
+        // Window size 1 disables aggregation: one pass per request.
+        assert_eq!(run(1, 0, 5), (5, 5));
+        // The iteration cap seals windows too: requests bring 2 iterations
+        // each, round-robin over 3 members, so a cap of 4 seals a window
+        // every time some member's total reaches 4 — the request-count
+        // knob (100) never triggers. 12 requests must split into several
+        // windows, identically on every run.
+        let first = run(100, 4, 12);
+        assert_eq!(first.1, 12);
+        assert!(
+            first.0 > 1,
+            "the iteration cap must split an under-count window (got {})",
+            first.0
+        );
+        assert_eq!(run(100, 4, 12), first, "cap-driven windows are deterministic too");
+    }
+
+    #[test]
+    fn iteration_cap_never_pads_an_earlier_short_request() {
+        // A short request aboard an open window must not share a lockstep
+        // pass with a later rider that would blow the iteration cap: the
+        // window seals *before* the oversized request is admitted.
+        let mut cfg = small_cfg();
+        cfg.batch_window_requests = 100;
+        cfg.batch_window_max = 8;
+        let coord = Coordinator::new(&cfg);
+        let members = tiny_members();
+        coord.register_bundle(Arc::new(FusedBundle::new(members.clone()).unwrap()));
+        let mut session = coord.session();
+        let short = session.enqueue(Arc::clone(&members[0]), stream_for(&members[0], 2, 1));
+        let long = session.enqueue(Arc::clone(&members[1]), stream_for(&members[1], 20, 2));
+        session.drain();
+        let short = short.wait().expect("short request ok");
+        let long = long.wait().expect("long request ok");
+        assert_eq!(
+            coord.metrics.snapshot().windows,
+            2,
+            "the oversized rider opens (and immediately seals) its own window"
+        );
+        assert!(
+            short.cycles < long.cycles,
+            "the short request ({} cycles) must not be charged the rider's \
+             padded pass ({} cycles)",
+            short.cycles,
+            long.cycles
+        );
     }
 
     #[test]
@@ -857,23 +1637,74 @@ mod tests {
         cfg.cache_capacity = 2;
         let coord = Coordinator::new(&cfg);
         let blocks = tiny_members(); // a, b, c stand-ins
-        let mut id = 0u64;
-        let mut run = |bi: usize| -> InferResult {
+        let mut session = coord.session();
+        let mut seed = 0u64;
+        let mut run = |session: &mut ServeSession<'_>, bi: usize| -> InferResult {
             let block = &blocks[bi];
-            let xs = stream_for(block, 2, id);
-            coord.submit(InferRequest { id, block: Arc::clone(block), xs }).unwrap();
-            id += 1;
-            coord.collect(1).pop().unwrap().expect("job ok")
+            let xs = stream_for(block, 2, seed);
+            seed += 1;
+            session.enqueue(Arc::clone(block), xs).wait().expect("job ok")
         };
-        assert!(run(0).mapped_fresh); // A miss
-        assert!(run(1).mapped_fresh); // B miss
-        assert!(!run(0).mapped_fresh); // A hit (bumps A)
-        assert!(run(2).mapped_fresh); // C miss → evicts B (LRU)
-        assert!(!run(0).mapped_fresh); // A survived
-        assert!(run(1).mapped_fresh, "B was evicted and must re-map");
+        assert!(run(&mut session, 0).mapped_fresh); // A miss
+        assert!(run(&mut session, 1).mapped_fresh); // B miss
+        assert!(!run(&mut session, 0).mapped_fresh); // A hit (bumps A)
+        assert!(run(&mut session, 2).mapped_fresh); // C miss → evicts B (LRU)
+        assert!(!run(&mut session, 0).mapped_fresh); // A survived
+        assert!(run(&mut session, 1).mapped_fresh, "B was evicted and must re-map");
         let m = coord.metrics.snapshot();
         assert_eq!(m.cache_misses, 4);
         assert_eq!(m.cache_hits, 2);
+    }
+
+    #[test]
+    fn eviction_order_follows_tick_index_at_capacity_64() {
+        // The tick-ordered BTreeMap index must reproduce exact LRU order
+        // at a capacity where the retired full-map scan was the cost
+        // concern. One cheap real mapping is cloned into every entry.
+        let capacity = 64usize;
+        let cache = MappingCache::new(capacity);
+        let metrics = Metrics::default();
+        let block = tiny("evict", 2, 2, vec![true, false, true, true]);
+        let cgra = StreamingCgra::paper_default();
+        let opts = MapperOptions::sparsemap();
+        let outcome = map_unit(MapUnit::Single(&block), &cgra, &opts).unwrap();
+        let fill = |key: &str| {
+            cache
+                .get_or_map(key, &metrics, || {
+                    Ok(ServingMapping { outcome: outcome.clone(), bundle: None })
+                })
+                .unwrap()
+        };
+        for i in 0..capacity {
+            fill(&format!("k{i:02}"));
+        }
+        // Touch the even keys (in order): odd keys become the LRU tail.
+        for i in (0..capacity).step_by(2) {
+            let (_, fresh) = cache
+                .get_or_map(&format!("k{i:02}"), &metrics, || {
+                    unreachable!("touch must hit")
+                })
+                .unwrap();
+            assert!(!fresh);
+        }
+        // Each insert beyond capacity evicts exactly the next odd key.
+        for j in 0..capacity / 2 {
+            fill(&format!("n{j:02}"));
+            let inner = cache.inner.lock().unwrap();
+            assert_eq!(inner.map.len(), capacity);
+            assert_eq!(inner.by_tick.len(), capacity, "index tracks the map");
+            let victim = format!("k{:02}", 2 * j + 1);
+            assert!(!inner.map.contains_key(&victim), "{victim} evicted at step {j}");
+            if 2 * (j + 1) + 1 < capacity {
+                let next = format!("k{:02}", 2 * (j + 1) + 1);
+                assert!(inner.map.contains_key(&next), "{next} not yet evicted");
+            }
+        }
+        // Every touched (even) key survived the whole sweep.
+        let inner = cache.inner.lock().unwrap();
+        for i in (0..capacity).step_by(2) {
+            assert!(inner.map.contains_key(&format!("k{i:02}")));
+        }
     }
 
     #[test]
@@ -886,12 +1717,13 @@ mod tests {
         cfg.queue_depth = 8;
         let coord = Coordinator::new(&cfg);
         let block = Arc::new(paper_blocks()[0].block.clone());
-        for id in 0..8u64 {
-            let xs = stream_for(&block, 4, id);
-            coord.submit(InferRequest { id, block: Arc::clone(&block), xs }).unwrap();
+        let mut session = coord.session();
+        let tickets: Vec<Ticket> = (0..8u64)
+            .map(|seed| session.enqueue(Arc::clone(&block), stream_for(&block, 4, seed)))
+            .collect();
+        for t in tickets {
+            t.wait().expect("job ok");
         }
-        let results = coord.collect(8);
-        assert!(results.iter().all(|r| r.is_ok()));
         let m = coord.metrics.snapshot();
         assert_eq!(m.cache_misses, 1, "one mapping for 8 concurrent requests");
         assert_eq!(m.cache_hits, 7);
@@ -908,11 +1740,11 @@ mod tests {
             Err(Error::Workload("unmappable".into()))
         });
         assert!(err.is_err());
-        assert_eq!(
-            cache.inner.lock().unwrap().len(),
-            0,
-            "failed build must remove its cache entry"
-        );
+        {
+            let inner = cache.inner.lock().unwrap();
+            assert_eq!(inner.map.len(), 0, "failed build must remove its cache entry");
+            assert_eq!(inner.by_tick.len(), 0, "and its tick-index row");
+        }
         // The capacity-1 cache is free again: a successful build for the
         // same key caches normally and subsequent requests hit.
         let block = tiny("cachetest", 2, 2, vec![true, false, true, true]);
@@ -924,44 +1756,13 @@ mod tests {
         };
         let (_, fresh) = cache.get_or_map("dead", &metrics, build).unwrap();
         assert!(fresh);
-        let (_, fresh) =
-            cache.get_or_map("dead", &metrics, || unreachable!("second request must hit")).unwrap();
+        let (_, fresh) = cache
+            .get_or_map("dead", &metrics, || unreachable!("second request must hit"))
+            .unwrap();
         assert!(!fresh);
-        assert_eq!(cache.inner.lock().unwrap().len(), 1);
-    }
-
-    #[test]
-    fn deregister_bundle_removes_only_its_own_routes() {
-        // The unmappable-bundle fallback must not clobber routes a newer
-        // bundle has re-claimed for a shared member (latest wins).
-        let reg: BundleRegistry = Arc::new(Mutex::new(HashMap::new()));
-        let members = tiny_members();
-        let b1 = Arc::new(FusedBundle::new(members[..2].to_vec()).unwrap());
-        let b2 = Arc::new(FusedBundle::new(members[1..].to_vec()).unwrap());
-        {
-            let mut r = reg.lock().unwrap();
-            for b in &b1.blocks {
-                r.insert(b.mask_fingerprint(), Arc::clone(&b1));
-            }
-            for b in &b2.blocks {
-                r.insert(b.mask_fingerprint(), Arc::clone(&b2));
-            }
-        }
-        deregister_bundle(&reg, &b1);
-        let r = reg.lock().unwrap();
-        assert!(
-            !r.contains_key(&members[0].mask_fingerprint()),
-            "b1's exclusive route is removed"
-        );
-        assert!(
-            r.get(&members[1].mask_fingerprint()).is_some_and(|x| Arc::ptr_eq(x, &b2)),
-            "the shared member stays routed to the newer bundle"
-        );
-        assert!(r.contains_key(&members[2].mask_fingerprint()));
-        // Idempotent.
-        drop(r);
-        deregister_bundle(&reg, &b1);
-        assert_eq!(reg.lock().unwrap().len(), 2);
+        let inner = cache.inner.lock().unwrap();
+        assert_eq!(inner.map.len(), 1);
+        assert_eq!(inner.by_tick.len(), 1);
     }
 
     #[test]
@@ -979,8 +1780,8 @@ mod tests {
         assert!(first.len() == 2, "tiny blocks must pack in pairs");
         let member = Arc::clone(&first.blocks[0]);
         let xs = stream_for(&member, 2, 3);
-        coord.submit(InferRequest { id: 0, block: member, xs }).unwrap();
-        let r = coord.collect(1).pop().unwrap().expect("fused job ok");
+        let mut session = coord.session();
+        let r = session.enqueue(member, xs).wait().expect("fused job ok");
         assert_eq!(r.fused_members, 2);
     }
 
@@ -993,16 +1794,19 @@ mod tests {
             .take(3)
             .map(|nb| Arc::new(nb.block))
             .collect();
-        let mut id = 0;
+        let mut session = coord.session();
+        let mut tickets = Vec::new();
+        let mut seed = 0u64;
         for block in &blocks {
             for _ in 0..2 {
-                let xs = stream_for(block, 4, id);
-                coord.submit(InferRequest { id, block: Arc::clone(block), xs }).unwrap();
-                id += 1;
+                tickets.push(session.enqueue(Arc::clone(block), stream_for(block, 4, seed)));
+                seed += 1;
             }
         }
-        let results = coord.collect(id as usize);
-        assert!(results.iter().all(|r| r.is_ok()));
+        session.drain();
+        for t in tickets {
+            t.wait().expect("job ok");
+        }
         let m = coord.metrics.snapshot();
         assert_eq!(m.cache_misses, 3);
     }

@@ -65,6 +65,27 @@
 //! `tests/wide_blocks.rs` drives a k = 128 block through map → simulate →
 //! serve, and the `wide_k128/*` bench rows track the spill cost.
 //!
+//! ## Serving: sessions, tickets and batching windows
+//!
+//! The [`coordinator`] exposes a typed serving API:
+//! `Coordinator::session()` opens a `ServeSession`; `enqueue(block, xs)`
+//! returns a `Ticket`, and results are retrieved **by handle** —
+//! `Ticket::wait()` / `try_wait()`, in any order — with per-request
+//! failures as a structured `ServeError` (queue closed / mapping failed /
+//! simulator fault / worker gone). Requests targeting members of a
+//! registered fused bundle aggregate into **batching windows**
+//! (`[coordinator] batch_window_requests` / `batch_window_max`;
+//! deterministic — window contents are a pure function of enqueue order):
+//! one window runs ONE lockstep simulation pass
+//! ([`sim::simulate_fused_batch`]) with a real iteration stream per
+//! member, and outputs plus a proportional share of the pass's cycles
+//! come back per request — the configuration residency is charged once
+//! per window (`Metrics::windows` counts the passes). The pre-session
+//! `submit`/`collect` fire-hose survives one release as `#[deprecated]`
+//! shims over an internal session; the crate itself compiles with
+//! `deny(deprecated)`, so only the shims reference them
+//! (`tests/serving_api.rs` locks shim-vs-ticket bit-identity).
+//!
 //! ## Multi-block fusion: bundles of small blocks on one configuration
 //!
 //! Real pruned networks are dominated by small blocks that leave most of
@@ -74,7 +95,9 @@
 //! * [`sparse::fuse`] plans bundles (`plan_bundles`: deterministic greedy
 //!   first-fit over estimated PE/bus demand, capped by a combined-MII
 //!   budget — `MapperOptions::fusion` / `[mapper] max_fused_blocks`,
-//!   `fusion_max_ii`);
+//!   `fusion_max_ii`) and routes member traffic
+//!   (`sparse::fuse::BundleRoutes`: mask fingerprint → bundle + member
+//!   index, the lookup window formation keys on);
 //! * [`mapper::map_unit`] maps a [`sparse::fuse::FusedBundle`] exactly
 //!   like a block: every member is scheduled *solo* at the shared
 //!   `(II, retry)` and the solo schedules are composed by per-member
@@ -86,12 +109,15 @@
 //!   `(slot, resource)` buckets span members, so cross-block
 //!   exclusiveness is the same machinery that separates nodes of one
 //!   block ([`dfg::fuse::BlockTags`] carries node → member provenance);
-//! * [`sim::simulate_fused`] runs all members in lockstep and reports
-//!   per-block outputs and COPs/MCIDs;
-//! * the [`coordinator`] routes a request for *any* registered member
-//!   block to the shared fused mapping (`register_bundle` /
-//!   `register_fused`; one LRU cache entry keyed by the bundle's combined
-//!   mask fingerprint) and serves mixed fused/unfused traffic.
+//! * [`sim::simulate_fused_batch`] runs all members in lockstep over a
+//!   whole request window (per-member segments, zero-input padding) and
+//!   reports per-segment outputs/cycles and per-block COPs/MCIDs;
+//!   [`sim::simulate_fused`] is the one-segment wrapper;
+//! * the [`coordinator`] batches requests for *any* registered member
+//!   block into the bundle's windows against the shared fused mapping
+//!   (`register_bundle` / `register_fused`; one LRU cache entry keyed by
+//!   the bundle's combined mask fingerprint) and serves mixed
+//!   fused/unfused traffic.
 //!
 //! ## Hot-path rewrites are oracle-tested
 //!
@@ -107,6 +133,12 @@
 //! plus randomized instances) and pin end-to-end results with golden
 //! snapshots (`rust/tests/golden_mappings.rs`). A rewrite ships only once
 //! the oracle suite proves it behavior-preserving.
+
+// The serving API redesign keeps `submit`/`collect` alive as deprecated
+// shims for one release — deny in-crate use so only the shims themselves
+// (definitions, not uses) reference the old surface. CI additionally
+// compiles the lib target with `-D deprecated`.
+#![deny(deprecated)]
 
 pub mod arch;
 pub mod bind;

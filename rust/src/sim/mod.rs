@@ -18,14 +18,22 @@
 //! Register pressure (LRF per PE, GRF liveness) is analyzed statically and
 //! checked against capacities.
 //!
-//! ## Fused bundles
+//! ## Fused bundles and batched request windows
 //!
-//! The core loop is fusion-aware: [`simulate_fused`] runs a multi-block
-//! mapping (see `crate::mapper::map_unit`) with one input stream per
-//! member block, resolving every node's channel/kernel indices and weights
-//! through its [`BlockTags`] provenance, and reports per-block outputs and
-//! per-block COPs/MCIDs. [`simulate`] is the single-block wrapper over the
-//! same core.
+//! The core loop is fusion-aware *and* batch-aware:
+//! [`simulate_fused_batch`] runs a multi-block mapping (see
+//! `crate::mapper::map_unit`) over a **request window** — per member, a
+//! list of request segments run back to back in one lockstep pass, each
+//! segment with its own weights; members short of the window's lockstep
+//! length (and members absent from the window) stream zeros for the
+//! remainder. Every node's channel/kernel indices and weights resolve
+//! through the mapping's [`BlockTags`] provenance, and outputs plus a
+//! proportional share of the pass's cycles come back **per segment** — so
+//! the serving layer charges a window of W member requests for ONE
+//! configuration residency instead of W whole-bundle passes.
+//! [`simulate_fused`] is the one-segment-per-member wrapper (equal-length
+//! streams, per-block outputs and COPs/MCIDs) and [`simulate`] the
+//! single-block wrapper over the same core.
 
 use std::collections::HashMap;
 
@@ -106,6 +114,115 @@ impl FusedSimResult {
     }
 }
 
+/// One request's slice of a member's batched stream: the serving layer
+/// concatenates concurrent requests for one member into back-to-back
+/// segments of a single lockstep pass (fused request batching).
+#[derive(Clone, Copy, Debug)]
+pub struct MemberSegment<'a> {
+    /// The block carrying this segment's weights. Must share the member's
+    /// mask structure (same [`SparseBlock::mask_fingerprint`] — exactly
+    /// what the serving layer routes by).
+    pub block: &'a SparseBlock,
+    /// Input vectors, one per iteration, each of length `block.c`.
+    pub xs: &'a [Vec<f32>],
+}
+
+/// One segment's share of a batched fused pass.
+#[derive(Clone, Debug)]
+pub struct SegmentSim {
+    /// Output vectors for the segment's own iterations
+    /// (member-kernel-indexed).
+    pub outputs: Vec<Vec<f32>>,
+    /// Cycles attributed to this segment: the pass total split
+    /// proportionally to segment iteration counts, rounded by cumulative
+    /// prefix so the shares sum *exactly* to the pass total.
+    pub cycles: u64,
+}
+
+/// One member block's share of a batched fused pass.
+#[derive(Clone, Debug)]
+pub struct MemberBatchSim {
+    /// One entry per segment, in the order given to
+    /// [`simulate_fused_batch`].
+    pub segments: Vec<SegmentSim>,
+    /// Caching operations the member's schedule carries.
+    pub cops: usize,
+    /// Multi-cycle internal dependencies the member's schedule carries.
+    pub mcids: usize,
+}
+
+/// Result of a batched fused pass: per-member, per-segment outputs plus
+/// the fabric-global counters.
+#[derive(Clone, Debug)]
+pub struct BatchSimResult {
+    /// One entry per member block, in bundle order.
+    pub per_member: Vec<MemberBatchSim>,
+    /// Cycles of the single lockstep pass — what a serving window pays
+    /// once, however many requests it carries.
+    pub cycles: u64,
+    /// Lockstep iteration count: the maximum member total (shorter and
+    /// absent members pad with zero-input iterations).
+    pub iterations: usize,
+    pub pe_busy: Vec<u64>,
+    pub lrf_peak: usize,
+    pub grf_peak: usize,
+}
+
+/// Resolved view of one member's batched stream: request segments run back
+/// to back; iterations past the member total are lockstep padding.
+struct MemberStream<'a> {
+    segments: &'a [MemberSegment<'a>],
+    /// Iteration start of each segment plus a total-length sentinel.
+    starts: Vec<usize>,
+    /// Weight source for padded iterations (their values feed only padded
+    /// outputs, which are discarded).
+    fallback: &'a SparseBlock,
+}
+
+impl<'a> MemberStream<'a> {
+    fn new(segments: &'a [MemberSegment<'a>], fallback: &'a SparseBlock) -> Self {
+        let mut starts = Vec::with_capacity(segments.len() + 1);
+        let mut acc = 0usize;
+        starts.push(0);
+        for seg in segments {
+            acc += seg.xs.len();
+            starts.push(acc);
+        }
+        MemberStream { segments, starts, fallback }
+    }
+
+    /// Total real (non-padded) iterations this member runs.
+    fn total(&self) -> usize {
+        *self.starts.last().expect("sentinel")
+    }
+
+    /// `(segment, local iteration)` covering lockstep iteration `iter`;
+    /// `None` for padded iterations.
+    fn locate(&self, iter: usize) -> Option<(usize, usize)> {
+        if iter >= self.total() {
+            return None;
+        }
+        // First start strictly past `iter`, minus one — empty segments
+        // (start == next start) are skipped by construction.
+        let seg = self.starts.partition_point(|&st| st <= iter) - 1;
+        Some((seg, iter - self.starts[seg]))
+    }
+
+    fn input(&self, iter: usize, ch: usize) -> f32 {
+        match self.locate(iter) {
+            Some((seg, local)) => self.segments[seg].xs[local][ch],
+            None => 0.0,
+        }
+    }
+
+    fn weight(&self, iter: usize, ch: usize, kr: usize) -> f32 {
+        match self.locate(iter) {
+            Some((seg, _)) => self.segments[seg].block.weight(ch, kr),
+            None => self.fallback.weight(ch, kr),
+        }
+    }
+}
+
 /// Simulate `mapping` over `xs` (one input vector per iteration — each of
 /// length `block.c`, indexed by channel). Single-block wrapper over
 /// [`simulate_fused`].
@@ -136,7 +253,8 @@ pub fn simulate(
 /// Simulate a (possibly fused) mapping: `blocks` and `xs` carry one entry
 /// per member in bundle order, `tags` is the mapping's node → member
 /// provenance, and every member's stream must run the same number of
-/// iterations (the fabric advances all members in lockstep).
+/// iterations (the fabric advances all members in lockstep). Thin wrapper
+/// over [`simulate_fused_batch`] with one segment per member.
 pub fn simulate_fused(
     mapping: &Mapping,
     tags: &BlockTags,
@@ -144,15 +262,6 @@ pub fn simulate_fused(
     cgra: &StreamingCgra,
     xs: &[&[Vec<f32>]],
 ) -> Result<FusedSimResult> {
-    let s = &mapping.s;
-    let g = &s.g;
-    if tags.len() != g.len() {
-        return Err(Error::Workload(format!(
-            "block tags cover {} nodes but the mapping has {}",
-            tags.len(),
-            g.len()
-        )));
-    }
     if blocks.len() != tags.members() || xs.len() != tags.members() {
         return Err(Error::Workload(format!(
             "fused simulation of {} members got {} blocks and {} streams",
@@ -162,22 +271,97 @@ pub fn simulate_fused(
         )));
     }
     let n_iters = xs.first().map_or(0, |x| x.len());
-    for (bi, (b, stream)) in blocks.iter().zip(xs).enumerate() {
+    for (bi, stream) in xs.iter().enumerate() {
         if stream.len() != n_iters {
             return Err(Error::Workload(format!(
                 "member {bi} stream runs {} iterations, member 0 runs {n_iters}",
                 stream.len()
             )));
         }
-        if let Some(bad) = stream.iter().find(|x| x.len() != b.c) {
-            return Err(Error::Workload(format!(
-                "member {bi} ('{}') input vector of length {} for {} channels",
-                b.name,
-                bad.len(),
-                b.c
-            )));
-        }
     }
+    let batches: Vec<Vec<MemberSegment<'_>>> = blocks
+        .iter()
+        .zip(xs)
+        .map(|(&block, &stream)| vec![MemberSegment { block, xs: stream }])
+        .collect();
+    let res = simulate_fused_batch(mapping, tags, blocks, cgra, &batches)?;
+    let per_block = res
+        .per_member
+        .into_iter()
+        .map(|m| {
+            let outputs = m
+                .segments
+                .into_iter()
+                .next()
+                .map(|seg| seg.outputs)
+                .unwrap_or_default();
+            BlockSim { outputs, cops: m.cops, mcids: m.mcids }
+        })
+        .collect();
+    Ok(FusedSimResult {
+        per_block,
+        cycles: res.cycles,
+        iterations: res.iterations,
+        pe_busy: res.pe_busy,
+        lrf_peak: res.lrf_peak,
+        grf_peak: res.grf_peak,
+    })
+}
+
+/// Simulate a fused mapping over a **batched request window**: one
+/// lockstep pass serving several requests per member. `batches[bi]` holds
+/// member `bi`'s segments (one per request, run back to back, each with
+/// its own weights); a member whose total falls short of the window's
+/// lockstep length — and any member with no segments at all — streams
+/// zeros for the remainder, and its padded outputs are discarded. Each
+/// iteration's values depend only on that iteration's inputs and the
+/// segment's weights, so every segment's outputs are bit-identical to a
+/// dedicated whole-bundle pass carrying just that request.
+pub fn simulate_fused_batch(
+    mapping: &Mapping,
+    tags: &BlockTags,
+    blocks: &[&SparseBlock],
+    cgra: &StreamingCgra,
+    batches: &[Vec<MemberSegment<'_>>],
+) -> Result<BatchSimResult> {
+    let s = &mapping.s;
+    let g = &s.g;
+    if tags.len() != g.len() {
+        return Err(Error::Workload(format!(
+            "block tags cover {} nodes but the mapping has {}",
+            tags.len(),
+            g.len()
+        )));
+    }
+    if blocks.len() != tags.members() || batches.len() != tags.members() {
+        return Err(Error::Workload(format!(
+            "batched fused simulation of {} members got {} blocks and {} segment lists",
+            tags.members(),
+            blocks.len(),
+            batches.len()
+        )));
+    }
+    let mut streams = Vec::with_capacity(blocks.len());
+    for (bi, (&b, segs)) in blocks.iter().zip(batches).enumerate() {
+        for seg in segs {
+            if seg.block.mask_fingerprint() != b.mask_fingerprint() {
+                return Err(Error::Workload(format!(
+                    "member {bi} ('{}') segment block '{}' has a different mask structure",
+                    b.name, seg.block.name
+                )));
+            }
+            if let Some(bad) = seg.xs.iter().find(|x| x.len() != b.c) {
+                return Err(Error::Workload(format!(
+                    "member {bi} ('{}') input vector of length {} for {} channels",
+                    b.name,
+                    bad.len(),
+                    b.c
+                )));
+            }
+        }
+        streams.push(MemberStream::new(segs, b));
+    }
+    let n_iters = streams.iter().map(MemberStream::total).max().unwrap_or(0);
     let ii = s.ii as u64;
     let makespan = s.makespan() as u64;
     let total_cycles = (n_iters.max(1) as u64 - 1) * ii + makespan;
@@ -209,9 +393,14 @@ pub fn simulate_fused(
     // value_of[v][iter] — produced values (functional state; hardware
     // residency is validated by the pressure stats and hazard checks).
     let mut value_of: Vec<Vec<Option<f32>>> = vec![vec![None; n_iters]; g.len()];
-    // Per-member output planes, member-kernel-indexed.
-    let mut outputs: Vec<Vec<Vec<f32>>> =
-        blocks.iter().map(|b| vec![vec![0.0; b.k]; n_iters]).collect();
+    // Per-member, per-segment output planes, member-kernel-indexed.
+    let mut outputs: Vec<Vec<Vec<Vec<f32>>>> = blocks
+        .iter()
+        .zip(batches)
+        .map(|(b, segs)| {
+            segs.iter().map(|seg| vec![vec![0.0; b.k]; seg.xs.len()]).collect()
+        })
+        .collect();
     let mut pe_busy = vec![0u64; cgra.num_pes()];
 
     for cycle in 0..total_cycles {
@@ -271,7 +460,7 @@ pub fn simulate_fused(
 
             match g.kind(v) {
                 NodeKind::Read { ch, .. } => {
-                    value_of[v][iter] = Some(xs[tags.block_of(v)][iter][ch]);
+                    value_of[v][iter] = Some(streams[tags.block_of(v)].input(iter, ch));
                     // The reading itself occupies its column bus this cycle.
                     if let Placement::InputBus(ib) = mapping.placements[v] {
                         if let Some(prev) = bus_used.insert(BusAt::Col { slot, col: ib }, v) {
@@ -287,7 +476,8 @@ pub fn simulate_fused(
                 NodeKind::Mul { ch, kr } => {
                     let (edge_idx, _) = g.in_edges(v).next().expect("mul in-edge");
                     let x = fetch(edge_idx, &mut bus_used, &value_of)?;
-                    value_of[v][iter] = Some(x * blocks[tags.block_of(v)].weight(ch, kr));
+                    value_of[v][iter] =
+                        Some(x * streams[tags.block_of(v)].weight(iter, ch, kr));
                 }
                 NodeKind::Add { .. } => {
                     let idxs: Vec<usize> = g.in_edges(v).map(|(i, _)| i).collect();
@@ -305,7 +495,10 @@ pub fn simulate_fused(
                 NodeKind::Write { kr } => {
                     let (edge_idx, _) = g.in_edges(v).next().expect("write in-edge");
                     let y = fetch(edge_idx, &mut bus_used, &value_of)?;
-                    outputs[tags.block_of(v)][iter][kr] = y;
+                    let bi = tags.block_of(v);
+                    if let Some((seg, local)) = streams[bi].locate(iter) {
+                        outputs[bi][seg][local][kr] = y;
+                    }
                     value_of[v][iter] = Some(y);
                 }
             }
@@ -332,15 +525,39 @@ pub fn simulate_fused(
         }
     }
 
-    // Per-member schedule statistics out of the fused mapping.
+    // Per-member schedule statistics plus per-segment cycle attribution:
+    // the pass total is split proportionally to segment iteration counts
+    // (flat member-major segment order), rounding by cumulative prefix so
+    // the shares sum exactly to `total_cycles`.
     let stats = per_block_stats(s, tags);
-    let per_block = outputs
-        .into_iter()
-        .zip(stats)
-        .map(|(outputs, st)| BlockSim { outputs, cops: st.cops, mcids: st.mcids })
-        .collect();
-    Ok(FusedSimResult {
-        per_block,
+    let total_req_iters: u64 = streams.iter().map(|st| st.total() as u64).sum();
+    let mut acc: u64 = 0;
+    let mut first_segment = true;
+    let mut per_member = Vec::with_capacity(blocks.len());
+    for (segs, st) in outputs.into_iter().zip(stats) {
+        let mut segments = Vec::with_capacity(segs.len());
+        for outs in segs {
+            let m = outs.len() as u64;
+            let cycles = if total_req_iters == 0 {
+                // Degenerate all-empty window: the pass still pays the
+                // makespan once — charge it to the first segment.
+                if first_segment {
+                    total_cycles
+                } else {
+                    0
+                }
+            } else {
+                total_cycles * (acc + m) / total_req_iters
+                    - total_cycles * acc / total_req_iters
+            };
+            first_segment = false;
+            acc += m;
+            segments.push(SegmentSim { outputs: outs, cycles });
+        }
+        per_member.push(MemberBatchSim { segments, cops: st.cops, mcids: st.mcids });
+    }
+    Ok(BatchSimResult {
+        per_member,
         cycles: total_cycles,
         iterations: n_iters,
         pe_busy,
@@ -539,5 +756,109 @@ mod tests {
         // Mismatched member/stream counts are rejected.
         assert!(simulate_fused(&out.mapping, &out.tags, &blocks[..1], &cgra, &xs).is_err());
         assert!(simulate_fused(&out.mapping, &out.tags, &blocks, &cgra, &xs[..1]).is_err());
+    }
+
+    #[test]
+    fn batched_fused_pass_matches_per_request_passes_bitwise() {
+        use crate::mapper::map_bundle;
+        use crate::sparse::fuse::FusedBundle;
+        use std::sync::Arc;
+        let cgra = StreamingCgra::paper_default();
+        let members: Vec<Arc<SparseBlock>> = paper_blocks()
+            .into_iter()
+            .take(2)
+            .map(|nb| Arc::new(nb.block))
+            .collect();
+        let bundle = FusedBundle::new(members.clone()).unwrap();
+        let out = map_bundle(&bundle, &cgra, &MapperOptions::fused()).unwrap();
+        let blocks: Vec<&SparseBlock> = members.iter().map(|b| b.as_ref()).collect();
+
+        let mut rng = crate::util::rng::Pcg64::seeded(23);
+        let mut stream = |b: &SparseBlock, n: usize| -> Vec<Vec<f32>> {
+            (0..n)
+                .map(|_| (0..b.c).map(|_| rng.next_normal() as f32).collect())
+                .collect()
+        };
+        // Member 0 carries two requests (3 + 2 iters), member 1 one (4):
+        // lockstep length 5, member 1 padded with one zero iteration.
+        let a1 = stream(&members[0], 3);
+        let a2 = stream(&members[0], 2);
+        let b1 = stream(&members[1], 4);
+        let batches = vec![
+            vec![
+                MemberSegment { block: &members[0], xs: &a1 },
+                MemberSegment { block: &members[0], xs: &a2 },
+            ],
+            vec![MemberSegment { block: &members[1], xs: &b1 }],
+        ];
+        let res = simulate_fused_batch(&out.mapping, &out.tags, &blocks, &cgra, &batches)
+            .unwrap();
+        assert_eq!(res.iterations, 5);
+        assert_eq!(res.per_member[0].segments.len(), 2);
+        assert_eq!(res.per_member[1].segments.len(), 1);
+
+        // Every segment bit-matches a dedicated whole-bundle pass carrying
+        // just that request (zero inputs on the co-resident member) — the
+        // passes per-request fused serving used to run one at a time.
+        let mut serial_cycles = 0u64;
+        for (bi, segs) in [(0usize, vec![&a1, &a2]), (1usize, vec![&b1])] {
+            for (si, seg) in segs.iter().enumerate() {
+                let zero_streams: Vec<Vec<Vec<f32>>> = members
+                    .iter()
+                    .enumerate()
+                    .map(|(mi, m)| {
+                        if mi == bi {
+                            (*seg).clone()
+                        } else {
+                            vec![vec![0.0; m.c]; seg.len()]
+                        }
+                    })
+                    .collect();
+                let xs: Vec<&[Vec<f32>]> =
+                    zero_streams.iter().map(|s| s.as_slice()).collect();
+                let solo =
+                    simulate_fused(&out.mapping, &out.tags, &blocks, &cgra, &xs).unwrap();
+                serial_cycles += solo.cycles;
+                let got = &res.per_member[bi].segments[si].outputs;
+                let want = &solo.per_block[bi].outputs;
+                assert_eq!(got.len(), want.len(), "member {bi} segment {si}");
+                for (it, (gv, wv)) in got.iter().zip(want).enumerate() {
+                    for (kr, (a, w)) in gv.iter().zip(wv).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            w.to_bits(),
+                            "member {bi} segment {si} iter {it} kernel {kr}"
+                        );
+                    }
+                }
+            }
+        }
+        // Cycle attribution sums exactly to the single pass's total, and
+        // the batched pass beats the serial per-request passes.
+        let attributed: u64 = res
+            .per_member
+            .iter()
+            .flat_map(|m| m.segments.iter().map(|s| s.cycles))
+            .sum();
+        assert_eq!(attributed, res.cycles);
+        assert!(
+            res.cycles < serial_cycles,
+            "one batched pass ({}) must undercut {} serial cycles",
+            res.cycles,
+            serial_cycles
+        );
+        // Per-member stats still echo the schedule's.
+        let cops: usize = res.per_member.iter().map(|m| m.cops).sum();
+        assert_eq!(cops, out.mapping.cops());
+        // A segment with a foreign mask structure is rejected.
+        let alien = paper_blocks()[3].block.clone();
+        let alien_xs = stream(&alien, 2);
+        let bad = vec![
+            vec![MemberSegment { block: &alien, xs: &alien_xs }],
+            vec![MemberSegment { block: &members[1], xs: &b1 }],
+        ];
+        assert!(
+            simulate_fused_batch(&out.mapping, &out.tags, &blocks, &cgra, &bad).is_err()
+        );
     }
 }

@@ -15,7 +15,8 @@
 //! the §4.1 MII bound consumes) accumulated per bundle and capped by the
 //! combined-MII budget of [`FusionOptions`].
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use crate::arch::StreamingCgra;
 use crate::error::{Error, Result};
@@ -110,6 +111,66 @@ impl FusedBundle {
             (acc.0 + f.v_op, acc.1 + f.v_r, acc.2 + f.v_w)
         });
         cgra.mii(ops, reads, writes)
+    }
+}
+
+/// Thread-safe member-fingerprint → bundle routing table: how the serving
+/// layer finds, at enqueue time, the fused bundle (and member index) a
+/// block's traffic should batch into. Registration is last-writer-wins per
+/// member fingerprint; deregistration is pointer-compared so a newer
+/// bundle that re-claimed a member is left alone.
+#[derive(Default)]
+pub struct BundleRoutes {
+    routes: Mutex<HashMap<u64, Arc<FusedBundle>>>,
+}
+
+impl BundleRoutes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Route every member of `bundle` to it (replacing older claims).
+    pub fn register(&self, bundle: Arc<FusedBundle>) {
+        let mut routes = self.routes.lock().expect("bundle routes");
+        for b in &bundle.blocks {
+            routes.insert(b.mask_fingerprint(), Arc::clone(&bundle));
+        }
+    }
+
+    /// The bundle (and member index inside it) serving mask fingerprint
+    /// `fp`, if any.
+    pub fn route(&self, fp: u64) -> Option<(Arc<FusedBundle>, usize)> {
+        let routes = self.routes.lock().expect("bundle routes");
+        let bundle = routes.get(&fp)?;
+        let member = bundle
+            .member_index_of(fp)
+            .expect("routed bundles hold the member they are keyed by");
+        Some((Arc::clone(bundle), member))
+    }
+
+    /// Drop `bundle`'s member routes. Pointer-compared (a newer bundle
+    /// that re-claimed a member fingerprint keeps its route) and
+    /// idempotent — every caller that sees the same bundle fail converges
+    /// on the same deregistered state.
+    pub fn deregister(&self, bundle: &Arc<FusedBundle>) {
+        let mut routes = self.routes.lock().expect("bundle routes");
+        for b in &bundle.blocks {
+            if routes
+                .get(&b.mask_fingerprint())
+                .is_some_and(|r| Arc::ptr_eq(r, bundle))
+            {
+                routes.remove(&b.mask_fingerprint());
+            }
+        }
+    }
+
+    /// Number of routed member fingerprints.
+    pub fn len(&self) -> usize {
+        self.routes.lock().expect("bundle routes").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -234,6 +295,36 @@ mod tests {
             assert!(bu.len() <= opts.max_blocks);
             assert!(bu.len() == 1 || bu.mii(&cgra) <= opts.max_ii);
         }
+    }
+
+    #[test]
+    fn bundle_routes_register_route_deregister() {
+        let blocks = small_three();
+        let routes = BundleRoutes::new();
+        assert!(routes.is_empty());
+        let b1 = Arc::new(FusedBundle::new(blocks[..2].to_vec()).unwrap());
+        let b2 = Arc::new(FusedBundle::new(blocks[1..].to_vec()).unwrap());
+        routes.register(Arc::clone(&b1));
+        routes.register(Arc::clone(&b2)); // re-claims the shared member
+        assert_eq!(routes.len(), 3);
+        // Routing resolves both bundle and member index.
+        let (bundle, member) = routes.route(blocks[0].mask_fingerprint()).unwrap();
+        assert!(Arc::ptr_eq(&bundle, &b1));
+        assert_eq!(member, 0);
+        let (bundle, member) = routes.route(blocks[1].mask_fingerprint()).unwrap();
+        assert!(Arc::ptr_eq(&bundle, &b2), "latest registration wins");
+        assert_eq!(member, 0);
+        assert!(routes.route(0xdead_beef).is_none());
+        // Deregistering b1 leaves the shared member with b2 (pointer
+        // compare), and is idempotent.
+        routes.deregister(&b1);
+        assert!(routes.route(blocks[0].mask_fingerprint()).is_none());
+        assert!(routes
+            .route(blocks[1].mask_fingerprint())
+            .is_some_and(|(b, _)| Arc::ptr_eq(&b, &b2)));
+        assert!(routes.route(blocks[2].mask_fingerprint()).is_some());
+        routes.deregister(&b1);
+        assert_eq!(routes.len(), 2);
     }
 
     #[test]

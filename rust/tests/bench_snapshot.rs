@@ -137,6 +137,8 @@ fn bench_mapper_json_schema() {
             "serving/wide_k128/cold_start_request",
             "serving/fused3/per_request",
             "serving/fused3/cold_start_request",
+            "serving/fused3/batched_request",
+            "serving/fused3/window8",
         ],
     );
     eprintln!("BENCH_mapper.json schema ok ({rows} rows)");

@@ -14,7 +14,7 @@ use std::sync::Arc;
 use sparsemap::arch::StreamingCgra;
 use sparsemap::bind::bind;
 use sparsemap::config::SparsemapConfig;
-use sparsemap::coordinator::{Coordinator, InferRequest};
+use sparsemap::coordinator::{Coordinator, Ticket};
 use sparsemap::dfg::analysis::AssociationMatrix;
 use sparsemap::dfg::build::build_sdfg;
 use sparsemap::mapper::{map_bundle, map_unit, MapUnit, MapperOptions};
@@ -227,21 +227,25 @@ fn coordinator_serves_mixed_traffic_deterministically_at_any_parallelism() {
         for (i, b) in bundle_blocks.iter().enumerate() {
             requests.push((4 + i as u64, Arc::clone(b)));
         }
-        for (id, block) in &requests {
-            let xs = stream_for(block, 3, *id % 4);
-            coord.submit(InferRequest { id: *id, block: Arc::clone(block), xs }).unwrap();
-        }
-        let mut results: Vec<_> = coord
-            .collect(requests.len())
-            .into_iter()
-            .map(|r| r.expect("mixed job ok"))
+        let mut session = coord.session();
+        let tickets: Vec<Ticket> = requests
+            .iter()
+            .map(|(id, block)| {
+                let xs = stream_for(block, 3, *id % 4);
+                session.enqueue(Arc::clone(block), xs)
+            })
             .collect();
-        results.sort_by_key(|r| r.id);
-        for r in &results {
-            let want_members = if r.id == 3 { 1 } else { 3 };
-            assert_eq!(r.fused_members, want_members, "id {}", r.id);
-        }
-        results.into_iter().map(|r| r.outputs).collect()
+        session.flush();
+        tickets
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let r = t.wait().expect("mixed job ok");
+                let want_members = if i == 3 { 1 } else { 3 };
+                assert_eq!(r.fused_members, want_members, "request {i}");
+                r.outputs
+            })
+            .collect()
     };
 
     let base = run(1, 1);
@@ -260,4 +264,121 @@ fn coordinator_serves_mixed_traffic_deterministically_at_any_parallelism() {
             }
         }
     }
+}
+
+#[test]
+fn batched_window_is_one_pass_and_bit_identical_to_solo_serving() {
+    // The acceptance scenario for fused request batching: a window of W
+    // member requests runs exactly ONE fused simulation pass (windows
+    // metric), and every member request's outputs are bit-identical to
+    // serving the same block solo (unregistered) — values depend only on
+    // graph structure and weights, and the member graphs are identical
+    // shifted copies of the solo graphs.
+    let members = canonical_bundle().blocks;
+    let streams: Vec<Vec<Vec<f32>>> = members
+        .iter()
+        .enumerate()
+        .map(|(i, b)| stream_for(b, 6, 70 + i as u64))
+        .collect();
+
+    let mut cfg = SparsemapConfig::default();
+    cfg.workers = 2;
+    cfg.queue_depth = 8;
+    cfg.parallelism = 2;
+    cfg.batch_window_requests = members.len();
+
+    // Fused, batched: one window of W = 3 member requests.
+    let fused_coord = Coordinator::new(&cfg);
+    fused_coord
+        .register_bundle(Arc::new(FusedBundle::new(members.clone()).unwrap()));
+    let mut session = fused_coord.session();
+    let tickets: Vec<Ticket> = members
+        .iter()
+        .zip(&streams)
+        .map(|(b, xs)| session.enqueue(Arc::clone(b), xs.clone()))
+        .collect();
+    session.drain();
+    let fused_outputs: Vec<Vec<Vec<f32>>> = tickets
+        .into_iter()
+        .map(|t| {
+            let r = t.wait().expect("batched member request ok");
+            assert_eq!(r.fused_members, members.len());
+            r.outputs
+        })
+        .collect();
+    let m = fused_coord.metrics.snapshot();
+    assert_eq!(m.jobs, members.len() as u64);
+    assert_eq!(m.windows, 1, "W member requests must run ONE fused pass");
+    assert_eq!(m.cache_misses, 1, "one shared fused mapping");
+
+    // Solo reference: same blocks, same streams, no registration.
+    let solo_coord = Coordinator::new(&cfg);
+    let mut solo_session = solo_coord.session();
+    let solo_tickets: Vec<Ticket> = members
+        .iter()
+        .zip(&streams)
+        .map(|(b, xs)| solo_session.enqueue(Arc::clone(b), xs.clone()))
+        .collect();
+    let solo_outputs: Vec<Vec<Vec<f32>>> = solo_tickets
+        .into_iter()
+        .map(|t| t.wait().expect("solo request ok").outputs)
+        .collect();
+    assert_eq!(solo_coord.metrics.snapshot().windows, 0);
+
+    for (bi, (fs, ss)) in fused_outputs.iter().zip(&solo_outputs).enumerate() {
+        assert_eq!(fs.len(), ss.len(), "member {bi}");
+        for (it, (fv, sv)) in fs.iter().zip(ss).enumerate() {
+            for (kr, (a, b)) in fv.iter().zip(sv).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "member {bi} iter {it} kernel {kr}: batched {a} vs solo {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_windows_charge_cycles_once_per_window() {
+    // The Metrics::total_cycles double-count fix, on the canonical fused3
+    // bundle: W member requests served through one batching window charge
+    // the resident configuration ONCE; the same traffic served
+    // per-member-serially (window size 1) charges it W times.
+    let members = canonical_bundle().blocks;
+    let serve = |window_requests: usize| -> (u64, u64) {
+        let mut cfg = SparsemapConfig::default();
+        cfg.workers = 2;
+        cfg.queue_depth = 8;
+        cfg.batch_window_requests = window_requests;
+        let coord = Coordinator::new(&cfg);
+        coord.register_bundle(Arc::new(FusedBundle::new(members.clone()).unwrap()));
+        let mut session = coord.session();
+        let tickets: Vec<Ticket> = (0..2 * members.len())
+            .map(|i| {
+                let b = &members[i % members.len()];
+                session.enqueue(Arc::clone(b), stream_for(b, 8, i as u64))
+            })
+            .collect();
+        session.drain();
+        let mut attributed = 0u64;
+        for t in tickets {
+            attributed += t.wait().expect("member request ok").cycles;
+        }
+        let m = coord.metrics.snapshot();
+        assert_eq!(
+            attributed, m.total_cycles,
+            "per-request cycle shares must sum to the charged totals"
+        );
+        (m.total_cycles, m.windows)
+    };
+    let (batched_cycles, batched_windows) = serve(2 * members.len());
+    let (serial_cycles, serial_windows) = serve(1);
+    assert_eq!(batched_windows, 1);
+    assert_eq!(serial_windows, 2 * members.len() as u64);
+    assert!(
+        batched_cycles < serial_cycles,
+        "fused-batched totals ({batched_cycles}) must undercut per-member-serial \
+         totals ({serial_cycles})"
+    );
 }

@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use sparsemap::arch::StreamingCgra;
 use sparsemap::config::SparsemapConfig;
-use sparsemap::coordinator::{Coordinator, InferRequest};
+use sparsemap::coordinator::Coordinator;
 use sparsemap::mapper::{map_block, MapperOptions};
 use sparsemap::sim::simulate;
 use sparsemap::sparse::gen::wide_blocks;
@@ -79,20 +79,17 @@ fn coordinator_serves_wide_blocks() {
     let wide = Arc::new(wide_block("wide_k128"));
     let narrow = Arc::new(sparsemap::sparse::gen::paper_blocks()[0].block.clone());
     let wide_xs = stream_for(&wide, 2, 7);
-    for id in 0..2u64 {
-        coord
-            .submit(InferRequest { id, block: Arc::clone(&wide), xs: wide_xs.clone() })
-            .unwrap();
+    let mut session = coord.session();
+    let mut tickets = Vec::new();
+    for _ in 0..2 {
+        tickets.push(session.enqueue(Arc::clone(&wide), wide_xs.clone()));
     }
-    coord
-        .submit(InferRequest { id: 2, block: Arc::clone(&narrow), xs: stream_for(&narrow, 4, 8) })
-        .unwrap();
+    tickets.push(session.enqueue(Arc::clone(&narrow), stream_for(&narrow, 4, 8)));
 
-    let results = coord.collect(3);
-    assert_eq!(results.len(), 3);
-    for r in results {
-        let r = r.expect("wide serving job ok");
-        if r.id < 2 {
+    for (i, ticket) in tickets.into_iter().enumerate() {
+        let r = ticket.wait().expect("wide serving job ok");
+        assert_eq!(r.id, i as u64);
+        if i < 2 {
             assert_eq!(r.block_name, "wide_k128");
             assert_eq!(r.outputs.len(), 2);
             for (x, y) in wide_xs.iter().zip(&r.outputs) {
