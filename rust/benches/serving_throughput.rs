@@ -15,10 +15,10 @@
 //! ```
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use sparsemap::config::SparsemapConfig;
-use sparsemap::coordinator::{Coordinator, Ticket};
+use sparsemap::coordinator::{Coordinator, ServeError, Ticket};
 use sparsemap::sparse::gen::{fused3_bundle, paper_blocks, wide_blocks};
 use sparsemap::sparse::SparseBlock;
 use sparsemap::util::bench::{repo_root_path, write_json_merged, BenchResult};
@@ -168,6 +168,46 @@ fn main() {
             summary: cold_summary,
             iters_per_sample: 1,
         });
+
+        // Deadline pressure: the same warm wide traffic enqueued as one
+        // burst with a per-request latency budget of 2x the steady-state
+        // per-request time. The front of the queue serves; the tail
+        // exceeds its budget while queued and is shed at pickup
+        // (`DeadlineExceeded` — no simulation spent on it). The row is
+        // wall time per request under that policy; the printed miss rate
+        // is the interesting diagnostic.
+        let budget_ns = (wall.as_nanos() as u64 / n).saturating_mul(2).max(1);
+        let budget = Duration::from_nanos(budget_ns);
+        let t0 = Instant::now();
+        let tickets: Vec<Ticket> = (0..n)
+            .map(|id| {
+                let xs = stream(&wide, iters, n + id);
+                session.enqueue_with_deadline(Arc::clone(&wide), xs, budget)
+            })
+            .collect();
+        let mut served = 0usize;
+        let mut missed = 0usize;
+        for t in tickets {
+            match t.wait() {
+                Ok(_) => served += 1,
+                Err(ServeError::DeadlineExceeded) => missed += 1,
+                Err(e) => panic!("unexpected serving error under deadlines: {e}"),
+            }
+        }
+        let wall = t0.elapsed();
+        println!(
+            "wide_k128 deadlines: {n} requests, budget {:.2} ms → {served} served, \
+             {missed} shed ({:.0}% miss rate) in {wall:?}",
+            budget.as_secs_f64() * 1e3,
+            missed as f64 / n as f64 * 100.0,
+        );
+        let mut deadline_rate = Summary::new();
+        deadline_rate.add(wall.as_nanos() as f64 / n as f64);
+        results.push(BenchResult {
+            name: "serving/wide_k128/deadline_miss_rate".into(),
+            summary: deadline_rate,
+            iters_per_sample: n,
+        });
     }
 
     // Fused serving scenario: the canonical three-small-block bundle
@@ -305,6 +345,64 @@ fn main() {
             name: "serving/fused3/window8".into(),
             summary: window8,
             iters_per_sample: rounds,
+        });
+
+        // Admission control under overload: one slow worker, a short
+        // queue and a shed watermark, driven by a non-blocking
+        // `try_enqueue` burst of mixed traffic — bundle members (always
+        // admitted into their batching window: a window rides one queue
+        // slot) interleaved with solo singles (shed first, with
+        // `Overloaded`). The row is wall time per ADMITTED request — the
+        // cost of the serving the coordinator actually accepted — and the
+        // printed shed rate shows the watermark doing its job.
+        let mut cfg = SparsemapConfig { workers: 1, queue_depth: 4, ..SparsemapConfig::default() };
+        cfg.batch_window_requests = 3;
+        cfg.shed_watermark = 3;
+        let coord = Coordinator::new(&cfg);
+        coord.register_bundle(Arc::clone(&bundle));
+        let mut session = coord.session();
+        // Warm both mappings (fused + solo) off the measurement.
+        let _ = session
+            .enqueue(Arc::clone(&members[0]), stream(&members[0], 2, 97))
+            .wait();
+        let _ = session.enqueue(Arc::clone(&blocks[0]), stream(&blocks[0], 2, 96)).wait();
+
+        let n = 200u64;
+        let t0 = Instant::now();
+        let mut admitted: Vec<Ticket> = Vec::new();
+        let mut shed = 0usize;
+        for id in 0..n {
+            let block = if id % 2 == 0 {
+                Arc::clone(&members[(id as usize / 2) % members.len()])
+            } else {
+                Arc::clone(&blocks[0])
+            };
+            let xs = stream(&block, iters, id);
+            match session.try_enqueue(block, xs) {
+                Ok(t) => admitted.push(t),
+                Err(ServeError::Overloaded) => shed += 1,
+                Err(e) => panic!("unexpected admission error: {e}"),
+            }
+        }
+        session.flush();
+        let count = admitted.len();
+        for t in admitted.drain(..) {
+            let _ = t.wait();
+        }
+        let wall = t0.elapsed();
+        let m = coord.metrics.snapshot();
+        println!(
+            "fused3 overload: {n} offered → {count} admitted, {shed} shed \
+             ({:.0}% shed rate, metrics.shed {}) in {wall:?}",
+            shed as f64 / n as f64 * 100.0,
+            m.shed,
+        );
+        let mut shed_row = Summary::new();
+        shed_row.add(wall.as_nanos() as f64 / count.max(1) as f64);
+        results.push(BenchResult {
+            name: "serving/fused3/shed_overload".into(),
+            summary: shed_row,
+            iters_per_sample: count.max(1) as u64,
         });
     }
 

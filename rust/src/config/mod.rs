@@ -88,6 +88,25 @@ pub struct SparsemapConfig {
     /// window, bounding the zero-padding cost a short request pays for
     /// riding with long ones. `0` = uncapped.
     pub batch_window_max: usize,
+    /// Worker-thread respawns the supervisor will perform over the
+    /// coordinator's lifetime before letting the pool shrink (a hard panic
+    /// that escapes the per-job `catch_unwind` kills the thread; the
+    /// supervisor respawns it while budget remains). `0` = never respawn.
+    pub restart_budget: usize,
+    /// Panics tolerated for one job identity (block / bundle fingerprint)
+    /// before it is quarantined and its requests resolve
+    /// `ServeError::Poisoned` instead of being retried. Must be >= 1.
+    pub poison_threshold: usize,
+    /// Queue-occupancy high watermark for `try_enqueue`: at or above this
+    /// many queued jobs, non-bundle singles are shed (`Overloaded`) even
+    /// though the bounded queue still has room. `0` disables the watermark
+    /// (only a full queue sheds).
+    pub shed_watermark: usize,
+    /// Retry-after budget for failed mapping-cache entries: a `Failed`
+    /// entry fails the next `failure_ttl - 1` requests for its key fast,
+    /// then the next request retries the build. `0` = sticky forever (the
+    /// pre-failure-TTL behavior).
+    pub failure_ttl: u64,
     /// Maximum member blocks per fused bundle (`1` disables fusion).
     pub max_fused_blocks: usize,
     /// Combined-MII budget for the fusion planner.
@@ -111,6 +130,10 @@ impl Default for SparsemapConfig {
             cache_capacity: 0,
             batch_window_requests: 8,
             batch_window_max: 1024,
+            restart_budget: 8,
+            poison_threshold: 3,
+            shed_watermark: 0,
+            failure_ttl: 0,
             max_fused_blocks: 4,
             fusion_max_ii: 12,
             seed: 42,
@@ -161,6 +184,16 @@ impl SparsemapConfig {
                 ("coordinator", "batch_window_max") => {
                     cfg.batch_window_max = value.as_int()? as usize
                 }
+                ("coordinator", "restart_budget") => {
+                    cfg.restart_budget = value.as_int()? as usize
+                }
+                ("coordinator", "poison_threshold") => {
+                    cfg.poison_threshold = value.as_int()? as usize
+                }
+                ("coordinator", "shed_watermark") => {
+                    cfg.shed_watermark = value.as_int()? as usize
+                }
+                ("coordinator", "failure_ttl") => cfg.failure_ttl = value.as_int()? as u64,
                 ("workload", "seed") => cfg.seed = value.as_int()? as u64,
                 (s, k) => {
                     return Err(Error::Config(format!("unknown config key [{s}] {k}")));
@@ -172,6 +205,11 @@ impl SparsemapConfig {
         }
         if cfg.workers == 0 {
             return Err(Error::Config("coordinator.workers must be >= 1".into()));
+        }
+        if cfg.poison_threshold == 0 {
+            return Err(Error::Config(
+                "coordinator.poison_threshold must be >= 1".into(),
+            ));
         }
         if cfg.max_fused_blocks == 0 {
             return Err(Error::Config(
@@ -260,6 +298,25 @@ seed = 7
         assert_eq!(d.cache_capacity, 0);
         assert!(d.max_fused_blocks >= 1);
         assert!(SparsemapConfig::from_str_cfg("[mapper]\nmax_fused_blocks = 0\n").is_err());
+    }
+
+    #[test]
+    fn robustness_knobs_parse_and_validate() {
+        let c = SparsemapConfig::from_str_cfg(
+            "[coordinator]\nrestart_budget = 2\npoison_threshold = 1\n\
+             shed_watermark = 12\nfailure_ttl = 5\n",
+        )
+        .unwrap();
+        assert_eq!(c.restart_budget, 2);
+        assert_eq!(c.poison_threshold, 1);
+        assert_eq!(c.shed_watermark, 12);
+        assert_eq!(c.failure_ttl, 5);
+        // Defaults: sticky failures, no watermark — PR 5 behavior.
+        let d = SparsemapConfig::default();
+        assert_eq!(d.failure_ttl, 0);
+        assert_eq!(d.shed_watermark, 0);
+        assert!(d.poison_threshold >= 1);
+        assert!(SparsemapConfig::from_str_cfg("[coordinator]\npoison_threshold = 0\n").is_err());
     }
 
     #[test]

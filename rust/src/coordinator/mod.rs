@@ -58,16 +58,42 @@
 //! bundle's combined mask fingerprint). Unregistered blocks serve solo
 //! through the same cache, so fused and unfused traffic mix freely.
 //!
+//! ## Failure model
+//!
+//! The serving tier treats failure as a first-class input (CGRA mapping
+//! attempts *can* fail; workers *can* die): job execution runs under a
+//! per-job `catch_unwind` with in-place retry, a supervisor thread
+//! respawns hard-dead workers up to `[coordinator] restart_budget`, and a
+//! job identity that keeps panicking is quarantined after
+//! `[coordinator] poison_threshold` attempts (its tickets resolve
+//! [`ServeError::Poisoned`]). Requests carry optional deadlines
+//! ([`ServeSession::enqueue_with_deadline`]) checked at worker pickup —
+//! expired work is shed as [`ServeError::DeadlineExceeded`] without
+//! simulating — and dropping an unwaited [`Ticket`] withdraws its request
+//! from a still-forming window. [`ServeSession::try_enqueue`] sheds
+//! instead of blocking ([`ServeError::Overloaded`]) on a full queue or
+//! above `[coordinator] shed_watermark`. Failed mapping-cache entries
+//! retry after `[coordinator] failure_ttl` further requests (`0` = sticky
+//! forever). If the whole pool dies with budget exhausted, the supervisor
+//! drains the queue resolving every ticket [`ServeError::WorkerGone`] —
+//! the invariant throughout is that *every enqueued ticket resolves*.
+//! All of it is exercised deterministically by `util::failpoint` sites
+//! (`coordinator::serve` / `worker_hard` / `map` / `sim` / `delay`) under
+//! the `failpoints` feature (`tests/fault_tolerance.rs`).
+//!
 //! tokio is unavailable offline; the pool is built on std threads +
 //! `std::sync::mpsc::sync_channel`, which gives exactly the bounded-queue
 //! semantics the backpressure design needs. A batching window occupies a
 //! single queue slot however many requests it carries.
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SendError, SyncSender};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, SendError, Sender, SyncSender, TrySendError,
+};
 use std::sync::{Arc, Condvar, Mutex, Weak};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::arch::StreamingCgra;
 use crate::config::SparsemapConfig;
@@ -76,6 +102,7 @@ use crate::mapper::{map_unit, MapOutcome, MapUnit, MapperOptions};
 use crate::sim::{simulate, simulate_fused_batch, MemberSegment, SegmentSim};
 use crate::sparse::fuse::{plan_bundles, BundleRoutes, FusedBundle, FusionOptions};
 use crate::sparse::SparseBlock;
+use crate::util::stats::Summary;
 
 /// One inference job: run `xs` (iteration-major input vectors) through a
 /// sparse block on the CGRA. Legacy envelope of the deprecated
@@ -107,9 +134,16 @@ pub struct InferResult {
     /// Member blocks resident in the configuration that served this
     /// request (`1` = unfused).
     pub fused_members: usize,
-    /// End-to-end latency in nanoseconds, measured from worker pickup
-    /// (window members share their window's value).
+    /// End-to-end latency in nanoseconds, from enqueue to resolution:
+    /// `queue_ns + service_ns`. Per-ticket — batched members share the
+    /// window's service span but each carries its own queueing span.
     pub latency_ns: u64,
+    /// Nanoseconds from enqueue to worker pickup: queue residency plus any
+    /// time spent riding an open batching window.
+    pub queue_ns: u64,
+    /// Worker-side nanoseconds (mapping-cache fetch + simulation). Window
+    /// members share their window's single pass, so they share this value.
+    pub service_ns: u64,
 }
 
 /// Structured per-request serving failure, delivered through [`Ticket`].
@@ -129,6 +163,18 @@ pub enum ServeError {
     /// The worker pool dropped the request without completing it (worker
     /// panic or teardown mid-flight).
     WorkerGone,
+    /// The request's deadline passed before a worker began serving it: it
+    /// was shed at pickup without simulating. A deadline never interrupts
+    /// a request already being served.
+    DeadlineExceeded,
+    /// The request targets a quarantined "poison" job: executing that
+    /// block (or its bundle) has panicked `[coordinator] poison_threshold`
+    /// times, so the pool refuses to retry it.
+    Poisoned,
+    /// Admission control shed the request: `try_enqueue` found the bounded
+    /// queue full, or its occupancy at/above `[coordinator]
+    /// shed_watermark`. The blocking `enqueue` never returns this.
+    Overloaded,
 }
 
 impl std::fmt::Display for ServeError {
@@ -141,6 +187,15 @@ impl std::fmt::Display for ServeError {
             ServeError::Sim(msg) => write!(f, "simulation failed: {msg}"),
             ServeError::WorkerGone => {
                 write!(f, "worker pool dropped the request without completing it")
+            }
+            ServeError::DeadlineExceeded => {
+                write!(f, "deadline passed before a worker picked the request up")
+            }
+            ServeError::Poisoned => {
+                write!(f, "request targets a quarantined poison job (repeated worker panics)")
+            }
+            ServeError::Overloaded => {
+                write!(f, "request shed by admission control (queue over watermark)")
             }
         }
     }
@@ -170,10 +225,61 @@ pub struct Metrics {
     pub total_latency_ns: AtomicU64,
     /// Batching windows simulated (one fused lockstep pass each).
     pub windows: AtomicU64,
+    /// Requests shed by admission control (`try_enqueue` → `Overloaded`);
+    /// they never entered the queue, so they do not count as `jobs`.
+    pub shed: AtomicU64,
+    /// Requests whose deadline passed before a worker picked them up
+    /// (resolved `DeadlineExceeded`; not counted as `failures` — a shed is
+    /// a policy outcome, not a serving fault).
+    pub deadline_expired: AtomicU64,
+    /// Worker restarts: per-job `catch_unwind` recoveries plus supervisor
+    /// thread respawns.
+    pub worker_restarts: AtomicU64,
+    /// Requests resolved `Poisoned` (their job identity crossed the panic
+    /// quarantine threshold); also counted in `failures`.
+    pub poisoned: AtomicU64,
+    /// Per-request latency attribution, sampled at successful resolution.
+    latency: Mutex<LatencyStats>,
+}
+
+/// Queue/service span samples behind `Metrics` (percentiles need retained
+/// samples, so these live under a mutex rather than atomics).
+#[derive(Default)]
+struct LatencyStats {
+    queue: Summary,
+    service: Summary,
+}
+
+/// Percentile of a possibly-empty summary (`0` before the first sample —
+/// `Summary::percentile` itself panics on empty input).
+fn pct(s: &Summary, q: f64) -> f64 {
+    if s.count() == 0 {
+        0.0
+    } else {
+        s.percentile(q)
+    }
 }
 
 impl Metrics {
+    /// Record one resolved request's queueing and service spans.
+    fn observe_latency(&self, queue_ns: u64, service_ns: u64) {
+        if let Ok(mut l) = self.latency.lock() {
+            l.queue.add(queue_ns as f64);
+            l.service.add(service_ns as f64);
+        }
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
+        let (queue_ns_p50, queue_ns_p99, service_ns_p50, service_ns_p99) =
+            match self.latency.lock() {
+                Ok(l) => (
+                    pct(&l.queue, 50.0),
+                    pct(&l.queue, 99.0),
+                    pct(&l.service, 50.0),
+                    pct(&l.service, 99.0),
+                ),
+                Err(_) => (0.0, 0.0, 0.0, 0.0),
+            };
         MetricsSnapshot {
             jobs: self.jobs.load(Ordering::Relaxed),
             failures: self.failures.load(Ordering::Relaxed),
@@ -182,6 +288,14 @@ impl Metrics {
             total_cycles: self.total_cycles.load(Ordering::Relaxed),
             total_latency_ns: self.total_latency_ns.load(Ordering::Relaxed),
             windows: self.windows.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
+            poisoned: self.poisoned.load(Ordering::Relaxed),
+            queue_ns_p50,
+            queue_ns_p99,
+            service_ns_p50,
+            service_ns_p99,
         }
     }
 }
@@ -195,6 +309,16 @@ pub struct MetricsSnapshot {
     pub total_cycles: u64,
     pub total_latency_ns: u64,
     pub windows: u64,
+    pub shed: u64,
+    pub deadline_expired: u64,
+    pub worker_restarts: u64,
+    pub poisoned: u64,
+    /// p50/p99 over per-request queueing spans (ns); `0.0` with no samples.
+    pub queue_ns_p50: f64,
+    pub queue_ns_p99: f64,
+    /// p50/p99 over per-request service spans (ns); `0.0` with no samples.
+    pub service_ns_p50: f64,
+    pub service_ns_p99: f64,
 }
 
 /// Fused request batching knobs (see `[coordinator] batch_window_requests`
@@ -284,6 +408,24 @@ impl TicketState {
             _ => None,
         }
     }
+
+    /// Block until resolved or `deadline`, whichever comes first. `Some`
+    /// clones the result (leaving it claimable, like `peek`); `None`
+    /// means the request is still in flight at the deadline.
+    fn wait_until(
+        &self,
+        deadline: Instant,
+    ) -> Option<std::result::Result<InferResult, ServeError>> {
+        let mut inner = self.inner.lock().expect("ticket state");
+        loop {
+            if let TicketInner::Done(res) = &*inner {
+                return Some(res.clone());
+            }
+            let left = deadline.checked_duration_since(Instant::now())?;
+            let (guard, _) = self.ready.wait_timeout(inner, left).expect("ticket state");
+            inner = guard;
+        }
+    }
 }
 
 /// Worker-side handle to a pending ticket: fulfills it exactly once, and
@@ -345,9 +487,37 @@ impl Ticket {
         self.state.peek()
     }
 
+    /// Bounded wait: block until the request resolves or `timeout`
+    /// elapses. Seals the request's still-open batching window first (like
+    /// `wait`). `Some` clones the result, leaving it claimable by a later
+    /// `wait`/`try_wait`; `None` means the request is still in flight —
+    /// the ticket stays live and can be waited again.
+    pub fn wait_timeout(
+        &mut self,
+        timeout: Duration,
+    ) -> Option<std::result::Result<InferResult, ServeError>> {
+        self.flush_window();
+        let deadline = Instant::now().checked_add(timeout)?;
+        self.state.wait_until(deadline)
+    }
+
     fn flush_window(&mut self) {
         if let Some(w) = self.window.take() {
             w.flush();
+        }
+    }
+}
+
+impl Drop for Ticket {
+    /// Dropping an unwaited ticket cancels its request if that request is
+    /// still riding an open batching window: the request is withdrawn
+    /// before the window seals, so abandoned work is never simulated.
+    /// (A sealed or dispatched request rides along; its result is simply
+    /// discarded.) `wait`/`try_wait`/`wait_timeout` take the window handle
+    /// first, so a waited ticket never cancels.
+    fn drop(&mut self) {
+        if let Some(w) = self.window.take() {
+            w.cancel(self.id);
         }
     }
 }
@@ -369,16 +539,20 @@ struct WindowRequest {
     block: Arc<SparseBlock>,
     xs: Vec<Vec<f32>>,
     done: TicketCompleter,
+    /// Shed (as `DeadlineExceeded`) at worker pickup once passed.
+    deadline: Option<Instant>,
+    /// Enqueue timestamp, for queue-span latency attribution.
+    enqueued_at: Instant,
 }
 
 /// Shared handle to an open window: the session and every member ticket
-/// hold one, and whoever seals first dispatches. The queue sender is held
-/// weakly so stray tickets can never keep the worker pool alive past the
+/// hold one, and whoever seals first dispatches. The queue is held weakly
+/// so stray tickets can never keep the worker pool alive past the
 /// coordinator's drop.
 #[derive(Clone)]
 struct WindowHandle {
     cell: Arc<Mutex<WindowCell>>,
-    tx: Weak<SyncSender<Job>>,
+    tx: Weak<JobQueue>,
 }
 
 impl WindowHandle {
@@ -397,17 +571,39 @@ impl WindowHandle {
                 requests: std::mem::take(&mut cell.requests),
             }
         };
-        let Some(tx) = self.tx.upgrade() else {
-            for r in job.requests {
-                r.done.fulfill(Err(ServeError::QueueClosed));
-            }
-            return;
-        };
-        if let Err(SendError(sent)) = tx.send(Job::Window(job)) {
-            if let Job::Window(w) = sent {
-                for r in w.requests {
-                    r.done.fulfill(Err(ServeError::QueueClosed));
+        match self.tx.upgrade() {
+            Some(queue) => {
+                if let Err(job) = queue.send(Job::Window(job)) {
+                    resolve_queue_closed(job);
                 }
+            }
+            None => resolve_queue_closed(Job::Window(job)),
+        }
+    }
+
+    /// Withdraw request `id` if the window has not sealed yet (the
+    /// cancellation path of a dropped unwaited [`Ticket`]). A sealed
+    /// window is immutable: the request rides along and its result is
+    /// discarded. Window contents stay a pure function of the session's
+    /// enqueue/cancel sequence.
+    fn cancel(&self, id: u64) {
+        let mut cell = self.cell.lock().expect("window cell");
+        if !cell.sealed {
+            // The withdrawn completer resolves its (otherwise
+            // unobservable) ticket state on drop.
+            cell.requests.retain(|r| r.id != id);
+        }
+    }
+}
+
+/// Resolve every ticket aboard `job` to [`ServeError::QueueClosed`]
+/// (dispatch against a closed queue).
+fn resolve_queue_closed(job: Job) {
+    match job {
+        Job::Single(j) => j.done.fulfill(Err(ServeError::QueueClosed)),
+        Job::Window(w) => {
+            for r in w.requests {
+                r.done.fulfill(Err(ServeError::QueueClosed));
             }
         }
     }
@@ -467,34 +663,85 @@ impl SessionCore {
         id: u64,
         block: Arc<SparseBlock>,
         xs: Vec<Vec<f32>>,
+        deadline: Option<Instant>,
     ) -> Ticket {
         let state = TicketState::new();
         let done = TicketCompleter { state: Arc::clone(&state) };
         let block_name = block.name.clone();
+        let enqueued_at = Instant::now();
         let route = coord.bundles.route(block.mask_fingerprint());
         let window = match (route, coord.sender()) {
             (_, None) => {
                 done.fulfill(Err(ServeError::QueueClosed));
                 None
             }
-            (None, Some(tx)) => {
-                if let Err(SendError(sent)) =
-                    tx.send(Job::Single(SingleJob { id, block, xs, done }))
-                {
-                    if let Job::Single(j) = sent {
-                        j.done.fulfill(Err(ServeError::QueueClosed));
-                    }
+            (None, Some(queue)) => {
+                let job =
+                    Job::Single(SingleJob { id, block, xs, done, deadline, enqueued_at });
+                if let Err(job) = queue.send(job) {
+                    resolve_queue_closed(job);
                 }
                 None
             }
-            (Some((bundle, member)), Some(tx)) => Some(self.window_enqueue(
-                &tx,
+            (Some((bundle, member)), Some(queue)) => Some(self.window_enqueue(
+                &queue,
                 &coord.batching,
                 bundle,
-                WindowRequest { id, member, block, xs, done },
+                WindowRequest { id, member, block, xs, done, deadline, enqueued_at },
             )),
         };
         Ticket { id, block_name, state, window }
+    }
+
+    /// Shedding admission for `try_enqueue`: a request for a registered
+    /// bundle member always joins its batching window (a window occupies
+    /// one queue slot for the whole batch, so members are the cheapest
+    /// traffic to admit — "non-bundle singles are shed first"); a solo
+    /// request is shed with [`ServeError::Overloaded`] when the queue
+    /// occupancy is at/above the watermark or the bounded queue is full.
+    fn try_enqueue(
+        &mut self,
+        coord: &Coordinator,
+        id: u64,
+        block: Arc<SparseBlock>,
+        xs: Vec<Vec<f32>>,
+        deadline: Option<Instant>,
+    ) -> std::result::Result<Ticket, ServeError> {
+        let Some(queue) = coord.sender() else {
+            return Err(ServeError::QueueClosed);
+        };
+        let enqueued_at = Instant::now();
+        let route = coord.bundles.route(block.mask_fingerprint());
+        if let Some((bundle, member)) = route {
+            let state = TicketState::new();
+            let done = TicketCompleter { state: Arc::clone(&state) };
+            let block_name = block.name.clone();
+            let window = self.window_enqueue(
+                &queue,
+                &coord.batching,
+                bundle,
+                WindowRequest { id, member, block, xs, done, deadline, enqueued_at },
+            );
+            return Ok(Ticket { id, block_name, state, window: Some(window) });
+        }
+        if coord.shed_watermark > 0 && queue.occupancy() >= coord.shed_watermark {
+            coord.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(ServeError::Overloaded);
+        }
+        let state = TicketState::new();
+        let done = TicketCompleter { state: Arc::clone(&state) };
+        let block_name = block.name.clone();
+        match queue.try_send(Job::Single(SingleJob { id, block, xs, done, deadline, enqueued_at }))
+        {
+            Ok(()) => Ok(Ticket { id, block_name, state, window: None }),
+            // The rejected job drops here: its completer resolves the
+            // (never-issued) ticket state, which dies with it.
+            Err(TrySendError::Full(_)) => {
+                coord.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                Err(ServeError::Overloaded)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(ServeError::QueueClosed),
+        }
     }
 
     /// Append a member request to its bundle's open window (creating one
@@ -505,7 +752,7 @@ impl SessionCore {
     /// late oversized rider.
     fn window_enqueue(
         &mut self,
-        tx: &Arc<SyncSender<Job>>,
+        tx: &Arc<JobQueue>,
         batching: &BatchOptions,
         bundle: Arc<FusedBundle>,
         request: WindowRequest,
@@ -591,16 +838,86 @@ impl ServeSession<'_> {
     /// the module docs) — at the latest when its ticket is waited on or
     /// the session flushes, drains or drops.
     pub fn enqueue(&mut self, block: Arc<SparseBlock>, xs: Vec<Vec<f32>>) -> Ticket {
+        self.enqueue_opt(block, xs, None)
+    }
+
+    /// Like [`ServeSession::enqueue`], with a latency budget: if `budget`
+    /// elapses before a worker picks the request up, it is shed unserved
+    /// and its ticket resolves [`ServeError::DeadlineExceeded`]. A request
+    /// already being served is never interrupted — the deadline bounds
+    /// queue residency (including time riding an open batching window),
+    /// not service. A budget so large the deadline overflows the clock is
+    /// treated as no deadline.
+    pub fn enqueue_with_deadline(
+        &mut self,
+        block: Arc<SparseBlock>,
+        xs: Vec<Vec<f32>>,
+        budget: Duration,
+    ) -> Ticket {
+        self.enqueue_opt(block, xs, Instant::now().checked_add(budget))
+    }
+
+    /// Non-blocking enqueue (admission control): sheds the request with
+    /// [`ServeError::Overloaded`] — instead of blocking like `enqueue` —
+    /// when the job queue is full or its occupancy is at/above
+    /// `[coordinator] shed_watermark` (`0` disables the watermark).
+    /// Requests for registered bundle members are always admitted into
+    /// their batching window: a window rides one queue slot for the whole
+    /// batch, so solo singles are shed first. A shed request consumes no
+    /// ticket id — window formation stays a pure function of the
+    /// *admitted* enqueue sequence.
+    pub fn try_enqueue(
+        &mut self,
+        block: Arc<SparseBlock>,
+        xs: Vec<Vec<f32>>,
+    ) -> std::result::Result<Ticket, ServeError> {
+        self.try_enqueue_opt(block, xs, None)
+    }
+
+    /// [`ServeSession::try_enqueue`] with a latency budget (see
+    /// [`ServeSession::enqueue_with_deadline`]).
+    pub fn try_enqueue_with_deadline(
+        &mut self,
+        block: Arc<SparseBlock>,
+        xs: Vec<Vec<f32>>,
+        budget: Duration,
+    ) -> std::result::Result<Ticket, ServeError> {
+        self.try_enqueue_opt(block, xs, Instant::now().checked_add(budget))
+    }
+
+    fn enqueue_opt(
+        &mut self,
+        block: Arc<SparseBlock>,
+        xs: Vec<Vec<f32>>,
+        deadline: Option<Instant>,
+    ) -> Ticket {
         let id = self.core.next_id;
         self.core.next_id += 1;
-        let ticket = self.core.enqueue(self.coord, id, block, xs);
+        let ticket = self.core.enqueue(self.coord, id, block, xs, deadline);
+        self.track(&ticket);
+        ticket
+    }
+
+    fn try_enqueue_opt(
+        &mut self,
+        block: Arc<SparseBlock>,
+        xs: Vec<Vec<f32>>,
+        deadline: Option<Instant>,
+    ) -> std::result::Result<Ticket, ServeError> {
+        let id = self.core.next_id;
+        let ticket = self.core.try_enqueue(self.coord, id, block, xs, deadline)?;
+        self.core.next_id += 1;
+        self.track(&ticket);
+        Ok(ticket)
+    }
+
+    fn track(&mut self, ticket: &Ticket) {
         if self.issued.len() == self.issued.capacity() {
             // Amortized prune before the Vec would grow: drop bookkeeping
             // for tickets that have resolved and been discarded.
             self.issued.retain(|w| w.strong_count() > 0);
         }
         self.issued.push(Arc::downgrade(&ticket.state));
-        ticket
     }
 
     /// Seal and dispatch every open batching window without waiting.
@@ -649,11 +966,13 @@ enum EntryState {
     Empty,
     Building,
     Ready(Arc<ServingMapping>),
-    /// The build failed. The entry is already detached from the cache map
-    /// (so new requesters get a fresh entry and their own retry); the
-    /// sticky error lets queued waiters fail fast instead of serially
-    /// re-running a deterministically failing mapping.
-    Failed(String),
+    /// The build failed; the sticky error lets queued waiters fail fast
+    /// instead of serially re-running a deterministically failing mapping.
+    /// With `failure_ttl = 0` the entry is already detached from the cache
+    /// map (new requesters get a fresh entry and their own retry); under a
+    /// TTL it stays resident and `retry_in` counts down the remaining
+    /// fast-fails — the request that finds it at `1` rebuilds in place.
+    Failed { reason: String, retry_in: u64 },
 }
 
 struct CacheEntry {
@@ -686,14 +1005,24 @@ impl BuildGuard<'_> {
         self.armed = false;
     }
 
-    /// Mark the entry failed with `reason`, wake waiters, and detach the
-    /// entry (map and tick index) from the cache.
+    /// Mark the entry failed with `reason` and wake waiters. Under a
+    /// failure TTL the entry stays resident (the next requests fail fast
+    /// while `retry_in` counts down, then one rebuilds in place; LRU can
+    /// evict it meanwhile); with TTL `0` the failure is sticky and the
+    /// entry detaches from the cache (map and tick index).
     fn fail(&mut self, reason: &str) {
         self.armed = false;
+        let ttl = self.cache.failure_ttl;
         {
             let mut state = self.entry.state.lock().expect("cache entry");
-            *state = EntryState::Failed(reason.to_string());
+            *state = EntryState::Failed {
+                reason: reason.to_string(),
+                retry_in: if ttl == 0 { u64::MAX } else { ttl },
+            };
             self.entry.ready.notify_all();
+        }
+        if ttl > 0 {
+            return;
         }
         // Entry lock released before the map lock — the same order as
         // every other path (the map lock is never held while waiting
@@ -740,14 +1069,20 @@ struct MappingCache {
     tick: AtomicU64,
     /// `0` = unbounded.
     capacity: usize,
+    /// Retry-after budget for failed builds (`[coordinator] failure_ttl`):
+    /// a `Failed` entry fast-fails the next `failure_ttl - 1` requests for
+    /// its key, then the next one rebuilds in place. `0` = sticky forever
+    /// (failures detach; only a fresh requester retries).
+    failure_ttl: u64,
 }
 
 impl MappingCache {
-    fn new(capacity: usize) -> Self {
+    fn new(capacity: usize, failure_ttl: u64) -> Self {
         MappingCache {
             inner: Mutex::new(CacheInner { map: HashMap::new(), by_tick: BTreeMap::new() }),
             tick: AtomicU64::new(0),
             capacity,
+            failure_ttl,
         }
     }
 
@@ -808,7 +1143,7 @@ impl MappingCache {
 
         let mut state = entry.state.lock().expect("cache entry");
         loop {
-            match &*state {
+            match &mut *state {
                 EntryState::Ready(m) => {
                     metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
                     return Ok((Arc::clone(m), false));
@@ -817,10 +1152,16 @@ impl MappingCache {
                     state = entry.ready.wait(state).expect("cache entry");
                 }
                 // The builder failed; the mapping is deterministic, so
-                // re-running it here would pay the whole attempt lattice
-                // again for the same error — fail fast with the builder's
-                // reason instead.
-                EntryState::Failed(reason) => {
+                // re-running it immediately would pay the whole attempt
+                // lattice again for the same error — fail fast with the
+                // builder's reason while the retry budget lasts. The
+                // request that finds the budget at 1 falls through to
+                // `Building` and rebuilds in place (failure TTL expired).
+                EntryState::Failed { reason, retry_in } => {
+                    if *retry_in <= 1 {
+                        break;
+                    }
+                    *retry_in -= 1;
                     return Err(Error::Runtime(format!(
                         "mapping failed in a concurrent request: {reason}"
                     )));
@@ -860,10 +1201,11 @@ impl MappingCache {
 
 /// Evict the least-recently-used *evictable* entry by walking the tick
 /// index in use order — O(victim position in the index), not a full-map
-/// scan. Only `Ready` entries are victims: a `Building` entry is the
-/// single-flight rendezvous for concurrent requesters, and an `Empty`
-/// entry belongs to a requester that has looked it up but not yet locked
-/// it — evicting either would detach an in-flight mapping from the cache
+/// scan. Only `Ready` entries (and TTL-resident `Failed` ones, which hold
+/// no mapping) are victims: a `Building` entry is the single-flight
+/// rendezvous for concurrent requesters, and an `Empty` entry belongs to
+/// a requester that has looked it up but not yet locked it — evicting
+/// either would detach an in-flight mapping from the cache
 /// (the result would be built and then silently dropped, and a concurrent
 /// same-key request would map a second time). Non-victims stay in the
 /// index and are skipped. At capacity the map may therefore transiently
@@ -877,7 +1219,11 @@ fn evict_lru(inner: &mut CacheInner) -> bool {
         match e.state.try_lock() {
             // The state mutex is only ever held briefly (never across a
             // mapping), so a contended entry is simply skipped this round.
-            Ok(state) if matches!(&*state, EntryState::Ready(_)) => Some((tick, key.clone())),
+            Ok(state)
+                if matches!(&*state, EntryState::Ready(_) | EntryState::Failed { .. }) =>
+            {
+                Some((tick, key.clone()))
+            }
             _ => None,
         }
     });
@@ -904,12 +1250,126 @@ struct SingleJob {
     block: Arc<SparseBlock>,
     xs: Vec<Vec<f32>>,
     done: TicketCompleter,
+    /// Shed (as `DeadlineExceeded`) at worker pickup once passed.
+    deadline: Option<Instant>,
+    /// Enqueue timestamp, for queue-span latency attribution.
+    enqueued_at: Instant,
 }
 
 struct WindowJob {
     bundle: Arc<FusedBundle>,
     /// Member requests in window (enqueue) order.
     requests: Vec<WindowRequest>,
+}
+
+/// Ticket count aboard a job.
+fn job_width(job: &Job) -> usize {
+    match job {
+        Job::Single(_) => 1,
+        Job::Window(w) => w.requests.len(),
+    }
+}
+
+/// Resolve every ticket aboard `job` to [`ServeError::WorkerGone`] (the
+/// pool died with the job still queued).
+fn resolve_worker_gone(job: Job) {
+    match job {
+        Job::Single(j) => j.done.fulfill(Err(ServeError::WorkerGone)),
+        Job::Window(w) => {
+            for r in w.requests {
+                r.done.fulfill(Err(ServeError::WorkerGone));
+            }
+        }
+    }
+}
+
+/// The bounded job queue plus an occupancy gauge for admission control.
+/// The gauge counts enqueued-but-not-picked-up jobs: it is incremented
+/// *before* the underlying send (and rolled back on failure) and
+/// decremented by a worker at pickup — so it can transiently over-count
+/// by the number of in-flight senders but never underflows (a wrap would
+/// make the shed watermark reject everything).
+struct JobQueue {
+    tx: SyncSender<Job>,
+    len: Arc<AtomicUsize>,
+}
+
+impl JobQueue {
+    /// Blocking send (backpressure). On a closed queue the job is handed
+    /// back so the caller can resolve its tickets.
+    fn send(&self, job: Job) -> std::result::Result<(), Job> {
+        self.len.fetch_add(1, Ordering::Relaxed);
+        match self.tx.send(job) {
+            Ok(()) => Ok(()),
+            Err(SendError(job)) => {
+                self.len.fetch_sub(1, Ordering::Relaxed);
+                Err(job)
+            }
+        }
+    }
+
+    /// Non-blocking send, for admission control.
+    fn try_send(&self, job: Job) -> std::result::Result<(), TrySendError<Job>> {
+        self.len.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(job) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.len.fetch_sub(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Jobs currently queued (approximate under concurrent traffic, exact
+    /// when quiescent).
+    fn occupancy(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+}
+
+/// Panic counts per job identity — a solo block's mask fingerprint or a
+/// bundle's combined fingerprint. A job that keeps killing its worker is
+/// quarantined (resolved [`ServeError::Poisoned`], never retried) once
+/// its count reaches `[coordinator] poison_threshold`, so one poison
+/// request cannot burn the whole restart budget.
+struct PoisonRegistry {
+    counts: Mutex<HashMap<u64, u32>>,
+}
+
+impl PoisonRegistry {
+    fn new() -> Self {
+        PoisonRegistry { counts: Mutex::new(HashMap::new()) }
+    }
+
+    /// Record one panic against `identity`; returns the new count. The
+    /// lock is poison-recovered: panic bookkeeping must keep working on
+    /// the very code paths panics unwind through.
+    fn record(&self, identity: u64) -> u32 {
+        let mut counts = self.counts.lock().unwrap_or_else(|p| p.into_inner());
+        let c = counts.entry(identity).or_insert(0);
+        *c += 1;
+        *c
+    }
+
+    fn count(&self, identity: u64) -> u32 {
+        let counts = self.counts.lock().unwrap_or_else(|p| p.into_inner());
+        counts.get(&identity).copied().unwrap_or(0)
+    }
+}
+
+/// Everything a worker thread needs, bundled into one cloneable value so
+/// the supervisor can respawn workers after the constructor returned.
+#[derive(Clone)]
+struct WorkerCtx {
+    rx: Arc<Mutex<Receiver<Job>>>,
+    queue_len: Arc<AtomicUsize>,
+    cache: Arc<MappingCache>,
+    bundles: Arc<BundleRoutes>,
+    metrics: Arc<Metrics>,
+    opts: MapperOptions,
+    cgra: StreamingCgra,
+    poison: Arc<PoisonRegistry>,
+    poison_threshold: u32,
 }
 
 /// Legacy `submit`/`collect` shim state: an internal session core plus the
@@ -921,26 +1381,34 @@ struct LegacyState {
 
 /// The streaming coordinator.
 pub struct Coordinator {
-    /// The only strong reference to the job-queue sender: dropping it (in
-    /// `Drop`) closes the queue. Sessions and tickets hold weak refs only,
-    /// so stray handles can never keep the pool alive.
-    tx: Option<Arc<SyncSender<Job>>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    /// The only strong reference to the job queue: taking it (in
+    /// [`Coordinator::shutdown`], also run by drop) closes the queue.
+    /// Sessions and tickets hold weak refs only, so stray handles can
+    /// never keep the pool alive. Behind a mutex so shutdown works
+    /// through `&self`.
+    tx: Mutex<Option<Arc<JobQueue>>>,
+    /// The supervision thread that owns the worker pool (see
+    /// [`supervisor_loop`]); joined on shutdown.
+    supervisor: Mutex<Option<std::thread::JoinHandle<()>>>,
     pub metrics: Arc<Metrics>,
     bundles: Arc<BundleRoutes>,
     fusion: FusionOptions,
     batching: BatchOptions,
     cgra: StreamingCgra,
+    shed_watermark: usize,
     legacy: Mutex<LegacyState>,
 }
 
 impl Coordinator {
     /// Spawn `cfg.workers` worker threads with a queue of depth
-    /// `cfg.queue_depth` (a batching window occupies one slot).
+    /// `cfg.queue_depth` (a batching window occupies one slot), plus the
+    /// supervisor thread that keeps the pool at strength.
     pub fn new(cfg: &SparsemapConfig) -> Self {
         let (tx, rx) = sync_channel::<Job>(cfg.queue_depth);
+        let queue_len = Arc::new(AtomicUsize::new(0));
+        let queue = Arc::new(JobQueue { tx, len: Arc::clone(&queue_len) });
         let rx = Arc::new(Mutex::new(rx));
-        let cache = Arc::new(MappingCache::new(cfg.cache_capacity));
+        let cache = Arc::new(MappingCache::new(cfg.cache_capacity, cfg.failure_ttl));
         let bundles = Arc::new(BundleRoutes::new());
         let metrics = Arc::new(Metrics::default());
         let mut opts = MapperOptions::from_config(cfg);
@@ -957,29 +1425,38 @@ impl Coordinator {
         let batching = BatchOptions::from_config(cfg);
         let cgra = cfg.cgra.clone();
 
-        let workers = (0..cfg.workers)
+        let ctx = WorkerCtx {
+            rx,
+            queue_len,
+            cache,
+            bundles: Arc::clone(&bundles),
+            metrics: Arc::clone(&metrics),
+            opts,
+            cgra: cgra.clone(),
+            poison: Arc::new(PoisonRegistry::new()),
+            poison_threshold: cfg.poison_threshold as u32,
+        };
+        let (exit_tx, exit_rx) = channel();
+        let handles: Vec<Option<std::thread::JoinHandle<()>>> = (0..cfg.workers)
             .map(|wid| {
-                let rx = Arc::clone(&rx);
-                let cache = Arc::clone(&cache);
-                let bundles = Arc::clone(&bundles);
-                let metrics = Arc::clone(&metrics);
-                let opts = opts.clone();
-                let cgra = cgra.clone();
-                std::thread::Builder::new()
-                    .name(format!("sparsemap-worker-{wid}"))
-                    .spawn(move || worker_loop(rx, cache, bundles, metrics, opts, cgra))
-                    .expect("spawn worker")
+                Some(spawn_worker(wid, ctx.clone(), exit_tx.clone()).expect("spawn worker"))
             })
             .collect();
+        let restart_budget = cfg.restart_budget;
+        let supervisor = std::thread::Builder::new()
+            .name("sparsemap-supervisor".into())
+            .spawn(move || supervisor_loop(exit_rx, exit_tx, handles, ctx, restart_budget))
+            .expect("spawn supervisor");
 
         Coordinator {
-            tx: Some(Arc::new(tx)),
-            workers,
+            tx: Mutex::new(Some(queue)),
+            supervisor: Mutex::new(Some(supervisor)),
             metrics,
             bundles,
             fusion,
             batching,
             cgra,
+            shed_watermark: cfg.shed_watermark,
             legacy: Mutex::new(LegacyState { core: SessionCore::new(), fifo: VecDeque::new() }),
         }
     }
@@ -991,8 +1468,25 @@ impl Coordinator {
         ServeSession { coord: self, core: SessionCore::new(), issued: Vec::new() }
     }
 
-    fn sender(&self) -> Option<Arc<SyncSender<Job>>> {
-        self.tx.clone()
+    fn sender(&self) -> Option<Arc<JobQueue>> {
+        self.tx.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    /// Tear the worker pool down: seal any open legacy batching windows,
+    /// close the job queue, and join the supervisor — which joins the
+    /// workers and resolves anything still queued (`WorkerGone`).
+    /// Idempotent, and also run by drop. Tickets issued before shutdown
+    /// stay valid: every one of them resolves, and enqueues after
+    /// shutdown resolve [`ServeError::QueueClosed`] immediately.
+    pub fn shutdown(&self) {
+        if let Ok(mut legacy) = self.legacy.lock() {
+            legacy.core.flush_all();
+        }
+        self.tx.lock().unwrap_or_else(|p| p.into_inner()).take();
+        let sup = self.supervisor.lock().unwrap_or_else(|p| p.into_inner()).take();
+        if let Some(sup) = sup {
+            let _ = sup.join();
+        }
     }
 
     /// Register a fused bundle: from now on a request for *any* member
@@ -1026,7 +1520,7 @@ impl Coordinator {
     )]
     pub fn submit(&self, req: InferRequest) -> Result<()> {
         let mut legacy = self.legacy.lock().expect("legacy serve state");
-        let ticket = legacy.core.enqueue(self, req.id, req.block, req.xs);
+        let ticket = legacy.core.enqueue(self, req.id, req.block, req.xs, None);
         // Preserve the old contract: a queue that is already closed at
         // submission time surfaces here, not only at collect.
         if matches!(ticket.state.peek(), Some(Err(ServeError::QueueClosed))) {
@@ -1062,75 +1556,213 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        // Dispatch legacy windows still open (their tickets hold weak
-        // senders only), then close the queue; workers drain and exit.
+        self.shutdown();
         if let Ok(mut legacy) = self.legacy.lock() {
-            legacy.core.flush_all();
             legacy.fifo.clear();
-        }
-        self.tx.take();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
         }
     }
 }
 
 // ---------------------------------------------------------------------------
-// Workers
+// Workers and supervision
 
-fn worker_loop(
-    rx: Arc<Mutex<Receiver<Job>>>,
-    cache: Arc<MappingCache>,
-    bundles: Arc<BundleRoutes>,
-    metrics: Arc<Metrics>,
-    opts: MapperOptions,
-    cgra: StreamingCgra,
+/// Drop guard a worker thread holds for its whole life: tells the
+/// supervisor the worker exited and whether it exited by panic. Running
+/// in `Drop`, the notification survives any unwind path out of the
+/// worker.
+struct ExitGuard {
+    id: usize,
+    tx: Sender<(usize, bool)>,
+}
+
+impl Drop for ExitGuard {
+    fn drop(&mut self) {
+        let _ = self.tx.send((self.id, std::thread::panicking()));
+    }
+}
+
+fn spawn_worker(
+    wid: usize,
+    ctx: WorkerCtx,
+    exit_tx: Sender<(usize, bool)>,
+) -> std::io::Result<std::thread::JoinHandle<()>> {
+    std::thread::Builder::new()
+        .name(format!("sparsemap-worker-{wid}"))
+        .spawn(move || {
+            let _exit = ExitGuard { id: wid, tx: exit_tx };
+            worker_loop(&ctx);
+        })
+}
+
+/// Supervision loop: collect worker exits, respawn panicked workers while
+/// the restart budget lasts (the pool never shrinks silently — every
+/// shrink logs), and once the last worker is gone keep draining the
+/// queue, resolving every stranded ticket, until the coordinator closes
+/// it. The drain is what makes "every enqueued ticket resolves" hold even
+/// when persistent faults burn the whole budget mid-traffic.
+fn supervisor_loop(
+    exit_rx: Receiver<(usize, bool)>,
+    exit_tx: Sender<(usize, bool)>,
+    mut handles: Vec<Option<std::thread::JoinHandle<()>>>,
+    ctx: WorkerCtx,
+    restart_budget: usize,
 ) {
+    let mut live = handles.len();
+    let mut budget = restart_budget;
+    while live > 0 {
+        // Cannot disconnect while this thread holds `exit_tx`; defensive.
+        let Ok((wid, panicked)) = exit_rx.recv() else { break };
+        if let Some(h) = handles[wid].take() {
+            let _ = h.join();
+        }
+        if !panicked {
+            // Clean exit: the queue closed and the worker drained out.
+            live -= 1;
+            continue;
+        }
+        // Per-job catch_unwind makes a worker-killing panic rare (only a
+        // fault outside the guarded region reaches the thread boundary),
+        // but the pool must survive it regardless.
+        if budget == 0 {
+            live -= 1;
+            crate::log_warn!(
+                "worker {wid} died with the restart budget exhausted; pool shrinks to \
+                 {live} workers"
+            );
+            continue;
+        }
+        budget -= 1;
+        match spawn_worker(wid, ctx.clone(), exit_tx.clone()) {
+            Ok(h) => {
+                ctx.metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                crate::log_warn!(
+                    "worker {wid} died by panic; respawned ({budget} restarts left)"
+                );
+                handles[wid] = Some(h);
+            }
+            Err(e) => {
+                live -= 1;
+                crate::log_error!("respawning worker {wid} failed ({e}); pool shrinks");
+            }
+        }
+    }
+    // Whole pool gone — restart budget exhausted under persistent faults,
+    // or plain shutdown. Resolve everything queued (and everything still
+    // arriving from senders that raced the pool's death) until the
+    // coordinator closes the queue, so no ticket ever hangs.
     loop {
         let job = {
-            let guard = rx.lock().expect("queue lock");
+            let guard = ctx.rx.lock().unwrap_or_else(|p| p.into_inner());
             guard.recv()
         };
         match job {
-            Ok(Job::Single(job)) => serve_single(job, &cache, &metrics, &opts, &cgra),
-            Ok(Job::Window(job)) => {
-                serve_window(job, &cache, &bundles, &metrics, &opts, &cgra)
+            Ok(job) => {
+                ctx.queue_len.fetch_sub(1, Ordering::Relaxed);
+                ctx.metrics.failures.fetch_add(job_width(&job) as u64, Ordering::Relaxed);
+                resolve_worker_gone(job);
             }
             Err(_) => return,
         }
     }
 }
 
-/// Serve one solo request end to end and fulfill its ticket.
-fn serve_single(
-    job: SingleJob,
-    cache: &MappingCache,
-    metrics: &Metrics,
-    opts: &MapperOptions,
-    cgra: &StreamingCgra,
-) {
-    let started = Instant::now();
-    metrics.jobs.fetch_add(1, Ordering::Relaxed);
-    let SingleJob { id, block, xs, done } = job;
-    match serve_solo(&block, &xs, cache, metrics, opts, cgra) {
-        Ok((outputs, cycles, ii, fresh)) => {
-            metrics.total_cycles.fetch_add(cycles, Ordering::Relaxed);
-            let latency_ns = started.elapsed().as_nanos() as u64;
-            metrics.total_latency_ns.fetch_add(latency_ns, Ordering::Relaxed);
-            done.fulfill(Ok(InferResult {
-                id,
-                block_name: block.name.clone(),
-                outputs,
-                cycles,
-                ii,
-                mapped_fresh: fresh,
-                fused_members: 1,
-                latency_ns,
-            }));
+fn worker_loop(ctx: &WorkerCtx) {
+    loop {
+        let job = {
+            // Poison-recover: a panicking peer must not wedge the whole
+            // pool on this lock — the receiver behind it is just data.
+            let guard = ctx.rx.lock().unwrap_or_else(|p| p.into_inner());
+            guard.recv()
+        };
+        match job {
+            Ok(job) => {
+                ctx.queue_len.fetch_sub(1, Ordering::Relaxed);
+                // Hard-death site: a panic here is OUTSIDE the per-job
+                // catch_unwind, so it kills the worker thread itself and
+                // exercises supervisor respawn. The job's completers
+                // resolve `WorkerGone` as the unwind drops them.
+                crate::fail_point!("coordinator::worker_hard");
+                match job {
+                    Job::Single(job) => execute_single(job, ctx),
+                    Job::Window(job) => execute_window(job, ctx),
+                }
+            }
+            Err(_) => return,
         }
-        Err(e) => {
-            metrics.failures.fetch_add(1, Ordering::Relaxed);
-            done.fulfill(Err(e));
+    }
+}
+
+/// Serve one solo request end to end and fulfill its ticket: deadline
+/// check at pickup, then mapping + simulation under a per-job
+/// `catch_unwind`, retried in place until the job identity's poison
+/// quarantine trips.
+fn execute_single(job: SingleJob, ctx: &WorkerCtx) {
+    let picked = Instant::now();
+    ctx.metrics.jobs.fetch_add(1, Ordering::Relaxed);
+    let SingleJob { id, block, xs, done, deadline, enqueued_at } = job;
+    if deadline.is_some_and(|d| picked >= d) {
+        ctx.metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+        done.fulfill(Err(ServeError::DeadlineExceeded));
+        return;
+    }
+    let identity = block.mask_fingerprint();
+    let queue_ns = picked.saturating_duration_since(enqueued_at).as_nanos() as u64;
+    loop {
+        if ctx.poison.count(identity) >= ctx.poison_threshold {
+            ctx.metrics.poisoned.fetch_add(1, Ordering::Relaxed);
+            ctx.metrics.failures.fetch_add(1, Ordering::Relaxed);
+            done.fulfill(Err(ServeError::Poisoned));
+            return;
+        }
+        // The closure borrows the payload and owns no completer: a panic
+        // unwinds out of it without resolving (or double-resolving) the
+        // ticket — fulfillment happens below, outside the guard.
+        let attempt = catch_unwind(AssertUnwindSafe(|| {
+            crate::fail_point!("coordinator::serve");
+            crate::fail_point!("coordinator::delay");
+            serve_solo(&block, &xs, ctx)
+        }));
+        match attempt {
+            Ok(Ok((outputs, cycles, ii, fresh))) => {
+                ctx.metrics.total_cycles.fetch_add(cycles, Ordering::Relaxed);
+                let service_ns = picked.elapsed().as_nanos() as u64;
+                let latency_ns = queue_ns + service_ns;
+                ctx.metrics.total_latency_ns.fetch_add(latency_ns, Ordering::Relaxed);
+                ctx.metrics.observe_latency(queue_ns, service_ns);
+                done.fulfill(Ok(InferResult {
+                    id,
+                    block_name: block.name.clone(),
+                    outputs,
+                    cycles,
+                    ii,
+                    mapped_fresh: fresh,
+                    fused_members: 1,
+                    latency_ns,
+                    queue_ns,
+                    service_ns,
+                }));
+                return;
+            }
+            Ok(Err(e)) => {
+                ctx.metrics.failures.fetch_add(1, Ordering::Relaxed);
+                done.fulfill(Err(e));
+                return;
+            }
+            Err(_) => {
+                // The worker survived the panic (caught in place): count
+                // a restart, record the poison strike, retry the job.
+                ctx.metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                let strikes = ctx.poison.record(identity);
+                crate::log_warn!(
+                    "serving {} panicked (strike {strikes}); {}",
+                    block.name,
+                    if strikes >= ctx.poison_threshold {
+                        "quarantining"
+                    } else {
+                        "retrying in place"
+                    }
+                );
+            }
         }
     }
 }
@@ -1141,73 +1773,242 @@ fn serve_single(
 fn serve_solo(
     block: &Arc<SparseBlock>,
     xs: &[Vec<f32>],
-    cache: &MappingCache,
-    metrics: &Metrics,
-    opts: &MapperOptions,
-    cgra: &StreamingCgra,
+    ctx: &WorkerCtx,
 ) -> std::result::Result<(Vec<Vec<f32>>, u64, usize, bool), ServeError> {
     let fp = block.mask_fingerprint();
     let key = format!("{}#{}x{}@{fp:016x}", block.name, block.c, block.k);
-    let (serving, fresh) = cache
-        .get_or_map(&key, metrics, || {
-            let outcome = map_unit(MapUnit::Single(block), cgra, opts)?;
+    let (serving, fresh) = ctx
+        .cache
+        .get_or_map(&key, &ctx.metrics, || {
+            crate::fail_point_error!("coordinator::map", |msg: String| Err(Error::Runtime(
+                msg
+            )));
+            let outcome = map_unit(MapUnit::Single(block), &ctx.cgra, &ctx.opts)?;
             Ok(ServingMapping { outcome, bundle: None })
         })
         .map_err(|e| ServeError::MappingFailed(e.to_string()))?;
-    let res = simulate(&serving.outcome.mapping, block, cgra, xs)
+    crate::fail_point_error!("coordinator::sim", |msg: String| Err(ServeError::Sim(msg)));
+    let res = simulate(&serving.outcome.mapping, block, &ctx.cgra, xs)
         .map_err(|e| ServeError::Sim(e.to_string()))?;
     Ok((res.outputs, res.cycles, serving.outcome.mapping.ii, fresh))
 }
 
-/// Serve one batching window: fetch (or build) the bundle's shared fused
-/// mapping, run ONE lockstep pass for the whole window, and split results
-/// back per request. An unmappable bundle deregisters loudly and its
-/// member requests fall back to solo serving.
-fn serve_window(
-    job: WindowJob,
-    cache: &MappingCache,
-    bundles: &BundleRoutes,
-    metrics: &Metrics,
-    opts: &MapperOptions,
-    cgra: &StreamingCgra,
-) {
-    let started = Instant::now();
-    match fused_serving(&job.bundle, cache, metrics, opts, cgra) {
-        Ok((serving, fresh)) => {
-            // One cache access served the whole window: count the other
-            // member requests as hits so `jobs == hits + misses` keeps
-            // holding for successful traffic.
-            metrics
-                .cache_hits
-                .fetch_add(job.requests.len() as u64 - 1, Ordering::Relaxed);
-            run_window(job.requests, &serving, fresh, started, metrics, cgra);
+/// Serve one batching window: shed expired members at pickup, then fetch
+/// the bundle's shared fused mapping and run ONE lockstep pass for the
+/// whole window, under the same `catch_unwind` + poison-quarantine
+/// discipline as solo serving (quarantine keyed by the bundle
+/// fingerprint). An unmappable bundle deregisters loudly and its live
+/// members fall back to solo serving.
+fn execute_window(job: WindowJob, ctx: &WorkerCtx) {
+    let picked = Instant::now();
+    let WindowJob { bundle, requests } = job;
+    let mut live = Vec::with_capacity(requests.len());
+    for r in requests {
+        if r.deadline.is_some_and(|d| picked >= d) {
+            ctx.metrics.jobs.fetch_add(1, Ordering::Relaxed);
+            ctx.metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+            r.done.fulfill(Err(ServeError::DeadlineExceeded));
+        } else {
+            live.push(r);
         }
-        // The planner admits bundles by the MII estimate, not bind
-        // feasibility, so a registered bundle can turn out unmappable.
-        // The mapper is deterministic — it would fail (and re-pay the
-        // whole attempt lattice) on every member window forever — so drop
-        // the registration and serve this window's and all future member
-        // traffic through the working solo path. Loudly: the silently-lost
-        // residency win would otherwise be undiagnosable (requests
-        // succeed, failures stays 0).
-        Err(e) => {
-            crate::log_warn!(
-                "bundle {} is unmappable ({e}); deregistering — its {} members fall \
-                 back to solo serving",
-                job.bundle.name,
-                job.bundle.len()
-            );
-            bundles.deregister(&job.bundle);
-            for r in job.requests {
-                serve_single(
-                    SingleJob { id: r.id, block: r.block, xs: r.xs, done: r.done },
-                    cache,
-                    metrics,
-                    opts,
-                    cgra,
+    }
+    if live.is_empty() {
+        return;
+    }
+    let identity = bundle.fingerprint();
+    let w = live.len() as u64;
+    loop {
+        if ctx.poison.count(identity) >= ctx.poison_threshold {
+            ctx.metrics.jobs.fetch_add(w, Ordering::Relaxed);
+            ctx.metrics.poisoned.fetch_add(w, Ordering::Relaxed);
+            ctx.metrics.failures.fetch_add(w, Ordering::Relaxed);
+            for r in live {
+                r.done.fulfill(Err(ServeError::Poisoned));
+            }
+            return;
+        }
+        let attempt = catch_unwind(AssertUnwindSafe(|| {
+            crate::fail_point!("coordinator::serve");
+            crate::fail_point!("coordinator::delay");
+            attempt_window(&bundle, &live, ctx)
+        }));
+        match attempt {
+            Ok(WindowAttempt::Served { segments, pass_cycles, ii, fresh, members }) => {
+                ctx.metrics.jobs.fetch_add(w, Ordering::Relaxed);
+                ctx.metrics.windows.fetch_add(1, Ordering::Relaxed);
+                // The window pays for the resident configuration ONCE —
+                // this is the fused double-count fix: W member requests
+                // never charge W whole-bundle passes.
+                ctx.metrics.total_cycles.fetch_add(pass_cycles, Ordering::Relaxed);
+                let service_ns = picked.elapsed().as_nanos() as u64;
+                for (ri, (r, seg)) in live.into_iter().zip(segments).enumerate() {
+                    let queue_ns =
+                        picked.saturating_duration_since(r.enqueued_at).as_nanos() as u64;
+                    let latency_ns = queue_ns + service_ns;
+                    ctx.metrics.total_latency_ns.fetch_add(latency_ns, Ordering::Relaxed);
+                    ctx.metrics.observe_latency(queue_ns, service_ns);
+                    r.done.fulfill(Ok(InferResult {
+                        id: r.id,
+                        block_name: r.block.name.clone(),
+                        outputs: seg.outputs,
+                        cycles: seg.cycles,
+                        ii,
+                        mapped_fresh: fresh && ri == 0,
+                        fused_members: members,
+                        latency_ns,
+                        queue_ns,
+                        service_ns,
+                    }));
+                }
+                return;
+            }
+            Ok(WindowAttempt::SimFailed(err)) => {
+                ctx.metrics.jobs.fetch_add(w, Ordering::Relaxed);
+                ctx.metrics.failures.fetch_add(w, Ordering::Relaxed);
+                for r in live {
+                    r.done.fulfill(Err(err.clone()));
+                }
+                return;
+            }
+            // The planner admits bundles by the MII estimate, not bind
+            // feasibility, so a registered bundle can turn out unmappable.
+            // The mapper is deterministic — it would fail (and re-pay the
+            // whole attempt lattice) on every member window forever — so
+            // drop the registration and serve this window's and all
+            // future member traffic through the working solo path.
+            // Loudly: the silently-lost residency win would otherwise be
+            // undiagnosable (requests succeed, failures stays 0).
+            Ok(WindowAttempt::Unmappable(e)) => {
+                crate::log_warn!(
+                    "bundle {} is unmappable ({e}); deregistering — its {} members fall \
+                     back to solo serving",
+                    bundle.name,
+                    bundle.len()
+                );
+                ctx.bundles.deregister(&bundle);
+                for r in live {
+                    execute_single(
+                        SingleJob {
+                            id: r.id,
+                            block: r.block,
+                            xs: r.xs,
+                            done: r.done,
+                            deadline: r.deadline,
+                            enqueued_at: r.enqueued_at,
+                        },
+                        ctx,
+                    );
+                }
+                return;
+            }
+            Err(_) => {
+                ctx.metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                let strikes = ctx.poison.record(identity);
+                crate::log_warn!(
+                    "window for bundle {} panicked (strike {strikes}); {}",
+                    bundle.name,
+                    if strikes >= ctx.poison_threshold {
+                        "quarantining"
+                    } else {
+                        "retrying in place"
+                    }
                 );
             }
         }
+    }
+}
+
+/// Outcome of one fused window attempt, computed inside the per-job
+/// unwind guard (borrowing the live requests) and consumed outside it —
+/// ticket fulfillment never happens under `catch_unwind`.
+enum WindowAttempt {
+    Served {
+        /// One simulated segment per live request, in window order.
+        segments: Vec<SegmentSim>,
+        pass_cycles: u64,
+        ii: usize,
+        fresh: bool,
+        members: usize,
+    },
+    /// The bundle's shared fused mapping failed to build: the caller
+    /// deregisters the bundle and falls back to solo serving.
+    Unmappable(Error),
+    /// The lockstep pass faulted: every member request fails.
+    SimFailed(ServeError),
+}
+
+/// Fetch (or build) the fused mapping and run the window's single
+/// lockstep pass. Borrows the requests — the caller keeps ownership (and
+/// the completers) outside the unwind guard.
+fn attempt_window(
+    bundle: &Arc<FusedBundle>,
+    requests: &[WindowRequest],
+    ctx: &WorkerCtx,
+) -> WindowAttempt {
+    let (serving, fresh) = match fused_serving(bundle, ctx) {
+        Ok(sf) => sf,
+        Err(e) => return WindowAttempt::Unmappable(e),
+    };
+    // One cache access served the whole window: count the other member
+    // requests as hits so `jobs == hits + misses` keeps holding for
+    // successful traffic.
+    ctx.metrics.cache_hits.fetch_add(requests.len() as u64 - 1, Ordering::Relaxed);
+    crate::fail_point_error!("coordinator::sim", |msg: String| WindowAttempt::SimFailed(
+        ServeError::Sim(msg)
+    ));
+    let resident = serving.bundle.as_ref().expect("fused entry carries its bundle");
+    // Member → request indices, in window order (the per-member segment
+    // order the batched pass preserves).
+    let mut member_reqs: Vec<Vec<usize>> = vec![Vec::new(); resident.len()];
+    for (ri, r) in requests.iter().enumerate() {
+        debug_assert!(r.member < resident.len(), "routed member index in range");
+        member_reqs[r.member].push(ri);
+    }
+    // The member's weights come from each request (same mask structure —
+    // that is what the fingerprint routing matched); members absent from
+    // the window stream zeros via padding.
+    let blocks: Vec<&SparseBlock> = resident.blocks.iter().map(|b| b.as_ref()).collect();
+    let batches: Vec<Vec<MemberSegment<'_>>> = member_reqs
+        .iter()
+        .map(|idxs| {
+            idxs.iter()
+                .map(|&ri| MemberSegment {
+                    block: requests[ri].block.as_ref(),
+                    xs: requests[ri].xs.as_slice(),
+                })
+                .collect()
+        })
+        .collect();
+    let sim = simulate_fused_batch(
+        &serving.outcome.mapping,
+        &serving.outcome.tags,
+        &blocks,
+        &ctx.cgra,
+        &batches,
+    );
+    match sim {
+        Ok(res) => {
+            let w = requests.len();
+            let mut per_request: Vec<Option<SegmentSim>> = Vec::new();
+            per_request.resize_with(w, || None);
+            for (mi, m) in res.per_member.into_iter().enumerate() {
+                for (seg, &ri) in m.segments.into_iter().zip(&member_reqs[mi]) {
+                    per_request[ri] = Some(seg);
+                }
+            }
+            let segments = per_request
+                .into_iter()
+                .map(|s| s.expect("one segment per request"))
+                .collect();
+            WindowAttempt::Served {
+                segments,
+                pass_cycles: res.cycles,
+                ii: serving.outcome.mapping.ii,
+                fresh,
+                members: resident.len(),
+            }
+        }
+        Err(e) => WindowAttempt::SimFailed(ServeError::Sim(e.to_string())),
     }
 }
 
@@ -1217,107 +2018,19 @@ fn serve_window(
 /// never originate here.
 fn fused_serving(
     bundle: &Arc<FusedBundle>,
-    cache: &MappingCache,
-    metrics: &Metrics,
-    opts: &MapperOptions,
-    cgra: &StreamingCgra,
+    ctx: &WorkerCtx,
 ) -> Result<(Arc<ServingMapping>, bool)> {
     let key = format!("{}@bundle:{:016x}", bundle.name, bundle.fingerprint());
-    cache.get_or_map(&key, metrics, || {
+    ctx.cache.get_or_map(&key, &ctx.metrics, || {
+        crate::fail_point_error!("coordinator::map", |msg: String| Err(Error::Runtime(msg)));
         // A bundle's combined MII sits far above the members' own MIIs and
         // the slot-offset composition needs II headroom: widen the slack
         // to the fused operating point unless the config is already wider.
-        let mut bopts = opts.clone();
+        let mut bopts = ctx.opts.clone();
         bopts.ii_slack = bopts.ii_slack.max(MapperOptions::fused().ii_slack);
-        let outcome = map_unit(MapUnit::Bundle(bundle), cgra, &bopts)?;
+        let outcome = map_unit(MapUnit::Bundle(bundle), &ctx.cgra, &bopts)?;
         Ok(ServingMapping { outcome, bundle: Some(Arc::clone(bundle)) })
     })
-}
-
-/// Run one sealed window through the fused mapping and fulfill every
-/// member ticket with its own output slice and cycle share.
-fn run_window(
-    requests: Vec<WindowRequest>,
-    serving: &ServingMapping,
-    fresh: bool,
-    started: Instant,
-    metrics: &Metrics,
-    cgra: &StreamingCgra,
-) {
-    let resident = serving.bundle.as_ref().expect("fused entry carries its bundle");
-    let w = requests.len();
-    metrics.jobs.fetch_add(w as u64, Ordering::Relaxed);
-    // Member → request indices, in window order (the per-member segment
-    // order the batched pass preserves).
-    let mut member_reqs: Vec<Vec<usize>> = vec![Vec::new(); resident.len()];
-    for (ri, r) in requests.iter().enumerate() {
-        debug_assert!(r.member < resident.len(), "routed member index in range");
-        member_reqs[r.member].push(ri);
-    }
-    let sim = {
-        // The member's weights come from each request (same mask
-        // structure — that is what the fingerprint routing matched);
-        // members absent from the window stream zeros via padding.
-        let blocks: Vec<&SparseBlock> =
-            resident.blocks.iter().map(|b| b.as_ref()).collect();
-        let batches: Vec<Vec<MemberSegment<'_>>> = member_reqs
-            .iter()
-            .map(|idxs| {
-                idxs.iter()
-                    .map(|&ri| MemberSegment {
-                        block: requests[ri].block.as_ref(),
-                        xs: requests[ri].xs.as_slice(),
-                    })
-                    .collect()
-            })
-            .collect();
-        simulate_fused_batch(
-            &serving.outcome.mapping,
-            &serving.outcome.tags,
-            &blocks,
-            cgra,
-            &batches,
-        )
-    };
-    match sim {
-        Ok(res) => {
-            metrics.windows.fetch_add(1, Ordering::Relaxed);
-            // The window pays for the resident configuration ONCE — this
-            // is the fused double-count fix: W member requests no longer
-            // charge W whole-bundle passes.
-            metrics.total_cycles.fetch_add(res.cycles, Ordering::Relaxed);
-            let latency_ns = started.elapsed().as_nanos() as u64;
-            let ii = serving.outcome.mapping.ii;
-            let mut per_request: Vec<Option<SegmentSim>> = Vec::new();
-            per_request.resize_with(w, || None);
-            for (mi, m) in res.per_member.into_iter().enumerate() {
-                for (seg, &ri) in m.segments.into_iter().zip(&member_reqs[mi]) {
-                    per_request[ri] = Some(seg);
-                }
-            }
-            for (ri, r) in requests.into_iter().enumerate() {
-                let seg = per_request[ri].take().expect("one segment per request");
-                metrics.total_latency_ns.fetch_add(latency_ns, Ordering::Relaxed);
-                r.done.fulfill(Ok(InferResult {
-                    id: r.id,
-                    block_name: r.block.name.clone(),
-                    outputs: seg.outputs,
-                    cycles: seg.cycles,
-                    ii,
-                    mapped_fresh: fresh && ri == 0,
-                    fused_members: resident.len(),
-                    latency_ns,
-                }));
-            }
-        }
-        Err(e) => {
-            metrics.failures.fetch_add(w as u64, Ordering::Relaxed);
-            let err = ServeError::Sim(e.to_string());
-            for r in requests {
-                r.done.fulfill(Err(err.clone()));
-            }
-        }
-    }
 }
 
 #[cfg(test)]
@@ -1440,13 +2153,10 @@ mod tests {
     #[test]
     fn tickets_resolve_queue_closed_when_pool_is_shut_down() {
         let cfg = small_cfg();
-        let mut coord = Coordinator::new(&cfg);
-        // Shut the pool down out from under the session: close the queue
-        // and join every worker, exactly the state a torn-down pool leaves.
-        coord.tx.take();
-        for w in coord.workers.drain(..) {
-            w.join().unwrap();
-        }
+        let coord = Coordinator::new(&cfg);
+        // Tear the pool down out from under the session: exactly the
+        // state a late enqueue races against.
+        coord.shutdown();
         let mut session = coord.session();
         let block = tiny("late", 2, 2, vec![true, false, true, true]);
         let t = session.enqueue(Arc::clone(&block), stream_for(&block, 2, 1));
@@ -1454,6 +2164,104 @@ mod tests {
             Err(ServeError::QueueClosed) => {}
             other => panic!("expected QueueClosed, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn wait_timeout_expires_then_result_stays_claimable() {
+        let state = TicketState::new();
+        let done = TicketCompleter { state: Arc::clone(&state) };
+        let mut t = Ticket { id: 1, block_name: "x".into(), state, window: None };
+        assert!(
+            t.wait_timeout(Duration::from_millis(5)).is_none(),
+            "pending ticket times out with None"
+        );
+        done.fulfill(Err(ServeError::QueueClosed));
+        assert!(matches!(
+            t.wait_timeout(Duration::ZERO),
+            Some(Err(ServeError::QueueClosed))
+        ));
+        // The timed wait clones — the result stays claimable by `wait`.
+        assert!(matches!(t.wait(), Err(ServeError::QueueClosed)));
+    }
+
+    #[test]
+    fn dropping_a_ticket_cancels_its_window_request() {
+        // An unwaited ticket dropped while its request still rides an
+        // open window withdraws the request: the window serves without
+        // it, and abandoned work is never simulated.
+        let mut cfg = small_cfg();
+        cfg.batch_window_requests = 100; // only an explicit flush seals
+        let coord = Coordinator::new(&cfg);
+        let members = tiny_members();
+        coord.register_bundle(Arc::new(FusedBundle::new(members.clone()).unwrap()));
+        let mut session = coord.session();
+        let keep = session.enqueue(Arc::clone(&members[0]), stream_for(&members[0], 2, 1));
+        let cancel =
+            session.enqueue(Arc::clone(&members[1]), stream_for(&members[1], 2, 2));
+        drop(cancel);
+        session.drain();
+        let r = keep.wait().expect("survivor ok");
+        assert_eq!(r.fused_members, 3, "still served through the bundle");
+        let m = coord.metrics.snapshot();
+        assert_eq!(m.jobs, 1, "the cancelled request was never dispatched");
+        assert_eq!(m.windows, 1);
+    }
+
+    #[test]
+    fn zero_deadline_requests_shed_at_pickup() {
+        let cfg = small_cfg();
+        let coord = Coordinator::new(&cfg);
+        let mut session = coord.session();
+        let block = tiny("rush", 2, 2, vec![true, false, true, true]);
+        let t = session.enqueue_with_deadline(
+            Arc::clone(&block),
+            stream_for(&block, 2, 1),
+            Duration::ZERO,
+        );
+        match t.wait() {
+            Err(ServeError::DeadlineExceeded) => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        let m = coord.metrics.snapshot();
+        assert_eq!(m.deadline_expired, 1);
+        assert_eq!(m.jobs, 1, "the request was picked up (then shed)");
+        assert_eq!(m.failures, 0, "a deadline shed is not a serving fault");
+    }
+
+    #[test]
+    fn failure_ttl_retries_after_budget() {
+        // failure_ttl = 3: after a failed build the entry stays resident;
+        // the next two requests fail fast, the third rebuilds in place.
+        let cache = MappingCache::new(4, 3);
+        let metrics = Metrics::default();
+        let err = cache
+            .get_or_map("flaky", &metrics, || Err(Error::Workload("transient".into())));
+        assert!(err.is_err());
+        {
+            let inner = cache.inner.lock().unwrap();
+            assert_eq!(inner.map.len(), 1, "failed entry stays resident under a TTL");
+        }
+        for _ in 0..2 {
+            match cache.get_or_map("flaky", &metrics, || unreachable!("fail-fast window")) {
+                Err(e) => assert!(e.to_string().contains("transient"), "{e}"),
+                Ok(_) => panic!("request inside the fail-fast window must error"),
+            }
+        }
+        // TTL exhausted: the next request re-runs the build.
+        let block = tiny("flaky", 2, 2, vec![true, false, true, true]);
+        let cgra = StreamingCgra::paper_default();
+        let opts = MapperOptions::sparsemap();
+        let (_, fresh) = cache
+            .get_or_map("flaky", &metrics, || {
+                let outcome = map_unit(MapUnit::Single(&block), &cgra, &opts)?;
+                Ok(ServingMapping { outcome, bundle: None })
+            })
+            .unwrap();
+        assert!(fresh, "the post-TTL request rebuilds");
+        let (_, fresh) = cache
+            .get_or_map("flaky", &metrics, || unreachable!("now cached"))
+            .unwrap();
+        assert!(!fresh);
     }
 
     #[test]
@@ -1662,7 +2470,7 @@ mod tests {
         // at a capacity where the retired full-map scan was the cost
         // concern. One cheap real mapping is cloned into every entry.
         let capacity = 64usize;
-        let cache = MappingCache::new(capacity);
+        let cache = MappingCache::new(capacity, 0);
         let metrics = Metrics::default();
         let block = tiny("evict", 2, 2, vec![true, false, true, true]);
         let cgra = StreamingCgra::paper_default();
@@ -1734,7 +2542,7 @@ mod tests {
         // A failed (deterministically re-failing) mapping must not leave a
         // permanent Empty entry behind: Empty entries are not LRU victims,
         // so a dead one would pin cache_capacity forever.
-        let cache = MappingCache::new(1);
+        let cache = MappingCache::new(1, 0);
         let metrics = Metrics::default();
         let err = cache.get_or_map("dead", &metrics, || {
             Err(Error::Workload("unmappable".into()))

@@ -86,6 +86,32 @@
 //! `deny(deprecated)`, so only the shims reference them
 //! (`tests/serving_api.rs` locks shim-vs-ticket bit-identity).
 //!
+//! ## Failure model: the serving tier survives its workers
+//!
+//! The worker pool is supervised, and the contract is simple: **every
+//! enqueued ticket resolves** — with outputs or a structured
+//! `ServeError` — never a hang. Per-job panics are caught in place and
+//! retried; a panic that kills a worker thread is detected by a
+//! supervisor that respawns it (`[coordinator] restart_budget`), and a
+//! job that keeps panicking is quarantined after `[coordinator]
+//! poison_threshold` strikes (`ServeError::Poisoned`). Latency is
+//! bounded end to end: `enqueue_with_deadline` sheds requests whose
+//! budget expires before pickup (`DeadlineExceeded` — a request already
+//! being served is never interrupted), `Ticket::wait_timeout` bounds the
+//! caller's wait, and dropping an unwaited ticket withdraws its request
+//! from a still-open batching window. `try_enqueue` is admission
+//! control: it sheds with `Overloaded` instead of blocking when the
+//! queue is full or over `[coordinator] shed_watermark` (bundle members
+//! always join their window — solo singles shed first). Failed mapping
+//! cache entries fail identical requests fast and retry the build after
+//! `[coordinator] failure_ttl` requests (`0` = sticky forever, the
+//! default). `Metrics` counts all of it (`shed`, `deadline_expired`,
+//! `worker_restarts`, `poisoned`) and attributes per-request latency as
+//! `queue_ns + service_ns` with p50/p99 summaries. The whole model is
+//! exercised deterministically by `tests/fault_tolerance.rs` through
+//! [`util::failpoint`] (`--features failpoints`; the sites compile to
+//! nothing otherwise, and fault-free behavior is identical either way).
+//!
 //! ## Multi-block fusion: bundles of small blocks on one configuration
 //!
 //! Real pruned networks are dominated by small blocks that leave most of

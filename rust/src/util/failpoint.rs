@@ -1,0 +1,268 @@
+//! Deterministic fault injection ("failpoints").
+//!
+//! A failpoint is a named site in production code where a test can inject
+//! a fault: a panic, an error, or a delay. Sites are compiled in only
+//! under the `failpoints` cargo feature — the [`crate::fail_point!`] and
+//! [`crate::fail_point_error!`] macros expand to nothing without it, so
+//! release builds carry zero overhead and zero behavioral risk.
+//!
+//! Unlike the classic `fail` crate, triggers here are fully deterministic:
+//! counted triggers ([`Trigger::Nth`], [`Trigger::FirstN`]) fire on exact
+//! hit indices, and probabilistic triggers ([`Trigger::Prob`]) draw from a
+//! per-site [`Pcg64`] stream seeded at configuration time, so a failing
+//! fault schedule replays exactly from its seed.
+//!
+//! The registry itself is always compiled (it is plain data and lets the
+//! trigger machinery be unit-tested in every configuration); only the call
+//! sites are feature-gated. Tests that configure faults share one global
+//! registry, so they serialize through [`FailScenario::setup`], which also
+//! clears the registry on drop — a panicking test cannot leak its faults
+//! into the next one.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+use crate::util::rng::Pcg64;
+
+/// What happens when a configured site fires.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Panic at the site (exercises `catch_unwind` / supervision paths).
+    Panic,
+    /// Surface an injected error carrying this message; the site's
+    /// `fail_point_error!` arm turns it into the site's native error type.
+    Error(String),
+    /// Sleep this many milliseconds, then continue normally.
+    DelayMs(u64),
+}
+
+/// When a configured site fires, in terms of its hit counter (1-based).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Trigger {
+    /// Every hit.
+    Always,
+    /// Exactly the nth hit.
+    Nth(u64),
+    /// Hits 1..=n.
+    FirstN(u64),
+    /// Each hit independently with probability `p`, drawn from a per-site
+    /// seeded stream (deterministic for a given seed and hit sequence).
+    Prob(f64),
+}
+
+struct Site {
+    kind: FaultKind,
+    trigger: Trigger,
+    hits: u64,
+    rng: Pcg64,
+}
+
+impl Site {
+    /// Count one hit and decide whether the fault fires.
+    fn fire(&mut self) -> bool {
+        self.hits += 1;
+        match self.trigger {
+            Trigger::Always => true,
+            Trigger::Nth(n) => self.hits == n,
+            Trigger::FirstN(n) => self.hits <= n,
+            Trigger::Prob(p) => self.rng.chance(p),
+        }
+    }
+}
+
+fn registry() -> &'static Mutex<HashMap<String, Site>> {
+    static REGISTRY: OnceLock<Mutex<HashMap<String, Site>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn lock_registry() -> MutexGuard<'static, HashMap<String, Site>> {
+    // A panic injected *while* holding the lock is impossible (eval drops
+    // the guard before panicking), but a poisoned map is still just data.
+    registry()
+        .lock()
+        .unwrap_or_else(|poison| poison.into_inner())
+}
+
+/// Arm `site` with a fault. Replaces any previous configuration and resets
+/// the site's hit counter. `seed` feeds the per-site RNG used by
+/// [`Trigger::Prob`] (ignored by the counted triggers).
+pub fn configure(site: &str, kind: FaultKind, trigger: Trigger, seed: u64) {
+    lock_registry().insert(
+        site.to_string(),
+        Site {
+            kind,
+            trigger,
+            hits: 0,
+            rng: Pcg64::seeded(seed),
+        },
+    );
+}
+
+/// Disarm `site` (no-op if it was never configured).
+pub fn remove(site: &str) {
+    lock_registry().remove(site);
+}
+
+/// Disarm every site.
+pub fn clear() {
+    lock_registry().clear();
+}
+
+/// Hits recorded at `site` since it was configured (0 if unconfigured).
+pub fn hits(site: &str) -> u64 {
+    lock_registry().get(site).map_or(0, |s| s.hits)
+}
+
+/// Evaluate one hit at `site`. Unconfigured sites return `None` at the
+/// cost of one map lookup. A firing [`FaultKind::Panic`] panics here (with
+/// the registry lock released); a firing [`FaultKind::DelayMs`] sleeps and
+/// returns `None`; a firing [`FaultKind::Error`] returns `Some(message)`
+/// for the caller's error arm to consume.
+pub fn eval(site: &str) -> Option<String> {
+    let fired = {
+        let mut reg = lock_registry();
+        let s = reg.get_mut(site)?;
+        if s.fire() {
+            Some(s.kind.clone())
+        } else {
+            None
+        }
+    };
+    match fired? {
+        FaultKind::Panic => panic!("failpoint `{site}` injected panic"),
+        FaultKind::DelayMs(ms) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            None
+        }
+        FaultKind::Error(msg) => Some(msg),
+    }
+}
+
+/// RAII scope for a fault-injection test: serializes tests that share the
+/// global registry and guarantees a clean registry on entry and exit.
+pub struct FailScenario {
+    _guard: MutexGuard<'static, ()>,
+}
+
+impl FailScenario {
+    /// Take the scenario lock (waiting out any concurrently running fault
+    /// test) and clear the registry.
+    pub fn setup() -> Self {
+        static SCENARIO: OnceLock<Mutex<()>> = OnceLock::new();
+        let guard = SCENARIO
+            .get_or_init(|| Mutex::new(()))
+            .lock()
+            // A previous scenario that panicked mid-test poisons the lock;
+            // the registry is cleared below either way.
+            .unwrap_or_else(|poison| poison.into_inner());
+        clear();
+        FailScenario { _guard: guard }
+    }
+}
+
+impl Drop for FailScenario {
+    fn drop(&mut self) {
+        clear();
+    }
+}
+
+/// Evaluate a failpoint for its side effects (panic or delay). Compiles to
+/// nothing without the `failpoints` feature.
+#[macro_export]
+macro_rules! fail_point {
+    ($site:expr) => {{
+        #[cfg(feature = "failpoints")]
+        {
+            let _ = $crate::util::failpoint::eval($site);
+        }
+    }};
+}
+
+/// Evaluate a failpoint that can inject an error: if the site fires a
+/// [`crate::util::failpoint::FaultKind::Error`], `$on_err` maps the
+/// injected message to the enclosing function's error value and the macro
+/// `return`s it. Compiles to nothing without the `failpoints` feature.
+#[macro_export]
+macro_rules! fail_point_error {
+    ($site:expr, $on_err:expr) => {{
+        #[cfg(feature = "failpoints")]
+        {
+            if let Some(msg) = $crate::util::failpoint::eval($site) {
+                #[allow(clippy::redundant_closure_call)]
+                return ($on_err)(msg);
+            }
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unconfigured_site_is_silent() {
+        let _s = FailScenario::setup();
+        assert_eq!(eval("tests::nope"), None);
+        assert_eq!(hits("tests::nope"), 0);
+    }
+
+    #[test]
+    fn nth_fires_exactly_once() {
+        let _s = FailScenario::setup();
+        configure("tests::nth", FaultKind::Error("boom".into()), Trigger::Nth(3), 0);
+        let fired: Vec<bool> = (0..6).map(|_| eval("tests::nth").is_some()).collect();
+        assert_eq!(fired, [false, false, true, false, false, false]);
+        assert_eq!(hits("tests::nth"), 6);
+    }
+
+    #[test]
+    fn first_n_fires_prefix() {
+        let _s = FailScenario::setup();
+        configure("tests::first", FaultKind::Error("e".into()), Trigger::FirstN(2), 0);
+        let fired: Vec<bool> = (0..4).map(|_| eval("tests::first").is_some()).collect();
+        assert_eq!(fired, [true, true, false, false]);
+    }
+
+    #[test]
+    fn prob_is_deterministic_per_seed() {
+        let run = |seed| {
+            let _s = FailScenario::setup();
+            configure("tests::prob", FaultKind::Error("e".into()), Trigger::Prob(0.5), seed);
+            (0..64)
+                .map(|_| eval("tests::prob").is_some())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn panic_kind_panics_and_scenario_cleans_up() {
+        let _s = FailScenario::setup();
+        configure("tests::panic", FaultKind::Panic, Trigger::Always, 0);
+        let err = std::panic::catch_unwind(|| eval("tests::panic"));
+        assert!(err.is_err());
+        drop(_s);
+        // Registry is clean after the scenario: the site no longer fires.
+        assert_eq!(eval("tests::panic"), None);
+    }
+
+    #[test]
+    fn delay_kind_sleeps_then_continues() {
+        let _s = FailScenario::setup();
+        configure("tests::delay", FaultKind::DelayMs(5), Trigger::Nth(1), 0);
+        let t0 = std::time::Instant::now();
+        assert_eq!(eval("tests::delay"), None);
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn configure_resets_hit_counter() {
+        let _s = FailScenario::setup();
+        configure("tests::reset", FaultKind::Error("a".into()), Trigger::Nth(1), 0);
+        assert!(eval("tests::reset").is_some());
+        configure("tests::reset", FaultKind::Error("b".into()), Trigger::Nth(1), 0);
+        assert_eq!(eval("tests::reset").as_deref(), Some("b"));
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod bench;
 pub mod bitset;
+pub mod failpoint;
 pub mod fnv;
 pub mod logging;
 pub mod proptest;

@@ -141,5 +141,13 @@ fn bench_mapper_json_schema() {
             "serving/fused3/window8",
         ],
     );
+    // The robustness rows (overload shedding, deadline misses) joined
+    // serving_throughput later than the rows above, so a snapshot merged
+    // from an older bench run may legitimately lack them — they are NOT
+    // required off the workers=1 marker. One run writes both, though, so
+    // their presence is pairwise (either stale file without them, or a
+    // current file with the pair).
+    require("serving/fused3/shed_overload", &["serving/wide_k128/deadline_miss_rate"]);
+    require("serving/wide_k128/deadline_miss_rate", &["serving/fused3/shed_overload"]);
     eprintln!("BENCH_mapper.json schema ok ({rows} rows)");
 }

@@ -1,0 +1,383 @@
+//! Deterministic fault-injection suite for the serving tier (the
+//! `failpoints` feature arms the `coordinator::*` sites; see
+//! `util::failpoint`). The invariant under test everywhere: **every
+//! enqueued ticket resolves** — served, or a structured `ServeError` —
+//! under soft panics (caught in place), hard worker death (supervisor
+//! respawn), injected mapping/simulator errors, injected delays, and
+//! randomized mixtures of all of them. Bounded waits convert any hang
+//! into a test failure.
+#![cfg(feature = "failpoints")]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sparsemap::config::SparsemapConfig;
+use sparsemap::coordinator::{Coordinator, ServeError, Ticket};
+use sparsemap::sparse::fuse::FusedBundle;
+use sparsemap::sparse::SparseBlock;
+use sparsemap::util::failpoint::{configure, FailScenario, FaultKind, Trigger};
+use sparsemap::util::rng::Pcg64;
+
+fn tiny(name: &str, c: usize, k: usize, mask: Vec<bool>) -> Arc<SparseBlock> {
+    Arc::new(SparseBlock::from_mask(name, c, k, mask).unwrap())
+}
+
+fn tiny_members() -> Vec<Arc<SparseBlock>> {
+    vec![
+        tiny("f1", 2, 2, vec![true, false, true, true]),
+        tiny("f2", 3, 2, vec![true, true, false, true, true, false]),
+        tiny("f3", 2, 3, vec![true, false, true, false, true, true]),
+    ]
+}
+
+fn stream_for(block: &SparseBlock, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..n)
+        .map(|_| (0..block.c).map(|_| rng.next_normal() as f32).collect())
+        .collect()
+}
+
+fn cfg_with(workers: usize) -> SparsemapConfig {
+    let mut cfg = SparsemapConfig::default();
+    cfg.workers = workers;
+    cfg.queue_depth = 8;
+    cfg.parallelism = 1;
+    cfg.mis_iterations = 20_000;
+    cfg
+}
+
+/// Bounded wait: a ticket that does not resolve within the bound is a
+/// hang — exactly the bug class this suite exists to catch.
+fn must_resolve(t: &mut Ticket) -> Result<(), ServeError> {
+    t.wait_timeout(Duration::from_secs(60))
+        .expect("ticket must resolve under faults, not hang")
+        .map(|_| ())
+}
+
+#[test]
+fn soft_panic_is_caught_and_the_job_retries_in_place() {
+    let _s = FailScenario::setup();
+    configure("coordinator::serve", FaultKind::Panic, Trigger::Nth(1), 0);
+    let coord = Coordinator::new(&cfg_with(1));
+    let block = tiny("soft", 2, 2, vec![true, false, true, true]);
+    let mut session = coord.session();
+    let tickets: Vec<Ticket> = (0..4u64)
+        .map(|i| session.enqueue(Arc::clone(&block), stream_for(&block, 2, i)))
+        .collect();
+    for mut t in tickets {
+        must_resolve(&mut t).expect("retried job serves fine");
+    }
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.worker_restarts, 1, "one caught panic, one in-place restart");
+    assert_eq!(m.failures, 0, "the retry absorbed the fault");
+    assert_eq!(m.jobs, 4);
+}
+
+#[test]
+fn hard_worker_death_respawns_and_traffic_continues() {
+    let _s = FailScenario::setup();
+    // Panic at pickup — OUTSIDE the per-job catch_unwind — kills the
+    // worker thread itself. The doomed job's tickets resolve WorkerGone
+    // as the unwind drops their completers; the supervisor respawns the
+    // worker and the rest of the queue serves normally.
+    configure("coordinator::worker_hard", FaultKind::Panic, Trigger::Nth(1), 0);
+    let coord = Coordinator::new(&cfg_with(1));
+    let block = tiny("hard", 2, 2, vec![true, false, true, true]);
+    let mut session = coord.session();
+    let tickets: Vec<Ticket> = (0..4u64)
+        .map(|i| session.enqueue(Arc::clone(&block), stream_for(&block, 2, i)))
+        .collect();
+    let mut gone = 0;
+    let mut ok = 0;
+    for mut t in tickets {
+        match must_resolve(&mut t) {
+            Ok(()) => ok += 1,
+            Err(ServeError::WorkerGone) => gone += 1,
+            Err(other) => panic!("unexpected error under hard death: {other:?}"),
+        }
+    }
+    assert_eq!(gone, 1, "exactly the job aboard the dying worker is lost");
+    assert_eq!(ok, 3);
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.worker_restarts, 1, "the supervisor respawned the dead worker");
+    // The respawned pool is at full strength: fresh traffic still serves.
+    let mut extra = session.enqueue(Arc::clone(&block), stream_for(&block, 2, 9));
+    must_resolve(&mut extra).expect("post-respawn request ok");
+}
+
+#[test]
+fn poison_job_is_quarantined_after_the_threshold() {
+    let _s = FailScenario::setup();
+    // Three panics, then silence: the first request burns all three
+    // strikes in its in-place retry loop and is quarantined; every later
+    // request for the same identity resolves Poisoned without running.
+    configure("coordinator::serve", FaultKind::Panic, Trigger::FirstN(3), 0);
+    let mut cfg = cfg_with(1);
+    cfg.poison_threshold = 3;
+    let coord = Coordinator::new(&cfg);
+    let block = tiny("toxic", 2, 2, vec![true, false, true, true]);
+    let mut session = coord.session();
+    let tickets: Vec<Ticket> = (0..3u64)
+        .map(|i| session.enqueue(Arc::clone(&block), stream_for(&block, 2, i)))
+        .collect();
+    for mut t in tickets {
+        match must_resolve(&mut t) {
+            Err(ServeError::Poisoned) => {}
+            other => panic!("expected Poisoned, got {other:?}"),
+        }
+    }
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.poisoned, 3);
+    assert_eq!(m.failures, 3, "quarantined requests count as failures");
+    assert_eq!(m.worker_restarts, 3, "three caught panics, zero thread deaths");
+    // A different identity is untouched by the quarantine.
+    let clean = tiny("clean", 2, 2, vec![true, true, false, true]);
+    let mut t = session.enqueue(Arc::clone(&clean), stream_for(&clean, 2, 9));
+    must_resolve(&mut t).expect("other blocks keep serving");
+}
+
+#[test]
+fn injected_mapping_error_surfaces_as_mapping_failed_then_recovers() {
+    let _s = FailScenario::setup();
+    configure(
+        "coordinator::map",
+        FaultKind::Error("injected map fault".into()),
+        Trigger::Nth(1),
+        0,
+    );
+    let coord = Coordinator::new(&cfg_with(1));
+    let block = tiny("maperr", 2, 2, vec![true, false, true, true]);
+    let mut session = coord.session();
+    let first = session.enqueue(Arc::clone(&block), stream_for(&block, 2, 0));
+    match first.wait() {
+        Err(ServeError::MappingFailed(msg)) => {
+            assert!(msg.contains("injected map fault"), "{msg}");
+        }
+        other => panic!("expected MappingFailed, got {other:?}"),
+    }
+    // Default failure_ttl = 0: the failed entry detached, the next
+    // requester rebuilds — and the site is exhausted, so it succeeds.
+    let second = session.enqueue(Arc::clone(&block), stream_for(&block, 2, 1));
+    second.wait().expect("mapping retries clean after the fault");
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.failures, 1);
+    assert_eq!(m.cache_misses, 1, "only the landed mapping counts as a miss");
+}
+
+#[test]
+fn failure_ttl_fast_fails_then_retries_the_build() {
+    let _s = FailScenario::setup();
+    configure(
+        "coordinator::map",
+        FaultKind::Error("transient map fault".into()),
+        Trigger::Nth(1),
+        0,
+    );
+    let mut cfg = cfg_with(1);
+    cfg.failure_ttl = 3;
+    let coord = Coordinator::new(&cfg);
+    let block = tiny("ttl", 2, 2, vec![true, false, true, true]);
+    let mut session = coord.session();
+    // Request 1 fails the build; requests 2 and 3 fast-fail on the
+    // resident Failed entry; request 4 rebuilds (site exhausted) and 5
+    // hits the rebuilt mapping. Single worker → strict request order.
+    let tickets: Vec<Ticket> = (0..5u64)
+        .map(|i| session.enqueue(Arc::clone(&block), stream_for(&block, 2, i)))
+        .collect();
+    let outcomes: Vec<Result<(), ServeError>> =
+        tickets.into_iter().map(|mut t| must_resolve(&mut t)).collect();
+    match &outcomes[0] {
+        Err(ServeError::MappingFailed(msg)) => {
+            assert!(msg.contains("transient map fault"), "{msg}");
+        }
+        other => panic!("expected the builder's MappingFailed, got {other:?}"),
+    }
+    for (i, o) in outcomes[1..3].iter().enumerate() {
+        match o {
+            Err(ServeError::MappingFailed(msg)) => assert!(
+                msg.contains("concurrent request"),
+                "request {}: fast-fail carries the sticky reason, got {msg}",
+                i + 1
+            ),
+            other => panic!("expected fast-fail, got {other:?}"),
+        }
+    }
+    outcomes[3].as_ref().expect("post-TTL request rebuilds");
+    outcomes[4].as_ref().expect("rebuilt mapping serves hits");
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.failures, 3);
+    assert_eq!(m.cache_misses, 1);
+    assert_eq!(m.cache_hits, 1);
+}
+
+#[test]
+fn injected_sim_error_fails_only_its_request() {
+    let _s = FailScenario::setup();
+    configure(
+        "coordinator::sim",
+        FaultKind::Error("injected sim fault".into()),
+        Trigger::Nth(1),
+        0,
+    );
+    let coord = Coordinator::new(&cfg_with(1));
+    let block = tiny("simerr", 2, 2, vec![true, false, true, true]);
+    let mut session = coord.session();
+    let first = session.enqueue(Arc::clone(&block), stream_for(&block, 2, 0));
+    let second = session.enqueue(Arc::clone(&block), stream_for(&block, 2, 1));
+    match first.wait() {
+        Err(ServeError::Sim(msg)) => assert!(msg.contains("injected sim fault"), "{msg}"),
+        other => panic!("expected Sim, got {other:?}"),
+    }
+    second.wait().expect("the mapping survived; only the faulted pass failed");
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.failures, 1);
+    assert_eq!(m.cache_misses, 1, "the mapping landed once and stayed cached");
+    assert_eq!(m.cache_hits, 1);
+}
+
+#[test]
+fn deadline_expires_while_a_slow_job_holds_the_worker() {
+    let _s = FailScenario::setup();
+    // A 50 ms delay on the first job holds the single worker while the
+    // zero-budget requests behind it expire in the queue.
+    configure("coordinator::delay", FaultKind::DelayMs(50), Trigger::Nth(1), 0);
+    let coord = Coordinator::new(&cfg_with(1));
+    let block = tiny("slow", 2, 2, vec![true, false, true, true]);
+    let mut session = coord.session();
+    let slow = session.enqueue(Arc::clone(&block), stream_for(&block, 2, 0));
+    let rushed: Vec<Ticket> = (0..3u64)
+        .map(|i| {
+            session.enqueue_with_deadline(
+                Arc::clone(&block),
+                stream_for(&block, 2, 1 + i),
+                Duration::ZERO,
+            )
+        })
+        .collect();
+    slow.wait().expect("the slow request itself serves fine");
+    for mut t in rushed {
+        match must_resolve(&mut t) {
+            Err(ServeError::DeadlineExceeded) => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+    }
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.deadline_expired, 3);
+    assert_eq!(m.failures, 0, "deadline sheds are policy, not faults");
+}
+
+#[test]
+fn restart_budget_exhaustion_still_resolves_every_ticket() {
+    let _s = FailScenario::setup();
+    // Every pickup kills the worker: budget 1 buys one respawn, then the
+    // pool is gone — and the supervisor's drain keeps resolving queued
+    // and late tickets until the coordinator closes the queue.
+    configure("coordinator::worker_hard", FaultKind::Panic, Trigger::Always, 0);
+    let mut cfg = cfg_with(1);
+    cfg.restart_budget = 1;
+    let coord = Coordinator::new(&cfg);
+    let block = tiny("doomed", 2, 2, vec![true, false, true, true]);
+    let mut session = coord.session();
+    let tickets: Vec<Ticket> = (0..6u64)
+        .map(|i| session.enqueue(Arc::clone(&block), stream_for(&block, 2, i)))
+        .collect();
+    for mut t in tickets {
+        match must_resolve(&mut t) {
+            Err(ServeError::WorkerGone) => {}
+            other => panic!("expected WorkerGone from the dead pool, got {other:?}"),
+        }
+    }
+    assert_eq!(coord.metrics.snapshot().worker_restarts, 1, "budget bought one respawn");
+    // The queue is still open: a late enqueue resolves through the
+    // supervisor's drain instead of hanging.
+    let mut late = session.enqueue(Arc::clone(&block), stream_for(&block, 2, 9));
+    match must_resolve(&mut late) {
+        Err(ServeError::WorkerGone) => {}
+        other => panic!("expected WorkerGone after pool death, got {other:?}"),
+    }
+}
+
+#[test]
+fn randomized_soft_fault_schedules_resolve_every_ticket() {
+    // Probabilistic mixtures of every soft fault (caught panics, mapping
+    // and simulator errors, delays), replayed deterministically from each
+    // seed, over parallelism × batching. Soft faults never kill threads,
+    // so after the storm the pool must still serve clean traffic.
+    for seed in [1u64, 2, 3] {
+        for (workers, window) in [(1usize, 1usize), (2, 3)] {
+            let _s = FailScenario::setup();
+            configure("coordinator::serve", FaultKind::Panic, Trigger::Prob(0.2), seed);
+            configure(
+                "coordinator::map",
+                FaultKind::Error("storm map fault".into()),
+                Trigger::Prob(0.2),
+                seed ^ 0xa5a5,
+            );
+            configure(
+                "coordinator::sim",
+                FaultKind::Error("storm sim fault".into()),
+                Trigger::Prob(0.2),
+                seed ^ 0x5a5a,
+            );
+            configure("coordinator::delay", FaultKind::DelayMs(1), Trigger::Prob(0.5), seed);
+            let mut cfg = cfg_with(workers);
+            cfg.batch_window_requests = window;
+            let coord = Coordinator::new(&cfg);
+            let members = tiny_members();
+            coord.register_bundle(Arc::new(FusedBundle::new(members.clone()).unwrap()));
+            let solo = tiny("storm", 3, 3, vec![true, true, false, false, true, true, true, false, true]);
+            let mut session = coord.session();
+            let mut tickets = Vec::new();
+            for i in 0..12u64 {
+                let b = if i % 4 == 3 { &solo } else { &members[(i % 4) as usize] };
+                tickets.push(session.enqueue(Arc::clone(b), stream_for(b, 2, i)));
+            }
+            // Seal open windows WITHOUT waiting (`drain` would block on
+            // resolution and hide a hang from the bounded waits below).
+            session.flush();
+            for (i, mut t) in tickets.into_iter().enumerate() {
+                // Any structured outcome is fine; a hang is the bug.
+                let _ = t
+                    .wait_timeout(Duration::from_secs(60))
+                    .unwrap_or_else(|| panic!("seed {seed} w={workers} ticket {i} hung"));
+            }
+            // Disarm and prove the pool survived the whole schedule.
+            sparsemap::util::failpoint::clear();
+            let fresh = tiny("after", 2, 2, vec![true, true, true, false]);
+            let mut t = session.enqueue(Arc::clone(&fresh), stream_for(&fresh, 2, 99));
+            must_resolve(&mut t).expect("pool serves clean traffic after the storm");
+        }
+    }
+}
+
+#[test]
+fn unarmed_sites_leave_serving_deterministic() {
+    // With the feature compiled in but no site armed, serving is the
+    // plain fault-free path: two identical runs produce bit-identical
+    // outputs (the fault-free ≡ default equivalence the feature promises,
+    // observable inside one binary).
+    let run = || -> Vec<Vec<Vec<f32>>> {
+        let _s = FailScenario::setup(); // clean registry, serialized
+        let coord = Coordinator::new(&cfg_with(2));
+        let members = tiny_members();
+        coord.register_bundle(Arc::new(FusedBundle::new(members.clone()).unwrap()));
+        let mut session = coord.session();
+        let tickets: Vec<Ticket> = (0..6u64)
+            .map(|i| {
+                let b = &members[(i % 3) as usize];
+                session.enqueue(Arc::clone(b), stream_for(b, 3, i))
+            })
+            .collect();
+        session.flush();
+        tickets.into_iter().map(|t| t.wait().expect("clean run ok").outputs).collect()
+    };
+    let a = run();
+    let b = run();
+    for (ra, rb) in a.iter().zip(&b) {
+        for (va, vb) in ra.iter().zip(rb) {
+            for (x, y) in va.iter().zip(vb) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+}

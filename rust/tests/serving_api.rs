@@ -308,6 +308,126 @@ fn legacy_collect_reports_missing_results_as_runtime_errors() {
 }
 
 #[test]
+fn drain_on_a_torn_down_pool_resolves_instead_of_hanging() {
+    // Regression: `drain` on a session whose pool has been torn down used
+    // to hang on tickets nobody would ever resolve. Every ticket must
+    // resolve (served, or a structured teardown error) and drain returns.
+    let cfg = cfg_with(2, 1, 8);
+    let coord = registered_coordinator(&cfg);
+    let members = tiny_members();
+    let mut session = coord.session();
+    // Member requests ride a still-open batching window at teardown time.
+    let early: Vec<Ticket> = (0..3)
+        .map(|i| {
+            let b = &members[i % members.len()];
+            session.enqueue(Arc::clone(b), stream_for(b, 2, i as u64))
+        })
+        .collect();
+    coord.shutdown();
+    let late = session.enqueue(Arc::clone(&members[0]), stream_for(&members[0], 2, 9));
+    session.drain(); // must return, not hang
+    for t in early {
+        match t.wait() {
+            Ok(_) | Err(ServeError::QueueClosed) | Err(ServeError::WorkerGone) => {}
+            other => panic!("expected served or torn-down, got {other:?}"),
+        }
+    }
+    match late.wait() {
+        Err(ServeError::QueueClosed) => {}
+        other => panic!("post-shutdown enqueue must fail QueueClosed, got {other:?}"),
+    }
+}
+
+#[test]
+fn cancellation_keeps_window_formation_deterministic() {
+    // Dropping an unwaited ticket withdraws its request from a
+    // still-forming window — and window formation (enqueue/cancel
+    // sequence in, window contents out) stays a pure function of that
+    // sequence: identical windows, jobs and outputs at any worker count.
+    let run = |workers: usize| -> (u64, u64, Vec<Vec<Vec<f32>>>) {
+        let cfg = cfg_with(workers, 1, 3);
+        let coord = registered_coordinator(&cfg);
+        let members = tiny_members();
+        let mut session = coord.session();
+        let mut kept = Vec::new();
+        for i in 0..9usize {
+            let b = &members[i % members.len()];
+            let t = session.enqueue(Arc::clone(b), stream_for(b, 2, i as u64));
+            if i % 3 == 1 {
+                drop(t); // cancel before (or after — a no-op) the seal
+            } else {
+                kept.push(t);
+            }
+        }
+        session.drain();
+        let outputs = kept
+            .into_iter()
+            .map(|t| t.wait().expect("kept job ok").outputs)
+            .collect();
+        let m = coord.metrics.snapshot();
+        (m.windows, m.jobs, outputs)
+    };
+    let (windows, jobs, base) = run(1);
+    for workers in [2usize, 4] {
+        let (w, j, outputs) = run(workers);
+        assert_eq!(w, windows, "windows at {workers} workers");
+        assert_eq!(j, jobs, "jobs at {workers} workers");
+        assert_bitwise_eq(&outputs, &base, &format!("cancel pattern w={workers}"));
+    }
+}
+
+#[test]
+fn wait_timeout_resolves_and_result_stays_claimable() {
+    let cfg = cfg_with(2, 1, 8);
+    let coord = Coordinator::new(&cfg);
+    let mut session = coord.session();
+    let block = tiny("timed", 2, 2, vec![true, false, true, true]);
+    let mut t = session.enqueue(Arc::clone(&block), stream_for(&block, 3, 1));
+    // Generous bound — the tiny block serves far faster; a `None` here is
+    // exactly the hang this API exists to expose.
+    let r = t
+        .wait_timeout(std::time::Duration::from_secs(60))
+        .expect("request resolves within the bound")
+        .expect("request ok");
+    let again = t.wait().expect("result stays claimable after a timed wait");
+    assert_eq!(r.id, again.id);
+    assert_eq!(r.outputs.len(), 3);
+    assert_eq!(
+        again.latency_ns,
+        again.queue_ns + again.service_ns,
+        "end-to-end latency is the queue span plus the service span"
+    );
+}
+
+#[test]
+fn try_enqueue_sheds_with_overloaded_when_the_queue_backs_up() {
+    // One worker, a tiny queue and a matching watermark: keep
+    // try-enqueueing until admission control pushes back. Shed requests
+    // cost nothing downstream; every admitted ticket still resolves.
+    let mut cfg = cfg_with(1, 1, 1); // window 1: no batching aggregation
+    cfg.queue_depth = 2;
+    cfg.shed_watermark = 2;
+    let coord = Coordinator::new(&cfg);
+    let block = tiny("busy", 2, 2, vec![true, false, true, true]);
+    let mut session = coord.session();
+    let mut admitted = Vec::new();
+    let mut shed = 0u64;
+    for i in 0..200u64 {
+        match session.try_enqueue(Arc::clone(&block), stream_for(&block, 64, i)) {
+            Ok(t) => admitted.push(t),
+            Err(ServeError::Overloaded) => shed += 1,
+            Err(other) => panic!("unexpected admission error: {other:?}"),
+        }
+    }
+    assert!(shed > 0, "200 bursts against a depth-2 queue must shed");
+    for t in admitted {
+        t.wait().expect("admitted request ok");
+    }
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.shed, shed, "every shed is counted, and only sheds");
+}
+
+#[test]
 fn dropping_a_session_never_strands_windowed_requests() {
     // An open window is sealed when its session drops (and when a member
     // ticket is waited on) — a ticket can always resolve.
