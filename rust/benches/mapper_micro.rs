@@ -16,7 +16,7 @@ use sparsemap::dfg::build::build_sdfg;
 use sparsemap::dfg::oracle as dfg_oracle;
 use sparsemap::mapper::{map_block, map_bundle, MapperOptions};
 use sparsemap::sched::{baseline, sparsemap as sm_sched};
-use sparsemap::sim::{simulate_and_check, simulate_fused};
+use sparsemap::sim::{simulate_and_check, simulate_fused, ExecPlan};
 use sparsemap::sparse::gen::{fused3_bundle, paper_blocks, wide_blocks};
 use sparsemap::sparse::SparseBlock;
 use sparsemap::util::bench::{black_box, repo_root_path, BenchConfig, Bencher};
@@ -225,6 +225,11 @@ fn main() {
         black_box(
             simulate_fused(&fused_out.mapping, &fused_out.tags, &members, &cgra, &xs).unwrap(),
         );
+    });
+    // Plan compilation: the one-time cost the coordinator pays at
+    // registration to serve every later window off the compiled backend.
+    bw.bench("fused3/plan_compile", || {
+        black_box(ExecPlan::for_outcome(&fused_out, &cgra).unwrap());
     });
     b.results.extend(bw.results);
 

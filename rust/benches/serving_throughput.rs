@@ -17,7 +17,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use sparsemap::config::SparsemapConfig;
+use sparsemap::config::{SimBackend, SparsemapConfig};
 use sparsemap::coordinator::{Coordinator, ServeError, Ticket};
 use sparsemap::sparse::gen::{fused3_bundle, paper_blocks, wide_blocks};
 use sparsemap::sparse::SparseBlock;
@@ -119,6 +119,10 @@ fn main() {
         let mut cfg = SparsemapConfig { workers: 4, queue_depth: 32, ..SparsemapConfig::default() };
         cfg.mis_iterations = wide_point.mis_iterations;
         cfg.ii_slack = wide_point.ii_slack;
+        // This scenario pins the scalar interpreter so the historical
+        // per_request row keeps its meaning; the compiled-backend twin
+        // below measures the same traffic on the plan path.
+        cfg.sim_backend = SimBackend::Interpreter;
         let coord = Coordinator::new(&cfg);
         let mut session = coord.session();
 
@@ -168,6 +172,47 @@ fn main() {
             summary: cold_summary,
             iters_per_sample: 1,
         });
+
+        // Compiled-backend twin: identical warm traffic served off the
+        // execution plan (the default backend). per_request vs
+        // per_request_compiled is the serving-tier speedup of sim::plan.
+        {
+            let mut ccfg = cfg.clone();
+            ccfg.sim_backend = SimBackend::Compiled;
+            let coord = Coordinator::new(&ccfg);
+            let mut session = coord.session();
+            let _ = session.enqueue(Arc::clone(&wide), stream(&wide, 4, 99)).wait();
+            let t0 = Instant::now();
+            let mut tickets: Vec<Ticket> = Vec::new();
+            let mut collected = 0usize;
+            for id in 0..n {
+                let xs = stream(&wide, iters, id);
+                tickets.push(session.enqueue(Arc::clone(&wide), xs));
+                if tickets.len() >= 16 {
+                    for t in tickets.drain(..8) {
+                        let _ = t.wait();
+                        collected += 1;
+                    }
+                }
+            }
+            for t in tickets.drain(..) {
+                let _ = t.wait();
+                collected += 1;
+            }
+            assert_eq!(collected, n as usize);
+            let wall = t0.elapsed();
+            println!(
+                "wide_k128 (compiled): {n} requests in {wall:?} → {:.0} req/s",
+                n as f64 / wall.as_secs_f64(),
+            );
+            let mut per_request = Summary::new();
+            per_request.add(wall.as_nanos() as f64 / n as f64);
+            results.push(BenchResult {
+                name: "serving/wide_k128/per_request_compiled".into(),
+                summary: per_request,
+                iters_per_sample: n,
+            });
+        }
 
         // Deadline pressure: the same warm wide traffic enqueued as one
         // burst with a per-request latency budget of 2x the steady-state
@@ -284,6 +329,10 @@ fn main() {
         let mut cfg = SparsemapConfig { workers: 4, queue_depth: 32, ..SparsemapConfig::default() };
         cfg.batch_window_requests = 8;
         cfg.batch_window_max = 0;
+        // Pinned to the interpreter: batched_request and window8 keep
+        // their historical meaning; window8_compiled below is the plan
+        // path on the same window shape.
+        cfg.sim_backend = SimBackend::Interpreter;
         let coord = Coordinator::new(&cfg);
         coord.register_bundle(Arc::clone(&bundle));
         let mut session = coord.session();
@@ -346,6 +395,44 @@ fn main() {
             summary: window8,
             iters_per_sample: rounds,
         });
+
+        // Compiled-backend twin of window8: same bundle, same window
+        // shape, served off the execution plan.
+        {
+            let mut ccfg = cfg.clone();
+            ccfg.sim_backend = SimBackend::Compiled;
+            let coord = Coordinator::new(&ccfg);
+            coord.register_bundle(Arc::clone(&bundle));
+            let mut session = coord.session();
+            let _ = session
+                .enqueue(Arc::clone(&members[0]), stream(&members[0], 2, 98))
+                .wait();
+            let t0 = Instant::now();
+            for round in 0..rounds {
+                let mut window: Vec<Ticket> = (0..8u64)
+                    .map(|i| {
+                        let member = &members[(i as usize) % members.len()];
+                        let xs = stream(member, iters, round * 8 + i);
+                        session.enqueue(Arc::clone(member), xs)
+                    })
+                    .collect();
+                for t in window.drain(..) {
+                    let _ = t.wait();
+                }
+            }
+            let wall = t0.elapsed();
+            println!(
+                "fused3 window8 (compiled): {rounds} windows in {wall:?} → {:.2} ms/window",
+                wall.as_secs_f64() * 1e3 / rounds as f64,
+            );
+            let mut window8c = Summary::new();
+            window8c.add(wall.as_nanos() as f64 / rounds as f64);
+            results.push(BenchResult {
+                name: "serving/fused3/window8_compiled".into(),
+                summary: window8c,
+                iters_per_sample: rounds,
+            });
+        }
 
         // Admission control under overload: one slow worker, a short
         // queue and a shed watermark, driven by a non-blocking

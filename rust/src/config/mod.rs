@@ -31,6 +31,59 @@ impl std::str::FromStr for SchedulerKind {
     }
 }
 
+/// Which simulation backend the serving tier runs windows on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimBackend {
+    /// Execute off a pre-compiled [`crate::sim::ExecPlan`] built once at
+    /// mapping time (the default; bit-identical to the interpreter —
+    /// `tests/sim_equivalence.rs` holds the two together).
+    Compiled,
+    /// The scalar lockstep interpreter
+    /// ([`crate::sim::simulate_fused_batch`]) — the differential oracle,
+    /// kept as the escape hatch.
+    Interpreter,
+}
+
+impl std::str::FromStr for SimBackend {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "compiled" => Ok(SimBackend::Compiled),
+            "interpreter" => Ok(SimBackend::Interpreter),
+            other => Err(Error::Config(format!(
+                "unknown sim backend '{other}' (expected 'compiled' or 'interpreter')"
+            ))),
+        }
+    }
+}
+
+impl SimBackend {
+    /// Environment override honoured by the coordinator: CI runs the full
+    /// suite once per backend by exporting this instead of patching every
+    /// test's config.
+    pub const ENV: &'static str = "SPARSEMAP_SIM_BACKEND";
+
+    /// Resolve the effective backend: [`Self::ENV`] wins over the config
+    /// knob when set; an unparsable value is ignored with a warning (the
+    /// override is an operational escape hatch — it must never brick a
+    /// coordinator that has a valid config).
+    pub fn effective(configured: SimBackend) -> SimBackend {
+        match std::env::var(Self::ENV) {
+            Ok(raw) => match raw.parse::<SimBackend>() {
+                Ok(b) => b,
+                Err(_) => {
+                    crate::log_warn!(
+                        "ignoring {}='{raw}': expected 'compiled' or 'interpreter'",
+                        Self::ENV
+                    );
+                    configured
+                }
+            },
+            Err(_) => configured,
+        }
+    }
+}
+
 /// Ablation switches (Table 4): each of the paper's three techniques can be
 /// disabled independently.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -107,6 +160,12 @@ pub struct SparsemapConfig {
     /// then the next request retries the build. `0` = sticky forever (the
     /// pre-failure-TTL behavior).
     pub failure_ttl: u64,
+    /// Simulation backend workers serve windows on: `compiled` (default —
+    /// a pre-compiled `ExecPlan` cached with the mapping) or
+    /// `interpreter` (the scalar oracle, the escape hatch). The
+    /// `SPARSEMAP_SIM_BACKEND` env var overrides this at coordinator
+    /// construction.
+    pub sim_backend: SimBackend,
     /// Maximum member blocks per fused bundle (`1` disables fusion).
     pub max_fused_blocks: usize,
     /// Combined-MII budget for the fusion planner.
@@ -134,6 +193,7 @@ impl Default for SparsemapConfig {
             poison_threshold: 3,
             shed_watermark: 0,
             failure_ttl: 0,
+            sim_backend: SimBackend::Compiled,
             max_fused_blocks: 4,
             fusion_max_ii: 12,
             seed: 42,
@@ -194,6 +254,9 @@ impl SparsemapConfig {
                     cfg.shed_watermark = value.as_int()? as usize
                 }
                 ("coordinator", "failure_ttl") => cfg.failure_ttl = value.as_int()? as u64,
+                ("coordinator", "sim_backend") => {
+                    cfg.sim_backend = value.as_str()?.parse()?
+                }
                 ("workload", "seed") => cfg.seed = value.as_int()? as u64,
                 (s, k) => {
                     return Err(Error::Config(format!("unknown config key [{s}] {k}")));
@@ -317,6 +380,23 @@ seed = 7
         assert_eq!(d.shed_watermark, 0);
         assert!(d.poison_threshold >= 1);
         assert!(SparsemapConfig::from_str_cfg("[coordinator]\npoison_threshold = 0\n").is_err());
+    }
+
+    #[test]
+    fn sim_backend_knob_parses_and_validates() {
+        let c = SparsemapConfig::from_str_cfg("[coordinator]\nsim_backend = \"interpreter\"\n")
+            .unwrap();
+        assert_eq!(c.sim_backend, SimBackend::Interpreter);
+        let c = SparsemapConfig::from_str_cfg("[coordinator]\nsim_backend = \"compiled\"\n")
+            .unwrap();
+        assert_eq!(c.sim_backend, SimBackend::Compiled);
+        // Default is the compiled plan; the interpreter stays the oracle.
+        assert_eq!(SparsemapConfig::default().sim_backend, SimBackend::Compiled);
+        // Typos fail loudly, like every other knob.
+        let err =
+            SparsemapConfig::from_str_cfg("[coordinator]\nsim_backend = \"vectorized\"\n")
+                .unwrap_err();
+        assert!(err.to_string().contains("vectorized"), "{err}");
     }
 
     #[test]

@@ -96,10 +96,10 @@ use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
 
 use crate::arch::StreamingCgra;
-use crate::config::SparsemapConfig;
+use crate::config::{SimBackend, SparsemapConfig};
 use crate::error::{Error, Result};
 use crate::mapper::{map_unit, MapOutcome, MapUnit, MapperOptions};
-use crate::sim::{simulate, simulate_fused_batch, MemberSegment, SegmentSim};
+use crate::sim::{execute_plan_batch, simulate, simulate_fused_batch, ExecPlan, MemberSegment, SegmentSim};
 use crate::sparse::fuse::{plan_bundles, BundleRoutes, FusedBundle, FusionOptions};
 use crate::sparse::SparseBlock;
 use crate::util::stats::Summary;
@@ -956,6 +956,11 @@ struct ServingMapping {
     /// `Some` when the mapping hosts a bundle — carries the member blocks
     /// the simulator needs for the co-resident streams.
     bundle: Option<Arc<FusedBundle>>,
+    /// Compiled execution plan for the mapping, built once under the same
+    /// single-flight guard as the mapping itself and evicted with it.
+    /// `None` when the backend knob selects the interpreter or when plan
+    /// compilation failed (a loud, logged fallback — never a lost ticket).
+    plan: Option<ExecPlan>,
 }
 
 /// State of one cache entry. `Building` marks a mapping in flight; waiters
@@ -1370,6 +1375,9 @@ struct WorkerCtx {
     cgra: StreamingCgra,
     poison: Arc<PoisonRegistry>,
     poison_threshold: u32,
+    /// Which simulation backend freshly built cache entries compile for.
+    /// Resolved once at construction (config knob + env override).
+    backend: SimBackend,
 }
 
 /// Legacy `submit`/`collect` shim state: an internal session core plus the
@@ -1435,6 +1443,7 @@ impl Coordinator {
             cgra: cgra.clone(),
             poison: Arc::new(PoisonRegistry::new()),
             poison_threshold: cfg.poison_threshold as u32,
+            backend: SimBackend::effective(cfg.sim_backend),
         };
         let (exit_tx, exit_rx) = channel();
         let handles: Vec<Option<std::thread::JoinHandle<()>>> = (0..cfg.workers)
@@ -1784,13 +1793,60 @@ fn serve_solo(
                 msg
             )));
             let outcome = map_unit(MapUnit::Single(block), &ctx.cgra, &ctx.opts)?;
-            Ok(ServingMapping { outcome, bundle: None })
+            let plan = compile_serving_plan(&key, &outcome, ctx);
+            Ok(ServingMapping { outcome, bundle: None, plan })
         })
         .map_err(|e| ServeError::MappingFailed(e.to_string()))?;
     crate::fail_point_error!("coordinator::sim", |msg: String| Err(ServeError::Sim(msg)));
-    let res = simulate(&serving.outcome.mapping, block, &ctx.cgra, xs)
-        .map_err(|e| ServeError::Sim(e.to_string()))?;
-    Ok((res.outputs, res.cycles, serving.outcome.mapping.ii, fresh))
+    match serving.plan.as_ref() {
+        Some(plan) => {
+            // Solo block as a one-member window: same compiled inner loop
+            // the batched path runs, same bit-exact results.
+            let batches = vec![vec![MemberSegment { block: block.as_ref(), xs }]];
+            let res = execute_plan_batch(plan, &[block.as_ref()], &batches)
+                .map_err(|e| ServeError::Sim(e.to_string()))?;
+            let outputs = res
+                .per_member
+                .into_iter()
+                .next()
+                .and_then(|m| m.segments.into_iter().next())
+                .map(|s| s.outputs)
+                .unwrap_or_default();
+            Ok((outputs, res.cycles, serving.outcome.mapping.ii, fresh))
+        }
+        None => {
+            let res = simulate(&serving.outcome.mapping, block, &ctx.cgra, xs)
+                .map_err(|e| ServeError::Sim(e.to_string()))?;
+            Ok((res.outputs, res.cycles, serving.outcome.mapping.ii, fresh))
+        }
+    }
+}
+
+/// Compile the execution plan for a freshly built cache entry, honouring
+/// the backend knob. Compilation failure is survivable by design: log
+/// loudly and serve the entry off the scalar interpreter instead — a
+/// degraded-throughput entry, never a lost ticket.
+fn compile_serving_plan(key: &str, outcome: &MapOutcome, ctx: &WorkerCtx) -> Option<ExecPlan> {
+    if ctx.backend != SimBackend::Compiled {
+        return None;
+    }
+    match try_compile_plan(outcome, &ctx.cgra) {
+        Ok(plan) => Some(plan),
+        Err(e) => {
+            crate::log_warn!(
+                "execution-plan compile failed for {key} ({e}); serving falls back to the scalar interpreter"
+            );
+            None
+        }
+    }
+}
+
+/// The fallible half of plan compilation, isolated so the
+/// `coordinator::plan` failpoint can early-return an `Err` without
+/// touching the caller's fallback handling.
+fn try_compile_plan(outcome: &MapOutcome, cgra: &StreamingCgra) -> Result<ExecPlan> {
+    crate::fail_point_error!("coordinator::plan", |msg: String| Err(Error::Runtime(msg)));
+    ExecPlan::for_outcome(outcome, cgra)
 }
 
 /// Serve one batching window: shed expired members at pickup, then fetch
@@ -1979,13 +2035,16 @@ fn attempt_window(
                 .collect()
         })
         .collect();
-    let sim = simulate_fused_batch(
-        &serving.outcome.mapping,
-        &serving.outcome.tags,
-        &blocks,
-        &ctx.cgra,
-        &batches,
-    );
+    let sim = match serving.plan.as_ref() {
+        Some(plan) => execute_plan_batch(plan, &blocks, &batches),
+        None => simulate_fused_batch(
+            &serving.outcome.mapping,
+            &serving.outcome.tags,
+            &blocks,
+            &ctx.cgra,
+            &batches,
+        ),
+    };
     match sim {
         Ok(res) => {
             let w = requests.len();
@@ -2029,7 +2088,8 @@ fn fused_serving(
         let mut bopts = ctx.opts.clone();
         bopts.ii_slack = bopts.ii_slack.max(MapperOptions::fused().ii_slack);
         let outcome = map_unit(MapUnit::Bundle(bundle), &ctx.cgra, &bopts)?;
-        Ok(ServingMapping { outcome, bundle: Some(Arc::clone(bundle)) })
+        let plan = compile_serving_plan(&key, &outcome, ctx);
+        Ok(ServingMapping { outcome, bundle: Some(Arc::clone(bundle)), plan })
     })
 }
 
@@ -2254,7 +2314,7 @@ mod tests {
         let (_, fresh) = cache
             .get_or_map("flaky", &metrics, || {
                 let outcome = map_unit(MapUnit::Single(&block), &cgra, &opts)?;
-                Ok(ServingMapping { outcome, bundle: None })
+                Ok(ServingMapping { outcome, bundle: None, plan: None })
             })
             .unwrap();
         assert!(fresh, "the post-TTL request rebuilds");
@@ -2479,7 +2539,7 @@ mod tests {
         let fill = |key: &str| {
             cache
                 .get_or_map(key, &metrics, || {
-                    Ok(ServingMapping { outcome: outcome.clone(), bundle: None })
+                    Ok(ServingMapping { outcome: outcome.clone(), bundle: None, plan: None })
                 })
                 .unwrap()
         };
@@ -2560,7 +2620,7 @@ mod tests {
         let opts = MapperOptions::sparsemap();
         let build = || {
             let outcome = map_unit(MapUnit::Single(&block), &cgra, &opts)?;
-            Ok(ServingMapping { outcome, bundle: None })
+            Ok(ServingMapping { outcome, bundle: None, plan: None })
         };
         let (_, fresh) = cache.get_or_map("dead", &metrics, build).unwrap();
         assert!(fresh);

@@ -145,6 +145,38 @@
 //!   the bundle's combined mask fingerprint) and serves mixed
 //!   fused/unfused traffic.
 //!
+//! ## Simulation backends: compiled plans, interpreter oracle
+//!
+//! The serving tier's per-window hot path is cycle-level simulation, and
+//! it runs on one of two backends with **identical semantics**:
+//!
+//! * **Compiled** (default) — [`sim::ExecPlan`] is compiled ONCE per
+//!   cached mapping (`ExecPlan::for_outcome`, under the mapping cache's
+//!   single-flight guard, evicted with the entry): a flattened slot-major
+//!   op array with pre-resolved operand sources (LRF slot / GRF index /
+//!   bus hop), precomputed weight indices and structure-of-arrays
+//!   per-iteration state. Every hazard the interpreter checks per cycle
+//!   (PE/bus exclusiveness, GRF write ports, register pressure) is a
+//!   static property of the modulo schedule, so compilation verifies them
+//!   all up front and [`sim::execute_plan_batch`] is pure arithmetic —
+//!   windows execute as tight inner loops with no per-cycle HashMap
+//!   dispatch. `fused3/plan_compile` benches the one-time cost; the
+//!   `*_compiled` serving rows measure the payoff.
+//! * **Interpreter** — the scalar lockstep pass
+//!   ([`sim::simulate_fused_batch`]), retained per the hot-path-rewrite
+//!   workflow below as the differential oracle.
+//!   `tests/sim_equivalence.rs` holds the two backends **bit-identical**
+//!   (outputs, cycles, per-segment shares, COPs/MCIDs, `pe_busy`) across
+//!   the paper blocks, the canonical bundle, wide blocks and randomized
+//!   instances, and plan compilation deterministic.
+//!
+//! The `[coordinator] sim_backend` knob (`compiled` | `interpreter`)
+//! selects the backend; the `SPARSEMAP_SIM_BACKEND` env var overrides the
+//! config (CI runs the whole suite once per backend). A mapping whose
+//! plan fails to compile serves off the interpreter instead — a loud,
+//! logged fallback (`coordinator::plan` failpoint locks it), never a lost
+//! ticket.
+//!
 //! ## Hot-path rewrites are oracle-tested
 //!
 //! The required workflow for optimizing any mapper hot path: move the old

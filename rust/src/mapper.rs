@@ -242,6 +242,14 @@ impl MapOutcome {
         per_block_stats(&self.mapping.s, &self.tags)
     }
 
+    /// Everything compiling an execution plan needs from an outcome: the
+    /// verified mapping plus its node → member provenance. This is the
+    /// compiled simulation backend's contract with the mapper
+    /// (`crate::sim::ExecPlan::for_outcome` consumes it).
+    pub fn plan_inputs(&self) -> (&Mapping, &BlockTags) {
+        (&self.mapping, &self.tags)
+    }
+
     /// The `(II, retry)` pair that produced the winning mapping.
     pub fn winning_attempt(&self) -> (usize, u64) {
         *self.attempts.last().expect("a successful outcome records its winning attempt")

@@ -34,6 +34,17 @@
 //! [`simulate_fused`] is the one-segment-per-member wrapper (equal-length
 //! streams, per-block outputs and COPs/MCIDs) and [`simulate`] the
 //! single-block wrapper over the same core.
+//!
+//! ## Two backends, one semantics
+//!
+//! This scalar interpreter is the **reference semantics** — and, per the
+//! crate's hot-path-rewrite discipline, the differential oracle for the
+//! compiled backend in [`plan`]: [`ExecPlan`] pre-resolves every
+//! per-cycle decision once at mapping time and [`execute_plan_batch`]
+//! replays a window as tight inner loops, bit-identical to this
+//! interpreter on every field of [`BatchSimResult`]
+//! (`tests/sim_equivalence.rs`). The serving tier picks the backend via
+//! `[coordinator] sim_backend`.
 
 use std::collections::HashMap;
 
@@ -42,8 +53,12 @@ use crate::bind::{BusAt, Mapping, Placement, Route};
 use crate::dfg::fuse::BlockTags;
 use crate::dfg::{EdgeKind, NodeId, NodeKind};
 use crate::error::{Error, Result};
-use crate::mapper::per_block_stats;
+use crate::mapper::{per_block_stats, BlockStats};
 use crate::sparse::SparseBlock;
+
+pub mod plan;
+
+pub use plan::{execute_plan_batch, ExecPlan};
 
 /// Result of simulating a mapping over an input stream.
 #[derive(Clone, Debug)]
@@ -63,14 +78,22 @@ pub struct SimResult {
 }
 
 impl SimResult {
-    /// Average PE utilization over the run.
+    /// Average PE utilization over the run; `0.0` for a zero-cycle run
+    /// (nothing executed, so nothing was busy — never `NaN`).
     pub fn pe_utilization(&self) -> f64 {
+        if self.cycles == 0 || self.pe_busy.is_empty() {
+            return 0.0;
+        }
         let busy: u64 = self.pe_busy.iter().sum();
         busy as f64 / (self.pe_busy.len() as f64 * self.cycles as f64)
     }
 
-    /// Throughput in iterations per cycle (→ `1/II` in steady state).
+    /// Throughput in iterations per cycle (→ `1/II` in steady state);
+    /// `0.0` for a zero-cycle run — never `NaN`.
     pub fn throughput(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
         self.iterations as f64 / self.cycles as f64
     }
 }
@@ -101,15 +124,22 @@ pub struct FusedSimResult {
 
 impl FusedSimResult {
     /// Average PE utilization over the run — the quantity fusion exists to
-    /// raise.
+    /// raise. `0.0` for a zero-cycle run — never `NaN`.
     pub fn pe_utilization(&self) -> f64 {
+        if self.cycles == 0 || self.pe_busy.is_empty() {
+            return 0.0;
+        }
         let busy: u64 = self.pe_busy.iter().sum();
         busy as f64 / (self.pe_busy.len() as f64 * self.cycles as f64)
     }
 
     /// Throughput in (fused) iterations per cycle (→ `1/II` in steady
     /// state — one fused iteration advances *every* member by one).
+    /// `0.0` for a zero-cycle run — never `NaN`.
     pub fn throughput(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
         self.iterations as f64 / self.cycles as f64
     }
 }
@@ -209,18 +239,108 @@ impl<'a> MemberStream<'a> {
     }
 
     fn input(&self, iter: usize, ch: usize) -> f32 {
-        match self.locate(iter) {
+        self.input_at(self.locate(iter), ch)
+    }
+
+    fn weight(&self, iter: usize, ch: usize, kr: usize) -> f32 {
+        self.weight_at(self.locate(iter), ch, kr)
+    }
+
+    /// [`Self::input`] against a precomputed [`Self::locate`] result —
+    /// the compiled backend resolves each member's location once per
+    /// iteration instead of once per node.
+    fn input_at(&self, loc: Option<(usize, usize)>, ch: usize) -> f32 {
+        match loc {
             Some((seg, local)) => self.segments[seg].xs[local][ch],
             None => 0.0,
         }
     }
 
-    fn weight(&self, iter: usize, ch: usize, kr: usize) -> f32 {
-        match self.locate(iter) {
+    /// [`Self::weight`] against a precomputed [`Self::locate`] result.
+    fn weight_at(&self, loc: Option<(usize, usize)>, ch: usize, kr: usize) -> f32 {
+        match loc {
             Some((seg, _)) => self.segments[seg].block.weight(ch, kr),
             None => self.fallback.weight(ch, kr),
         }
     }
+}
+
+/// Validate a batched window against the member roster and resolve each
+/// member's segment list into a [`MemberStream`]. Shared by the scalar
+/// interpreter and the compiled-plan backend so both reject malformed
+/// windows with identical errors.
+fn build_member_streams<'a>(
+    members: usize,
+    blocks: &[&'a SparseBlock],
+    batches: &'a [Vec<MemberSegment<'a>>],
+) -> Result<Vec<MemberStream<'a>>> {
+    if blocks.len() != members || batches.len() != members {
+        return Err(Error::Workload(format!(
+            "batched fused simulation of {members} members got {} blocks and {} segment lists",
+            blocks.len(),
+            batches.len()
+        )));
+    }
+    let mut streams = Vec::with_capacity(blocks.len());
+    for (bi, (&b, segs)) in blocks.iter().zip(batches).enumerate() {
+        for seg in segs {
+            if seg.block.mask_fingerprint() != b.mask_fingerprint() {
+                return Err(Error::Workload(format!(
+                    "member {bi} ('{}') segment block '{}' has a different mask structure",
+                    b.name, seg.block.name
+                )));
+            }
+            if let Some(bad) = seg.xs.iter().find(|x| x.len() != b.c) {
+                return Err(Error::Workload(format!(
+                    "member {bi} ('{}') input vector of length {} for {} channels",
+                    b.name,
+                    bad.len(),
+                    b.c
+                )));
+            }
+        }
+        streams.push(MemberStream::new(segs, b));
+    }
+    Ok(streams)
+}
+
+/// Split one lockstep pass's total across segments proportionally to
+/// iteration counts (flat member-major order, cumulative-prefix rounding:
+/// shares sum *exactly* to the total) and package per-member results.
+/// Shared by both simulation backends so attribution rounding can never
+/// drift between them.
+fn attribute_segments(
+    total_cycles: u64,
+    outputs: Vec<Vec<Vec<Vec<f32>>>>,
+    stats: Vec<BlockStats>,
+    total_req_iters: u64,
+) -> Vec<MemberBatchSim> {
+    let mut acc: u64 = 0;
+    let mut first_segment = true;
+    let mut per_member = Vec::with_capacity(outputs.len());
+    for (segs, st) in outputs.into_iter().zip(stats) {
+        let mut segments = Vec::with_capacity(segs.len());
+        for outs in segs {
+            let m = outs.len() as u64;
+            let cycles = if total_req_iters == 0 {
+                // Degenerate all-empty window: the pass still pays the
+                // makespan once — charge it to the first segment.
+                if first_segment {
+                    total_cycles
+                } else {
+                    0
+                }
+            } else {
+                total_cycles * (acc + m) / total_req_iters
+                    - total_cycles * acc / total_req_iters
+            };
+            first_segment = false;
+            acc += m;
+            segments.push(SegmentSim { outputs: outs, cycles });
+        }
+        per_member.push(MemberBatchSim { segments, cops: st.cops, mcids: st.mcids });
+    }
+    per_member
 }
 
 /// Simulate `mapping` over `xs` (one input vector per iteration — each of
@@ -333,34 +453,7 @@ pub fn simulate_fused_batch(
             g.len()
         )));
     }
-    if blocks.len() != tags.members() || batches.len() != tags.members() {
-        return Err(Error::Workload(format!(
-            "batched fused simulation of {} members got {} blocks and {} segment lists",
-            tags.members(),
-            blocks.len(),
-            batches.len()
-        )));
-    }
-    let mut streams = Vec::with_capacity(blocks.len());
-    for (bi, (&b, segs)) in blocks.iter().zip(batches).enumerate() {
-        for seg in segs {
-            if seg.block.mask_fingerprint() != b.mask_fingerprint() {
-                return Err(Error::Workload(format!(
-                    "member {bi} ('{}') segment block '{}' has a different mask structure",
-                    b.name, seg.block.name
-                )));
-            }
-            if let Some(bad) = seg.xs.iter().find(|x| x.len() != b.c) {
-                return Err(Error::Workload(format!(
-                    "member {bi} ('{}') input vector of length {} for {} channels",
-                    b.name,
-                    bad.len(),
-                    b.c
-                )));
-            }
-        }
-        streams.push(MemberStream::new(segs, b));
-    }
+    let streams = build_member_streams(tags.members(), blocks, batches)?;
     let n_iters = streams.iter().map(MemberStream::total).max().unwrap_or(0);
     let ii = s.ii as u64;
     let makespan = s.makespan() as u64;
@@ -525,37 +618,11 @@ pub fn simulate_fused_batch(
         }
     }
 
-    // Per-member schedule statistics plus per-segment cycle attribution:
-    // the pass total is split proportionally to segment iteration counts
-    // (flat member-major segment order), rounding by cumulative prefix so
-    // the shares sum exactly to `total_cycles`.
+    // Per-member schedule statistics plus per-segment cycle attribution
+    // (shared with the compiled backend — see `attribute_segments`).
     let stats = per_block_stats(s, tags);
     let total_req_iters: u64 = streams.iter().map(|st| st.total() as u64).sum();
-    let mut acc: u64 = 0;
-    let mut first_segment = true;
-    let mut per_member = Vec::with_capacity(blocks.len());
-    for (segs, st) in outputs.into_iter().zip(stats) {
-        let mut segments = Vec::with_capacity(segs.len());
-        for outs in segs {
-            let m = outs.len() as u64;
-            let cycles = if total_req_iters == 0 {
-                // Degenerate all-empty window: the pass still pays the
-                // makespan once — charge it to the first segment.
-                if first_segment {
-                    total_cycles
-                } else {
-                    0
-                }
-            } else {
-                total_cycles * (acc + m) / total_req_iters
-                    - total_cycles * acc / total_req_iters
-            };
-            first_segment = false;
-            acc += m;
-            segments.push(SegmentSim { outputs: outs, cycles });
-        }
-        per_member.push(MemberBatchSim { segments, cops: st.cops, mcids: st.mcids });
-    }
+    let per_member = attribute_segments(total_cycles, outputs, stats, total_req_iters);
     Ok(BatchSimResult {
         per_member,
         cycles: total_cycles,
@@ -696,6 +763,53 @@ mod tests {
         }
         let err = simulate_and_check(&bad, &nb.block, &cgra, 8, 3);
         assert!(err.is_err(), "simulator must catch PE double-booking");
+    }
+
+    #[test]
+    fn zero_cycle_results_report_zero_not_nan() {
+        // A zero-iteration run can produce cycles == 0 (empty schedule):
+        // the utilization/throughput accessors must degrade to 0.0, not
+        // NaN — serving metrics aggregate these values.
+        let empty = SimResult {
+            outputs: Vec::new(),
+            cycles: 0,
+            iterations: 0,
+            pe_busy: Vec::new(),
+            lrf_peak: 0,
+            grf_peak: 0,
+        };
+        assert_eq!(empty.pe_utilization(), 0.0);
+        assert_eq!(empty.throughput(), 0.0);
+        let fused = FusedSimResult {
+            per_block: Vec::new(),
+            cycles: 0,
+            iterations: 0,
+            pe_busy: vec![0; 16],
+            lrf_peak: 0,
+            grf_peak: 0,
+        };
+        assert_eq!(fused.pe_utilization(), 0.0);
+        assert_eq!(fused.throughput(), 0.0);
+    }
+
+    #[test]
+    fn empty_stream_is_finite_in_both_backends() {
+        // An empty input stream (zero iterations) still pays the mapping's
+        // makespan once; the derived rates stay finite on the interpreter
+        // path and the compiled plan agrees on the cycle count.
+        let cgra = StreamingCgra::paper_default();
+        let nb = &paper_blocks()[0];
+        let out = map_block(&nb.block, &cgra, &MapperOptions::sparsemap()).unwrap();
+        let res = simulate(&out.mapping, &nb.block, &cgra, &[]).unwrap();
+        assert_eq!(res.iterations, 0);
+        assert!(res.pe_utilization().is_finite());
+        assert!(res.throughput().is_finite());
+        assert_eq!(res.throughput(), 0.0, "no iterations → zero throughput");
+        let plan = ExecPlan::for_outcome(&out, &cgra).unwrap();
+        let batches: Vec<Vec<MemberSegment<'_>>> = vec![Vec::new()];
+        let planned = execute_plan_batch(&plan, &[&nb.block], &batches).unwrap();
+        assert_eq!(planned.cycles, res.cycles);
+        assert_eq!(planned.iterations, 0);
     }
 
     #[test]

@@ -1,0 +1,484 @@
+//! Compiled execution plans: the serving tier's fast simulation backend.
+//!
+//! [`ExecPlan::compile`] lowers a verified `(Mapping, BlockTags,
+//! StreamingCgra)` triple ONCE into a flattened op array with every
+//! per-cycle decision of the scalar interpreter resolved ahead of time:
+//! operand sources (producer register plus its physical transport — LRF
+//! distance, GRF index, or claimed bus hops), weight indices
+//! `(member, channel, kernel)`, and output routing.
+//! [`execute_plan_batch`] then runs a whole request window as tight
+//! per-iteration inner loops over the op array — no HashMaps, no
+//! `BlockTags` provenance lookups, no per-cycle dispatch.
+//!
+//! ## Why execution cannot fault
+//!
+//! The scalar interpreter ([`super::simulate_fused_batch`]) doubles as a
+//! bug detector: it re-checks PE exclusiveness, bus exclusiveness and GRF
+//! write ports every cycle. Those hazards are *static* properties of a
+//! modulo-scheduled mapping — node `v` occupies the same resources in
+//! every iteration — so the plan compiler runs the full battery once
+//! ([`Mapping::verify`], the register-pressure analysis, a per-slot GRF
+//! write-port check) and **compilation fails** wherever the interpreter
+//! would fault. What remains at execution time is pure arithmetic,
+//! evaluated in the interpreter's exact operand order (f32 addition is
+//! order-sensitive), so results stay bit-identical —
+//! `tests/sim_equivalence.rs` holds the two backends together on every
+//! field of [`BatchSimResult`].
+//!
+//! Plans are compiled at coordinator registration time under the mapping
+//! cache's single-flight guard, cached alongside the mapping in its LRU
+//! entry, and evicted with it. The interpreter is NOT retired: it is the
+//! differential oracle, per the crate's hot-path-rewrite discipline, and
+//! the `[coordinator] sim_backend` knob (`SPARSEMAP_SIM_BACKEND` env
+//! override) swaps it back onto the serving path end to end.
+
+use crate::arch::StreamingCgra;
+use crate::bind::{Mapping, Placement, Route};
+use crate::dfg::fuse::BlockTags;
+use crate::dfg::{EdgeKind, NodeId, NodeKind};
+use crate::error::{Error, Result};
+use crate::mapper::{per_block_stats, BlockStats, MapOutcome};
+use crate::sparse::SparseBlock;
+
+use super::{
+    attribute_segments, build_member_streams, register_pressure, BatchSimResult, MemberSegment,
+    MemberStream,
+};
+
+/// Pre-resolved physical transport of one operand, fixed at compile time.
+/// Execution reads only the producer register; the hop records what the
+/// compiler validated (and what introspection reads).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Hop {
+    /// Broadcast on input (column) bus `col` — the producer is a read.
+    InputBus { col: u32 },
+    /// Held in the producer PE's LRF for `dist` cycles.
+    Lrf { dist: u32 },
+    /// Parked in the global register file (dense plan-local index, one
+    /// per GRF-routed edge in edge order).
+    Grf { index: u32 },
+    /// Bus-routed PE→PE transfer claiming `hops` row/column buses (0 for
+    /// a same-PE or mesh-neighbour transfer).
+    Bus { hops: u32 },
+    /// Write-back on output (row) bus `row`.
+    OutputBus { row: u32 },
+}
+
+/// One pre-resolved operand: producer register plus physical transport.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Operand {
+    /// Producer's register in the per-iteration value array (node ids
+    /// double as register indices).
+    pub src: u32,
+    /// The transport the compiler resolved for this fetch.
+    pub hop: Hop,
+}
+
+/// One entry of the flattened op array, every index resolved ahead of
+/// time. `dst` is the node's own register.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum PlanOp {
+    /// Stream channel `ch` of member `member`'s input into `dst`.
+    Read { dst: u32, member: u32, ch: u32 },
+    /// `dst = a · weight(member, ch, kr)` — weights resolve per segment.
+    Mul { dst: u32, a: Operand, member: u32, ch: u32, kr: u32 },
+    /// Sum `len` operands starting at `first` in the operand pool, in the
+    /// graph's predecessor order (f32 addition order is semantics).
+    Add { dst: u32, first: u32, len: u32 },
+    /// Caching operation: pass the operand through.
+    Cop { dst: u32, a: Operand },
+    /// Write kernel `kr` of member `member`'s output for the owning
+    /// segment (padded iterations discard the value).
+    Write { dst: u32, a: Operand, member: u32, kr: u32 },
+}
+
+/// A mapping compiled into a flat execution program.
+///
+/// Compilation is deterministic — compiling the same
+/// `(Mapping, BlockTags, StreamingCgra)` twice yields structurally
+/// identical plans (`PartialEq` holds; `tests/sim_equivalence.rs` locks
+/// the property) — so a cached plan is a pure function of its cache key.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExecPlan {
+    ii: usize,
+    makespan: u64,
+    members: usize,
+    n_nodes: usize,
+    /// Ops in schedule-time order `(t(v), topo position)`: a valid
+    /// topological order for every lockstep iteration and exactly the
+    /// order the interpreter visits one iteration's nodes.
+    ops: Vec<PlanOp>,
+    /// Flattened Add-operand pool (predecessor order per Add).
+    operands: Vec<Operand>,
+    /// Scheduled node count per PE (row-major). Every placed node fires
+    /// exactly once per lockstep iteration, so `pe_busy` is this times
+    /// the iteration count — the closed form of the interpreter's
+    /// per-cycle busy accounting.
+    pe_nodes: Vec<u64>,
+    /// Per-member schedule statistics (COPs / MCIDs).
+    stats: Vec<BlockStats>,
+    lrf_peak: usize,
+    grf_peak: usize,
+}
+
+fn missing_operand(v: NodeId, what: &str) -> Error {
+    Error::Workload(format!("{what} node {v} has no operand edge"))
+}
+
+impl ExecPlan {
+    /// Compile a mapping into an execution plan, running the full static
+    /// battery the interpreter otherwise re-checks per cycle: compilation
+    /// fails — instead of producing a plan that could fault mid-window —
+    /// on any mapping the interpreter would reject.
+    pub fn compile(
+        mapping: &Mapping,
+        tags: &BlockTags,
+        cgra: &StreamingCgra,
+    ) -> Result<ExecPlan> {
+        let s = &mapping.s;
+        let g = &s.g;
+        if tags.len() != g.len() {
+            return Err(Error::Workload(format!(
+                "block tags cover {} nodes but the mapping has {}",
+                tags.len(),
+                g.len()
+            )));
+        }
+        // PE/bus exclusiveness and routing invariants, once instead of
+        // per cycle (hazards are static under modulo scheduling).
+        mapping.verify(cgra)?;
+        let (lrf_peak, grf_peak) = register_pressure(mapping, cgra)?;
+        let ii = s.ii;
+
+        // GRF write ports, statically: a slot's writers recur every II
+        // cycles, so the steady-state count per slot must fit the ports
+        // (the interpreter checks the same set cycle by cycle). Dense
+        // GRF indices are handed out in edge order along the way.
+        let mut writers_per_slot: Vec<Vec<NodeId>> = vec![Vec::new(); ii];
+        let mut grf_index: Vec<Option<u32>> = vec![None; g.edges().len()];
+        let mut next_grf = 0u32;
+        for (idx, e) in g.edges().iter().enumerate() {
+            if mapping.route_of_edge(idx) == Some(Route::Grf) {
+                grf_index[idx] = Some(next_grf);
+                next_grf += 1;
+                let slot = (s.t[e.src] + 1) % ii;
+                if !writers_per_slot[slot].contains(&e.src) {
+                    writers_per_slot[slot].push(e.src);
+                }
+            }
+        }
+        for (slot, writers) in writers_per_slot.iter().enumerate() {
+            if writers.len() > cgra.grf_write_ports {
+                return Err(Error::SimFault {
+                    cycle: slot as u64,
+                    reason: format!(
+                        "{} GRF writes in one cycle (ports {})",
+                        writers.len(),
+                        cgra.grf_write_ports
+                    ),
+                });
+            }
+        }
+
+        // Resolve one operand edge into (producer register, transport).
+        let operand_of = |idx: usize| -> Result<Operand> {
+            let e = g.edge(idx);
+            let hop = match e.kind {
+                EdgeKind::Input => match mapping.placements[e.src] {
+                    Placement::InputBus(col) => Hop::InputBus { col: col as u32 },
+                    _ => {
+                        return Err(Error::Workload(format!(
+                            "read {} not on an input bus",
+                            e.src
+                        )))
+                    }
+                },
+                EdgeKind::Output => match mapping.placements[e.dst] {
+                    Placement::OutputBus(row) => Hop::OutputBus { row: row as u32 },
+                    _ => {
+                        return Err(Error::Workload(format!(
+                            "write {} not on an output bus",
+                            e.dst
+                        )))
+                    }
+                },
+                EdgeKind::Internal => match mapping.route_of_edge(idx) {
+                    Some(Route::Grf) => Hop::Grf {
+                        index: grf_index[idx].expect("grf-routed edge was indexed above"),
+                    },
+                    Some(Route::Lrf) => {
+                        Hop::Lrf { dist: (s.t[e.dst] - s.t[e.src]) as u32 }
+                    }
+                    Some(Route::Bus) => {
+                        Hop::Bus { hops: mapping.bus_claims_of_edge(idx).len() as u32 }
+                    }
+                    None => {
+                        return Err(Error::RouteFailed {
+                            ii: mapping.ii,
+                            reason: format!("internal dep {}→{} unrouted", e.src, e.dst),
+                        })
+                    }
+                },
+            };
+            Ok(Operand { src: e.src as u32, hop })
+        };
+
+        // Flatten in schedule-time order `(t(v), topo position)`: deps
+        // satisfy t(src) ≤ t(dst), and the topo tiebreak puts same-cycle
+        // producers (reads) before their consumers — the interpreter's
+        // in-slot dispatch order, replayed iteration by iteration.
+        let topo = g.topo_order();
+        let mut topo_pos = vec![0usize; g.len()];
+        for (i, &v) in topo.iter().enumerate() {
+            topo_pos[v] = i;
+        }
+        let mut order: Vec<NodeId> = g.nodes().collect();
+        order.sort_by_key(|&v| (s.t[v], topo_pos[v]));
+
+        let mut ops = Vec::with_capacity(g.len());
+        let mut operands = Vec::new();
+        let mut pe_nodes = vec![0u64; cgra.num_pes()];
+        for v in order {
+            if let Placement::Pe(pe) = mapping.placements[v] {
+                pe_nodes[cgra.pe_index(pe)] += 1;
+            }
+            let member = tags.block_of(v) as u32;
+            let dst = v as u32;
+            let op = match g.kind(v) {
+                NodeKind::Read { ch, .. } => PlanOp::Read { dst, member, ch: ch as u32 },
+                NodeKind::Mul { ch, kr } => {
+                    let (idx, _) =
+                        g.in_edges(v).next().ok_or_else(|| missing_operand(v, "mul"))?;
+                    PlanOp::Mul {
+                        dst,
+                        a: operand_of(idx)?,
+                        member,
+                        ch: ch as u32,
+                        kr: kr as u32,
+                    }
+                }
+                NodeKind::Add { .. } => {
+                    let first = operands.len() as u32;
+                    for (idx, _) in g.in_edges(v) {
+                        operands.push(operand_of(idx)?);
+                    }
+                    let len = operands.len() as u32 - first;
+                    PlanOp::Add { dst, first, len }
+                }
+                NodeKind::Cop { .. } => {
+                    let (idx, _) =
+                        g.in_edges(v).next().ok_or_else(|| missing_operand(v, "cop"))?;
+                    PlanOp::Cop { dst, a: operand_of(idx)? }
+                }
+                NodeKind::Write { kr } => {
+                    let (idx, _) =
+                        g.in_edges(v).next().ok_or_else(|| missing_operand(v, "write"))?;
+                    PlanOp::Write { dst, a: operand_of(idx)?, member, kr: kr as u32 }
+                }
+            };
+            ops.push(op);
+        }
+
+        Ok(ExecPlan {
+            ii,
+            makespan: s.makespan() as u64,
+            members: tags.members(),
+            n_nodes: g.len(),
+            ops,
+            operands,
+            pe_nodes,
+            stats: per_block_stats(s, tags),
+            lrf_peak,
+            grf_peak,
+        })
+    }
+
+    /// Compile the plan for a mapper outcome — the coordinator's entry
+    /// point (see [`MapOutcome::plan_inputs`]).
+    pub fn for_outcome(outcome: &MapOutcome, cgra: &StreamingCgra) -> Result<ExecPlan> {
+        let (mapping, tags) = outcome.plan_inputs();
+        ExecPlan::compile(mapping, tags, cgra)
+    }
+
+    /// Initiation interval of the compiled mapping.
+    pub fn ii(&self) -> usize {
+        self.ii
+    }
+
+    /// Member count the plan serves (1 for an unfused block).
+    pub fn members(&self) -> usize {
+        self.members
+    }
+
+    /// Flattened op count (== node count of the source graph).
+    pub fn num_ops(&self) -> usize {
+        self.ops.len()
+    }
+}
+
+/// Run a batched request window off a compiled plan: the plan-backed twin
+/// of [`super::simulate_fused_batch`], bit-identical on every field of
+/// [`BatchSimResult`] (`tests/sim_equivalence.rs` enforces this).
+/// `blocks`/`batches` follow the same member-roster contract and
+/// malformed windows are rejected with the same errors; mapping-level
+/// hazards cannot occur here — they failed compilation instead.
+pub fn execute_plan_batch(
+    plan: &ExecPlan,
+    blocks: &[&SparseBlock],
+    batches: &[Vec<MemberSegment<'_>>],
+) -> Result<BatchSimResult> {
+    let streams = build_member_streams(plan.members, blocks, batches)?;
+    let n_iters = streams.iter().map(MemberStream::total).max().unwrap_or(0);
+    let total_cycles = (n_iters.max(1) as u64 - 1) * plan.ii as u64 + plan.makespan;
+
+    // Per-member, per-segment output planes, member-kernel-indexed.
+    let mut outputs: Vec<Vec<Vec<Vec<f32>>>> = blocks
+        .iter()
+        .zip(batches)
+        .map(|(b, segs)| {
+            segs.iter().map(|seg| vec![vec![0.0; b.k]; seg.xs.len()]).collect()
+        })
+        .collect();
+
+    // Structure-of-arrays per-iteration state: one register per node,
+    // rewritten every iteration (values are functional per iteration —
+    // no cross-iteration state survives), plus each member's segment
+    // location resolved once per iteration instead of once per node.
+    let mut values = vec![0.0f32; plan.n_nodes];
+    let mut locs: Vec<Option<(usize, usize)>> = vec![None; plan.members];
+    for iter in 0..n_iters {
+        for (m, st) in streams.iter().enumerate() {
+            locs[m] = st.locate(iter);
+        }
+        for op in &plan.ops {
+            match *op {
+                PlanOp::Read { dst, member, ch } => {
+                    let m = member as usize;
+                    values[dst as usize] = streams[m].input_at(locs[m], ch as usize);
+                }
+                PlanOp::Mul { dst, a, member, ch, kr } => {
+                    let m = member as usize;
+                    let w = streams[m].weight_at(locs[m], ch as usize, kr as usize);
+                    values[dst as usize] = values[a.src as usize] * w;
+                }
+                PlanOp::Add { dst, first, len } => {
+                    let mut acc = 0.0f32;
+                    for o in &plan.operands[first as usize..(first + len) as usize] {
+                        acc += values[o.src as usize];
+                    }
+                    values[dst as usize] = acc;
+                }
+                PlanOp::Cop { dst, a } => {
+                    values[dst as usize] = values[a.src as usize];
+                }
+                PlanOp::Write { dst, a, member, kr } => {
+                    let m = member as usize;
+                    let y = values[a.src as usize];
+                    if let Some((seg, local)) = locs[m] {
+                        outputs[m][seg][local][kr as usize] = y;
+                    }
+                    values[dst as usize] = y;
+                }
+            }
+        }
+    }
+
+    let pe_busy: Vec<u64> = plan.pe_nodes.iter().map(|&c| c * n_iters as u64).collect();
+    let total_req_iters: u64 = streams.iter().map(|st| st.total() as u64).sum();
+    let per_member =
+        attribute_segments(total_cycles, outputs, plan.stats.clone(), total_req_iters);
+    Ok(BatchSimResult {
+        per_member,
+        cycles: total_cycles,
+        iterations: n_iters,
+        pe_busy,
+        lrf_peak: plan.lrf_peak,
+        grf_peak: plan.grf_peak,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapper::{map_block, MapperOptions};
+    use crate::sim::simulate_fused_batch;
+    use crate::sparse::gen::paper_blocks;
+
+    fn stream(c: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = crate::util::rng::Pcg64::seeded(seed);
+        (0..n).map(|_| (0..c).map(|_| rng.next_normal() as f32).collect()).collect()
+    }
+
+    #[test]
+    fn plan_backed_window_matches_interpreter_bitwise() {
+        let cgra = StreamingCgra::paper_default();
+        let nb = &paper_blocks()[0];
+        let out = map_block(&nb.block, &cgra, &MapperOptions::sparsemap()).unwrap();
+        let plan = ExecPlan::for_outcome(&out, &cgra).unwrap();
+        assert_eq!(plan.members(), 1);
+        assert_eq!(plan.ii(), out.mapping.ii);
+        assert_eq!(plan.num_ops(), out.mapping.s.g.len());
+        let a = stream(nb.block.c, 5, 3);
+        let b = stream(nb.block.c, 2, 4);
+        let batches = vec![vec![
+            MemberSegment { block: &nb.block, xs: &a },
+            MemberSegment { block: &nb.block, xs: &b },
+        ]];
+        let blocks = [&nb.block];
+        let want =
+            simulate_fused_batch(&out.mapping, &out.tags, &blocks, &cgra, &batches).unwrap();
+        let got = execute_plan_batch(&plan, &blocks, &batches).unwrap();
+        assert_eq!(got.cycles, want.cycles);
+        assert_eq!(got.iterations, want.iterations);
+        assert_eq!(got.pe_busy, want.pe_busy);
+        assert_eq!(got.lrf_peak, want.lrf_peak);
+        assert_eq!(got.grf_peak, want.grf_peak);
+        for (gm, wm) in got.per_member.iter().zip(&want.per_member) {
+            assert_eq!(gm.cops, wm.cops);
+            assert_eq!(gm.mcids, wm.mcids);
+            for (gs, ws) in gm.segments.iter().zip(&wm.segments) {
+                assert_eq!(gs.cycles, ws.cycles);
+                for (gv, wv) in gs.outputs.iter().zip(&ws.outputs) {
+                    for (x, y) in gv.iter().zip(wv) {
+                        assert_eq!(x.to_bits(), y.to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compile_fails_where_the_interpreter_would_fault() {
+        // Collapse two same-slot PE ops onto one PE (the corruption
+        // sim::tests::detects_corrupted_placement feeds the interpreter):
+        // the static battery must reject it at compile time.
+        let cgra = StreamingCgra::paper_default();
+        let nb = &paper_blocks()[1];
+        let out = map_block(&nb.block, &cgra, &MapperOptions::sparsemap()).unwrap();
+        let mut bad = out.mapping.clone();
+        let ops: Vec<usize> =
+            bad.s.g.nodes().filter(|&v| bad.s.g.kind(v).is_pe_op()).collect();
+        'outer: for (i, &a) in ops.iter().enumerate() {
+            for &b in ops.iter().skip(i + 1) {
+                if bad.s.m(a) == bad.s.m(b) {
+                    bad.placements[b] = bad.placements[a];
+                    break 'outer;
+                }
+            }
+        }
+        assert!(
+            ExecPlan::compile(&bad, &out.tags, &cgra).is_err(),
+            "plan compilation must catch PE double-booking"
+        );
+    }
+
+    #[test]
+    fn compilation_is_deterministic() {
+        let cgra = StreamingCgra::paper_default();
+        let nb = &paper_blocks()[2];
+        let out = map_block(&nb.block, &cgra, &MapperOptions::sparsemap()).unwrap();
+        let a = ExecPlan::for_outcome(&out, &cgra).unwrap();
+        let b = ExecPlan::for_outcome(&out, &cgra).unwrap();
+        assert_eq!(a, b, "compiling the same mapping twice must yield identical plans");
+    }
+}

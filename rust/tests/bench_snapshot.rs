@@ -124,6 +124,7 @@ fn bench_mapper_json_schema() {
             "wide_k128/simulate_8it",
             "fused3/map_bundle_par4",
             "fused3/simulate_8it",
+            "fused3/plan_compile",
         ],
     );
     // The hot-scan rows are emitted pairwise (both or neither — the bench
@@ -149,5 +150,13 @@ fn bench_mapper_json_schema() {
     // current file with the pair).
     require("serving/fused3/shed_overload", &["serving/wide_k128/deadline_miss_rate"]);
     require("serving/wide_k128/deadline_miss_rate", &["serving/fused3/shed_overload"]);
+    // The compiled-backend rows are emitted in the same serving run as
+    // their interpreter siblings (one measures the plan path, the other
+    // the scalar oracle on identical traffic) — require them pairwise so
+    // a merge can't keep one half of a comparison.
+    require("serving/fused3/window8_compiled", &["serving/fused3/window8"]);
+    require("serving/fused3/window8", &["serving/fused3/window8_compiled"]);
+    require("serving/wide_k128/per_request_compiled", &["serving/wide_k128/per_request"]);
+    require("serving/wide_k128/per_request", &["serving/wide_k128/per_request_compiled"]);
     eprintln!("BENCH_mapper.json schema ok ({rows} rows)");
 }

@@ -236,6 +236,48 @@ fn injected_sim_error_fails_only_its_request() {
 }
 
 #[test]
+fn injected_plan_compile_failure_falls_back_to_interpreter() {
+    let _s = FailScenario::setup();
+    // The plan compiler fails once, at registration of the first entry.
+    // The mapping itself landed, so the entry serves off the scalar
+    // interpreter instead — a loud logged fallback, never a lost ticket
+    // and never a failure metric.
+    configure(
+        "coordinator::plan",
+        FaultKind::Error("injected plan fault".into()),
+        Trigger::Nth(1),
+        0,
+    );
+    let coord = Coordinator::new(&cfg_with(1));
+    let block = tiny("planerr", 2, 2, vec![true, false, true, true]);
+    let xs0 = stream_for(&block, 3, 0);
+    let xs1 = stream_for(&block, 2, 1);
+    let mut session = coord.session();
+    let first = session.enqueue(Arc::clone(&block), xs0.clone());
+    let second = session.enqueue(Arc::clone(&block), xs1.clone());
+    let r0 = first.wait().expect("plan fallback serves the ticket");
+    let r1 = second.wait().expect("the degraded entry keeps serving hits");
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.failures, 0, "the fallback absorbed the fault");
+    assert_eq!(m.cache_misses, 1, "one mapping landed (interpreter-backed)");
+    assert_eq!(m.cache_hits, 1);
+
+    // And the fallback is semantically invisible: a clean coordinator
+    // (compiled backend) produces bit-identical outputs.
+    sparsemap::util::failpoint::clear();
+    let clean = Coordinator::new(&cfg_with(1));
+    let mut cs = clean.session();
+    let c0 = cs.enqueue(Arc::clone(&block), xs0).wait().expect("clean serve ok");
+    let c1 = cs.enqueue(Arc::clone(&block), xs1).wait().expect("clean serve ok");
+    for (deg, cln) in [(&r0, &c0), (&r1, &c1)] {
+        assert_eq!(deg.outputs.len(), cln.outputs.len());
+        for (a, b) in deg.outputs.iter().flatten().zip(cln.outputs.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "fallback vs compiled outputs diverge");
+        }
+    }
+}
+
+#[test]
 fn deadline_expires_while_a_slow_job_holds_the_worker() {
     let _s = FailScenario::setup();
     // A 50 ms delay on the first job holds the single worker while the

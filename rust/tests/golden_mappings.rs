@@ -14,8 +14,11 @@
 
 use sparsemap::arch::StreamingCgra;
 use sparsemap::bind::{Mapping, Placement};
-use sparsemap::mapper::{map_block, map_bundle, MapperOptions};
+use sparsemap::mapper::{map_block, map_bundle, MapOutcome, MapperOptions};
+use sparsemap::sim::{execute_plan_batch, simulate_fused_batch, ExecPlan, MemberSegment};
 use sparsemap::sparse::gen::{fused3_bundle, paper_blocks, wide_blocks};
+use sparsemap::sparse::SparseBlock;
+use sparsemap::util::rng::Pcg64;
 
 fn golden_path() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden_mappings.txt")
@@ -40,14 +43,45 @@ fn fingerprint(m: &Mapping) -> u64 {
     h.finish()
 }
 
+/// Cross-check the two simulation backends on a pinned mapping: the
+/// compiled plan must report exactly the interpreter's pass cycles (the
+/// full bit-identity contract lives in `tests/sim_equivalence.rs`; this
+/// keeps the pinned golden mappings themselves covered by both backends).
+fn assert_plan_cycles_match(out: &MapOutcome, blocks: &[&SparseBlock], label: &str) {
+    let cgra = StreamingCgra::paper_default();
+    let plan = ExecPlan::for_outcome(out, &cgra)
+        .unwrap_or_else(|e| panic!("{label}: plan compile: {e}"));
+    let streams: Vec<Vec<Vec<f32>>> = blocks
+        .iter()
+        .enumerate()
+        .map(|(i, b)| {
+            let mut rng = Pcg64::seeded(7 + i as u64);
+            (0..4).map(|_| (0..b.c).map(|_| rng.next_normal() as f32).collect()).collect()
+        })
+        .collect();
+    let batches: Vec<Vec<MemberSegment<'_>>> = blocks
+        .iter()
+        .zip(&streams)
+        .map(|(b, xs)| vec![MemberSegment { block: b, xs }])
+        .collect();
+    let compiled = execute_plan_batch(&plan, blocks, &batches)
+        .unwrap_or_else(|e| panic!("{label}: compiled execution: {e}"));
+    let interp = simulate_fused_batch(&out.mapping, &out.tags, blocks, &cgra, &batches)
+        .unwrap_or_else(|e| panic!("{label}: interpreter: {e}"));
+    assert_eq!(
+        compiled.cycles, interp.cycles,
+        "{label}: compiled and interpreter cycle counts diverge on a pinned mapping"
+    );
+}
+
 fn render_snapshot() -> String {
     let cgra = StreamingCgra::paper_default();
     let opts = MapperOptions::sparsemap();
     let mut out = String::new();
     for nb in paper_blocks() {
-        let m = map_block(&nb.block, &cgra, &opts)
-            .unwrap_or_else(|e| panic!("{}: paper block must map: {e}", nb.label))
-            .mapping;
+        let outcome = map_block(&nb.block, &cgra, &opts)
+            .unwrap_or_else(|e| panic!("{}: paper block must map: {e}", nb.label));
+        let m = &outcome.mapping;
         m.verify(&cgra).unwrap();
         out.push_str(&format!(
             "{} ii={} cops={} mcids={} placements={:016x}\n",
@@ -55,8 +89,9 @@ fn render_snapshot() -> String {
             m.ii,
             m.cops(),
             m.mcids(),
-            fingerprint(&m)
+            fingerprint(m)
         ));
+        assert_plan_cycles_match(&outcome, &[&nb.block], nb.label);
     }
     // One wide-kernel-axis entry (k = 128 > the retired u64 mask width),
     // pinned at the shared wide operating point (`MapperOptions::wide()`):
@@ -67,17 +102,18 @@ fn render_snapshot() -> String {
         .into_iter()
         .find(|b| b.name == "wide_k128")
         .expect("wide_k128 generator");
-    let m = map_block(&wide, &cgra, &wide_opts)
-        .unwrap_or_else(|e| panic!("wide_k128: wide block must map: {e}"))
-        .mapping;
+    let wide_outcome = map_block(&wide, &cgra, &wide_opts)
+        .unwrap_or_else(|e| panic!("wide_k128: wide block must map: {e}"));
+    let m = &wide_outcome.mapping;
     m.verify(&cgra).unwrap();
     out.push_str(&format!(
         "wide_k128 ii={} cops={} mcids={} placements={:016x}\n",
         m.ii,
         m.cops(),
         m.mcids(),
-        fingerprint(&m)
+        fingerprint(m)
     ));
+    assert_plan_cycles_match(&wide_outcome, &[&wide], "wide_k128");
     // The canonical fused bundle (the three c = 4 paper blocks on one
     // fabric configuration) at the shared fused operating point
     // (`MapperOptions::fused()`). `per_block` pins each member's
@@ -101,6 +137,8 @@ fn render_snapshot() -> String {
         per_block.join(","),
         fingerprint(&fused.mapping)
     ));
+    let members: Vec<&SparseBlock> = bundle.blocks.iter().map(|b| b.as_ref()).collect();
+    assert_plan_cycles_match(&fused, &members, "fused3");
     out
 }
 

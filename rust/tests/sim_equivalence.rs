@@ -1,0 +1,224 @@
+//! Differential sim-equivalence suite: the compiled execution-plan
+//! backend (`sim::plan`) against the scalar lockstep interpreter.
+//!
+//! The interpreter is the oracle — `ExecPlan` execution must be
+//! **bit-identical** on every `BatchSimResult` field (outputs, pass
+//! cycles, per-segment cycle shares, COPs/MCIDs, `pe_busy`, register
+//! peaks) for every mapping the binder produces. The suite locks that on
+//! the seven paper blocks, the canonical `fused3` bundle, the `wide_k128`
+//! block, ragged/padded batch windows, and ≥100 randomized blocks ×
+//! window shapes; plan compilation itself must be deterministic (compile
+//! twice → identical plan) and panic-free on every mappable instance.
+
+use sparsemap::arch::StreamingCgra;
+use sparsemap::mapper::{map_unit, MapOutcome, MapUnit, MapperOptions};
+use sparsemap::sim::{
+    execute_plan_batch, simulate_fused_batch, BatchSimResult, ExecPlan, MemberSegment,
+};
+use sparsemap::sparse::gen::{fused3_bundle, paper_blocks, random_block, wide_blocks};
+use sparsemap::sparse::SparseBlock;
+use sparsemap::util::rng::Pcg64;
+
+fn stream_for(block: &SparseBlock, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..n)
+        .map(|_| (0..block.c).map(|_| rng.next_normal() as f32).collect())
+        .collect()
+}
+
+/// Field-by-field bit comparison of two batched results. `to_bits` on the
+/// outputs: NaN-safe and catches signed-zero or rounding drift that `==`
+/// on floats would wave through.
+fn assert_bit_identical(compiled: &BatchSimResult, interp: &BatchSimResult, ctx: &str) {
+    assert_eq!(compiled.cycles, interp.cycles, "{ctx}: pass cycles");
+    assert_eq!(compiled.iterations, interp.iterations, "{ctx}: iterations");
+    assert_eq!(compiled.pe_busy, interp.pe_busy, "{ctx}: pe_busy");
+    assert_eq!(compiled.lrf_peak, interp.lrf_peak, "{ctx}: lrf_peak");
+    assert_eq!(compiled.grf_peak, interp.grf_peak, "{ctx}: grf_peak");
+    assert_eq!(compiled.per_member.len(), interp.per_member.len(), "{ctx}: member count");
+    for (mi, (cm, im)) in compiled.per_member.iter().zip(&interp.per_member).enumerate() {
+        assert_eq!(cm.cops, im.cops, "{ctx}: member {mi} COPs");
+        assert_eq!(cm.mcids, im.mcids, "{ctx}: member {mi} MCIDs");
+        assert_eq!(cm.segments.len(), im.segments.len(), "{ctx}: member {mi} segment count");
+        for (si, (cs, is)) in cm.segments.iter().zip(&im.segments).enumerate() {
+            assert_eq!(cs.cycles, is.cycles, "{ctx}: member {mi} segment {si} cycle share");
+            assert_eq!(
+                cs.outputs.len(),
+                is.outputs.len(),
+                "{ctx}: member {mi} segment {si} iteration count"
+            );
+            for (it, (cv, iv)) in cs.outputs.iter().zip(&is.outputs).enumerate() {
+                assert_eq!(cv.len(), iv.len(), "{ctx}: member {mi} segment {si} iter {it}");
+                for (kr, (a, b)) in cv.iter().zip(iv).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{ctx}: member {mi} segment {si} iter {it} kernel {kr}: \
+                         compiled {a} vs interpreter {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Compile the plan twice (determinism), execute the window on both
+/// backends, and hold them bit-identical. Returns the (shared) result.
+fn run_both(
+    outcome: &MapOutcome,
+    cgra: &StreamingCgra,
+    blocks: &[&SparseBlock],
+    batches: &[Vec<MemberSegment<'_>>],
+    ctx: &str,
+) -> BatchSimResult {
+    let plan = ExecPlan::for_outcome(outcome, cgra)
+        .unwrap_or_else(|e| panic!("{ctx}: plan compile: {e}"));
+    let again = ExecPlan::for_outcome(outcome, cgra).unwrap();
+    assert_eq!(plan, again, "{ctx}: plan compilation must be deterministic");
+    let compiled = execute_plan_batch(&plan, blocks, batches)
+        .unwrap_or_else(|e| panic!("{ctx}: compiled execution: {e}"));
+    let interp =
+        simulate_fused_batch(&outcome.mapping, &outcome.tags, blocks, cgra, batches)
+            .unwrap_or_else(|e| panic!("{ctx}: interpreter: {e}"));
+    assert_bit_identical(&compiled, &interp, ctx);
+    compiled
+}
+
+#[test]
+fn paper_blocks_match_bitwise_on_ragged_windows() {
+    let cgra = StreamingCgra::paper_default();
+    let opts = MapperOptions::sparsemap().with_parallelism(1);
+    for (i, nb) in paper_blocks().iter().enumerate() {
+        let out = map_unit(MapUnit::Single(&nb.block), &cgra, &opts)
+            .unwrap_or_else(|e| panic!("{}: must map: {e}", nb.label));
+        // A ragged two-segment window: 5 + 2 iterations through one
+        // compiled configuration.
+        let xs_a = stream_for(&nb.block, 5, 1000 + i as u64);
+        let xs_b = stream_for(&nb.block, 2, 2000 + i as u64);
+        let batches = vec![vec![
+            MemberSegment { block: &nb.block, xs: &xs_a },
+            MemberSegment { block: &nb.block, xs: &xs_b },
+        ]];
+        let res = run_both(&out, &cgra, &[&nb.block], &batches, nb.label);
+        assert_eq!(res.iterations, 7, "{}", nb.label);
+        assert_eq!(res.per_member[0].segments[0].outputs.len(), 5, "{}", nb.label);
+        assert_eq!(res.per_member[0].segments[1].outputs.len(), 2, "{}", nb.label);
+    }
+}
+
+#[test]
+fn fused3_bundle_matches_bitwise_with_ragged_and_absent_members() {
+    let cgra = StreamingCgra::paper_default();
+    let opts = MapperOptions::fused().with_parallelism(1);
+    let bundle = fused3_bundle();
+    let out = map_unit(MapUnit::Bundle(&bundle), &cgra, &opts)
+        .unwrap_or_else(|e| panic!("fused3 must map: {e}"));
+    let blocks: Vec<&SparseBlock> = bundle.blocks.iter().map(|b| b.as_ref()).collect();
+
+    // Member 0 carries two segments (4 + 3), member 1 one segment (6),
+    // member 2 is absent from the window entirely — it pads with
+    // zero-input iterations on both backends.
+    let m0a = stream_for(blocks[0], 4, 71);
+    let m0b = stream_for(blocks[0], 3, 72);
+    let m1 = stream_for(blocks[1], 6, 73);
+    let batches = vec![
+        vec![
+            MemberSegment { block: blocks[0], xs: &m0a },
+            MemberSegment { block: blocks[0], xs: &m0b },
+        ],
+        vec![MemberSegment { block: blocks[1], xs: &m1 }],
+        Vec::new(),
+    ];
+    let res = run_both(&out, &cgra, &blocks, &batches, "fused3 ragged");
+    assert_eq!(res.iterations, 7, "lockstep length is the longest member total");
+    assert!(res.per_member[2].segments.is_empty(), "absent member has no segments");
+
+    // The all-empty degenerate window: zero iterations, still bit-identical
+    // (and finite — the zero-cycle guards are unit-tested in `sim`).
+    let empty = vec![Vec::new(), Vec::new(), Vec::new()];
+    let res = run_both(&out, &cgra, &blocks, &empty, "fused3 empty window");
+    assert_eq!(res.iterations, 0);
+}
+
+#[test]
+fn wide_k128_matches_bitwise() {
+    let cgra = StreamingCgra::paper_default();
+    let opts = MapperOptions::wide().with_parallelism(1);
+    let block = wide_blocks().remove(1);
+    assert_eq!(block.name, "wide_k128");
+    let out = map_unit(MapUnit::Single(&block), &cgra, &opts)
+        .unwrap_or_else(|e| panic!("wide_k128 must map: {e}"));
+    let xs_a = stream_for(&block, 3, 128);
+    let xs_b = stream_for(&block, 2, 129);
+    let batches = vec![vec![
+        MemberSegment { block: &block, xs: &xs_a },
+        MemberSegment { block: &block, xs: &xs_b },
+    ]];
+    run_both(&out, &cgra, &[&block], &batches, "wide_k128");
+}
+
+#[test]
+fn randomized_blocks_and_window_shapes_match_bitwise() {
+    // ≥100 randomized (block, window shape) instances. Every mappable
+    // instance must compile deterministically, execute panic-free, and
+    // match the interpreter bit for bit; unmappable draws are skipped
+    // (mapping coverage is `tests/properties.rs`' job, not ours).
+    let cgra = StreamingCgra::paper_default();
+    let mut opts = MapperOptions::sparsemap().with_parallelism(1);
+    opts.mis_iterations = 20_000;
+    let mut rng = Pcg64::seeded(0x51EE);
+    let mut covered = 0usize;
+    for attempt in 0..240u64 {
+        if covered >= 100 {
+            break;
+        }
+        let c = 2 + rng.index(4);
+        let k = 2 + rng.index(4);
+        let p = 0.2 + 0.4 * rng.next_f64();
+        let block = random_block(&format!("rnd{attempt}"), c, k, p, rng.next_u64());
+        let out = match map_unit(MapUnit::Single(&block), &cgra, &opts) {
+            Ok(out) => out,
+            Err(_) => continue, // unmappable draw — not this suite's concern
+        };
+        // Window shape: 1–3 segments of 0–4 iterations each (zero-length
+        // segments included — a request with an empty stream is legal).
+        let n_segs = 1 + rng.index(3);
+        let streams: Vec<Vec<Vec<f32>>> =
+            (0..n_segs).map(|s| stream_for(&block, rng.index(5), attempt * 17 + s as u64)).collect();
+        let segs: Vec<MemberSegment<'_>> = streams
+            .iter()
+            .map(|xs| MemberSegment { block: &block, xs: xs.as_slice() })
+            .collect();
+        let total: usize = streams.iter().map(Vec::len).sum();
+        let batches = vec![segs];
+        let res =
+            run_both(&out, &cgra, &[&block], &batches, &format!("rnd{attempt} c={c} k={k}"));
+        assert_eq!(res.iterations, total, "rnd{attempt}");
+        covered += 1;
+    }
+    assert!(covered >= 100, "only {covered} randomized instances covered");
+}
+
+#[test]
+fn compiled_solo_window_matches_plain_simulate() {
+    // The serving tier's solo path runs a block as a one-member window off
+    // the plan; hold that against `simulate` directly, not just against
+    // the batched interpreter.
+    let cgra = StreamingCgra::paper_default();
+    let opts = MapperOptions::sparsemap().with_parallelism(1);
+    let nb = &paper_blocks()[0];
+    let out = map_unit(MapUnit::Single(&nb.block), &cgra, &opts).unwrap();
+    let xs = stream_for(&nb.block, 6, 9);
+    let batches = vec![vec![MemberSegment { block: &nb.block, xs: &xs }]];
+    let plan = ExecPlan::for_outcome(&out, &cgra).unwrap();
+    let res = execute_plan_batch(&plan, &[&nb.block], &batches).unwrap();
+    let solo = sparsemap::sim::simulate(&out.mapping, &nb.block, &cgra, &xs).unwrap();
+    assert_eq!(res.cycles, solo.cycles, "pass cycles");
+    let seg = &res.per_member[0].segments[0];
+    assert_eq!(seg.outputs.len(), solo.outputs.len());
+    for (it, (pv, sv)) in seg.outputs.iter().zip(&solo.outputs).enumerate() {
+        for (kr, (a, b)) in pv.iter().zip(sv).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "iter {it} kernel {kr}");
+        }
+    }
+}
