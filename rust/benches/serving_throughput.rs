@@ -9,6 +9,10 @@
 //! per-member-serial semantics, one whole-bundle pass per request),
 //! `batched_request` (default batching — requests amortize one lockstep
 //! pass per window) and `window8` (one full 8-request window end to end).
+//! The sharded scenario prices the same window shape on a two-shard
+//! topology (`window8_x2shards`: both pools serving concurrently) and the
+//! cross-session window path (`cross_session_window8`: eight sessions
+//! forming one shared window per round).
 //!
 //! ```bash
 //! cargo bench --bench serving_throughput
@@ -490,6 +494,104 @@ fn main() {
             name: "serving/fused3/shed_overload".into(),
             summary: shed_row,
             iters_per_sample: count.max(1) as u64,
+        });
+    }
+
+    // Sharded serving scenario: the fused3 window shape on a two-shard
+    // topology, pinned via `with_shard_count` so neither config nor the
+    // `SPARSEMAP_SHARDS` override can move it. The bundle is resident on
+    // one shard; the paper blocks register onto the sibling, and each
+    // round drives one full 8-member window plus four solo requests so
+    // BOTH pools serve concurrently — the row is wall time per round,
+    // i.e. the cross-pool overlap win. cross_session_window8 forms each
+    // 8-rider window from eight distinct sessions: window forming is a
+    // property of the global enqueue order, and this row prices it.
+    {
+        let bundle = Arc::new(fused3_bundle());
+        let members: Vec<Arc<SparseBlock>> = bundle.blocks.clone();
+        let mut cfg = SparsemapConfig { workers: 2, queue_depth: 32, ..SparsemapConfig::default() };
+        cfg.batch_window_requests = 8;
+        cfg.batch_window_max = 0;
+        let coord = Coordinator::with_shard_count(&cfg, 2);
+        coord.register_bundle(Arc::clone(&bundle));
+        for block in &blocks {
+            coord.register_block(Arc::clone(block));
+        }
+        let mut session = coord.session();
+        // Warm the fused and solo mappings off the measurement (wait
+        // seals the warm request's window itself).
+        let warm = stream(&members[0], 2, 98);
+        let _ = session.enqueue(Arc::clone(&members[0]), warm).wait();
+        for (i, block) in blocks.iter().enumerate() {
+            let xs = stream(block, 2, 90 + i as u64);
+            let _ = session.enqueue(Arc::clone(block), xs).wait();
+        }
+
+        let iters = 16;
+        let rounds = 16u64;
+        let t0 = Instant::now();
+        for round in 0..rounds {
+            let mut batch: Vec<Ticket> = (0..8u64)
+                .map(|i| {
+                    let member = &members[(i as usize) % members.len()];
+                    let xs = stream(member, iters, round * 16 + i);
+                    session.enqueue(Arc::clone(member), xs)
+                })
+                .collect();
+            for i in 0..4u64 {
+                let block = &blocks[(i as usize) % blocks.len()];
+                let xs = stream(block, iters, round * 16 + 8 + i);
+                batch.push(session.enqueue(Arc::clone(block), xs));
+            }
+            for t in batch.drain(..) {
+                let _ = t.wait();
+            }
+        }
+        let wall = t0.elapsed();
+        let m = coord.metrics.snapshot();
+        println!(
+            "sharded x2 window8+solo: {rounds} rounds in {wall:?} → {:.2} ms/round \
+             (per-shard windows: {:?})",
+            wall.as_secs_f64() * 1e3 / rounds as f64,
+            m.shards.iter().map(|s| s.windows).collect::<Vec<_>>(),
+        );
+        let mut sharded = Summary::new();
+        sharded.add(wall.as_nanos() as f64 / rounds as f64);
+        results.push(BenchResult {
+            name: "serving/sharded/window8_x2shards".into(),
+            summary: sharded,
+            iters_per_sample: rounds,
+        });
+
+        // Cross-session window8: eight sessions, one member request each
+        // per round, forming (and sealing) one shared window per round.
+        let mut sessions: Vec<_> = (0..8).map(|_| coord.session()).collect();
+        let t0 = Instant::now();
+        for round in 0..rounds {
+            let mut window: Vec<Ticket> = sessions
+                .iter_mut()
+                .enumerate()
+                .map(|(i, s)| {
+                    let member = &members[i % members.len()];
+                    let xs = stream(member, iters, 1000 + round * 8 + i as u64);
+                    s.enqueue(Arc::clone(member), xs)
+                })
+                .collect();
+            for t in window.drain(..) {
+                let _ = t.wait();
+            }
+        }
+        let wall = t0.elapsed();
+        println!(
+            "sharded cross-session window8: {rounds} windows in {wall:?} → {:.2} ms/window",
+            wall.as_secs_f64() * 1e3 / rounds as f64,
+        );
+        let mut cross = Summary::new();
+        cross.add(wall.as_nanos() as f64 / rounds as f64);
+        results.push(BenchResult {
+            name: "serving/sharded/cross_session_window8".into(),
+            summary: cross,
+            iters_per_sample: rounds,
         });
     }
 

@@ -150,6 +150,7 @@ commands:
   artifacts                  list + smoke-run the AOT artifacts
 flags:
   --config path  --scheduler sparsemap|baseline  --iters N  --seed N
+  --shards N   (serve) worker-pool shards, overrides [coordinator] shards
 ";
 
 fn cmd_table3(args: &Args) -> Result<()> {
@@ -226,7 +227,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.get_usize("requests", 32)?;
     let iters = args.get_usize("iters", 16)?;
     let fuse = args.get_usize("fuse", 0)? != 0;
-    let coord = Coordinator::new(&cfg);
+    // --shards pins the topology explicitly (over both the config knob
+    // and SPARSEMAP_SHARDS); without it Coordinator::new resolves those.
+    let coord = match args.get_usize("shards", 0)? {
+        0 => Coordinator::new(&cfg),
+        n => Coordinator::with_shard_count(&cfg, n),
+    };
     let blocks: Vec<std::sync::Arc<crate::sparse::SparseBlock>> = paper_blocks()
         .into_iter()
         .take(4)
@@ -262,6 +268,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.total_latency_ns as f64 / 1e6 / n as f64,
         n as f64 / wall.as_secs_f64()
     );
+    for (sid, s) in m.shards.iter().enumerate() {
+        println!(
+            "shard {sid}: windows {} shed {} worker_restarts {} poisoned {} \
+             queue p50 {:.1} us p99 {:.1} us",
+            s.windows,
+            s.shed,
+            s.worker_restarts,
+            s.poisoned,
+            s.queue_ns_p50 / 1e3,
+            s.queue_ns_p99 / 1e3,
+        );
+    }
     Ok(())
 }
 

@@ -123,10 +123,26 @@ pub struct SparsemapConfig {
     pub parallelism: usize,
     /// Artifacts directory for the PJRT runtime.
     pub artifacts_dir: String,
-    /// Coordinator worker threads.
+    /// Coordinator worker threads **per shard**.
     pub workers: usize,
-    /// Coordinator bounded-queue depth (backpressure).
+    /// Coordinator bounded-queue depth (backpressure), per shard.
     pub queue_depth: usize,
+    /// Worker-pool shards: independent fabric pools, each with its own
+    /// queue, mapping cache, supervisor and poison registry. Registered
+    /// blocks/bundles are pinned to shards by a deterministic
+    /// demand-balancing assigner; ad-hoc traffic hashes onto a shard.
+    /// Must be >= 1. The `SPARSEMAP_SHARDS` env var overrides this at
+    /// coordinator construction (warn-and-keep on invalid values).
+    pub shards: usize,
+    /// Bound on requests riding open batching windows before the global
+    /// dispatch layer force-seals the oldest open window. `0` = unbounded
+    /// (windows wait for their seal triggers).
+    pub dispatch_lookahead: usize,
+    /// Warm-start manifest path: when non-empty, registrations persist
+    /// their block/bundle fingerprints here and construction replays the
+    /// file, pre-building every mapping through the normal single-flight
+    /// cache path. Empty (the default) disables warm starts.
+    pub warm_start_path: String,
     /// Coordinator mapping-cache capacity (entries). `0` = unbounded (the
     /// pre-LRU behavior); production serving should bound it.
     pub cache_capacity: usize,
@@ -186,6 +202,9 @@ impl Default for SparsemapConfig {
             artifacts_dir: "artifacts".into(),
             workers: 4,
             queue_depth: 16,
+            shards: 1,
+            dispatch_lookahead: 0,
+            warm_start_path: String::new(),
             cache_capacity: 0,
             batch_window_requests: 8,
             batch_window_max: 1024,
@@ -235,6 +254,13 @@ impl SparsemapConfig {
                 ("runtime", "artifacts_dir") => cfg.artifacts_dir = value.as_str()?.to_string(),
                 ("coordinator", "workers") => cfg.workers = value.as_int()? as usize,
                 ("coordinator", "queue_depth") => cfg.queue_depth = value.as_int()? as usize,
+                ("coordinator", "shards") => cfg.shards = value.as_int()? as usize,
+                ("coordinator", "dispatch_lookahead") => {
+                    cfg.dispatch_lookahead = value.as_int()? as usize
+                }
+                ("coordinator", "warm_start_path") => {
+                    cfg.warm_start_path = value.as_str()?.to_string()
+                }
                 ("coordinator", "cache_capacity") => {
                     cfg.cache_capacity = value.as_int()? as usize
                 }
@@ -268,6 +294,9 @@ impl SparsemapConfig {
         }
         if cfg.workers == 0 {
             return Err(Error::Config("coordinator.workers must be >= 1".into()));
+        }
+        if cfg.shards == 0 {
+            return Err(Error::Config("coordinator.shards must be >= 1".into()));
         }
         if cfg.poison_threshold == 0 {
             return Err(Error::Config(
@@ -380,6 +409,25 @@ seed = 7
         assert_eq!(d.shed_watermark, 0);
         assert!(d.poison_threshold >= 1);
         assert!(SparsemapConfig::from_str_cfg("[coordinator]\npoison_threshold = 0\n").is_err());
+    }
+
+    #[test]
+    fn sharding_knobs_parse_and_validate() {
+        let c = SparsemapConfig::from_str_cfg(
+            "[coordinator]\nshards = 3\ndispatch_lookahead = 16\n\
+             warm_start_path = \"/tmp/warm.manifest\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.shards, 3);
+        assert_eq!(c.dispatch_lookahead, 16);
+        assert_eq!(c.warm_start_path, "/tmp/warm.manifest");
+        // Defaults: one shard, unbounded look-ahead, warm start off —
+        // exactly the pre-sharding serving tier.
+        let d = SparsemapConfig::default();
+        assert_eq!(d.shards, 1);
+        assert_eq!(d.dispatch_lookahead, 0);
+        assert!(d.warm_start_path.is_empty());
+        assert!(SparsemapConfig::from_str_cfg("[coordinator]\nshards = 0\n").is_err());
     }
 
     #[test]

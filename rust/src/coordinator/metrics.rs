@@ -1,0 +1,198 @@
+//! Serving metrics: lock-free global counters, per-request latency
+//! percentiles, and — since the serving tier became sharded — a per-shard
+//! counter block so a hot or dying shard is visible in a snapshot without
+//! grepping logs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::stats::Summary;
+
+/// Aggregate counters (lock-free reads).
+#[derive(Default)]
+pub struct Metrics {
+    /// Requests processed by the worker pool (each window member counts).
+    pub jobs: AtomicU64,
+    pub failures: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+    /// CGRA cycles charged: per-request pass totals for solo serving, ONE
+    /// pass total per batching window for fused serving.
+    pub total_cycles: AtomicU64,
+    pub total_latency_ns: AtomicU64,
+    /// Batching windows simulated (one fused lockstep pass each).
+    pub windows: AtomicU64,
+    /// Requests shed by admission control (`try_enqueue` → `Overloaded`);
+    /// they never entered the queue, so they do not count as `jobs`.
+    pub shed: AtomicU64,
+    /// Requests whose deadline passed before a worker picked them up
+    /// (resolved `DeadlineExceeded`; not counted as `failures` — a shed is
+    /// a policy outcome, not a serving fault).
+    pub deadline_expired: AtomicU64,
+    /// Worker restarts: per-job `catch_unwind` recoveries plus supervisor
+    /// thread respawns.
+    pub worker_restarts: AtomicU64,
+    /// Requests resolved `Poisoned` (their job identity crossed the panic
+    /// quarantine threshold); also counted in `failures`.
+    pub poisoned: AtomicU64,
+    /// Per-request latency attribution, sampled at successful resolution.
+    latency: Mutex<LatencyStats>,
+    /// Per-shard counter blocks, attached once at coordinator
+    /// construction (in shard-index order). Empty for a bare `Metrics`
+    /// (unit tests that exercise the cache directly).
+    shards: Mutex<Vec<Arc<ShardMetrics>>>,
+}
+
+/// Queue/service span samples behind `Metrics` (percentiles need retained
+/// samples, so these live under a mutex rather than atomics).
+#[derive(Default)]
+struct LatencyStats {
+    queue: Summary,
+    service: Summary,
+}
+
+/// Percentile of a possibly-empty summary (`0` before the first sample —
+/// `Summary::percentile` itself panics on empty input).
+fn pct(s: &Summary, q: f64) -> f64 {
+    if s.count() == 0 {
+        0.0
+    } else {
+        s.percentile(q)
+    }
+}
+
+impl Metrics {
+    /// Record one resolved request's queueing and service spans.
+    pub(crate) fn observe_latency(&self, queue_ns: u64, service_ns: u64) {
+        if let Ok(mut l) = self.latency.lock() {
+            l.queue.add(queue_ns as f64);
+            l.service.add(service_ns as f64);
+        }
+    }
+
+    /// Wire the per-shard counter blocks in (coordinator construction
+    /// only; shard index = vector index).
+    pub(crate) fn attach_shards(&self, shards: Vec<Arc<ShardMetrics>>) {
+        if let Ok(mut s) = self.shards.lock() {
+            *s = shards;
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let (queue_ns_p50, queue_ns_p99, service_ns_p50, service_ns_p99) =
+            match self.latency.lock() {
+                Ok(l) => (
+                    pct(&l.queue, 50.0),
+                    pct(&l.queue, 99.0),
+                    pct(&l.service, 50.0),
+                    pct(&l.service, 99.0),
+                ),
+                Err(_) => (0.0, 0.0, 0.0, 0.0),
+            };
+        let shards = match self.shards.lock() {
+            Ok(s) => s.iter().map(|m| m.snapshot()).collect(),
+            Err(_) => Vec::new(),
+        };
+        MetricsSnapshot {
+            jobs: self.jobs.load(Ordering::Relaxed),
+            failures: self.failures.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            total_cycles: self.total_cycles.load(Ordering::Relaxed),
+            total_latency_ns: self.total_latency_ns.load(Ordering::Relaxed),
+            windows: self.windows.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
+            poisoned: self.poisoned.load(Ordering::Relaxed),
+            queue_ns_p50,
+            queue_ns_p99,
+            service_ns_p50,
+            service_ns_p99,
+            shards,
+        }
+    }
+}
+
+/// One shard's counter block. The global `Metrics` counters keep their
+/// exact pre-sharding semantics (they sum over shards); these split the
+/// same events by owning shard so imbalance and per-pool death are
+/// observable.
+#[derive(Default)]
+pub(crate) struct ShardMetrics {
+    pub(crate) windows: AtomicU64,
+    pub(crate) shed: AtomicU64,
+    pub(crate) worker_restarts: AtomicU64,
+    pub(crate) poisoned: AtomicU64,
+    /// Queue-span samples for requests served by this shard's pool.
+    queue: Mutex<Summary>,
+}
+
+impl ShardMetrics {
+    /// Record one served request's queueing span against this shard.
+    pub(crate) fn observe_queue(&self, queue_ns: u64) {
+        if let Ok(mut q) = self.queue.lock() {
+            q.add(queue_ns as f64);
+        }
+    }
+
+    fn snapshot(&self) -> ShardSnapshot {
+        let (queue_ns_p50, queue_ns_p99) = match self.queue.lock() {
+            Ok(q) => (pct(&q, 50.0), pct(&q, 99.0)),
+            Err(_) => (0.0, 0.0),
+        };
+        ShardSnapshot {
+            windows: self.windows.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
+            poisoned: self.poisoned.load(Ordering::Relaxed),
+            queue_ns_p50,
+            queue_ns_p99,
+        }
+    }
+}
+
+/// Point-in-time view of one shard's counters (`MetricsSnapshot::shards`,
+/// indexed by shard id).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardSnapshot {
+    /// Batching windows this shard's pool simulated.
+    pub windows: u64,
+    /// Requests shed by admission control at this shard's queue.
+    pub shed: u64,
+    /// Worker restarts (in-place recoveries + supervisor respawns) in
+    /// this shard's pool.
+    pub worker_restarts: u64,
+    /// Requests this shard resolved `Poisoned`.
+    pub poisoned: u64,
+    /// p50/p99 over queueing spans of requests served by this shard
+    /// (ns); `0.0` with no samples.
+    pub queue_ns_p50: f64,
+    pub queue_ns_p99: f64,
+}
+
+/// Point-in-time view of the coordinator's counters. No longer `Copy`
+/// since it carries the per-shard vector; it stays cheap to `clone`.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub jobs: u64,
+    pub failures: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub total_cycles: u64,
+    pub total_latency_ns: u64,
+    pub windows: u64,
+    pub shed: u64,
+    pub deadline_expired: u64,
+    pub worker_restarts: u64,
+    pub poisoned: u64,
+    /// p50/p99 over per-request queueing spans (ns); `0.0` with no samples.
+    pub queue_ns_p50: f64,
+    pub queue_ns_p99: f64,
+    /// p50/p99 over per-request service spans (ns); `0.0` with no samples.
+    pub service_ns_p50: f64,
+    pub service_ns_p99: f64,
+    /// Per-shard counter blocks, indexed by shard id (empty only for a
+    /// bare `Metrics` that was never attached to a coordinator).
+    pub shards: Vec<ShardSnapshot>,
+}

@@ -1,11 +1,24 @@
 //! Streaming inference coordinator (L3 runtime).
 //!
 //! Owns the request path of the system: a typed **session API** over a
-//! bounded job queue (backpressure), a worker-thread pool that maps blocks
-//! (with a compile-once mapping cache) and executes them on the
-//! cycle-accurate CGRA simulator, and aggregate metrics. The PJRT
-//! cross-check (`crate::runtime`) runs on the caller's thread — XLA
-//! executables stay off the worker pool.
+//! global dispatch layer that forms batching windows *across sessions*,
+//! a **sharded** worker tier — `[coordinator] shards` independent fabric
+//! pools, each with its own bounded job queue, mapping cache, supervisor
+//! and poison quarantine — and aggregate metrics. The PJRT cross-check
+//! (`crate::runtime`) runs on the caller's thread — XLA executables stay
+//! off the worker pools.
+//!
+//! The module is layered into submodules:
+//!
+//! - [`window`] — tickets, batching windows, and the global
+//!   [`DispatchState`] every enqueue funnels through;
+//! - [`queue`] — the bounded per-shard job queue and job envelopes;
+//! - [`shard`] — shard assignment (deterministic, capacity-constrained
+//!   over estimated PE/bus demand) and the warm-start manifest;
+//! - [`pool`] — the mapping cache, worker loops and supervision (one
+//!   pool instance per shard);
+//! - [`metrics`] — global counters, latency percentiles and per-shard
+//!   counter blocks.
 //!
 //! ## Sessions and tickets
 //!
@@ -19,34 +32,69 @@
 //! error. The pre-session `submit`/`collect` fire-hose survives one
 //! release as `#[deprecated]` thin wrappers over an internal session.
 //!
-//! ## Batching windows
+//! ## Cross-session batching windows
 //!
 //! Requests targeting members of the same registered [`FusedBundle`]
-//! aggregate into a **batching window**: the window seals once it holds
-//! `[coordinator] batch_window_requests` requests (or its lockstep
-//! iteration count reaches `[coordinator] batch_window_max`), on
-//! [`ServeSession::flush`]/[`ServeSession::drain`], or when a member
-//! ticket is waited on — and the whole window is dispatched as ONE job
-//! running ONE lockstep simulation pass ([`crate::sim::simulate_fused_batch`])
-//! with a real iteration stream per member (zero inputs only for members
-//! absent from the window). The window is charged for the resident
-//! configuration once: `Metrics::total_cycles` grows by the pass total,
-//! the `windows` counter by one, and each request's `InferResult::cycles`
-//! is its proportional share of the pass. Window contents are a pure
-//! function of the session's enqueue order (plus the two knobs), so
-//! serving is deterministic at any worker count.
+//! aggregate into a **batching window**. Windows form in the
+//! coordinator-global dispatch state, so requests from *different*
+//! sessions share windows — the millions-of-users shape (many short
+//! sessions, few requests each) shares lockstep passes it never could
+//! when each session formed its own windows. A window seals once it
+//! holds `[coordinator] batch_window_requests` requests (or its lockstep
+//! iteration count reaches `[coordinator] batch_window_max`), when
+//! `[coordinator] dispatch_lookahead` total riding requests force the
+//! oldest open window shut, on [`ServeSession::flush`] /
+//! [`ServeSession::drain`], or when a member ticket is waited on — and
+//! the whole window is dispatched as ONE job running ONE lockstep
+//! simulation pass ([`crate::sim::simulate_fused_batch`]) with a real
+//! iteration stream per member (zero inputs only for members absent from
+//! the window). The window is charged for the resident configuration
+//! once: `Metrics::total_cycles` grows by the pass total, the `windows`
+//! counter by one, and each request's `InferResult::cycles` is its
+//! proportional share of the pass. Window contents are a pure function
+//! of the global enqueue/cancel sequence (plus the knobs), so serving is
+//! deterministic — bit-identical — at any worker count and any shard
+//! count.
+//!
+//! ## Sharded serving
+//!
+//! The worker tier is partitioned into `[coordinator] shards` pools
+//! (env override [`SHARDS_ENV`], warn-and-keep like
+//! `SPARSEMAP_SIM_BACKEND`). Registered blocks and bundles are pinned to
+//! shards by a deterministic greedy assigner that admits each unit to
+//! the shard whose post-admission MII over accumulated PE/bus demand
+//! stays lowest (registration order decides — never timing);
+//! unregistered ad-hoc traffic hashes its mask fingerprint onto a shard.
+//! Each shard owns its mapping cache, bounded queue, worker pool,
+//! supervisor (restart budget and poison registry scoped per pool) and
+//! admission watermark, so a dying or overloaded fabric pool never takes
+//! its siblings down — and per-shard counters make the imbalance
+//! observable ([`MetricsSnapshot::shards`]).
 //!
 //! ## Mapping cache
 //!
-//! The cache is single-flight and LRU-bounded: one entry per mapping key,
-//! the first requester builds (maps) while concurrent requesters for the
-//! same key sleep on the entry's `Condvar` — the cache's outer mutex is
-//! never held across a mapping, so unrelated blocks proceed in parallel
-//! and waiters block on nothing but their own entry. Capacity comes from
-//! `[coordinator] cache_capacity` (`0` = unbounded); at capacity the
-//! least-recently-used entry is evicted through a tick-ordered
-//! `BTreeMap` index maintained on the touch path (no full-map scans;
-//! in-flight holders keep their `Arc`).
+//! Each shard's cache is single-flight and LRU-bounded: one entry per
+//! mapping key, the first requester builds (maps) while concurrent
+//! requesters for the same key sleep on the entry's `Condvar` — the
+//! cache's outer mutex is never held across a mapping, so unrelated
+//! blocks proceed in parallel and waiters block on nothing but their own
+//! entry. Capacity comes from `[coordinator] cache_capacity` (`0` =
+//! unbounded); at capacity the least-recently-used entry is evicted
+//! through a tick-ordered `BTreeMap` index maintained on the touch path
+//! (no full-map scans; in-flight holders keep their `Arc`).
+//!
+//! ## Warm start
+//!
+//! With `[coordinator] warm_start_path` set, every
+//! [`Coordinator::register_block`] / [`Coordinator::register_bundle`]
+//! persists the registered fingerprints to an on-disk manifest, and
+//! construction replays it: registrations (and therefore shard
+//! assignments) are restored in file order and mappings are pre-built
+//! through the normal single-flight cache path before the first request
+//! lands. Mapping cache entries depend only on mask structure — weights
+//! arrive per-request — so a warm-started mapping is serving-identical
+//! to a cold-built one. A missing or corrupt manifest degrades to a cold
+//! start, never a failed constructor.
 //!
 //! ## Multi-block fusion
 //!
@@ -62,47 +110,65 @@
 //!
 //! The serving tier treats failure as a first-class input (CGRA mapping
 //! attempts *can* fail; workers *can* die): job execution runs under a
-//! per-job `catch_unwind` with in-place retry, a supervisor thread
-//! respawns hard-dead workers up to `[coordinator] restart_budget`, and a
-//! job identity that keeps panicking is quarantined after
+//! per-job `catch_unwind` with in-place retry, a supervisor thread per
+//! shard respawns hard-dead workers up to `[coordinator] restart_budget`,
+//! and a job identity that keeps panicking is quarantined after
 //! `[coordinator] poison_threshold` attempts (its tickets resolve
 //! [`ServeError::Poisoned`]). Requests carry optional deadlines
 //! ([`ServeSession::enqueue_with_deadline`]) checked at worker pickup —
 //! expired work is shed as [`ServeError::DeadlineExceeded`] without
 //! simulating — and dropping an unwaited [`Ticket`] withdraws its request
 //! from a still-forming window. [`ServeSession::try_enqueue`] sheds
-//! instead of blocking ([`ServeError::Overloaded`]) on a full queue or
-//! above `[coordinator] shed_watermark`. Failed mapping-cache entries
-//! retry after `[coordinator] failure_ttl` further requests (`0` = sticky
-//! forever). If the whole pool dies with budget exhausted, the supervisor
-//! drains the queue resolving every ticket [`ServeError::WorkerGone`] —
-//! the invariant throughout is that *every enqueued ticket resolves*.
-//! All of it is exercised deterministically by `util::failpoint` sites
-//! (`coordinator::serve` / `worker_hard` / `map` / `sim` / `delay`) under
-//! the `failpoints` feature (`tests/fault_tolerance.rs`).
+//! instead of blocking ([`ServeError::Overloaded`]) when the target
+//! shard's queue is full or above `[coordinator] shed_watermark`. Failed
+//! mapping-cache entries retry after `[coordinator] failure_ttl` further
+//! requests (`0` = sticky forever). If a whole shard pool dies with
+//! budget exhausted, its supervisor drains that shard's queue resolving
+//! every ticket [`ServeError::WorkerGone`] while sibling shards keep
+//! serving — the invariant throughout is that *every enqueued ticket
+//! resolves*. All of it is exercised deterministically by
+//! `util::failpoint` sites (`coordinator::serve` / `worker_hard` / `map`
+//! / `sim` / `delay` / `plan`) under the `failpoints` feature
+//! (`tests/fault_tolerance.rs`, `tests/sharded_serving.rs`).
 //!
-//! tokio is unavailable offline; the pool is built on std threads +
+//! tokio is unavailable offline; the pools are built on std threads +
 //! `std::sync::mpsc::sync_channel`, which gives exactly the bounded-queue
 //! semantics the backpressure design needs. A batching window occupies a
 //! single queue slot however many requests it carries.
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
-use std::panic::{catch_unwind, AssertUnwindSafe};
+mod metrics;
+mod pool;
+mod queue;
+mod shard;
+mod window;
+
+pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot};
+pub use shard::SHARDS_ENV;
+pub use window::{BatchOptions, Ticket};
+
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{
-    channel, sync_channel, Receiver, SendError, Sender, SyncSender, TrySendError,
-};
-use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::sync::mpsc::{channel, sync_channel, TrySendError};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::arch::StreamingCgra;
 use crate::config::{SimBackend, SparsemapConfig};
 use crate::error::{Error, Result};
-use crate::mapper::{map_unit, MapOutcome, MapUnit, MapperOptions};
-use crate::sim::{execute_plan_batch, simulate, simulate_fused_batch, ExecPlan, MemberSegment, SegmentSim};
+use crate::mapper::MapperOptions;
 use crate::sparse::fuse::{plan_bundles, BundleRoutes, FusedBundle, FusionOptions};
 use crate::sparse::SparseBlock;
-use crate::util::stats::Summary;
+
+use metrics::ShardMetrics;
+use pool::{spawn_worker, supervisor_loop, MappingCache, PoisonRegistry, WorkerCtx};
+use queue::{resolve_queue_closed, Job, JobQueue, SingleJob};
+use shard::{ManifestUnit, Shard, ShardAssigner};
+use window::{DispatchState, TicketCompleter, TicketState, WindowHandle, WindowRequest};
+
+#[cfg(test)]
+use crate::mapper::{map_unit, MapUnit};
+#[cfg(test)]
+use pool::ServingMapping;
 
 /// One inference job: run `xs` (iteration-major input vectors) through a
 /// sparse block on the CGRA. Legacy envelope of the deprecated
@@ -211,450 +277,27 @@ impl From<ServeError> for Error {
     }
 }
 
-/// Aggregate counters (lock-free reads).
-#[derive(Default)]
-pub struct Metrics {
-    /// Requests processed by the worker pool (each window member counts).
-    pub jobs: AtomicU64,
-    pub failures: AtomicU64,
-    pub cache_hits: AtomicU64,
-    pub cache_misses: AtomicU64,
-    /// CGRA cycles charged: per-request pass totals for solo serving, ONE
-    /// pass total per batching window for fused serving.
-    pub total_cycles: AtomicU64,
-    pub total_latency_ns: AtomicU64,
-    /// Batching windows simulated (one fused lockstep pass each).
-    pub windows: AtomicU64,
-    /// Requests shed by admission control (`try_enqueue` → `Overloaded`);
-    /// they never entered the queue, so they do not count as `jobs`.
-    pub shed: AtomicU64,
-    /// Requests whose deadline passed before a worker picked them up
-    /// (resolved `DeadlineExceeded`; not counted as `failures` — a shed is
-    /// a policy outcome, not a serving fault).
-    pub deadline_expired: AtomicU64,
-    /// Worker restarts: per-job `catch_unwind` recoveries plus supervisor
-    /// thread respawns.
-    pub worker_restarts: AtomicU64,
-    /// Requests resolved `Poisoned` (their job identity crossed the panic
-    /// quarantine threshold); also counted in `failures`.
-    pub poisoned: AtomicU64,
-    /// Per-request latency attribution, sampled at successful resolution.
-    latency: Mutex<LatencyStats>,
-}
-
-/// Queue/service span samples behind `Metrics` (percentiles need retained
-/// samples, so these live under a mutex rather than atomics).
-#[derive(Default)]
-struct LatencyStats {
-    queue: Summary,
-    service: Summary,
-}
-
-/// Percentile of a possibly-empty summary (`0` before the first sample —
-/// `Summary::percentile` itself panics on empty input).
-fn pct(s: &Summary, q: f64) -> f64 {
-    if s.count() == 0 {
-        0.0
-    } else {
-        s.percentile(q)
-    }
-}
-
-impl Metrics {
-    /// Record one resolved request's queueing and service spans.
-    fn observe_latency(&self, queue_ns: u64, service_ns: u64) {
-        if let Ok(mut l) = self.latency.lock() {
-            l.queue.add(queue_ns as f64);
-            l.service.add(service_ns as f64);
-        }
-    }
-
-    pub fn snapshot(&self) -> MetricsSnapshot {
-        let (queue_ns_p50, queue_ns_p99, service_ns_p50, service_ns_p99) =
-            match self.latency.lock() {
-                Ok(l) => (
-                    pct(&l.queue, 50.0),
-                    pct(&l.queue, 99.0),
-                    pct(&l.service, 50.0),
-                    pct(&l.service, 99.0),
-                ),
-                Err(_) => (0.0, 0.0, 0.0, 0.0),
-            };
-        MetricsSnapshot {
-            jobs: self.jobs.load(Ordering::Relaxed),
-            failures: self.failures.load(Ordering::Relaxed),
-            cache_hits: self.cache_hits.load(Ordering::Relaxed),
-            cache_misses: self.cache_misses.load(Ordering::Relaxed),
-            total_cycles: self.total_cycles.load(Ordering::Relaxed),
-            total_latency_ns: self.total_latency_ns.load(Ordering::Relaxed),
-            windows: self.windows.load(Ordering::Relaxed),
-            shed: self.shed.load(Ordering::Relaxed),
-            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
-            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
-            poisoned: self.poisoned.load(Ordering::Relaxed),
-            queue_ns_p50,
-            queue_ns_p99,
-            service_ns_p50,
-            service_ns_p99,
-        }
-    }
-}
-
-#[derive(Clone, Copy, Debug)]
-pub struct MetricsSnapshot {
-    pub jobs: u64,
-    pub failures: u64,
-    pub cache_hits: u64,
-    pub cache_misses: u64,
-    pub total_cycles: u64,
-    pub total_latency_ns: u64,
-    pub windows: u64,
-    pub shed: u64,
-    pub deadline_expired: u64,
-    pub worker_restarts: u64,
-    pub poisoned: u64,
-    /// p50/p99 over per-request queueing spans (ns); `0.0` with no samples.
-    pub queue_ns_p50: f64,
-    pub queue_ns_p99: f64,
-    /// p50/p99 over per-request service spans (ns); `0.0` with no samples.
-    pub service_ns_p50: f64,
-    pub service_ns_p99: f64,
-}
-
-/// Fused request batching knobs (see `[coordinator] batch_window_requests`
-/// / `batch_window_max`).
-#[derive(Clone, Copy, Debug)]
-pub struct BatchOptions {
-    /// A window seals once it holds this many member requests (`0`/`1` =
-    /// every member request is its own window).
-    pub window_requests: usize,
-    /// Cap on a window's lockstep iteration count (max over members of
-    /// the summed request stream lengths): a request that would push the
-    /// window to the cap seals it *first* and starts a fresh one, so
-    /// requests already aboard never pay an oversized rider's padding.
-    /// `0` = uncapped.
-    pub window_max_iters: usize,
-}
-
-impl BatchOptions {
-    pub fn from_config(cfg: &SparsemapConfig) -> Self {
-        BatchOptions {
-            window_requests: cfg.batch_window_requests,
-            window_max_iters: cfg.batch_window_max,
-        }
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Tickets
-
-/// Resolution state shared between a [`Ticket`] and its worker-side
-/// completer.
-enum TicketInner {
-    Pending,
-    Done(std::result::Result<InferResult, ServeError>),
-    /// `wait` consumed the result (tombstone — unreachable through the
-    /// public API afterwards, since `wait` takes the ticket by value).
-    Taken,
-}
-
-struct TicketState {
-    inner: Mutex<TicketInner>,
-    ready: Condvar,
-}
-
-impl TicketState {
-    fn new() -> Arc<Self> {
-        Arc::new(TicketState { inner: Mutex::new(TicketInner::Pending), ready: Condvar::new() })
-    }
-
-    /// First completion wins; later calls (e.g. the completer's drop guard
-    /// after an explicit fulfill) are no-ops.
-    fn complete(&self, res: std::result::Result<InferResult, ServeError>) {
-        let mut inner = self.inner.lock().expect("ticket state");
-        if matches!(&*inner, TicketInner::Pending) {
-            *inner = TicketInner::Done(res);
-            self.ready.notify_all();
-        }
-    }
-
-    /// Block until the ticket is resolved (without consuming the result).
-    fn wait_done(&self) {
-        let mut inner = self.inner.lock().expect("ticket state");
-        while matches!(&*inner, TicketInner::Pending) {
-            inner = self.ready.wait(inner).expect("ticket state");
-        }
-    }
-
-    /// Block until resolved, then take the result.
-    fn take(&self) -> std::result::Result<InferResult, ServeError> {
-        let mut inner = self.inner.lock().expect("ticket state");
-        while matches!(&*inner, TicketInner::Pending) {
-            inner = self.ready.wait(inner).expect("ticket state");
-        }
-        match std::mem::replace(&mut *inner, TicketInner::Taken) {
-            TicketInner::Done(res) => res,
-            // `wait` consumes the ticket, so a taken state cannot be
-            // observed again through the public API.
-            _ => Err(ServeError::WorkerGone),
-        }
-    }
-
-    /// Non-blocking peek (clones the result, leaving it claimable).
-    fn peek(&self) -> Option<std::result::Result<InferResult, ServeError>> {
-        let inner = self.inner.lock().expect("ticket state");
-        match &*inner {
-            TicketInner::Done(res) => Some(res.clone()),
-            _ => None,
-        }
-    }
-
-    /// Block until resolved or `deadline`, whichever comes first. `Some`
-    /// clones the result (leaving it claimable, like `peek`); `None`
-    /// means the request is still in flight at the deadline.
-    fn wait_until(
-        &self,
-        deadline: Instant,
-    ) -> Option<std::result::Result<InferResult, ServeError>> {
-        let mut inner = self.inner.lock().expect("ticket state");
-        loop {
-            if let TicketInner::Done(res) = &*inner {
-                return Some(res.clone());
-            }
-            let left = deadline.checked_duration_since(Instant::now())?;
-            let (guard, _) = self.ready.wait_timeout(inner, left).expect("ticket state");
-            inner = guard;
-        }
-    }
-}
-
-/// Worker-side handle to a pending ticket: fulfills it exactly once, and
-/// resolves it to [`ServeError::WorkerGone`] if dropped unfulfilled
-/// (worker panic, queue teardown with jobs still aboard) so a `wait` can
-/// never hang on a request the pool lost.
-struct TicketCompleter {
-    state: Arc<TicketState>,
-}
-
-impl TicketCompleter {
-    fn fulfill(self, res: std::result::Result<InferResult, ServeError>) {
-        self.state.complete(res);
-        // Drop runs next and no-ops: completion is first-wins.
-    }
-}
-
-impl Drop for TicketCompleter {
-    fn drop(&mut self) {
-        self.state.complete(Err(ServeError::WorkerGone));
-    }
-}
-
-/// Handle to one enqueued request. Results are retrieved by ticket, in any
-/// order — waiting also seals the request's batching window (if it is
-/// still open) so a ticket can never block on a window nobody else would
-/// close.
-pub struct Ticket {
-    id: u64,
-    block_name: String,
-    state: Arc<TicketState>,
-    window: Option<WindowHandle>,
-}
-
-impl Ticket {
-    /// The request's id (session-scoped enqueue sequence number).
-    pub fn id(&self) -> u64 {
-        self.id
-    }
-
-    /// Name of the block the request targets.
-    pub fn block_name(&self) -> &str {
-        &self.block_name
-    }
-
-    /// Block until the request resolves and take the result. Seals the
-    /// request's batching window first if it is still open.
-    pub fn wait(mut self) -> std::result::Result<InferResult, ServeError> {
-        self.flush_window();
-        self.state.take()
-    }
-
-    /// Non-blocking poll: `None` while the request is in flight, a clone
-    /// of the result once resolved (the result stays claimable by `wait`).
-    /// Also seals the request's still-open batching window — the poll
-    /// would otherwise never turn `Some`.
-    pub fn try_wait(&mut self) -> Option<std::result::Result<InferResult, ServeError>> {
-        self.flush_window();
-        self.state.peek()
-    }
-
-    /// Bounded wait: block until the request resolves or `timeout`
-    /// elapses. Seals the request's still-open batching window first (like
-    /// `wait`). `Some` clones the result, leaving it claimable by a later
-    /// `wait`/`try_wait`; `None` means the request is still in flight —
-    /// the ticket stays live and can be waited again.
-    pub fn wait_timeout(
-        &mut self,
-        timeout: Duration,
-    ) -> Option<std::result::Result<InferResult, ServeError>> {
-        self.flush_window();
-        let deadline = Instant::now().checked_add(timeout)?;
-        self.state.wait_until(deadline)
-    }
-
-    fn flush_window(&mut self) {
-        if let Some(w) = self.window.take() {
-            w.flush();
-        }
-    }
-}
-
-impl Drop for Ticket {
-    /// Dropping an unwaited ticket cancels its request if that request is
-    /// still riding an open batching window: the request is withdrawn
-    /// before the window seals, so abandoned work is never simulated.
-    /// (A sealed or dispatched request rides along; its result is simply
-    /// discarded.) `wait`/`try_wait`/`wait_timeout` take the window handle
-    /// first, so a waited ticket never cancels.
-    fn drop(&mut self) {
-        if let Some(w) = self.window.take() {
-            w.cancel(self.id);
-        }
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Batching windows
-
-/// A not-yet-dispatched batching window for one registered bundle.
-struct WindowCell {
-    bundle: Arc<FusedBundle>,
-    requests: Vec<WindowRequest>,
-    sealed: bool,
-}
-
-struct WindowRequest {
-    id: u64,
-    /// Member index inside the bundle (resolved at enqueue time).
-    member: usize,
-    block: Arc<SparseBlock>,
-    xs: Vec<Vec<f32>>,
-    done: TicketCompleter,
-    /// Shed (as `DeadlineExceeded`) at worker pickup once passed.
-    deadline: Option<Instant>,
-    /// Enqueue timestamp, for queue-span latency attribution.
-    enqueued_at: Instant,
-}
-
-/// Shared handle to an open window: the session and every member ticket
-/// hold one, and whoever seals first dispatches. The queue is held weakly
-/// so stray tickets can never keep the worker pool alive past the
-/// coordinator's drop.
-#[derive(Clone)]
-struct WindowHandle {
-    cell: Arc<Mutex<WindowCell>>,
-    tx: Weak<JobQueue>,
-}
-
-impl WindowHandle {
-    /// Seal the window (if still open and non-empty) and dispatch it as
-    /// one job; on a closed queue every member ticket resolves to
-    /// [`ServeError::QueueClosed`] instead of hanging.
-    fn flush(&self) {
-        let job = {
-            let mut cell = self.cell.lock().expect("window cell");
-            if cell.sealed || cell.requests.is_empty() {
-                return;
-            }
-            cell.sealed = true;
-            WindowJob {
-                bundle: Arc::clone(&cell.bundle),
-                requests: std::mem::take(&mut cell.requests),
-            }
-        };
-        match self.tx.upgrade() {
-            Some(queue) => {
-                if let Err(job) = queue.send(Job::Window(job)) {
-                    resolve_queue_closed(job);
-                }
-            }
-            None => resolve_queue_closed(Job::Window(job)),
-        }
-    }
-
-    /// Withdraw request `id` if the window has not sealed yet (the
-    /// cancellation path of a dropped unwaited [`Ticket`]). A sealed
-    /// window is immutable: the request rides along and its result is
-    /// discarded. Window contents stay a pure function of the session's
-    /// enqueue/cancel sequence.
-    fn cancel(&self, id: u64) {
-        let mut cell = self.cell.lock().expect("window cell");
-        if !cell.sealed {
-            // The withdrawn completer resolves its (otherwise
-            // unobservable) ticket state on drop.
-            cell.requests.retain(|r| r.id != id);
-        }
-    }
-}
-
-/// Resolve every ticket aboard `job` to [`ServeError::QueueClosed`]
-/// (dispatch against a closed queue).
-fn resolve_queue_closed(job: Job) {
-    match job {
-        Job::Single(j) => j.done.fulfill(Err(ServeError::QueueClosed)),
-        Job::Window(w) => {
-            for r in w.requests {
-                r.done.fulfill(Err(ServeError::QueueClosed));
-            }
-        }
-    }
-}
-
-/// Lockstep iteration count of the window's current contents, optionally
-/// with one more candidate request aboard.
-fn lockstep_len(cell: &WindowCell, extra: Option<&WindowRequest>) -> usize {
-    let mut totals = vec![0usize; cell.bundle.len()];
-    for r in cell.requests.iter().chain(extra) {
-        totals[r.member] += r.xs.len();
-    }
-    totals.into_iter().max().unwrap_or(0)
-}
-
-/// Whether admitting `request` would push the window's lockstep iteration
-/// count to (or past) `batch_window_max` — checked *before* admission so
-/// requests already aboard never pay the oversized rider's padding.
-fn would_exceed_cap(cell: &WindowCell, request: &WindowRequest, batching: &BatchOptions) -> bool {
-    batching.window_max_iters > 0
-        && lockstep_len(cell, Some(request)) >= batching.window_max_iters
-}
-
-/// Whether the window should seal now that its contents are final for
-/// this enqueue: the request-count knob, or (for a window whose sole
-/// request alone reaches it — a cap breach no split can avoid) the
-/// iteration cap.
-fn window_full(cell: &WindowCell, batching: &BatchOptions) -> bool {
-    if cell.requests.len() >= batching.window_requests.max(1) {
-        return true;
-    }
-    batching.window_max_iters > 0
-        && lockstep_len(cell, None) >= batching.window_max_iters
-}
-
 // ---------------------------------------------------------------------------
 // Sessions
 
 /// Session bookkeeping shared by [`ServeSession`] and the deprecated
-/// `submit`/`collect` shims: id allocation plus the open windows, in
-/// creation order (so flush order — and therefore window formation — is a
-/// pure function of enqueue order).
+/// `submit`/`collect` shims: id allocation plus the windows this
+/// session's requests have joined, in join order. Windows themselves form
+/// in the coordinator-global [`DispatchState`]; the session only
+/// remembers which ones carry its requests so `flush`/`drain`/drop can
+/// seal them — in join order, keeping flush-driven window formation a
+/// pure function of the global enqueue sequence.
 struct SessionCore {
     next_id: u64,
-    /// Open windows keyed by bundle fingerprint (small linear map).
-    open: Vec<(u64, WindowHandle)>,
+    /// Windows joined by this session's in-flight requests, keyed by
+    /// bundle fingerprint (small linear list; entries are deduplicated by
+    /// cell identity and pruned of sealed windows amortized).
+    joined: Vec<(u64, WindowHandle)>,
 }
 
 impl SessionCore {
     fn new() -> Self {
-        SessionCore { next_id: 0, open: Vec::new() }
+        SessionCore { next_id: 0, joined: Vec::new() }
     }
 
     fn enqueue(
@@ -665,40 +308,75 @@ impl SessionCore {
         xs: Vec<Vec<f32>>,
         deadline: Option<Instant>,
     ) -> Ticket {
+        let uid = coord.next_uid.fetch_add(1, Ordering::Relaxed);
         let state = TicketState::new();
         let done = TicketCompleter { state: Arc::clone(&state) };
         let block_name = block.name.clone();
         let enqueued_at = Instant::now();
-        let route = coord.bundles.route(block.mask_fingerprint());
-        let window = match (route, coord.sender()) {
-            (_, None) => {
-                done.fulfill(Err(ServeError::QueueClosed));
-                None
-            }
-            (None, Some(queue)) => {
-                let job =
-                    Job::Single(SingleJob { id, block, xs, done, deadline, enqueued_at });
-                if let Err(job) = queue.send(job) {
-                    resolve_queue_closed(job);
+        let fp = block.mask_fingerprint();
+        let window = match coord.bundles.route(fp) {
+            None => {
+                match coord.sender(coord.shard_for(fp)) {
+                    None => done.fulfill(Err(ServeError::QueueClosed)),
+                    Some(queue) => {
+                        let job = Job::Single(SingleJob {
+                            id,
+                            block,
+                            xs,
+                            done,
+                            deadline,
+                            enqueued_at,
+                        });
+                        if let Err(job) = queue.send(job) {
+                            resolve_queue_closed(job);
+                        }
+                    }
                 }
                 None
             }
-            (Some((bundle, member)), Some(queue)) => Some(self.window_enqueue(
-                &queue,
-                &coord.batching,
-                bundle,
-                WindowRequest { id, member, block, xs, done, deadline, enqueued_at },
-            )),
+            Some((bundle, member)) => {
+                let bfp = bundle.fingerprint();
+                match coord.sender(coord.shard_for(bfp)) {
+                    None => {
+                        done.fulfill(Err(ServeError::QueueClosed));
+                        None
+                    }
+                    Some(queue) => {
+                        let handle = {
+                            let mut dispatch = coord.dispatch();
+                            dispatch.window_enqueue(
+                                &queue,
+                                &coord.batching,
+                                coord.lookahead,
+                                bundle,
+                                WindowRequest {
+                                    id,
+                                    uid,
+                                    member,
+                                    block,
+                                    xs,
+                                    done,
+                                    deadline,
+                                    enqueued_at,
+                                },
+                            )
+                        };
+                        self.track_window(bfp, &handle);
+                        Some(handle)
+                    }
+                }
+            }
         };
-        Ticket { id, block_name, state, window }
+        Ticket { id, uid, block_name, state, window }
     }
 
     /// Shedding admission for `try_enqueue`: a request for a registered
     /// bundle member always joins its batching window (a window occupies
     /// one queue slot for the whole batch, so members are the cheapest
     /// traffic to admit — "non-bundle singles are shed first"); a solo
-    /// request is shed with [`ServeError::Overloaded`] when the queue
-    /// occupancy is at/above the watermark or the bounded queue is full.
+    /// request is shed with [`ServeError::Overloaded`] when its shard's
+    /// queue occupancy is at/above the watermark or the bounded queue is
+    /// full. Sheds count against both the global and the shard's `shed`.
     fn try_enqueue(
         &mut self,
         coord: &Coordinator,
@@ -707,25 +385,37 @@ impl SessionCore {
         xs: Vec<Vec<f32>>,
         deadline: Option<Instant>,
     ) -> std::result::Result<Ticket, ServeError> {
-        let Some(queue) = coord.sender() else {
-            return Err(ServeError::QueueClosed);
-        };
+        let uid = coord.next_uid.fetch_add(1, Ordering::Relaxed);
         let enqueued_at = Instant::now();
-        let route = coord.bundles.route(block.mask_fingerprint());
-        if let Some((bundle, member)) = route {
+        let fp = block.mask_fingerprint();
+        if let Some((bundle, member)) = coord.bundles.route(fp) {
+            let bfp = bundle.fingerprint();
+            let Some(queue) = coord.sender(coord.shard_for(bfp)) else {
+                return Err(ServeError::QueueClosed);
+            };
             let state = TicketState::new();
             let done = TicketCompleter { state: Arc::clone(&state) };
             let block_name = block.name.clone();
-            let window = self.window_enqueue(
-                &queue,
-                &coord.batching,
-                bundle,
-                WindowRequest { id, member, block, xs, done, deadline, enqueued_at },
-            );
-            return Ok(Ticket { id, block_name, state, window: Some(window) });
+            let handle = {
+                let mut dispatch = coord.dispatch();
+                dispatch.window_enqueue(
+                    &queue,
+                    &coord.batching,
+                    coord.lookahead,
+                    bundle,
+                    WindowRequest { id, uid, member, block, xs, done, deadline, enqueued_at },
+                )
+            };
+            self.track_window(bfp, &handle);
+            return Ok(Ticket { id, uid, block_name, state, window: Some(handle) });
         }
+        let sid = coord.shard_for(fp);
+        let Some(queue) = coord.sender(sid) else {
+            return Err(ServeError::QueueClosed);
+        };
         if coord.shed_watermark > 0 && queue.occupancy() >= coord.shed_watermark {
             coord.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            coord.shards[sid].metrics.shed.fetch_add(1, Ordering::Relaxed);
             return Err(ServeError::Overloaded);
         }
         let state = TicketState::new();
@@ -733,91 +423,47 @@ impl SessionCore {
         let block_name = block.name.clone();
         match queue.try_send(Job::Single(SingleJob { id, block, xs, done, deadline, enqueued_at }))
         {
-            Ok(()) => Ok(Ticket { id, block_name, state, window: None }),
+            Ok(()) => Ok(Ticket { id, uid, block_name, state, window: None }),
             // The rejected job drops here: its completer resolves the
             // (never-issued) ticket state, which dies with it.
             Err(TrySendError::Full(_)) => {
                 coord.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                coord.shards[sid].metrics.shed.fetch_add(1, Ordering::Relaxed);
                 Err(ServeError::Overloaded)
             }
             Err(TrySendError::Disconnected(_)) => Err(ServeError::QueueClosed),
         }
     }
 
-    /// Append a member request to its bundle's open window (creating one
-    /// if none is open), sealing and dispatching the window when it fills.
-    /// A request that would push the window's lockstep iteration count
-    /// past `batch_window_max` seals the window *first* and starts a fresh
-    /// one — members already aboard never pay unbounded padding for a
-    /// late oversized rider.
-    fn window_enqueue(
-        &mut self,
-        tx: &Arc<JobQueue>,
-        batching: &BatchOptions,
-        bundle: Arc<FusedBundle>,
-        request: WindowRequest,
-    ) -> WindowHandle {
-        let fp = bundle.fingerprint();
-        loop {
-            let handle = match self.open.iter().find(|(k, _)| *k == fp) {
-                Some((_, h)) => h.clone(),
-                None => {
-                    let h = WindowHandle {
-                        cell: Arc::new(Mutex::new(WindowCell {
-                            bundle: Arc::clone(&bundle),
-                            requests: Vec::new(),
-                            sealed: false,
-                        })),
-                        tx: Arc::downgrade(tx),
-                    };
-                    self.open.push((fp, h.clone()));
-                    h
-                }
-            };
-            let full = {
-                let mut cell = handle.cell.lock().expect("window cell");
-                if cell.sealed {
-                    // A concurrent `Ticket::wait` (tickets are `Send` and
-                    // may be waited from any thread) sealed and dispatched
-                    // this window between our lookup and this lock: forget
-                    // the stale handle and open a fresh window. The seal
-                    // decision and the push share one critical section, so
-                    // a request can never land in an already-dispatched
-                    // cell.
-                    drop(cell);
-                    self.open.retain(|(k, _)| *k != fp);
-                    continue;
-                }
-                if !cell.requests.is_empty() && would_exceed_cap(&cell, &request, batching) {
-                    drop(cell);
-                    handle.flush();
-                    self.open.retain(|(k, _)| *k != fp);
-                    continue;
-                }
-                cell.requests.push(request);
-                window_full(&cell, batching)
-            };
-            if full {
-                handle.flush();
-            }
-            // `request` is moved only on this returning path; every
-            // `continue` above runs before the move, so the loop re-enters
-            // with the request still in hand.
-            return handle;
+    /// Remember that one of this session's requests rides `handle`, so
+    /// `flush_all` can seal it. Deduplicated by cell identity (a session
+    /// enqueueing many members of one bundle joins the same cell
+    /// repeatedly); sealed windows are pruned amortized before the list
+    /// would grow, so bookkeeping stays proportional to *open* windows.
+    fn track_window(&mut self, fp: u64, handle: &WindowHandle) {
+        if self.joined.iter().any(|(k, h)| *k == fp && Arc::ptr_eq(&h.cell, &handle.cell)) {
+            return;
         }
+        if self.joined.len() == self.joined.capacity() {
+            self.joined.retain(|(_, h)| !h.is_sealed());
+        }
+        self.joined.push((fp, handle.clone()));
     }
 
-    /// Seal and dispatch every open window, in creation order.
+    /// Seal and dispatch every window this session joined, in join order.
+    /// (Sealing an already-sealed window is a no-op, so racing another
+    /// session's flush of a shared window is harmless.)
     fn flush_all(&mut self) {
-        for (_, h) in self.open.drain(..) {
+        for (_, h) in self.joined.drain(..) {
             h.flush();
         }
     }
 }
 
 /// A serving session: the enqueue side of the coordinator's typed API.
-/// Dropping the session seals its open batching windows (requests are
-/// never stranded); issued [`Ticket`]s stay valid past the session.
+/// Dropping the session seals the batching windows its requests joined
+/// (requests are never stranded); issued [`Ticket`]s stay valid past the
+/// session.
 pub struct ServeSession<'a> {
     coord: &'a Coordinator,
     core: SessionCore,
@@ -830,13 +476,14 @@ pub struct ServeSession<'a> {
 }
 
 impl ServeSession<'_> {
-    /// Enqueue one request; blocks when the job queue is full
-    /// (backpressure). The returned [`Ticket`] is the result handle.
+    /// Enqueue one request; blocks when the target shard's job queue is
+    /// full (backpressure). The returned [`Ticket`] is the result handle.
     ///
     /// A request for a member of a registered bundle joins the bundle's
-    /// open batching window; it is dispatched when the window seals (see
-    /// the module docs) — at the latest when its ticket is waited on or
-    /// the session flushes, drains or drops.
+    /// open batching window — windows form globally, so requests from
+    /// other sessions share it; it is dispatched when the window seals
+    /// (see the module docs) — at the latest when its ticket is waited on
+    /// or the session flushes, drains or drops.
     pub fn enqueue(&mut self, block: Arc<SparseBlock>, xs: Vec<Vec<f32>>) -> Ticket {
         self.enqueue_opt(block, xs, None)
     }
@@ -859,13 +506,13 @@ impl ServeSession<'_> {
 
     /// Non-blocking enqueue (admission control): sheds the request with
     /// [`ServeError::Overloaded`] — instead of blocking like `enqueue` —
-    /// when the job queue is full or its occupancy is at/above
-    /// `[coordinator] shed_watermark` (`0` disables the watermark).
-    /// Requests for registered bundle members are always admitted into
-    /// their batching window: a window rides one queue slot for the whole
-    /// batch, so solo singles are shed first. A shed request consumes no
-    /// ticket id — window formation stays a pure function of the
-    /// *admitted* enqueue sequence.
+    /// when the target shard's job queue is full or its occupancy is
+    /// at/above `[coordinator] shed_watermark` (`0` disables the
+    /// watermark). Requests for registered bundle members are always
+    /// admitted into their batching window: a window rides one queue slot
+    /// for the whole batch, so solo singles are shed first. A shed
+    /// request consumes no ticket id — window formation stays a pure
+    /// function of the *admitted* enqueue sequence.
     pub fn try_enqueue(
         &mut self,
         block: Arc<SparseBlock>,
@@ -920,14 +567,16 @@ impl ServeSession<'_> {
         self.issued.push(Arc::downgrade(&ticket.state));
     }
 
-    /// Seal and dispatch every open batching window without waiting.
+    /// Seal and dispatch every batching window this session's requests
+    /// joined, without waiting. Other sessions' requests riding a shared
+    /// window dispatch with it.
     pub fn flush(&mut self) {
         self.core.flush_all();
     }
 
-    /// Seal and dispatch every open batching window, then block until
-    /// every ticket issued by this session has resolved. Results stay
-    /// claimable through their tickets.
+    /// Seal and dispatch every window this session joined, then block
+    /// until every ticket issued by this session has resolved. Results
+    /// stay claimable through their tickets.
     pub fn drain(&mut self) {
         self.core.flush_all();
         for state in self.issued.drain(..) {
@@ -948,436 +597,15 @@ impl Drop for ServeSession<'_> {
 }
 
 // ---------------------------------------------------------------------------
-// Mapping cache
-
-/// A cached, servable mapping: a solo block's or a whole fused bundle's.
-struct ServingMapping {
-    outcome: MapOutcome,
-    /// `Some` when the mapping hosts a bundle — carries the member blocks
-    /// the simulator needs for the co-resident streams.
-    bundle: Option<Arc<FusedBundle>>,
-    /// Compiled execution plan for the mapping, built once under the same
-    /// single-flight guard as the mapping itself and evicted with it.
-    /// `None` when the backend knob selects the interpreter or when plan
-    /// compilation failed (a loud, logged fallback — never a lost ticket).
-    plan: Option<ExecPlan>,
-}
-
-/// State of one cache entry. `Building` marks a mapping in flight; waiters
-/// sleep on the entry's condvar instead of holding any mutex the builder
-/// needs.
-enum EntryState {
-    /// No mapping and no builder in flight.
-    Empty,
-    Building,
-    Ready(Arc<ServingMapping>),
-    /// The build failed; the sticky error lets queued waiters fail fast
-    /// instead of serially re-running a deterministically failing mapping.
-    /// With `failure_ttl = 0` the entry is already detached from the cache
-    /// map (new requesters get a fresh entry and their own retry); under a
-    /// TTL it stays resident and `retry_in` counts down the remaining
-    /// fast-fails — the request that finds it at `1` rebuilds in place.
-    Failed { reason: String, retry_in: u64 },
-}
-
-struct CacheEntry {
-    state: Mutex<EntryState>,
-    ready: Condvar,
-    /// Monotonic use tick for LRU eviction (unique per touch; assigned
-    /// under the cache-map lock so eviction order is race-free and the
-    /// tick index can be maintained in lockstep).
-    last_use: AtomicU64,
-}
-
-/// Unwind guard for the build phase: if the build closure fails or panics
-/// (a mapper invariant violation), mark the entry `Failed`, wake waiters
-/// so they fail fast instead of deadlocking on a forever-`Building` entry
-/// (or serially re-running a deterministically failing mapping), and drop
-/// the entry from the cache map — `Failed` entries must not be found by
-/// new requesters, and a dead entry would otherwise pin capacity forever
-/// (only `Ready` entries are LRU victims, see [`evict_lru`]). The removal
-/// is pointer-compared so a newer same-key entry created by a later
-/// requester is never clobbered.
-struct BuildGuard<'a> {
-    cache: &'a MappingCache,
-    key: &'a str,
-    entry: &'a Arc<CacheEntry>,
-    armed: bool,
-}
-
-impl BuildGuard<'_> {
-    fn disarm(&mut self) {
-        self.armed = false;
-    }
-
-    /// Mark the entry failed with `reason` and wake waiters. Under a
-    /// failure TTL the entry stays resident (the next requests fail fast
-    /// while `retry_in` counts down, then one rebuilds in place; LRU can
-    /// evict it meanwhile); with TTL `0` the failure is sticky and the
-    /// entry detaches from the cache (map and tick index).
-    fn fail(&mut self, reason: &str) {
-        self.armed = false;
-        let ttl = self.cache.failure_ttl;
-        {
-            let mut state = self.entry.state.lock().expect("cache entry");
-            *state = EntryState::Failed {
-                reason: reason.to_string(),
-                retry_in: if ttl == 0 { u64::MAX } else { ttl },
-            };
-            self.entry.ready.notify_all();
-        }
-        if ttl > 0 {
-            return;
-        }
-        // Entry lock released before the map lock — the same order as
-        // every other path (the map lock is never held while waiting
-        // on an entry, and evict_lru only try_locks entry states).
-        let mut inner = self.cache.inner.lock().expect("cache map");
-        if inner.map.get(self.key).is_some_and(|e| Arc::ptr_eq(e, self.entry)) {
-            inner.map.remove(self.key);
-            // The entry's latest tick is authoritative: every touch
-            // restamps it under the map lock we are holding.
-            let tick = self.entry.last_use.load(Ordering::Relaxed);
-            let removed = inner.by_tick.remove(&tick);
-            debug_assert_eq!(removed.as_deref(), Some(self.key));
-        }
-    }
-}
-
-impl Drop for BuildGuard<'_> {
-    fn drop(&mut self) {
-        if self.armed {
-            // Panic unwind path; the error path calls `fail` explicitly
-            // with the builder's own message.
-            self.fail("mapping build panicked");
-        }
-    }
-}
-
-/// The cache's locked state: the key → entry map plus the tick-ordered
-/// LRU index. Both are maintained together under one mutex — every touch
-/// restamps the entry's tick and moves its index row, so eviction walks
-/// the index in use order instead of scanning the whole map.
-struct CacheInner {
-    map: HashMap<String, Arc<CacheEntry>>,
-    /// Use tick → key. Ticks are unique (assigned under this lock), so
-    /// this is a total LRU order over the resident entries.
-    by_tick: BTreeMap<u64, String>,
-}
-
-/// Single-flight, LRU-bounded mapping cache. The outer map is only ever
-/// locked for entry lookup/insert/evict — mapping happens against the
-/// entry's own state mutex, and waiters for an in-flight mapping sleep on
-/// the entry's `Condvar`.
-struct MappingCache {
-    inner: Mutex<CacheInner>,
-    tick: AtomicU64,
-    /// `0` = unbounded.
-    capacity: usize,
-    /// Retry-after budget for failed builds (`[coordinator] failure_ttl`):
-    /// a `Failed` entry fast-fails the next `failure_ttl - 1` requests for
-    /// its key, then the next one rebuilds in place. `0` = sticky forever
-    /// (failures detach; only a fresh requester retries).
-    failure_ttl: u64,
-}
-
-impl MappingCache {
-    fn new(capacity: usize, failure_ttl: u64) -> Self {
-        MappingCache {
-            inner: Mutex::new(CacheInner { map: HashMap::new(), by_tick: BTreeMap::new() }),
-            tick: AtomicU64::new(0),
-            capacity,
-            failure_ttl,
-        }
-    }
-
-    /// Fetch `key`'s mapping, building it via `build` on a miss. Exactly
-    /// one requester builds; concurrent requesters for the same key wait
-    /// on the entry and share the result (counted as cache hits). On a
-    /// build failure the entry turns sticky-`Failed` and leaves the map —
-    /// the builder and every queued waiter report the error without
-    /// re-running the (deterministic) mapping, while a later fresh
-    /// requester gets a new entry and its own retry.
-    fn get_or_map<F>(
-        &self,
-        key: &str,
-        metrics: &Metrics,
-        build: F,
-    ) -> Result<(Arc<ServingMapping>, bool)>
-    where
-        F: FnOnce() -> Result<ServingMapping>,
-    {
-        let entry = {
-            let mut inner = self.inner.lock().expect("cache map");
-            // The use tick is assigned while the map is locked, so a
-            // concurrent inserter can never observe (and evict) an entry
-            // that has not been stamped yet — and the tick index moves in
-            // the same critical section.
-            let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
-            match inner.map.get(key) {
-                Some(e) => {
-                    let e = Arc::clone(e);
-                    let prev = e.last_use.swap(tick, Ordering::Relaxed);
-                    // Reuse the removed key String — the hit path stays
-                    // allocation-free.
-                    let moved =
-                        inner.by_tick.remove(&prev).unwrap_or_else(|| key.to_string());
-                    debug_assert_eq!(moved, key);
-                    inner.by_tick.insert(tick, moved);
-                    e
-                }
-                None => {
-                    // Loop, not a single evict: overshoot accumulated
-                    // while entries were mid-build (unevictable) is
-                    // reclaimed here once those entries turn Ready.
-                    while self.capacity > 0
-                        && inner.map.len() >= self.capacity
-                        && evict_lru(&mut inner)
-                    {}
-                    let e = Arc::new(CacheEntry {
-                        state: Mutex::new(EntryState::Empty),
-                        ready: Condvar::new(),
-                        last_use: AtomicU64::new(tick),
-                    });
-                    inner.map.insert(key.to_string(), Arc::clone(&e));
-                    inner.by_tick.insert(tick, key.to_string());
-                    e
-                }
-            }
-        };
-
-        let mut state = entry.state.lock().expect("cache entry");
-        loop {
-            match &mut *state {
-                EntryState::Ready(m) => {
-                    metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
-                    return Ok((Arc::clone(m), false));
-                }
-                EntryState::Building => {
-                    state = entry.ready.wait(state).expect("cache entry");
-                }
-                // The builder failed; the mapping is deterministic, so
-                // re-running it immediately would pay the whole attempt
-                // lattice again for the same error — fail fast with the
-                // builder's reason while the retry budget lasts. The
-                // request that finds the budget at 1 falls through to
-                // `Building` and rebuilds in place (failure TTL expired).
-                EntryState::Failed { reason, retry_in } => {
-                    if *retry_in <= 1 {
-                        break;
-                    }
-                    *retry_in -= 1;
-                    return Err(Error::Runtime(format!(
-                        "mapping failed in a concurrent request: {reason}"
-                    )));
-                }
-                EntryState::Empty => break,
-            }
-        }
-        *state = EntryState::Building;
-        drop(state);
-
-        let mut unwind = BuildGuard { cache: self, key, entry: &entry, armed: true };
-        let built = build();
-        match built {
-            Ok(m) => {
-                // A miss is counted only when a fresh mapping actually
-                // lands: a failed build followed by a fallback (e.g. the
-                // fused → solo path) must not report two misses for one
-                // request — failures have their own counter.
-                metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
-                let m = Arc::new(m);
-                let mut state = entry.state.lock().expect("cache entry");
-                unwind.disarm();
-                *state = EntryState::Ready(Arc::clone(&m));
-                entry.ready.notify_all();
-                Ok((m, true))
-            }
-            // Waiters fail fast on the sticky error; the detached entry
-            // leaves the map so a *new* requester gets a fresh entry and
-            // its own (deterministic) retry.
-            Err(e) => {
-                unwind.fail(&e.to_string());
-                Err(e)
-            }
-        }
-    }
-}
-
-/// Evict the least-recently-used *evictable* entry by walking the tick
-/// index in use order — O(victim position in the index), not a full-map
-/// scan. Only `Ready` entries (and TTL-resident `Failed` ones, which hold
-/// no mapping) are victims: a `Building` entry is the single-flight
-/// rendezvous for concurrent requesters, and an `Empty` entry belongs to
-/// a requester that has looked it up but not yet locked it — evicting
-/// either would detach an in-flight mapping from the cache
-/// (the result would be built and then silently dropped, and a concurrent
-/// same-key request would map a second time). Non-victims stay in the
-/// index and are skipped. At capacity the map may therefore transiently
-/// exceed its bound by the number of in-flight mappings — the insert path
-/// loops eviction, so the overshoot is reclaimed as those entries turn
-/// Ready. Use ticks are unique, so the victim is deterministic for a
-/// given request history. Returns whether a victim was evicted.
-fn evict_lru(inner: &mut CacheInner) -> bool {
-    let victim = inner.by_tick.iter().find_map(|(&tick, key)| {
-        let e = inner.map.get(key)?;
-        match e.state.try_lock() {
-            // The state mutex is only ever held briefly (never across a
-            // mapping), so a contended entry is simply skipped this round.
-            Ok(state)
-                if matches!(&*state, EntryState::Ready(_) | EntryState::Failed { .. }) =>
-            {
-                Some((tick, key.clone()))
-            }
-            _ => None,
-        }
-    });
-    match victim {
-        Some((tick, key)) => {
-            inner.by_tick.remove(&tick);
-            inner.map.remove(&key);
-            true
-        }
-        None => false,
-    }
-}
-
-// ---------------------------------------------------------------------------
 // The coordinator
 
-enum Job {
-    Single(SingleJob),
-    Window(WindowJob),
-}
-
-struct SingleJob {
-    id: u64,
-    block: Arc<SparseBlock>,
-    xs: Vec<Vec<f32>>,
-    done: TicketCompleter,
-    /// Shed (as `DeadlineExceeded`) at worker pickup once passed.
-    deadline: Option<Instant>,
-    /// Enqueue timestamp, for queue-span latency attribution.
-    enqueued_at: Instant,
-}
-
-struct WindowJob {
-    bundle: Arc<FusedBundle>,
-    /// Member requests in window (enqueue) order.
-    requests: Vec<WindowRequest>,
-}
-
-/// Ticket count aboard a job.
-fn job_width(job: &Job) -> usize {
-    match job {
-        Job::Single(_) => 1,
-        Job::Window(w) => w.requests.len(),
-    }
-}
-
-/// Resolve every ticket aboard `job` to [`ServeError::WorkerGone`] (the
-/// pool died with the job still queued).
-fn resolve_worker_gone(job: Job) {
-    match job {
-        Job::Single(j) => j.done.fulfill(Err(ServeError::WorkerGone)),
-        Job::Window(w) => {
-            for r in w.requests {
-                r.done.fulfill(Err(ServeError::WorkerGone));
-            }
-        }
-    }
-}
-
-/// The bounded job queue plus an occupancy gauge for admission control.
-/// The gauge counts enqueued-but-not-picked-up jobs: it is incremented
-/// *before* the underlying send (and rolled back on failure) and
-/// decremented by a worker at pickup — so it can transiently over-count
-/// by the number of in-flight senders but never underflows (a wrap would
-/// make the shed watermark reject everything).
-struct JobQueue {
-    tx: SyncSender<Job>,
-    len: Arc<AtomicUsize>,
-}
-
-impl JobQueue {
-    /// Blocking send (backpressure). On a closed queue the job is handed
-    /// back so the caller can resolve its tickets.
-    fn send(&self, job: Job) -> std::result::Result<(), Job> {
-        self.len.fetch_add(1, Ordering::Relaxed);
-        match self.tx.send(job) {
-            Ok(()) => Ok(()),
-            Err(SendError(job)) => {
-                self.len.fetch_sub(1, Ordering::Relaxed);
-                Err(job)
-            }
-        }
-    }
-
-    /// Non-blocking send, for admission control.
-    fn try_send(&self, job: Job) -> std::result::Result<(), TrySendError<Job>> {
-        self.len.fetch_add(1, Ordering::Relaxed);
-        match self.tx.try_send(job) {
-            Ok(()) => Ok(()),
-            Err(e) => {
-                self.len.fetch_sub(1, Ordering::Relaxed);
-                Err(e)
-            }
-        }
-    }
-
-    /// Jobs currently queued (approximate under concurrent traffic, exact
-    /// when quiescent).
-    fn occupancy(&self) -> usize {
-        self.len.load(Ordering::Relaxed)
-    }
-}
-
-/// Panic counts per job identity — a solo block's mask fingerprint or a
-/// bundle's combined fingerprint. A job that keeps killing its worker is
-/// quarantined (resolved [`ServeError::Poisoned`], never retried) once
-/// its count reaches `[coordinator] poison_threshold`, so one poison
-/// request cannot burn the whole restart budget.
-struct PoisonRegistry {
-    counts: Mutex<HashMap<u64, u32>>,
-}
-
-impl PoisonRegistry {
-    fn new() -> Self {
-        PoisonRegistry { counts: Mutex::new(HashMap::new()) }
-    }
-
-    /// Record one panic against `identity`; returns the new count. The
-    /// lock is poison-recovered: panic bookkeeping must keep working on
-    /// the very code paths panics unwind through.
-    fn record(&self, identity: u64) -> u32 {
-        let mut counts = self.counts.lock().unwrap_or_else(|p| p.into_inner());
-        let c = counts.entry(identity).or_insert(0);
-        *c += 1;
-        *c
-    }
-
-    fn count(&self, identity: u64) -> u32 {
-        let counts = self.counts.lock().unwrap_or_else(|p| p.into_inner());
-        counts.get(&identity).copied().unwrap_or(0)
-    }
-}
-
-/// Everything a worker thread needs, bundled into one cloneable value so
-/// the supervisor can respawn workers after the constructor returned.
-#[derive(Clone)]
-struct WorkerCtx {
-    rx: Arc<Mutex<Receiver<Job>>>,
-    queue_len: Arc<AtomicUsize>,
-    cache: Arc<MappingCache>,
-    bundles: Arc<BundleRoutes>,
-    metrics: Arc<Metrics>,
-    opts: MapperOptions,
-    cgra: StreamingCgra,
-    poison: Arc<PoisonRegistry>,
-    poison_threshold: u32,
-    /// Which simulation backend freshly built cache entries compile for.
-    /// Resolved once at construction (config knob + env override).
-    backend: SimBackend,
+/// Registration state behind one lock: the deterministic shard assigner
+/// plus the registered units in registration order (what the warm-start
+/// manifest persists — replaying the manifest replays the assignments).
+struct Registry {
+    assigner: ShardAssigner,
+    blocks: Vec<Arc<SparseBlock>>,
+    bundles: Vec<Arc<FusedBundle>>,
 }
 
 /// Legacy `submit`/`collect` shim state: an internal session core plus the
@@ -1389,122 +617,228 @@ struct LegacyState {
 
 /// The streaming coordinator.
 pub struct Coordinator {
-    /// The only strong reference to the job queue: taking it (in
-    /// [`Coordinator::shutdown`], also run by drop) closes the queue.
-    /// Sessions and tickets hold weak refs only, so stray handles can
-    /// never keep the pool alive. Behind a mutex so shutdown works
-    /// through `&self`.
-    tx: Mutex<Option<Arc<JobQueue>>>,
-    /// The supervision thread that owns the worker pool (see
-    /// [`supervisor_loop`]); joined on shutdown.
-    supervisor: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// The only strong references to the per-shard job queues: taking the
+    /// vector (in [`Coordinator::shutdown`], also run by drop) closes
+    /// every queue. Sessions and tickets hold weak refs only, so stray
+    /// handles can never keep a pool alive. Behind a mutex so shutdown
+    /// works through `&self`.
+    tx: Mutex<Option<Vec<Arc<JobQueue>>>>,
+    /// One supervision thread per shard (see [`supervisor_loop`]); all
+    /// joined on shutdown.
+    supervisors: Mutex<Vec<std::thread::JoinHandle<()>>>,
     pub metrics: Arc<Metrics>,
     bundles: Arc<BundleRoutes>,
     fusion: FusionOptions,
     batching: BatchOptions,
     cgra: StreamingCgra,
     shed_watermark: usize,
+    /// `[coordinator] dispatch_lookahead`: bound on requests riding open
+    /// windows before the oldest is force-sealed (`0` = unbounded).
+    lookahead: usize,
+    nshards: usize,
+    /// Per-shard handles (cache for warm start, counter block), indexed
+    /// by shard id.
+    shards: Vec<Shard>,
+    /// Registered units and their shard assignments.
+    registry: Mutex<Registry>,
+    /// The global window-forming state every session enqueues through.
+    dispatch: Mutex<DispatchState>,
+    /// Coordinator-global request uid allocator (windows span sessions,
+    /// so session-scoped ids are not unique inside a window).
+    next_uid: AtomicU64,
+    /// Mapper knobs, retained for warm-start pre-builds (workers carry
+    /// their own copy in `WorkerCtx`).
+    opts: MapperOptions,
+    backend: SimBackend,
+    /// `[coordinator] warm_start_path`, `None` when unset.
+    warm_start_path: Option<String>,
     legacy: Mutex<LegacyState>,
 }
 
 impl Coordinator {
-    /// Spawn `cfg.workers` worker threads with a queue of depth
-    /// `cfg.queue_depth` (a batching window occupies one slot), plus the
-    /// supervisor thread that keeps the pool at strength.
+    /// Spawn the sharded worker tier per `cfg`: `effective_shards`
+    /// resolves `[coordinator] shards` against the [`SHARDS_ENV`]
+    /// override, then each shard gets `cfg.workers` worker threads over a
+    /// queue of depth `cfg.queue_depth` (a batching window occupies one
+    /// slot), plus a supervisor thread that keeps its pool at strength.
     pub fn new(cfg: &SparsemapConfig) -> Self {
-        let (tx, rx) = sync_channel::<Job>(cfg.queue_depth);
-        let queue_len = Arc::new(AtomicUsize::new(0));
-        let queue = Arc::new(JobQueue { tx, len: Arc::clone(&queue_len) });
-        let rx = Arc::new(Mutex::new(rx));
-        let cache = Arc::new(MappingCache::new(cfg.cache_capacity, cfg.failure_ttl));
+        Self::with_shard_count(cfg, shard::effective_shards(cfg.shards))
+    }
+
+    /// Like [`Coordinator::new`] with an explicit shard count, bypassing
+    /// both `[coordinator] shards` and the [`SHARDS_ENV`] override.
+    /// Benchmarks and tests pin topology with this so an ambient env
+    /// override cannot skew a pinned measurement.
+    pub fn with_shard_count(cfg: &SparsemapConfig, shards: usize) -> Self {
+        let nshards = shards.max(1);
         let bundles = Arc::new(BundleRoutes::new());
         let metrics = Arc::new(Metrics::default());
         let mut opts = MapperOptions::from_config(cfg);
         if opts.parallelism == 0 {
             // Auto portfolio width: split the machine between the worker
-            // pool and each worker's mapping portfolio, so a burst of
-            // cache misses doesn't oversubscribe cores. The mapping itself
-            // is width-independent (deterministic portfolio), so this only
-            // shapes latency.
+            // pools of ALL shards and each worker's mapping portfolio, so
+            // a burst of cache misses doesn't oversubscribe cores. The
+            // mapping itself is width-independent (deterministic
+            // portfolio), so this only shapes latency.
             let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-            opts.parallelism = (cores / cfg.workers.max(1)).clamp(1, 8);
+            opts.parallelism = (cores / (cfg.workers.max(1) * nshards)).clamp(1, 8);
         }
         let fusion = opts.fusion;
         let batching = BatchOptions::from_config(cfg);
         let cgra = cfg.cgra.clone();
+        let backend = SimBackend::effective(cfg.sim_backend);
 
-        let ctx = WorkerCtx {
-            rx,
-            queue_len,
-            cache,
-            bundles: Arc::clone(&bundles),
-            metrics: Arc::clone(&metrics),
-            opts,
-            cgra: cgra.clone(),
-            poison: Arc::new(PoisonRegistry::new()),
-            poison_threshold: cfg.poison_threshold as u32,
-            backend: SimBackend::effective(cfg.sim_backend),
-        };
-        let (exit_tx, exit_rx) = channel();
-        let handles: Vec<Option<std::thread::JoinHandle<()>>> = (0..cfg.workers)
-            .map(|wid| {
-                Some(spawn_worker(wid, ctx.clone(), exit_tx.clone()).expect("spawn worker"))
-            })
-            .collect();
-        let restart_budget = cfg.restart_budget;
-        let supervisor = std::thread::Builder::new()
-            .name("sparsemap-supervisor".into())
-            .spawn(move || supervisor_loop(exit_rx, exit_tx, handles, ctx, restart_budget))
-            .expect("spawn supervisor");
+        let mut queues = Vec::with_capacity(nshards);
+        let mut shard_list = Vec::with_capacity(nshards);
+        let mut supervisors = Vec::with_capacity(nshards);
+        for sid in 0..nshards {
+            let (tx, rx) = sync_channel::<Job>(cfg.queue_depth);
+            let queue_len = Arc::new(AtomicUsize::new(0));
+            let queue = Arc::new(JobQueue { tx, len: Arc::clone(&queue_len) });
+            let rx = Arc::new(Mutex::new(rx));
+            let cache = Arc::new(MappingCache::new(cfg.cache_capacity, cfg.failure_ttl));
+            let shard_metrics = Arc::new(ShardMetrics::default());
+            let ctx = WorkerCtx {
+                rx,
+                queue_len,
+                cache: Arc::clone(&cache),
+                bundles: Arc::clone(&bundles),
+                metrics: Arc::clone(&metrics),
+                shard: Arc::clone(&shard_metrics),
+                shard_id: sid,
+                opts: opts.clone(),
+                cgra: cgra.clone(),
+                poison: Arc::new(PoisonRegistry::new()),
+                poison_threshold: cfg.poison_threshold as u32,
+                backend,
+            };
+            let (exit_tx, exit_rx) = channel();
+            let handles: Vec<Option<std::thread::JoinHandle<()>>> = (0..cfg.workers)
+                .map(|wid| {
+                    Some(spawn_worker(wid, ctx.clone(), exit_tx.clone()).expect("spawn worker"))
+                })
+                .collect();
+            let restart_budget = cfg.restart_budget;
+            let supervisor = std::thread::Builder::new()
+                .name(format!("sparsemap-supervisor-{sid}"))
+                .spawn(move || supervisor_loop(exit_rx, exit_tx, handles, ctx, restart_budget))
+                .expect("spawn supervisor");
+            queues.push(queue);
+            shard_list.push(Shard { cache, metrics: shard_metrics });
+            supervisors.push(supervisor);
+        }
+        metrics.attach_shards(shard_list.iter().map(|s| Arc::clone(&s.metrics)).collect());
 
-        Coordinator {
-            tx: Mutex::new(Some(queue)),
-            supervisor: Mutex::new(Some(supervisor)),
+        let warm_start_path =
+            if cfg.warm_start_path.is_empty() { None } else { Some(cfg.warm_start_path.clone()) };
+        let coord = Coordinator {
+            tx: Mutex::new(Some(queues)),
+            supervisors: Mutex::new(supervisors),
             metrics,
             bundles,
             fusion,
             batching,
             cgra,
             shed_watermark: cfg.shed_watermark,
+            lookahead: cfg.dispatch_lookahead,
+            nshards,
+            shards: shard_list,
+            registry: Mutex::new(Registry {
+                assigner: ShardAssigner::new(nshards),
+                blocks: Vec::new(),
+                bundles: Vec::new(),
+            }),
+            dispatch: Mutex::new(DispatchState::new()),
+            next_uid: AtomicU64::new(0),
+            opts,
+            backend,
+            warm_start_path,
             legacy: Mutex::new(LegacyState { core: SessionCore::new(), fifo: VecDeque::new() }),
-        }
+        };
+        coord.warm_start();
+        coord
     }
 
     /// Open a serving session: the enqueue side of the ticket API. A
-    /// coordinator serves any number of sessions (each forms its own
-    /// batching windows).
+    /// coordinator serves any number of sessions; their requests share
+    /// batching windows through the global dispatch state.
     pub fn session(&self) -> ServeSession<'_> {
         ServeSession { coord: self, core: SessionCore::new(), issued: Vec::new() }
     }
 
-    fn sender(&self) -> Option<Arc<JobQueue>> {
-        self.tx.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    /// Number of worker-pool shards this coordinator runs.
+    pub fn shard_count(&self) -> usize {
+        self.nshards
     }
 
-    /// Tear the worker pool down: seal any open legacy batching windows,
-    /// close the job queue, and join the supervisor — which joins the
-    /// workers and resolves anything still queued (`WorkerGone`).
-    /// Idempotent, and also run by drop. Tickets issued before shutdown
-    /// stay valid: every one of them resolves, and enqueues after
-    /// shutdown resolve [`ServeError::QueueClosed`] immediately.
+    fn sender(&self, sid: usize) -> Option<Arc<JobQueue>> {
+        self.tx
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .as_ref()
+            .map(|queues| Arc::clone(&queues[sid]))
+    }
+
+    /// The global dispatch state, poison-recovered (window bookkeeping is
+    /// plain data; a panicking enqueuer must not wedge every session).
+    fn dispatch(&self) -> std::sync::MutexGuard<'_, DispatchState> {
+        self.dispatch.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Owning shard for a fingerprint: the assigner's pin for registered
+    /// units, a fingerprint hash for ad-hoc traffic. Total — every
+    /// request has a home shard.
+    fn shard_for(&self, fp: u64) -> usize {
+        let reg = self.registry.lock().unwrap_or_else(|p| p.into_inner());
+        reg.assigner.shard_of(fp).unwrap_or((fp % self.nshards as u64) as usize)
+    }
+
+    /// Tear the worker tier down: seal any open legacy batching windows,
+    /// seal and dispatch every window still forming in the global
+    /// dispatch state, close every shard's job queue, and join the
+    /// supervisors — which join the workers and resolve anything still
+    /// queued (`WorkerGone`). Idempotent, and also run by drop. Tickets
+    /// issued before shutdown stay valid: every one of them resolves, and
+    /// enqueues after shutdown resolve [`ServeError::QueueClosed`]
+    /// immediately.
     pub fn shutdown(&self) {
         if let Ok(mut legacy) = self.legacy.lock() {
             legacy.core.flush_all();
         }
+        // Flush outside the dispatch lock: flush takes the cell lock and
+        // may send on a queue, and the lock order everywhere else is
+        // dispatch → cell → queue.
+        let open = self.dispatch().drain_open();
+        for h in open {
+            h.flush();
+        }
         self.tx.lock().unwrap_or_else(|p| p.into_inner()).take();
-        let sup = self.supervisor.lock().unwrap_or_else(|p| p.into_inner()).take();
-        if let Some(sup) = sup {
+        let sups =
+            std::mem::take(&mut *self.supervisors.lock().unwrap_or_else(|p| p.into_inner()));
+        for sup in sups {
             let _ = sup.join();
         }
+    }
+
+    /// Register a solo block with the serving tier: pins its shard
+    /// assignment (deterministic greedy, capacity-constrained over
+    /// estimated PE/bus demand) and persists it to the warm-start
+    /// manifest when one is configured. Returns the owning shard id.
+    /// Registration is optional for solo traffic — an unregistered block
+    /// hashes onto a shard — but registered blocks get demand-balanced
+    /// placement and warm starts.
+    pub fn register_block(&self, block: Arc<SparseBlock>) -> usize {
+        self.register_block_at(&block, true)
     }
 
     /// Register a fused bundle: from now on a request for *any* member
     /// block batches into the bundle's windows and is served through the
     /// bundle's shared fused mapping (one cache entry keyed by the
-    /// bundle's combined mask fingerprint). Requests already served solo
-    /// keep their solo cache entries — fused and unfused traffic mix
-    /// freely.
+    /// bundle's combined mask fingerprint) on the bundle's assigned
+    /// shard. Requests already served solo keep their solo cache entries
+    /// — fused and unfused traffic mix freely.
     pub fn register_bundle(&self, bundle: Arc<FusedBundle>) {
+        self.register_bundle_at(&bundle, true);
         self.bundles.register(bundle);
     }
 
@@ -1520,6 +854,98 @@ impl Coordinator {
             }
         }
         plan
+    }
+
+    fn register_block_at(&self, block: &Arc<SparseBlock>, persist: bool) -> usize {
+        let fp = block.mask_fingerprint();
+        let mut reg = self.registry.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(sid) = reg.assigner.shard_of(fp) {
+            return sid;
+        }
+        let sid = reg.assigner.assign(fp, shard::block_demand(block), &self.cgra);
+        reg.blocks.push(Arc::clone(block));
+        if persist {
+            self.persist_manifest(&reg);
+        }
+        sid
+    }
+
+    fn register_bundle_at(&self, bundle: &Arc<FusedBundle>, persist: bool) -> usize {
+        let fp = bundle.fingerprint();
+        let mut reg = self.registry.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(sid) = reg.assigner.shard_of(fp) {
+            return sid;
+        }
+        let sid = reg.assigner.assign(fp, shard::bundle_demand(bundle), &self.cgra);
+        reg.bundles.push(Arc::clone(bundle));
+        if persist {
+            self.persist_manifest(&reg);
+        }
+        sid
+    }
+
+    /// Rewrite the warm-start manifest from the registry (registration is
+    /// rare and the manifest is small, so wholesale rewrite beats
+    /// appending + compaction). A write failure degrades the *next* start
+    /// to cold; it never fails the registration.
+    fn persist_manifest(&self, reg: &Registry) {
+        let Some(path) = &self.warm_start_path else { return };
+        if let Err(e) = shard::write_manifest(path, &reg.blocks, &reg.bundles) {
+            crate::log_warn!("writing warm-start manifest {path} failed: {e}");
+        }
+    }
+
+    /// Replay the warm-start manifest (if configured and present):
+    /// re-register every unit in file order — restoring the shard
+    /// assignments — and pre-build its mapping through the normal
+    /// single-flight cache path on its owning shard. Mapping cache
+    /// entries depend only on mask structure (weights arrive
+    /// per-request), so a pre-built mapping is serving-identical to a
+    /// cold-built one. A missing or corrupt manifest degrades to a cold
+    /// start, never a failed constructor.
+    fn warm_start(&self) {
+        let Some(path) = self.warm_start_path.clone() else { return };
+        if !std::path::Path::new(&path).exists() {
+            return;
+        }
+        let units = match shard::load_manifest(&path) {
+            Ok(units) => units,
+            Err(e) => {
+                crate::log_warn!("reading warm-start manifest {path} failed ({e}); cold start");
+                return;
+            }
+        };
+        for unit in units {
+            match unit {
+                ManifestUnit::Block(block) => {
+                    let sid = self.register_block_at(&block, false);
+                    let key = pool::solo_cache_key(&block);
+                    let built = self.shards[sid].cache.get_or_map(&key, &self.metrics, || {
+                        pool::build_solo_mapping(&block, &key, &self.cgra, &self.opts, self.backend)
+                    });
+                    if let Err(e) = built {
+                        crate::log_warn!("warm-start mapping for {key} failed: {e}");
+                    }
+                }
+                ManifestUnit::Bundle(bundle) => {
+                    let sid = self.register_bundle_at(&bundle, false);
+                    self.bundles.register(Arc::clone(&bundle));
+                    let key = pool::bundle_cache_key(&bundle);
+                    let built = self.shards[sid].cache.get_or_map(&key, &self.metrics, || {
+                        pool::build_bundle_mapping(
+                            &bundle,
+                            &key,
+                            &self.cgra,
+                            &self.opts,
+                            self.backend,
+                        )
+                    });
+                    if let Err(e) = built {
+                        crate::log_warn!("warm-start mapping for {key} failed: {e}");
+                    }
+                }
+            }
+        }
     }
 
     /// Submit a job; blocks when the queue is full (backpressure).
@@ -1570,527 +996,6 @@ impl Drop for Coordinator {
             legacy.fifo.clear();
         }
     }
-}
-
-// ---------------------------------------------------------------------------
-// Workers and supervision
-
-/// Drop guard a worker thread holds for its whole life: tells the
-/// supervisor the worker exited and whether it exited by panic. Running
-/// in `Drop`, the notification survives any unwind path out of the
-/// worker.
-struct ExitGuard {
-    id: usize,
-    tx: Sender<(usize, bool)>,
-}
-
-impl Drop for ExitGuard {
-    fn drop(&mut self) {
-        let _ = self.tx.send((self.id, std::thread::panicking()));
-    }
-}
-
-fn spawn_worker(
-    wid: usize,
-    ctx: WorkerCtx,
-    exit_tx: Sender<(usize, bool)>,
-) -> std::io::Result<std::thread::JoinHandle<()>> {
-    std::thread::Builder::new()
-        .name(format!("sparsemap-worker-{wid}"))
-        .spawn(move || {
-            let _exit = ExitGuard { id: wid, tx: exit_tx };
-            worker_loop(&ctx);
-        })
-}
-
-/// Supervision loop: collect worker exits, respawn panicked workers while
-/// the restart budget lasts (the pool never shrinks silently — every
-/// shrink logs), and once the last worker is gone keep draining the
-/// queue, resolving every stranded ticket, until the coordinator closes
-/// it. The drain is what makes "every enqueued ticket resolves" hold even
-/// when persistent faults burn the whole budget mid-traffic.
-fn supervisor_loop(
-    exit_rx: Receiver<(usize, bool)>,
-    exit_tx: Sender<(usize, bool)>,
-    mut handles: Vec<Option<std::thread::JoinHandle<()>>>,
-    ctx: WorkerCtx,
-    restart_budget: usize,
-) {
-    let mut live = handles.len();
-    let mut budget = restart_budget;
-    while live > 0 {
-        // Cannot disconnect while this thread holds `exit_tx`; defensive.
-        let Ok((wid, panicked)) = exit_rx.recv() else { break };
-        if let Some(h) = handles[wid].take() {
-            let _ = h.join();
-        }
-        if !panicked {
-            // Clean exit: the queue closed and the worker drained out.
-            live -= 1;
-            continue;
-        }
-        // Per-job catch_unwind makes a worker-killing panic rare (only a
-        // fault outside the guarded region reaches the thread boundary),
-        // but the pool must survive it regardless.
-        if budget == 0 {
-            live -= 1;
-            crate::log_warn!(
-                "worker {wid} died with the restart budget exhausted; pool shrinks to \
-                 {live} workers"
-            );
-            continue;
-        }
-        budget -= 1;
-        match spawn_worker(wid, ctx.clone(), exit_tx.clone()) {
-            Ok(h) => {
-                ctx.metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
-                crate::log_warn!(
-                    "worker {wid} died by panic; respawned ({budget} restarts left)"
-                );
-                handles[wid] = Some(h);
-            }
-            Err(e) => {
-                live -= 1;
-                crate::log_error!("respawning worker {wid} failed ({e}); pool shrinks");
-            }
-        }
-    }
-    // Whole pool gone — restart budget exhausted under persistent faults,
-    // or plain shutdown. Resolve everything queued (and everything still
-    // arriving from senders that raced the pool's death) until the
-    // coordinator closes the queue, so no ticket ever hangs.
-    loop {
-        let job = {
-            let guard = ctx.rx.lock().unwrap_or_else(|p| p.into_inner());
-            guard.recv()
-        };
-        match job {
-            Ok(job) => {
-                ctx.queue_len.fetch_sub(1, Ordering::Relaxed);
-                ctx.metrics.failures.fetch_add(job_width(&job) as u64, Ordering::Relaxed);
-                resolve_worker_gone(job);
-            }
-            Err(_) => return,
-        }
-    }
-}
-
-fn worker_loop(ctx: &WorkerCtx) {
-    loop {
-        let job = {
-            // Poison-recover: a panicking peer must not wedge the whole
-            // pool on this lock — the receiver behind it is just data.
-            let guard = ctx.rx.lock().unwrap_or_else(|p| p.into_inner());
-            guard.recv()
-        };
-        match job {
-            Ok(job) => {
-                ctx.queue_len.fetch_sub(1, Ordering::Relaxed);
-                // Hard-death site: a panic here is OUTSIDE the per-job
-                // catch_unwind, so it kills the worker thread itself and
-                // exercises supervisor respawn. The job's completers
-                // resolve `WorkerGone` as the unwind drops them.
-                crate::fail_point!("coordinator::worker_hard");
-                match job {
-                    Job::Single(job) => execute_single(job, ctx),
-                    Job::Window(job) => execute_window(job, ctx),
-                }
-            }
-            Err(_) => return,
-        }
-    }
-}
-
-/// Serve one solo request end to end and fulfill its ticket: deadline
-/// check at pickup, then mapping + simulation under a per-job
-/// `catch_unwind`, retried in place until the job identity's poison
-/// quarantine trips.
-fn execute_single(job: SingleJob, ctx: &WorkerCtx) {
-    let picked = Instant::now();
-    ctx.metrics.jobs.fetch_add(1, Ordering::Relaxed);
-    let SingleJob { id, block, xs, done, deadline, enqueued_at } = job;
-    if deadline.is_some_and(|d| picked >= d) {
-        ctx.metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
-        done.fulfill(Err(ServeError::DeadlineExceeded));
-        return;
-    }
-    let identity = block.mask_fingerprint();
-    let queue_ns = picked.saturating_duration_since(enqueued_at).as_nanos() as u64;
-    loop {
-        if ctx.poison.count(identity) >= ctx.poison_threshold {
-            ctx.metrics.poisoned.fetch_add(1, Ordering::Relaxed);
-            ctx.metrics.failures.fetch_add(1, Ordering::Relaxed);
-            done.fulfill(Err(ServeError::Poisoned));
-            return;
-        }
-        // The closure borrows the payload and owns no completer: a panic
-        // unwinds out of it without resolving (or double-resolving) the
-        // ticket — fulfillment happens below, outside the guard.
-        let attempt = catch_unwind(AssertUnwindSafe(|| {
-            crate::fail_point!("coordinator::serve");
-            crate::fail_point!("coordinator::delay");
-            serve_solo(&block, &xs, ctx)
-        }));
-        match attempt {
-            Ok(Ok((outputs, cycles, ii, fresh))) => {
-                ctx.metrics.total_cycles.fetch_add(cycles, Ordering::Relaxed);
-                let service_ns = picked.elapsed().as_nanos() as u64;
-                let latency_ns = queue_ns + service_ns;
-                ctx.metrics.total_latency_ns.fetch_add(latency_ns, Ordering::Relaxed);
-                ctx.metrics.observe_latency(queue_ns, service_ns);
-                done.fulfill(Ok(InferResult {
-                    id,
-                    block_name: block.name.clone(),
-                    outputs,
-                    cycles,
-                    ii,
-                    mapped_fresh: fresh,
-                    fused_members: 1,
-                    latency_ns,
-                    queue_ns,
-                    service_ns,
-                }));
-                return;
-            }
-            Ok(Err(e)) => {
-                ctx.metrics.failures.fetch_add(1, Ordering::Relaxed);
-                done.fulfill(Err(e));
-                return;
-            }
-            Err(_) => {
-                // The worker survived the panic (caught in place): count
-                // a restart, record the poison strike, retry the job.
-                ctx.metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
-                let strikes = ctx.poison.record(identity);
-                crate::log_warn!(
-                    "serving {} panicked (strike {strikes}); {}",
-                    block.name,
-                    if strikes >= ctx.poison_threshold {
-                        "quarantining"
-                    } else {
-                        "retrying in place"
-                    }
-                );
-            }
-        }
-    }
-}
-
-/// Solo path: compile-once mapping keyed by block identity. The key
-/// carries the mask's content fingerprint — name and shape alone would
-/// silently alias two differently-pruned blocks onto one mapping.
-fn serve_solo(
-    block: &Arc<SparseBlock>,
-    xs: &[Vec<f32>],
-    ctx: &WorkerCtx,
-) -> std::result::Result<(Vec<Vec<f32>>, u64, usize, bool), ServeError> {
-    let fp = block.mask_fingerprint();
-    let key = format!("{}#{}x{}@{fp:016x}", block.name, block.c, block.k);
-    let (serving, fresh) = ctx
-        .cache
-        .get_or_map(&key, &ctx.metrics, || {
-            crate::fail_point_error!("coordinator::map", |msg: String| Err(Error::Runtime(
-                msg
-            )));
-            let outcome = map_unit(MapUnit::Single(block), &ctx.cgra, &ctx.opts)?;
-            let plan = compile_serving_plan(&key, &outcome, ctx);
-            Ok(ServingMapping { outcome, bundle: None, plan })
-        })
-        .map_err(|e| ServeError::MappingFailed(e.to_string()))?;
-    crate::fail_point_error!("coordinator::sim", |msg: String| Err(ServeError::Sim(msg)));
-    match serving.plan.as_ref() {
-        Some(plan) => {
-            // Solo block as a one-member window: same compiled inner loop
-            // the batched path runs, same bit-exact results.
-            let batches = vec![vec![MemberSegment { block: block.as_ref(), xs }]];
-            let res = execute_plan_batch(plan, &[block.as_ref()], &batches)
-                .map_err(|e| ServeError::Sim(e.to_string()))?;
-            let outputs = res
-                .per_member
-                .into_iter()
-                .next()
-                .and_then(|m| m.segments.into_iter().next())
-                .map(|s| s.outputs)
-                .unwrap_or_default();
-            Ok((outputs, res.cycles, serving.outcome.mapping.ii, fresh))
-        }
-        None => {
-            let res = simulate(&serving.outcome.mapping, block, &ctx.cgra, xs)
-                .map_err(|e| ServeError::Sim(e.to_string()))?;
-            Ok((res.outputs, res.cycles, serving.outcome.mapping.ii, fresh))
-        }
-    }
-}
-
-/// Compile the execution plan for a freshly built cache entry, honouring
-/// the backend knob. Compilation failure is survivable by design: log
-/// loudly and serve the entry off the scalar interpreter instead — a
-/// degraded-throughput entry, never a lost ticket.
-fn compile_serving_plan(key: &str, outcome: &MapOutcome, ctx: &WorkerCtx) -> Option<ExecPlan> {
-    if ctx.backend != SimBackend::Compiled {
-        return None;
-    }
-    match try_compile_plan(outcome, &ctx.cgra) {
-        Ok(plan) => Some(plan),
-        Err(e) => {
-            crate::log_warn!(
-                "execution-plan compile failed for {key} ({e}); serving falls back to the scalar interpreter"
-            );
-            None
-        }
-    }
-}
-
-/// The fallible half of plan compilation, isolated so the
-/// `coordinator::plan` failpoint can early-return an `Err` without
-/// touching the caller's fallback handling.
-fn try_compile_plan(outcome: &MapOutcome, cgra: &StreamingCgra) -> Result<ExecPlan> {
-    crate::fail_point_error!("coordinator::plan", |msg: String| Err(Error::Runtime(msg)));
-    ExecPlan::for_outcome(outcome, cgra)
-}
-
-/// Serve one batching window: shed expired members at pickup, then fetch
-/// the bundle's shared fused mapping and run ONE lockstep pass for the
-/// whole window, under the same `catch_unwind` + poison-quarantine
-/// discipline as solo serving (quarantine keyed by the bundle
-/// fingerprint). An unmappable bundle deregisters loudly and its live
-/// members fall back to solo serving.
-fn execute_window(job: WindowJob, ctx: &WorkerCtx) {
-    let picked = Instant::now();
-    let WindowJob { bundle, requests } = job;
-    let mut live = Vec::with_capacity(requests.len());
-    for r in requests {
-        if r.deadline.is_some_and(|d| picked >= d) {
-            ctx.metrics.jobs.fetch_add(1, Ordering::Relaxed);
-            ctx.metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
-            r.done.fulfill(Err(ServeError::DeadlineExceeded));
-        } else {
-            live.push(r);
-        }
-    }
-    if live.is_empty() {
-        return;
-    }
-    let identity = bundle.fingerprint();
-    let w = live.len() as u64;
-    loop {
-        if ctx.poison.count(identity) >= ctx.poison_threshold {
-            ctx.metrics.jobs.fetch_add(w, Ordering::Relaxed);
-            ctx.metrics.poisoned.fetch_add(w, Ordering::Relaxed);
-            ctx.metrics.failures.fetch_add(w, Ordering::Relaxed);
-            for r in live {
-                r.done.fulfill(Err(ServeError::Poisoned));
-            }
-            return;
-        }
-        let attempt = catch_unwind(AssertUnwindSafe(|| {
-            crate::fail_point!("coordinator::serve");
-            crate::fail_point!("coordinator::delay");
-            attempt_window(&bundle, &live, ctx)
-        }));
-        match attempt {
-            Ok(WindowAttempt::Served { segments, pass_cycles, ii, fresh, members }) => {
-                ctx.metrics.jobs.fetch_add(w, Ordering::Relaxed);
-                ctx.metrics.windows.fetch_add(1, Ordering::Relaxed);
-                // The window pays for the resident configuration ONCE —
-                // this is the fused double-count fix: W member requests
-                // never charge W whole-bundle passes.
-                ctx.metrics.total_cycles.fetch_add(pass_cycles, Ordering::Relaxed);
-                let service_ns = picked.elapsed().as_nanos() as u64;
-                for (ri, (r, seg)) in live.into_iter().zip(segments).enumerate() {
-                    let queue_ns =
-                        picked.saturating_duration_since(r.enqueued_at).as_nanos() as u64;
-                    let latency_ns = queue_ns + service_ns;
-                    ctx.metrics.total_latency_ns.fetch_add(latency_ns, Ordering::Relaxed);
-                    ctx.metrics.observe_latency(queue_ns, service_ns);
-                    r.done.fulfill(Ok(InferResult {
-                        id: r.id,
-                        block_name: r.block.name.clone(),
-                        outputs: seg.outputs,
-                        cycles: seg.cycles,
-                        ii,
-                        mapped_fresh: fresh && ri == 0,
-                        fused_members: members,
-                        latency_ns,
-                        queue_ns,
-                        service_ns,
-                    }));
-                }
-                return;
-            }
-            Ok(WindowAttempt::SimFailed(err)) => {
-                ctx.metrics.jobs.fetch_add(w, Ordering::Relaxed);
-                ctx.metrics.failures.fetch_add(w, Ordering::Relaxed);
-                for r in live {
-                    r.done.fulfill(Err(err.clone()));
-                }
-                return;
-            }
-            // The planner admits bundles by the MII estimate, not bind
-            // feasibility, so a registered bundle can turn out unmappable.
-            // The mapper is deterministic — it would fail (and re-pay the
-            // whole attempt lattice) on every member window forever — so
-            // drop the registration and serve this window's and all
-            // future member traffic through the working solo path.
-            // Loudly: the silently-lost residency win would otherwise be
-            // undiagnosable (requests succeed, failures stays 0).
-            Ok(WindowAttempt::Unmappable(e)) => {
-                crate::log_warn!(
-                    "bundle {} is unmappable ({e}); deregistering — its {} members fall \
-                     back to solo serving",
-                    bundle.name,
-                    bundle.len()
-                );
-                ctx.bundles.deregister(&bundle);
-                for r in live {
-                    execute_single(
-                        SingleJob {
-                            id: r.id,
-                            block: r.block,
-                            xs: r.xs,
-                            done: r.done,
-                            deadline: r.deadline,
-                            enqueued_at: r.enqueued_at,
-                        },
-                        ctx,
-                    );
-                }
-                return;
-            }
-            Err(_) => {
-                ctx.metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
-                let strikes = ctx.poison.record(identity);
-                crate::log_warn!(
-                    "window for bundle {} panicked (strike {strikes}); {}",
-                    bundle.name,
-                    if strikes >= ctx.poison_threshold {
-                        "quarantining"
-                    } else {
-                        "retrying in place"
-                    }
-                );
-            }
-        }
-    }
-}
-
-/// Outcome of one fused window attempt, computed inside the per-job
-/// unwind guard (borrowing the live requests) and consumed outside it —
-/// ticket fulfillment never happens under `catch_unwind`.
-enum WindowAttempt {
-    Served {
-        /// One simulated segment per live request, in window order.
-        segments: Vec<SegmentSim>,
-        pass_cycles: u64,
-        ii: usize,
-        fresh: bool,
-        members: usize,
-    },
-    /// The bundle's shared fused mapping failed to build: the caller
-    /// deregisters the bundle and falls back to solo serving.
-    Unmappable(Error),
-    /// The lockstep pass faulted: every member request fails.
-    SimFailed(ServeError),
-}
-
-/// Fetch (or build) the fused mapping and run the window's single
-/// lockstep pass. Borrows the requests — the caller keeps ownership (and
-/// the completers) outside the unwind guard.
-fn attempt_window(
-    bundle: &Arc<FusedBundle>,
-    requests: &[WindowRequest],
-    ctx: &WorkerCtx,
-) -> WindowAttempt {
-    let (serving, fresh) = match fused_serving(bundle, ctx) {
-        Ok(sf) => sf,
-        Err(e) => return WindowAttempt::Unmappable(e),
-    };
-    // One cache access served the whole window: count the other member
-    // requests as hits so `jobs == hits + misses` keeps holding for
-    // successful traffic.
-    ctx.metrics.cache_hits.fetch_add(requests.len() as u64 - 1, Ordering::Relaxed);
-    crate::fail_point_error!("coordinator::sim", |msg: String| WindowAttempt::SimFailed(
-        ServeError::Sim(msg)
-    ));
-    let resident = serving.bundle.as_ref().expect("fused entry carries its bundle");
-    // Member → request indices, in window order (the per-member segment
-    // order the batched pass preserves).
-    let mut member_reqs: Vec<Vec<usize>> = vec![Vec::new(); resident.len()];
-    for (ri, r) in requests.iter().enumerate() {
-        debug_assert!(r.member < resident.len(), "routed member index in range");
-        member_reqs[r.member].push(ri);
-    }
-    // The member's weights come from each request (same mask structure —
-    // that is what the fingerprint routing matched); members absent from
-    // the window stream zeros via padding.
-    let blocks: Vec<&SparseBlock> = resident.blocks.iter().map(|b| b.as_ref()).collect();
-    let batches: Vec<Vec<MemberSegment<'_>>> = member_reqs
-        .iter()
-        .map(|idxs| {
-            idxs.iter()
-                .map(|&ri| MemberSegment {
-                    block: requests[ri].block.as_ref(),
-                    xs: requests[ri].xs.as_slice(),
-                })
-                .collect()
-        })
-        .collect();
-    let sim = match serving.plan.as_ref() {
-        Some(plan) => execute_plan_batch(plan, &blocks, &batches),
-        None => simulate_fused_batch(
-            &serving.outcome.mapping,
-            &serving.outcome.tags,
-            &blocks,
-            &ctx.cgra,
-            &batches,
-        ),
-    };
-    match sim {
-        Ok(res) => {
-            let w = requests.len();
-            let mut per_request: Vec<Option<SegmentSim>> = Vec::new();
-            per_request.resize_with(w, || None);
-            for (mi, m) in res.per_member.into_iter().enumerate() {
-                for (seg, &ri) in m.segments.into_iter().zip(&member_reqs[mi]) {
-                    per_request[ri] = Some(seg);
-                }
-            }
-            let segments = per_request
-                .into_iter()
-                .map(|s| s.expect("one segment per request"))
-                .collect();
-            WindowAttempt::Served {
-                segments,
-                pass_cycles: res.cycles,
-                ii: serving.outcome.mapping.ii,
-                fresh,
-                members: resident.len(),
-            }
-        }
-        Err(e) => WindowAttempt::SimFailed(ServeError::Sim(e.to_string())),
-    }
-}
-
-/// Map (or fetch from cache) a registered bundle's shared fused mapping.
-/// A mapping error here means the bundle cannot map on this fabric at
-/// all — the caller falls back to solo serving; request-specific errors
-/// never originate here.
-fn fused_serving(
-    bundle: &Arc<FusedBundle>,
-    ctx: &WorkerCtx,
-) -> Result<(Arc<ServingMapping>, bool)> {
-    let key = format!("{}@bundle:{:016x}", bundle.name, bundle.fingerprint());
-    ctx.cache.get_or_map(&key, &ctx.metrics, || {
-        crate::fail_point_error!("coordinator::map", |msg: String| Err(Error::Runtime(msg)));
-        // A bundle's combined MII sits far above the members' own MIIs and
-        // the slot-offset composition needs II headroom: widen the slack
-        // to the fused operating point unless the config is already wider.
-        let mut bopts = ctx.opts.clone();
-        bopts.ii_slack = bopts.ii_slack.max(MapperOptions::fused().ii_slack);
-        let outcome = map_unit(MapUnit::Bundle(bundle), &ctx.cgra, &bopts)?;
-        let plan = compile_serving_plan(&key, &outcome, ctx);
-        Ok(ServingMapping { outcome, bundle: Some(Arc::clone(bundle)), plan })
-    })
 }
 
 #[cfg(test)]
@@ -2230,7 +1135,7 @@ mod tests {
     fn wait_timeout_expires_then_result_stays_claimable() {
         let state = TicketState::new();
         let done = TicketCompleter { state: Arc::clone(&state) };
-        let mut t = Ticket { id: 1, block_name: "x".into(), state, window: None };
+        let mut t = Ticket { id: 1, uid: 0, block_name: "x".into(), state, window: None };
         assert!(
             t.wait_timeout(Duration::from_millis(5)).is_none(),
             "pending ticket times out with None"
@@ -2330,7 +1235,7 @@ mod tests {
         // unfulfilled: the ticket must resolve instead of hanging.
         let state = TicketState::new();
         let done = TicketCompleter { state: Arc::clone(&state) };
-        let mut t = Ticket { id: 7, block_name: "x".into(), state, window: None };
+        let mut t = Ticket { id: 7, uid: 0, block_name: "x".into(), state, window: None };
         assert!(t.try_wait().is_none(), "pending ticket polls None");
         drop(done);
         assert!(matches!(t.try_wait(), Some(Err(ServeError::WorkerGone))));
@@ -2343,7 +1248,7 @@ mod tests {
         let done = TicketCompleter { state: Arc::clone(&state) };
         done.fulfill(Err(ServeError::QueueClosed));
         // The drop guard ran after fulfill and must not overwrite.
-        let t = Ticket { id: 0, block_name: "x".into(), state, window: None };
+        let t = Ticket { id: 0, uid: 0, block_name: "x".into(), state, window: None };
         assert!(matches!(t.wait(), Err(ServeError::QueueClosed)));
     }
 
@@ -2421,8 +1326,8 @@ mod tests {
 
     #[test]
     fn windows_form_deterministically_from_enqueue_order() {
-        // Window contents are a pure function of enqueue order and the
-        // two knobs — no timing involved.
+        // Window contents are a pure function of the global enqueue order
+        // and the knobs — no timing involved.
         let run = |window_requests: usize, window_max: usize, n: usize| -> (u64, u64) {
             let mut cfg = small_cfg();
             cfg.batch_window_requests = window_requests;
@@ -2496,14 +1401,79 @@ mod tests {
     }
 
     #[test]
+    fn cross_session_requests_share_one_window() {
+        // The tentpole property: windows form in the global dispatch
+        // state, so two sessions' member requests batch into ONE lockstep
+        // pass — the multi-user serving shape.
+        let mut cfg = small_cfg();
+        cfg.batch_window_requests = 100; // only an explicit flush seals
+        let coord = Coordinator::new(&cfg);
+        let members = tiny_members();
+        coord.register_bundle(Arc::new(FusedBundle::new(members.clone()).unwrap()));
+        let mut s1 = coord.session();
+        let mut s2 = coord.session();
+        let t1 = s1.enqueue(Arc::clone(&members[0]), stream_for(&members[0], 2, 1));
+        let t2 = s2.enqueue(Arc::clone(&members[1]), stream_for(&members[1], 2, 2));
+        // Either session's flush seals the SHARED window.
+        s1.flush();
+        let r1 = t1.wait().expect("session 1 ok");
+        let r2 = t2.wait().expect("session 2 ok");
+        assert_eq!(r1.fused_members, 3);
+        assert_eq!(r2.fused_members, 3);
+        let m = coord.metrics.snapshot();
+        assert_eq!(m.windows, 1, "two sessions, ONE cross-session window");
+        assert_eq!(m.jobs, 2);
+    }
+
+    #[test]
+    fn dispatch_lookahead_seals_oldest_window() {
+        // With dispatch_lookahead = 2, a third riding request must force
+        // the (oldest) open window shut — the request backlog riding open
+        // windows is bounded WITHOUT any flush or wait. The request-count
+        // seal (100) never triggers, so the window only dispatches if the
+        // bound sealed it at enqueue time.
+        let mut cfg = small_cfg();
+        cfg.batch_window_requests = 100;
+        cfg.dispatch_lookahead = 2;
+        let coord = Coordinator::new(&cfg);
+        let members = tiny_members();
+        coord.register_bundle(Arc::new(FusedBundle::new(members.clone()).unwrap()));
+        let mut session = coord.session();
+        let tickets: Vec<Ticket> = (0..3)
+            .map(|i| {
+                let b = &members[i % members.len()];
+                session.enqueue(Arc::clone(b), stream_for(b, 2, i as u64))
+            })
+            .collect();
+        // No flush, no drain, tickets unwaited: only the lookahead bound
+        // can have dispatched the window. Workers process it async.
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while coord.metrics.snapshot().jobs < 3 {
+            assert!(
+                Instant::now() < deadline,
+                "lookahead-sealed window never dispatched"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        for t in tickets {
+            t.wait().expect("lookahead job ok");
+        }
+        let m = coord.metrics.snapshot();
+        assert_eq!(m.jobs, 3);
+        assert_eq!(m.windows, 1, "all three riders shared the one sealed window");
+    }
+
+    #[test]
     fn lru_evicts_least_recently_used_mapping() {
         // Serialized single-worker traffic so the use order is exact:
         // A, B fill a capacity-2 cache; touching A makes B the LRU victim
-        // when C arrives; B then re-maps on its next request.
+        // when C arrives; B then re-maps on its next request. Pinned to
+        // one shard (bypassing SPARSEMAP_SHARDS) — the three blocks must
+        // share one cache for the eviction order to be observable.
         let mut cfg = small_cfg();
         cfg.workers = 1;
         cfg.cache_capacity = 2;
-        let coord = Coordinator::new(&cfg);
+        let coord = Coordinator::with_shard_count(&cfg, 1);
         let blocks = tiny_members(); // a, b, c stand-ins
         let mut session = coord.session();
         let mut seed = 0u64;

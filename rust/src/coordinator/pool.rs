@@ -1,0 +1,960 @@
+//! The worker-pool layer, instantiated once **per shard**: the
+//! single-flight LRU mapping cache, the poison registry, worker threads
+//! with per-job `catch_unwind` + in-place retry, and the supervisor that
+//! respawns hard-dead workers under the shard's restart budget (then
+//! drains the shard's queue resolving every stranded ticket). Restart
+//! budgets and poison quarantine are scoped per pool — one shard's
+//! persistent fault can burn its own budget without dimming its
+//! neighbours.
+//!
+//! The mapping builders ([`build_solo_mapping`] / [`build_bundle_mapping`])
+//! are shared between the serve paths and the coordinator's warm-start
+//! pre-build, so a manifest replay populates the cache through the exact
+//! single-flight path a live request would.
+
+use std::collections::{BTreeMap, HashMap};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::arch::StreamingCgra;
+use crate::config::SimBackend;
+use crate::error::{Error, Result};
+use crate::mapper::{map_unit, MapOutcome, MapUnit, MapperOptions};
+use crate::sim::{
+    execute_plan_batch, simulate, simulate_fused_batch, ExecPlan, MemberSegment, SegmentSim,
+};
+use crate::sparse::fuse::{BundleRoutes, FusedBundle};
+use crate::sparse::SparseBlock;
+
+use super::metrics::{Metrics, ShardMetrics};
+use super::queue::{job_width, resolve_worker_gone, Job, SingleJob, WindowJob};
+use super::window::WindowRequest;
+use super::{InferResult, ServeError};
+
+// ---------------------------------------------------------------------------
+// Mapping cache
+
+/// A cached, servable mapping: a solo block's or a whole fused bundle's.
+pub(crate) struct ServingMapping {
+    pub(crate) outcome: MapOutcome,
+    /// `Some` when the mapping hosts a bundle — carries the member blocks
+    /// the simulator needs for the co-resident streams.
+    pub(crate) bundle: Option<Arc<FusedBundle>>,
+    /// Compiled execution plan for the mapping, built once under the same
+    /// single-flight guard as the mapping itself and evicted with it.
+    /// `None` when the backend knob selects the interpreter or when plan
+    /// compilation failed (a loud, logged fallback — never a lost ticket).
+    pub(crate) plan: Option<ExecPlan>,
+}
+
+/// State of one cache entry. `Building` marks a mapping in flight; waiters
+/// sleep on the entry's condvar instead of holding any mutex the builder
+/// needs.
+pub(crate) enum EntryState {
+    /// No mapping and no builder in flight.
+    Empty,
+    Building,
+    Ready(Arc<ServingMapping>),
+    /// The build failed; the sticky error lets queued waiters fail fast
+    /// instead of serially re-running a deterministically failing mapping.
+    /// With `failure_ttl = 0` the entry is already detached from the cache
+    /// map (new requesters get a fresh entry and their own retry); under a
+    /// TTL it stays resident and `retry_in` counts down the remaining
+    /// fast-fails — the request that finds it at `1` rebuilds in place.
+    Failed { reason: String, retry_in: u64 },
+}
+
+pub(crate) struct CacheEntry {
+    pub(crate) state: Mutex<EntryState>,
+    pub(crate) ready: Condvar,
+    /// Monotonic use tick for LRU eviction (unique per touch; assigned
+    /// under the cache-map lock so eviction order is race-free and the
+    /// tick index can be maintained in lockstep).
+    pub(crate) last_use: AtomicU64,
+}
+
+/// Unwind guard for the build phase: if the build closure fails or panics
+/// (a mapper invariant violation), mark the entry `Failed`, wake waiters
+/// so they fail fast instead of deadlocking on a forever-`Building` entry
+/// (or serially re-running a deterministically failing mapping), and drop
+/// the entry from the cache map — `Failed` entries must not be found by
+/// new requesters, and a dead entry would otherwise pin capacity forever
+/// (only `Ready` entries are LRU victims, see [`evict_lru`]). The removal
+/// is pointer-compared so a newer same-key entry created by a later
+/// requester is never clobbered.
+struct BuildGuard<'a> {
+    cache: &'a MappingCache,
+    key: &'a str,
+    entry: &'a Arc<CacheEntry>,
+    armed: bool,
+}
+
+impl BuildGuard<'_> {
+    fn disarm(&mut self) {
+        self.armed = false;
+    }
+
+    /// Mark the entry failed with `reason` and wake waiters. Under a
+    /// failure TTL the entry stays resident (the next requests fail fast
+    /// while `retry_in` counts down, then one rebuilds in place; LRU can
+    /// evict it meanwhile); with TTL `0` the failure is sticky and the
+    /// entry detaches from the cache (map and tick index).
+    fn fail(&mut self, reason: &str) {
+        self.armed = false;
+        let ttl = self.cache.failure_ttl;
+        {
+            let mut state = self.entry.state.lock().expect("cache entry");
+            *state = EntryState::Failed {
+                reason: reason.to_string(),
+                retry_in: if ttl == 0 { u64::MAX } else { ttl },
+            };
+            self.entry.ready.notify_all();
+        }
+        if ttl > 0 {
+            return;
+        }
+        // Entry lock released before the map lock — the same order as
+        // every other path (the map lock is never held while waiting
+        // on an entry, and evict_lru only try_locks entry states).
+        let mut inner = self.cache.inner.lock().expect("cache map");
+        if inner.map.get(self.key).is_some_and(|e| Arc::ptr_eq(e, self.entry)) {
+            inner.map.remove(self.key);
+            // The entry's latest tick is authoritative: every touch
+            // restamps it under the map lock we are holding.
+            let tick = self.entry.last_use.load(Ordering::Relaxed);
+            let removed = inner.by_tick.remove(&tick);
+            debug_assert_eq!(removed.as_deref(), Some(self.key));
+        }
+    }
+}
+
+impl Drop for BuildGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            // Panic unwind path; the error path calls `fail` explicitly
+            // with the builder's own message.
+            self.fail("mapping build panicked");
+        }
+    }
+}
+
+/// The cache's locked state: the key → entry map plus the tick-ordered
+/// LRU index. Both are maintained together under one mutex — every touch
+/// restamps the entry's tick and moves its index row, so eviction walks
+/// the index in use order instead of scanning the whole map.
+pub(crate) struct CacheInner {
+    pub(crate) map: HashMap<String, Arc<CacheEntry>>,
+    /// Use tick → key. Ticks are unique (assigned under this lock), so
+    /// this is a total LRU order over the resident entries.
+    pub(crate) by_tick: BTreeMap<u64, String>,
+}
+
+/// Single-flight, LRU-bounded mapping cache (one per shard). The outer
+/// map is only ever locked for entry lookup/insert/evict — mapping
+/// happens against the entry's own state mutex, and waiters for an
+/// in-flight mapping sleep on the entry's `Condvar`.
+pub(crate) struct MappingCache {
+    pub(crate) inner: Mutex<CacheInner>,
+    tick: AtomicU64,
+    /// `0` = unbounded.
+    capacity: usize,
+    /// Retry-after budget for failed builds (`[coordinator] failure_ttl`):
+    /// a `Failed` entry fast-fails the next `failure_ttl - 1` requests for
+    /// its key, then the next one rebuilds in place. `0` = sticky forever
+    /// (failures detach; only a fresh requester retries).
+    failure_ttl: u64,
+}
+
+impl MappingCache {
+    pub(crate) fn new(capacity: usize, failure_ttl: u64) -> Self {
+        MappingCache {
+            inner: Mutex::new(CacheInner { map: HashMap::new(), by_tick: BTreeMap::new() }),
+            tick: AtomicU64::new(0),
+            capacity,
+            failure_ttl,
+        }
+    }
+
+    /// Fetch `key`'s mapping, building it via `build` on a miss. Exactly
+    /// one requester builds; concurrent requesters for the same key wait
+    /// on the entry and share the result (counted as cache hits). On a
+    /// build failure the entry turns sticky-`Failed` and leaves the map —
+    /// the builder and every queued waiter report the error without
+    /// re-running the (deterministic) mapping, while a later fresh
+    /// requester gets a new entry and its own retry.
+    pub(crate) fn get_or_map<F>(
+        &self,
+        key: &str,
+        metrics: &Metrics,
+        build: F,
+    ) -> Result<(Arc<ServingMapping>, bool)>
+    where
+        F: FnOnce() -> Result<ServingMapping>,
+    {
+        let entry = {
+            let mut inner = self.inner.lock().expect("cache map");
+            // The use tick is assigned while the map is locked, so a
+            // concurrent inserter can never observe (and evict) an entry
+            // that has not been stamped yet — and the tick index moves in
+            // the same critical section.
+            let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+            match inner.map.get(key) {
+                Some(e) => {
+                    let e = Arc::clone(e);
+                    let prev = e.last_use.swap(tick, Ordering::Relaxed);
+                    // Reuse the removed key String — the hit path stays
+                    // allocation-free.
+                    let moved =
+                        inner.by_tick.remove(&prev).unwrap_or_else(|| key.to_string());
+                    debug_assert_eq!(moved, key);
+                    inner.by_tick.insert(tick, moved);
+                    e
+                }
+                None => {
+                    // Loop, not a single evict: overshoot accumulated
+                    // while entries were mid-build (unevictable) is
+                    // reclaimed here once those entries turn Ready.
+                    while self.capacity > 0
+                        && inner.map.len() >= self.capacity
+                        && evict_lru(&mut inner)
+                    {}
+                    let e = Arc::new(CacheEntry {
+                        state: Mutex::new(EntryState::Empty),
+                        ready: Condvar::new(),
+                        last_use: AtomicU64::new(tick),
+                    });
+                    inner.map.insert(key.to_string(), Arc::clone(&e));
+                    inner.by_tick.insert(tick, key.to_string());
+                    e
+                }
+            }
+        };
+
+        let mut state = entry.state.lock().expect("cache entry");
+        loop {
+            match &mut *state {
+                EntryState::Ready(m) => {
+                    metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok((Arc::clone(m), false));
+                }
+                EntryState::Building => {
+                    state = entry.ready.wait(state).expect("cache entry");
+                }
+                // The builder failed; the mapping is deterministic, so
+                // re-running it immediately would pay the whole attempt
+                // lattice again for the same error — fail fast with the
+                // builder's reason while the retry budget lasts. The
+                // request that finds the budget at 1 falls through to
+                // `Building` and rebuilds in place (failure TTL expired).
+                EntryState::Failed { reason, retry_in } => {
+                    if *retry_in <= 1 {
+                        break;
+                    }
+                    *retry_in -= 1;
+                    return Err(Error::Runtime(format!(
+                        "mapping failed in a concurrent request: {reason}"
+                    )));
+                }
+                EntryState::Empty => break,
+            }
+        }
+        *state = EntryState::Building;
+        drop(state);
+
+        let mut unwind = BuildGuard { cache: self, key, entry: &entry, armed: true };
+        let built = build();
+        match built {
+            Ok(m) => {
+                // A miss is counted only when a fresh mapping actually
+                // lands: a failed build followed by a fallback (e.g. the
+                // fused → solo path) must not report two misses for one
+                // request — failures have their own counter.
+                metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+                let m = Arc::new(m);
+                let mut state = entry.state.lock().expect("cache entry");
+                unwind.disarm();
+                *state = EntryState::Ready(Arc::clone(&m));
+                entry.ready.notify_all();
+                Ok((m, true))
+            }
+            // Waiters fail fast on the sticky error; the detached entry
+            // leaves the map so a *new* requester gets a fresh entry and
+            // its own (deterministic) retry.
+            Err(e) => {
+                unwind.fail(&e.to_string());
+                Err(e)
+            }
+        }
+    }
+}
+
+/// Evict the least-recently-used *evictable* entry by walking the tick
+/// index in use order — O(victim position in the index), not a full-map
+/// scan. Only `Ready` entries (and TTL-resident `Failed` ones, which hold
+/// no mapping) are victims: a `Building` entry is the single-flight
+/// rendezvous for concurrent requesters, and an `Empty` entry belongs to
+/// a requester that has looked it up but not yet locked it — evicting
+/// either would detach an in-flight mapping from the cache
+/// (the result would be built and then silently dropped, and a concurrent
+/// same-key request would map a second time). Non-victims stay in the
+/// index and are skipped. At capacity the map may therefore transiently
+/// exceed its bound by the number of in-flight mappings — the insert path
+/// loops eviction, so the overshoot is reclaimed as those entries turn
+/// Ready. Use ticks are unique, so the victim is deterministic for a
+/// given request history. Returns whether a victim was evicted.
+fn evict_lru(inner: &mut CacheInner) -> bool {
+    let victim = inner.by_tick.iter().find_map(|(&tick, key)| {
+        let e = inner.map.get(key)?;
+        match e.state.try_lock() {
+            // The state mutex is only ever held briefly (never across a
+            // mapping), so a contended entry is simply skipped this round.
+            Ok(state)
+                if matches!(&*state, EntryState::Ready(_) | EntryState::Failed { .. }) =>
+            {
+                Some((tick, key.clone()))
+            }
+            _ => None,
+        }
+    });
+    match victim {
+        Some((tick, key)) => {
+            inner.by_tick.remove(&tick);
+            inner.map.remove(&key);
+            true
+        }
+        None => false,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared mapping builders (serve paths + warm-start pre-build)
+
+/// Cache key for a solo block's mapping. The key carries the mask's
+/// content fingerprint — name and shape alone would silently alias two
+/// differently-pruned blocks onto one mapping.
+pub(crate) fn solo_cache_key(block: &SparseBlock) -> String {
+    let fp = block.mask_fingerprint();
+    format!("{}#{}x{}@{fp:016x}", block.name, block.c, block.k)
+}
+
+/// Cache key for a registered bundle's shared fused mapping.
+pub(crate) fn bundle_cache_key(bundle: &FusedBundle) -> String {
+    format!("{}@bundle:{:016x}", bundle.name, bundle.fingerprint())
+}
+
+/// Build a solo block's serving mapping (the `get_or_map` build closure).
+pub(crate) fn build_solo_mapping(
+    block: &Arc<SparseBlock>,
+    key: &str,
+    cgra: &StreamingCgra,
+    opts: &MapperOptions,
+    backend: SimBackend,
+) -> Result<ServingMapping> {
+    crate::fail_point_error!("coordinator::map", |msg: String| Err(Error::Runtime(msg)));
+    let outcome = map_unit(MapUnit::Single(block), cgra, opts)?;
+    let plan = compile_serving_plan(key, &outcome, cgra, backend);
+    Ok(ServingMapping { outcome, bundle: None, plan })
+}
+
+/// Build a bundle's shared fused serving mapping (the `get_or_map` build
+/// closure for window traffic and warm-start bundle pre-builds).
+pub(crate) fn build_bundle_mapping(
+    bundle: &Arc<FusedBundle>,
+    key: &str,
+    cgra: &StreamingCgra,
+    opts: &MapperOptions,
+    backend: SimBackend,
+) -> Result<ServingMapping> {
+    crate::fail_point_error!("coordinator::map", |msg: String| Err(Error::Runtime(msg)));
+    // A bundle's combined MII sits far above the members' own MIIs and
+    // the slot-offset composition needs II headroom: widen the slack
+    // to the fused operating point unless the config is already wider.
+    let mut bopts = opts.clone();
+    bopts.ii_slack = bopts.ii_slack.max(MapperOptions::fused().ii_slack);
+    let outcome = map_unit(MapUnit::Bundle(bundle), cgra, &bopts)?;
+    let plan = compile_serving_plan(key, &outcome, cgra, backend);
+    Ok(ServingMapping { outcome, bundle: Some(Arc::clone(bundle)), plan })
+}
+
+/// Compile the execution plan for a freshly built cache entry, honouring
+/// the backend knob. Compilation failure is survivable by design: log
+/// loudly and serve the entry off the scalar interpreter instead — a
+/// degraded-throughput entry, never a lost ticket.
+fn compile_serving_plan(
+    key: &str,
+    outcome: &MapOutcome,
+    cgra: &StreamingCgra,
+    backend: SimBackend,
+) -> Option<ExecPlan> {
+    if backend != SimBackend::Compiled {
+        return None;
+    }
+    match try_compile_plan(outcome, cgra) {
+        Ok(plan) => Some(plan),
+        Err(e) => {
+            crate::log_warn!(
+                "execution-plan compile failed for {key} ({e}); serving falls back to the scalar interpreter"
+            );
+            None
+        }
+    }
+}
+
+/// The fallible half of plan compilation, isolated so the
+/// `coordinator::plan` failpoint can early-return an `Err` without
+/// touching the caller's fallback handling.
+fn try_compile_plan(outcome: &MapOutcome, cgra: &StreamingCgra) -> Result<ExecPlan> {
+    crate::fail_point_error!("coordinator::plan", |msg: String| Err(Error::Runtime(msg)));
+    ExecPlan::for_outcome(outcome, cgra)
+}
+
+// ---------------------------------------------------------------------------
+// Poison quarantine
+
+/// Panic counts per job identity — a solo block's mask fingerprint or a
+/// bundle's combined fingerprint. A job that keeps killing its worker is
+/// quarantined (resolved [`ServeError::Poisoned`], never retried) once
+/// its count reaches `[coordinator] poison_threshold`, so one poison
+/// request cannot burn the whole restart budget. One registry per shard
+/// pool: quarantine state never leaks across fabric instances.
+pub(crate) struct PoisonRegistry {
+    counts: Mutex<HashMap<u64, u32>>,
+}
+
+impl PoisonRegistry {
+    pub(crate) fn new() -> Self {
+        PoisonRegistry { counts: Mutex::new(HashMap::new()) }
+    }
+
+    /// Record one panic against `identity`; returns the new count. The
+    /// lock is poison-recovered: panic bookkeeping must keep working on
+    /// the very code paths panics unwind through.
+    fn record(&self, identity: u64) -> u32 {
+        let mut counts = self.counts.lock().unwrap_or_else(|p| p.into_inner());
+        let c = counts.entry(identity).or_insert(0);
+        *c += 1;
+        *c
+    }
+
+    fn count(&self, identity: u64) -> u32 {
+        let counts = self.counts.lock().unwrap_or_else(|p| p.into_inner());
+        counts.get(&identity).copied().unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workers and supervision
+
+/// Everything a worker thread needs, bundled into one cloneable value so
+/// the supervisor can respawn workers after the constructor returned.
+#[derive(Clone)]
+pub(crate) struct WorkerCtx {
+    pub(crate) rx: Arc<Mutex<Receiver<Job>>>,
+    pub(crate) queue_len: Arc<AtomicUsize>,
+    pub(crate) cache: Arc<MappingCache>,
+    pub(crate) bundles: Arc<BundleRoutes>,
+    pub(crate) metrics: Arc<Metrics>,
+    /// This pool's per-shard counter block (global counters keep their
+    /// pre-sharding semantics; these split the same events by shard).
+    pub(crate) shard: Arc<ShardMetrics>,
+    pub(crate) shard_id: usize,
+    pub(crate) opts: MapperOptions,
+    pub(crate) cgra: StreamingCgra,
+    pub(crate) poison: Arc<PoisonRegistry>,
+    pub(crate) poison_threshold: u32,
+    /// Which simulation backend freshly built cache entries compile for.
+    /// Resolved once at construction (config knob + env override).
+    pub(crate) backend: SimBackend,
+}
+
+/// Drop guard a worker thread holds for its whole life: tells the
+/// supervisor the worker exited and whether it exited by panic. Running
+/// in `Drop`, the notification survives any unwind path out of the
+/// worker.
+struct ExitGuard {
+    id: usize,
+    tx: Sender<(usize, bool)>,
+}
+
+impl Drop for ExitGuard {
+    fn drop(&mut self) {
+        let _ = self.tx.send((self.id, std::thread::panicking()));
+    }
+}
+
+pub(crate) fn spawn_worker(
+    wid: usize,
+    ctx: WorkerCtx,
+    exit_tx: Sender<(usize, bool)>,
+) -> std::io::Result<std::thread::JoinHandle<()>> {
+    std::thread::Builder::new()
+        .name(format!("sparsemap-worker-{}-{wid}", ctx.shard_id))
+        .spawn(move || {
+            let _exit = ExitGuard { id: wid, tx: exit_tx };
+            worker_loop(&ctx);
+        })
+}
+
+/// Supervision loop (one per shard): collect worker exits, respawn
+/// panicked workers while the shard's restart budget lasts (the pool
+/// never shrinks silently — every shrink logs), and once the last worker
+/// is gone keep draining the shard's queue, resolving every stranded
+/// ticket, until the coordinator closes it. The drain is what makes
+/// "every enqueued ticket resolves" hold even when persistent faults burn
+/// the whole budget mid-traffic — and because budgets are per shard, a
+/// dead pool drains its own queue while sibling shards keep serving.
+pub(crate) fn supervisor_loop(
+    exit_rx: Receiver<(usize, bool)>,
+    exit_tx: Sender<(usize, bool)>,
+    mut handles: Vec<Option<std::thread::JoinHandle<()>>>,
+    ctx: WorkerCtx,
+    restart_budget: usize,
+) {
+    let mut live = handles.len();
+    let mut budget = restart_budget;
+    let sid = ctx.shard_id;
+    while live > 0 {
+        // Cannot disconnect while this thread holds `exit_tx`; defensive.
+        let Ok((wid, panicked)) = exit_rx.recv() else { break };
+        if let Some(h) = handles[wid].take() {
+            let _ = h.join();
+        }
+        if !panicked {
+            // Clean exit: the queue closed and the worker drained out.
+            live -= 1;
+            continue;
+        }
+        // Per-job catch_unwind makes a worker-killing panic rare (only a
+        // fault outside the guarded region reaches the thread boundary),
+        // but the pool must survive it regardless.
+        if budget == 0 {
+            live -= 1;
+            crate::log_warn!(
+                "shard {sid} worker {wid} died with the restart budget exhausted; pool \
+                 shrinks to {live} workers"
+            );
+            continue;
+        }
+        budget -= 1;
+        match spawn_worker(wid, ctx.clone(), exit_tx.clone()) {
+            Ok(h) => {
+                ctx.metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                ctx.shard.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                crate::log_warn!(
+                    "shard {sid} worker {wid} died by panic; respawned ({budget} restarts \
+                     left)"
+                );
+                handles[wid] = Some(h);
+            }
+            Err(e) => {
+                live -= 1;
+                crate::log_error!(
+                    "respawning shard {sid} worker {wid} failed ({e}); pool shrinks"
+                );
+            }
+        }
+    }
+    // Whole pool gone — restart budget exhausted under persistent faults,
+    // or plain shutdown. Resolve everything queued (and everything still
+    // arriving from senders that raced the pool's death) until the
+    // coordinator closes the queue, so no ticket ever hangs.
+    loop {
+        let job = {
+            let guard = ctx.rx.lock().unwrap_or_else(|p| p.into_inner());
+            guard.recv()
+        };
+        match job {
+            Ok(job) => {
+                ctx.queue_len.fetch_sub(1, Ordering::Relaxed);
+                ctx.metrics.failures.fetch_add(job_width(&job) as u64, Ordering::Relaxed);
+                resolve_worker_gone(job);
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+fn worker_loop(ctx: &WorkerCtx) {
+    loop {
+        let job = {
+            // Poison-recover: a panicking peer must not wedge the whole
+            // pool on this lock — the receiver behind it is just data.
+            let guard = ctx.rx.lock().unwrap_or_else(|p| p.into_inner());
+            guard.recv()
+        };
+        match job {
+            Ok(job) => {
+                ctx.queue_len.fetch_sub(1, Ordering::Relaxed);
+                // Hard-death site: a panic here is OUTSIDE the per-job
+                // catch_unwind, so it kills the worker thread itself and
+                // exercises supervisor respawn. The job's completers
+                // resolve `WorkerGone` as the unwind drops them.
+                crate::fail_point!("coordinator::worker_hard");
+                match job {
+                    Job::Single(job) => execute_single(job, ctx),
+                    Job::Window(job) => execute_window(job, ctx),
+                }
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// Serve one solo request end to end and fulfill its ticket: deadline
+/// check at pickup, then mapping + simulation under a per-job
+/// `catch_unwind`, retried in place until the job identity's poison
+/// quarantine trips.
+pub(crate) fn execute_single(job: SingleJob, ctx: &WorkerCtx) {
+    let picked = Instant::now();
+    ctx.metrics.jobs.fetch_add(1, Ordering::Relaxed);
+    let SingleJob { id, block, xs, done, deadline, enqueued_at } = job;
+    if deadline.is_some_and(|d| picked >= d) {
+        ctx.metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+        done.fulfill(Err(ServeError::DeadlineExceeded));
+        return;
+    }
+    let identity = block.mask_fingerprint();
+    let queue_ns = picked.saturating_duration_since(enqueued_at).as_nanos() as u64;
+    loop {
+        if ctx.poison.count(identity) >= ctx.poison_threshold {
+            ctx.metrics.poisoned.fetch_add(1, Ordering::Relaxed);
+            ctx.shard.poisoned.fetch_add(1, Ordering::Relaxed);
+            ctx.metrics.failures.fetch_add(1, Ordering::Relaxed);
+            done.fulfill(Err(ServeError::Poisoned));
+            return;
+        }
+        // The closure borrows the payload and owns no completer: a panic
+        // unwinds out of it without resolving (or double-resolving) the
+        // ticket — fulfillment happens below, outside the guard.
+        let attempt = catch_unwind(AssertUnwindSafe(|| {
+            crate::fail_point!("coordinator::serve");
+            crate::fail_point!("coordinator::delay");
+            serve_solo(&block, &xs, ctx)
+        }));
+        match attempt {
+            Ok(Ok((outputs, cycles, ii, fresh))) => {
+                ctx.metrics.total_cycles.fetch_add(cycles, Ordering::Relaxed);
+                let service_ns = picked.elapsed().as_nanos() as u64;
+                let latency_ns = queue_ns + service_ns;
+                ctx.metrics.total_latency_ns.fetch_add(latency_ns, Ordering::Relaxed);
+                ctx.metrics.observe_latency(queue_ns, service_ns);
+                ctx.shard.observe_queue(queue_ns);
+                done.fulfill(Ok(InferResult {
+                    id,
+                    block_name: block.name.clone(),
+                    outputs,
+                    cycles,
+                    ii,
+                    mapped_fresh: fresh,
+                    fused_members: 1,
+                    latency_ns,
+                    queue_ns,
+                    service_ns,
+                }));
+                return;
+            }
+            Ok(Err(e)) => {
+                ctx.metrics.failures.fetch_add(1, Ordering::Relaxed);
+                done.fulfill(Err(e));
+                return;
+            }
+            Err(_) => {
+                // The worker survived the panic (caught in place): count
+                // a restart, record the poison strike, retry the job.
+                ctx.metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                ctx.shard.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                let strikes = ctx.poison.record(identity);
+                crate::log_warn!(
+                    "serving {} panicked (strike {strikes}); {}",
+                    block.name,
+                    if strikes >= ctx.poison_threshold {
+                        "quarantining"
+                    } else {
+                        "retrying in place"
+                    }
+                );
+            }
+        }
+    }
+}
+
+/// Solo path: compile-once mapping keyed by block identity.
+fn serve_solo(
+    block: &Arc<SparseBlock>,
+    xs: &[Vec<f32>],
+    ctx: &WorkerCtx,
+) -> std::result::Result<(Vec<Vec<f32>>, u64, usize, bool), ServeError> {
+    let key = solo_cache_key(block);
+    let (serving, fresh) = ctx
+        .cache
+        .get_or_map(&key, &ctx.metrics, || {
+            build_solo_mapping(block, &key, &ctx.cgra, &ctx.opts, ctx.backend)
+        })
+        .map_err(|e| ServeError::MappingFailed(e.to_string()))?;
+    crate::fail_point_error!("coordinator::sim", |msg: String| Err(ServeError::Sim(msg)));
+    match serving.plan.as_ref() {
+        Some(plan) => {
+            // Solo block as a one-member window: same compiled inner loop
+            // the batched path runs, same bit-exact results.
+            let batches = vec![vec![MemberSegment { block: block.as_ref(), xs }]];
+            let res = execute_plan_batch(plan, &[block.as_ref()], &batches)
+                .map_err(|e| ServeError::Sim(e.to_string()))?;
+            let outputs = res
+                .per_member
+                .into_iter()
+                .next()
+                .and_then(|m| m.segments.into_iter().next())
+                .map(|s| s.outputs)
+                .unwrap_or_default();
+            Ok((outputs, res.cycles, serving.outcome.mapping.ii, fresh))
+        }
+        None => {
+            let res = simulate(&serving.outcome.mapping, block, &ctx.cgra, xs)
+                .map_err(|e| ServeError::Sim(e.to_string()))?;
+            Ok((res.outputs, res.cycles, serving.outcome.mapping.ii, fresh))
+        }
+    }
+}
+
+/// Serve one batching window: shed expired members at pickup, then fetch
+/// the bundle's shared fused mapping and run ONE lockstep pass for the
+/// whole window, under the same `catch_unwind` + poison-quarantine
+/// discipline as solo serving (quarantine keyed by the bundle
+/// fingerprint). An unmappable bundle deregisters loudly and its live
+/// members fall back to solo serving.
+pub(crate) fn execute_window(job: WindowJob, ctx: &WorkerCtx) {
+    let picked = Instant::now();
+    let WindowJob { bundle, requests } = job;
+    let mut live = Vec::with_capacity(requests.len());
+    for r in requests {
+        if r.deadline.is_some_and(|d| picked >= d) {
+            ctx.metrics.jobs.fetch_add(1, Ordering::Relaxed);
+            ctx.metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+            r.done.fulfill(Err(ServeError::DeadlineExceeded));
+        } else {
+            live.push(r);
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    let identity = bundle.fingerprint();
+    let w = live.len() as u64;
+    loop {
+        if ctx.poison.count(identity) >= ctx.poison_threshold {
+            ctx.metrics.jobs.fetch_add(w, Ordering::Relaxed);
+            ctx.metrics.poisoned.fetch_add(w, Ordering::Relaxed);
+            ctx.shard.poisoned.fetch_add(w, Ordering::Relaxed);
+            ctx.metrics.failures.fetch_add(w, Ordering::Relaxed);
+            for r in live {
+                r.done.fulfill(Err(ServeError::Poisoned));
+            }
+            return;
+        }
+        let attempt = catch_unwind(AssertUnwindSafe(|| {
+            crate::fail_point!("coordinator::serve");
+            crate::fail_point!("coordinator::delay");
+            attempt_window(&bundle, &live, ctx)
+        }));
+        match attempt {
+            Ok(WindowAttempt::Served { segments, pass_cycles, ii, fresh, members }) => {
+                ctx.metrics.jobs.fetch_add(w, Ordering::Relaxed);
+                ctx.metrics.windows.fetch_add(1, Ordering::Relaxed);
+                ctx.shard.windows.fetch_add(1, Ordering::Relaxed);
+                // The window pays for the resident configuration ONCE —
+                // this is the fused double-count fix: W member requests
+                // never charge W whole-bundle passes.
+                ctx.metrics.total_cycles.fetch_add(pass_cycles, Ordering::Relaxed);
+                let service_ns = picked.elapsed().as_nanos() as u64;
+                for (ri, (r, seg)) in live.into_iter().zip(segments).enumerate() {
+                    let queue_ns =
+                        picked.saturating_duration_since(r.enqueued_at).as_nanos() as u64;
+                    let latency_ns = queue_ns + service_ns;
+                    ctx.metrics.total_latency_ns.fetch_add(latency_ns, Ordering::Relaxed);
+                    ctx.metrics.observe_latency(queue_ns, service_ns);
+                    ctx.shard.observe_queue(queue_ns);
+                    r.done.fulfill(Ok(InferResult {
+                        id: r.id,
+                        block_name: r.block.name.clone(),
+                        outputs: seg.outputs,
+                        cycles: seg.cycles,
+                        ii,
+                        mapped_fresh: fresh && ri == 0,
+                        fused_members: members,
+                        latency_ns,
+                        queue_ns,
+                        service_ns,
+                    }));
+                }
+                return;
+            }
+            Ok(WindowAttempt::SimFailed(err)) => {
+                ctx.metrics.jobs.fetch_add(w, Ordering::Relaxed);
+                ctx.metrics.failures.fetch_add(w, Ordering::Relaxed);
+                for r in live {
+                    r.done.fulfill(Err(err.clone()));
+                }
+                return;
+            }
+            // The planner admits bundles by the MII estimate, not bind
+            // feasibility, so a registered bundle can turn out unmappable.
+            // The mapper is deterministic — it would fail (and re-pay the
+            // whole attempt lattice) on every member window forever — so
+            // drop the registration and serve this window's and all
+            // future member traffic through the working solo path.
+            // Loudly: the silently-lost residency win would otherwise be
+            // undiagnosable (requests succeed, failures stays 0).
+            Ok(WindowAttempt::Unmappable(e)) => {
+                crate::log_warn!(
+                    "bundle {} is unmappable ({e}); deregistering — its {} members fall \
+                     back to solo serving",
+                    bundle.name,
+                    bundle.len()
+                );
+                ctx.bundles.deregister(&bundle);
+                for r in live {
+                    execute_single(
+                        SingleJob {
+                            id: r.id,
+                            block: r.block,
+                            xs: r.xs,
+                            done: r.done,
+                            deadline: r.deadline,
+                            enqueued_at: r.enqueued_at,
+                        },
+                        ctx,
+                    );
+                }
+                return;
+            }
+            Err(_) => {
+                ctx.metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                ctx.shard.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                let strikes = ctx.poison.record(identity);
+                crate::log_warn!(
+                    "window for bundle {} panicked (strike {strikes}); {}",
+                    bundle.name,
+                    if strikes >= ctx.poison_threshold {
+                        "quarantining"
+                    } else {
+                        "retrying in place"
+                    }
+                );
+            }
+        }
+    }
+}
+
+/// Outcome of one fused window attempt, computed inside the per-job
+/// unwind guard (borrowing the live requests) and consumed outside it —
+/// ticket fulfillment never happens under `catch_unwind`.
+enum WindowAttempt {
+    Served {
+        /// One simulated segment per live request, in window order.
+        segments: Vec<SegmentSim>,
+        pass_cycles: u64,
+        ii: usize,
+        fresh: bool,
+        members: usize,
+    },
+    /// The bundle's shared fused mapping failed to build: the caller
+    /// deregisters the bundle and falls back to solo serving.
+    Unmappable(Error),
+    /// The lockstep pass faulted: every member request fails.
+    SimFailed(ServeError),
+}
+
+/// Fetch (or build) the fused mapping and run the window's single
+/// lockstep pass. Borrows the requests — the caller keeps ownership (and
+/// the completers) outside the unwind guard.
+fn attempt_window(
+    bundle: &Arc<FusedBundle>,
+    requests: &[WindowRequest],
+    ctx: &WorkerCtx,
+) -> WindowAttempt {
+    let (serving, fresh) = match fused_serving(bundle, ctx) {
+        Ok(sf) => sf,
+        Err(e) => return WindowAttempt::Unmappable(e),
+    };
+    // One cache access served the whole window: count the other member
+    // requests as hits so `jobs == hits + misses` keeps holding for
+    // successful traffic.
+    ctx.metrics.cache_hits.fetch_add(requests.len() as u64 - 1, Ordering::Relaxed);
+    crate::fail_point_error!("coordinator::sim", |msg: String| WindowAttempt::SimFailed(
+        ServeError::Sim(msg)
+    ));
+    let resident = serving.bundle.as_ref().expect("fused entry carries its bundle");
+    // Member → request indices, in window order (the per-member segment
+    // order the batched pass preserves).
+    let mut member_reqs: Vec<Vec<usize>> = vec![Vec::new(); resident.len()];
+    for (ri, r) in requests.iter().enumerate() {
+        debug_assert!(r.member < resident.len(), "routed member index in range");
+        member_reqs[r.member].push(ri);
+    }
+    // The member's weights come from each request (same mask structure —
+    // that is what the fingerprint routing matched); members absent from
+    // the window stream zeros via padding.
+    let blocks: Vec<&SparseBlock> = resident.blocks.iter().map(|b| b.as_ref()).collect();
+    let batches: Vec<Vec<MemberSegment<'_>>> = member_reqs
+        .iter()
+        .map(|idxs| {
+            idxs.iter()
+                .map(|&ri| MemberSegment {
+                    block: requests[ri].block.as_ref(),
+                    xs: requests[ri].xs.as_slice(),
+                })
+                .collect()
+        })
+        .collect();
+    let sim = match serving.plan.as_ref() {
+        Some(plan) => execute_plan_batch(plan, &blocks, &batches),
+        None => simulate_fused_batch(
+            &serving.outcome.mapping,
+            &serving.outcome.tags,
+            &blocks,
+            &ctx.cgra,
+            &batches,
+        ),
+    };
+    match sim {
+        Ok(res) => {
+            let w = requests.len();
+            let mut per_request: Vec<Option<SegmentSim>> = Vec::new();
+            per_request.resize_with(w, || None);
+            for (mi, m) in res.per_member.into_iter().enumerate() {
+                for (seg, &ri) in m.segments.into_iter().zip(&member_reqs[mi]) {
+                    per_request[ri] = Some(seg);
+                }
+            }
+            let segments = per_request
+                .into_iter()
+                .map(|s| s.expect("one segment per request"))
+                .collect();
+            WindowAttempt::Served {
+                segments,
+                pass_cycles: res.cycles,
+                ii: serving.outcome.mapping.ii,
+                fresh,
+                members: resident.len(),
+            }
+        }
+        Err(e) => WindowAttempt::SimFailed(ServeError::Sim(e.to_string())),
+    }
+}
+
+/// Map (or fetch from cache) a registered bundle's shared fused mapping.
+/// A mapping error here means the bundle cannot map on this fabric at
+/// all — the caller falls back to solo serving; request-specific errors
+/// never originate here.
+fn fused_serving(
+    bundle: &Arc<FusedBundle>,
+    ctx: &WorkerCtx,
+) -> Result<(Arc<ServingMapping>, bool)> {
+    let key = bundle_cache_key(bundle);
+    ctx.cache.get_or_map(&key, &ctx.metrics, || {
+        build_bundle_mapping(bundle, &key, &ctx.cgra, &ctx.opts, ctx.backend)
+    })
+}

@@ -1,0 +1,114 @@
+//! The bounded job queue and the job envelopes that travel it. Each shard
+//! owns one `JobQueue`; a batching window occupies a single queue slot
+//! however many requests it carries.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{SendError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::sparse::fuse::FusedBundle;
+use crate::sparse::SparseBlock;
+
+use super::window::{TicketCompleter, WindowRequest};
+use super::ServeError;
+
+pub(crate) enum Job {
+    Single(SingleJob),
+    Window(WindowJob),
+}
+
+pub(crate) struct SingleJob {
+    pub(crate) id: u64,
+    pub(crate) block: Arc<SparseBlock>,
+    pub(crate) xs: Vec<Vec<f32>>,
+    pub(crate) done: TicketCompleter,
+    /// Shed (as `DeadlineExceeded`) at worker pickup once passed.
+    pub(crate) deadline: Option<Instant>,
+    /// Enqueue timestamp, for queue-span latency attribution.
+    pub(crate) enqueued_at: Instant,
+}
+
+pub(crate) struct WindowJob {
+    pub(crate) bundle: Arc<FusedBundle>,
+    /// Member requests in window (global enqueue) order.
+    pub(crate) requests: Vec<WindowRequest>,
+}
+
+/// Ticket count aboard a job.
+pub(crate) fn job_width(job: &Job) -> usize {
+    match job {
+        Job::Single(_) => 1,
+        Job::Window(w) => w.requests.len(),
+    }
+}
+
+/// Resolve every ticket aboard `job` to [`ServeError::WorkerGone`] (the
+/// pool died with the job still queued).
+pub(crate) fn resolve_worker_gone(job: Job) {
+    match job {
+        Job::Single(j) => j.done.fulfill(Err(ServeError::WorkerGone)),
+        Job::Window(w) => {
+            for r in w.requests {
+                r.done.fulfill(Err(ServeError::WorkerGone));
+            }
+        }
+    }
+}
+
+/// Resolve every ticket aboard `job` to [`ServeError::QueueClosed`]
+/// (dispatch against a closed queue).
+pub(crate) fn resolve_queue_closed(job: Job) {
+    match job {
+        Job::Single(j) => j.done.fulfill(Err(ServeError::QueueClosed)),
+        Job::Window(w) => {
+            for r in w.requests {
+                r.done.fulfill(Err(ServeError::QueueClosed));
+            }
+        }
+    }
+}
+
+/// The bounded job queue plus an occupancy gauge for admission control.
+/// The gauge counts enqueued-but-not-picked-up jobs: it is incremented
+/// *before* the underlying send (and rolled back on failure) and
+/// decremented by a worker at pickup — so it can transiently over-count
+/// by the number of in-flight senders but never underflows (a wrap would
+/// make the shed watermark reject everything).
+pub(crate) struct JobQueue {
+    pub(crate) tx: SyncSender<Job>,
+    pub(crate) len: Arc<AtomicUsize>,
+}
+
+impl JobQueue {
+    /// Blocking send (backpressure). On a closed queue the job is handed
+    /// back so the caller can resolve its tickets.
+    pub(crate) fn send(&self, job: Job) -> std::result::Result<(), Job> {
+        self.len.fetch_add(1, Ordering::Relaxed);
+        match self.tx.send(job) {
+            Ok(()) => Ok(()),
+            Err(SendError(job)) => {
+                self.len.fetch_sub(1, Ordering::Relaxed);
+                Err(job)
+            }
+        }
+    }
+
+    /// Non-blocking send, for admission control.
+    pub(crate) fn try_send(&self, job: Job) -> std::result::Result<(), TrySendError<Job>> {
+        self.len.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(job) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.len.fetch_sub(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Jobs currently queued (approximate under concurrent traffic, exact
+    /// when quiescent).
+    pub(crate) fn occupancy(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+}

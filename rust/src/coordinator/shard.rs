@@ -1,0 +1,346 @@
+//! The shard layer: partitioning registered blocks and bundles across
+//! `[coordinator] shards` worker pools (fabric instances), plus the
+//! warm-start manifest a restarted coordinator pre-builds its mapping
+//! caches from.
+//!
+//! ## Deterministic capacity-constrained assignment
+//!
+//! Each registered unit (a solo block or a whole fused bundle) is pinned
+//! to one shard by a greedy pass over estimated PE/bus demand: the unit
+//! goes to the shard whose accumulated `(v_op, v_r, v_w)` load — folded
+//! through [`StreamingCgra::mii`], the same capacity model the fusion
+//! planner packs bundles with — stays lowest after admission, ties
+//! breaking on the lowest shard index. Registration order alone decides
+//! the placement (no timing, no hashing of worker state), so a given
+//! registration sequence produces the same shard map on every run and
+//! every worker count. Unregistered ad-hoc traffic falls back to
+//! `fingerprint % shards` — also deterministic.
+//!
+//! ## Warm-start manifest
+//!
+//! With `[coordinator] warm_start_path` set, every registration rewrites
+//! a small line-oriented manifest of the registered units' mask
+//! structures. On startup the coordinator replays the manifest —
+//! re-registering the units and pre-building their mappings through the
+//! normal single-flight cache path — so a restarted shard serves its
+//! first real request from a warm cache instead of paying a cold-start
+//! mapping storm. Mappings (and compiled plans) depend only on mask
+//! structure; weights arrive with each request, so a pre-built entry is
+//! simulation-identical to one built on demand.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::arch::StreamingCgra;
+use crate::sparse::fuse::FusedBundle;
+use crate::sparse::SparseBlock;
+
+use super::metrics::ShardMetrics;
+use super::pool::MappingCache;
+
+/// Environment override for `[coordinator] shards` — same
+/// warn-and-keep-config semantics as `SPARSEMAP_SIM_BACKEND` (CI runs the
+/// suite under `SPARSEMAP_SHARDS=2` without patching every test's
+/// config). An unparsable or zero value is ignored with a warning.
+pub const SHARDS_ENV: &str = "SPARSEMAP_SHARDS";
+
+/// Resolve the effective shard count: [`SHARDS_ENV`] wins over the config
+/// knob when set; an invalid value keeps the configured count (the
+/// override is an operational escape hatch — it must never brick a
+/// coordinator that has a valid config).
+pub(crate) fn effective_shards(configured: usize) -> usize {
+    let configured = configured.max(1);
+    match std::env::var(SHARDS_ENV) {
+        Ok(raw) => match raw.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                crate::log_warn!("ignoring {SHARDS_ENV}='{raw}': expected an integer >= 1");
+                configured
+            }
+        },
+        Err(_) => configured,
+    }
+}
+
+/// The coordinator-side handle to one shard: its mapping cache (for
+/// warm-start pre-builds) and its counter block. The shard's queue,
+/// workers, supervisor and poison registry live behind the pool layer.
+pub(crate) struct Shard {
+    pub(crate) cache: Arc<MappingCache>,
+    pub(crate) metrics: Arc<ShardMetrics>,
+}
+
+/// Estimated fabric demand of one registered unit, in the fusion
+/// planner's units: summed `(v_op, v_r, v_w)` over the blocks involved.
+pub(crate) fn block_demand(block: &SparseBlock) -> (usize, usize, usize) {
+    let f = block.features();
+    (f.v_op, f.v_r, f.v_w)
+}
+
+pub(crate) fn bundle_demand(bundle: &FusedBundle) -> (usize, usize, usize) {
+    bundle.blocks.iter().fold((0, 0, 0), |acc, b| {
+        let f = b.features();
+        (acc.0 + f.v_op, acc.1 + f.v_r, acc.2 + f.v_w)
+    })
+}
+
+/// Deterministic greedy shard assigner (see the module docs). Lives under
+/// the coordinator's registry lock.
+pub(crate) struct ShardAssigner {
+    /// Accumulated `(ops, reads, writes)` demand per shard.
+    loads: Vec<(usize, usize, usize)>,
+    /// Fingerprint → owning shard, for every registered unit.
+    map: HashMap<u64, usize>,
+}
+
+impl ShardAssigner {
+    pub(crate) fn new(shards: usize) -> Self {
+        ShardAssigner { loads: vec![(0, 0, 0); shards.max(1)], map: HashMap::new() }
+    }
+
+    pub(crate) fn shard_count(&self) -> usize {
+        self.loads.len()
+    }
+
+    /// Pin `fp` to the shard whose post-admission MII load stays lowest
+    /// (ties → lowest index); idempotent for an already-assigned unit.
+    pub(crate) fn assign(
+        &mut self,
+        fp: u64,
+        demand: (usize, usize, usize),
+        cgra: &StreamingCgra,
+    ) -> usize {
+        if let Some(&s) = self.map.get(&fp) {
+            return s;
+        }
+        let mut best = 0usize;
+        let mut best_cost = usize::MAX;
+        for (s, &(o, r, w)) in self.loads.iter().enumerate() {
+            let cost = cgra.mii(o + demand.0, r + demand.1, w + demand.2);
+            if cost < best_cost {
+                best = s;
+                best_cost = cost;
+            }
+        }
+        let l = &mut self.loads[best];
+        l.0 += demand.0;
+        l.1 += demand.1;
+        l.2 += demand.2;
+        self.map.insert(fp, best);
+        best
+    }
+
+    /// Owning shard of a registered unit, `None` for ad-hoc traffic.
+    pub(crate) fn shard_of(&self, fp: u64) -> Option<usize> {
+        self.map.get(&fp).copied()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Warm-start manifest
+
+/// One replayable registration from the manifest, in file order.
+pub(crate) enum ManifestUnit {
+    Block(Arc<SparseBlock>),
+    Bundle(Arc<FusedBundle>),
+}
+
+const MANIFEST_HEADER: &str = "# sparsemap warm-start manifest v1";
+
+fn mask_string(block: &SparseBlock) -> String {
+    block.mask.iter().map(|&m| if m { '1' } else { '0' }).collect()
+}
+
+fn block_line(kw: &str, block: &SparseBlock) -> String {
+    // Name goes last so block names may contain spaces.
+    format!("{kw} {} {} {} {}", block.c, block.k, mask_string(block), block.name)
+}
+
+/// Serialize the registered units. The whole file is rewritten on every
+/// registration (registrations are rare and the manifest is small — a
+/// few lines per unit).
+pub(crate) fn write_manifest(
+    path: &str,
+    blocks: &[Arc<SparseBlock>],
+    bundles: &[Arc<FusedBundle>],
+) -> std::io::Result<()> {
+    let mut out = String::from(MANIFEST_HEADER);
+    out.push('\n');
+    for b in blocks {
+        out.push_str(&block_line("block", b));
+        out.push('\n');
+    }
+    for bundle in bundles {
+        out.push_str(&format!("bundle {}\n", bundle.len()));
+        for m in &bundle.blocks {
+            out.push_str(&block_line("member", m));
+            out.push('\n');
+        }
+    }
+    std::fs::write(path, out)
+}
+
+/// Parse the payload of a `block` / `member` line: `<c> <k> <mask01>
+/// <name…>` (name last, may contain spaces).
+fn parse_block_payload(rest: &str) -> Option<Arc<SparseBlock>> {
+    let mut parts = rest.splitn(4, ' ');
+    let c: usize = parts.next()?.trim().parse().ok()?;
+    let k: usize = parts.next()?.trim().parse().ok()?;
+    let mask_s = parts.next()?.trim();
+    let name = parts.next()?;
+    if mask_s.len() != c.checked_mul(k)? || !mask_s.chars().all(|ch| ch == '0' || ch == '1') {
+        return None;
+    }
+    let mask: Vec<bool> = mask_s.chars().map(|ch| ch == '1').collect();
+    SparseBlock::from_mask(name, c, k, mask).ok().map(Arc::new)
+}
+
+/// Load and parse the manifest at `path`. Malformed lines are skipped
+/// with a warning — a half-written or stale manifest degrades warm-start
+/// coverage, it never fails startup.
+pub(crate) fn load_manifest(path: &str) -> std::io::Result<Vec<ManifestUnit>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut units = Vec::new();
+    let mut lines = text.lines().peekable();
+    while let Some(line) = lines.next() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("block ") {
+            match parse_block_payload(rest) {
+                Some(b) => units.push(ManifestUnit::Block(b)),
+                None => crate::log_warn!("warm-start manifest: skipping malformed line '{line}'"),
+            }
+        } else if let Some(rest) = line.strip_prefix("bundle ") {
+            let Ok(n) = rest.trim().parse::<usize>() else {
+                crate::log_warn!("warm-start manifest: skipping malformed line '{line}'");
+                continue;
+            };
+            let mut members = Vec::with_capacity(n);
+            for _ in 0..n {
+                let member = lines
+                    .next()
+                    .and_then(|l| l.trim().strip_prefix("member "))
+                    .and_then(parse_block_payload);
+                match member {
+                    Some(m) => members.push(m),
+                    None => break,
+                }
+            }
+            if members.len() != n {
+                crate::log_warn!(
+                    "warm-start manifest: bundle with {} of {n} parsable members; skipping",
+                    members.len()
+                );
+                continue;
+            }
+            match FusedBundle::new(members) {
+                Ok(bundle) => units.push(ManifestUnit::Bundle(Arc::new(bundle))),
+                Err(e) => crate::log_warn!("warm-start manifest: skipping bundle ({e})"),
+            }
+        } else {
+            crate::log_warn!("warm-start manifest: skipping unrecognized line '{line}'");
+        }
+    }
+    Ok(units)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(name: &str, c: usize, k: usize, mask: Vec<bool>) -> Arc<SparseBlock> {
+        Arc::new(SparseBlock::from_mask(name, c, k, mask).unwrap())
+    }
+
+    #[test]
+    fn assigner_is_deterministic_and_spreads_load() {
+        let cgra = StreamingCgra::paper_default();
+        let blocks: Vec<Arc<SparseBlock>> = (0..6)
+            .map(|i| {
+                tiny(
+                    &format!("b{i}"),
+                    2,
+                    2,
+                    vec![true, i % 2 == 0, true, i % 3 == 0],
+                )
+            })
+            .collect();
+        let run = || -> Vec<usize> {
+            let mut a = ShardAssigner::new(3);
+            blocks
+                .iter()
+                .map(|b| a.assign(b.mask_fingerprint(), block_demand(b), &cgra))
+                .collect()
+        };
+        let first = run();
+        assert_eq!(first, run(), "same registration order → same placement");
+        // Equal-demand units round-robin across empty shards (lowest
+        // index wins ties, then the loaded shard costs more).
+        assert!(first.iter().any(|&s| s != first[0]), "load spreads past shard 0");
+        // Idempotent: re-assigning a registered fingerprint keeps its shard.
+        let mut a = ShardAssigner::new(3);
+        let fp = blocks[0].mask_fingerprint();
+        let s0 = a.assign(fp, block_demand(&blocks[0]), &cgra);
+        assert_eq!(a.assign(fp, block_demand(&blocks[0]), &cgra), s0);
+        assert_eq!(a.shard_of(fp), Some(s0));
+        assert_eq!(a.shard_of(0xdead_beef), None);
+    }
+
+    #[test]
+    fn manifest_round_trips_blocks_and_bundles() {
+        let solo = tiny("solo block", 2, 3, vec![true, false, true, false, true, true]);
+        let m1 = tiny("f1", 2, 2, vec![true, false, true, true]);
+        let m2 = tiny("f2", 3, 2, vec![true, true, false, true, true, false]);
+        let bundle = Arc::new(FusedBundle::new(vec![m1, m2]).unwrap());
+        let path = std::env::temp_dir()
+            .join(format!("sparsemap-manifest-roundtrip-{}.txt", std::process::id()));
+        let path_s = path.to_str().unwrap().to_string();
+        write_manifest(&path_s, &[Arc::clone(&solo)], &[Arc::clone(&bundle)]).unwrap();
+        let units = load_manifest(&path_s).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(units.len(), 2);
+        match &units[0] {
+            ManifestUnit::Block(b) => {
+                assert_eq!(b.name, "solo block", "names with spaces survive");
+                assert_eq!((b.c, b.k), (2, 3));
+                assert_eq!(b.mask_fingerprint(), solo.mask_fingerprint());
+            }
+            _ => panic!("first unit must be the solo block"),
+        }
+        match &units[1] {
+            ManifestUnit::Bundle(b) => {
+                assert_eq!(b.len(), 2);
+                assert_eq!(b.fingerprint(), bundle.fingerprint(), "bundle identity survives");
+            }
+            _ => panic!("second unit must be the bundle"),
+        }
+    }
+
+    #[test]
+    fn manifest_skips_garbage_without_failing() {
+        let path = std::env::temp_dir()
+            .join(format!("sparsemap-manifest-garbage-{}.txt", std::process::id()));
+        let path_s = path.to_str().unwrap().to_string();
+        std::fs::write(
+            &path,
+            "# sparsemap warm-start manifest v1\n\
+             block 2 2 10 half-a-mask\n\
+             nonsense line\n\
+             block 2 2 1011 good\n\
+             bundle 2\n\
+             member 2 2 1011 only-one\n",
+        )
+        .unwrap();
+        let units = load_manifest(&path_s).unwrap();
+        let _ = std::fs::remove_file(&path);
+        // Only the well-formed block survives; the truncated bundle and
+        // the short-mask block are skipped.
+        assert_eq!(units.len(), 1);
+        match &units[0] {
+            ManifestUnit::Block(b) => assert_eq!(b.name, "good"),
+            _ => panic!("expected the one good block"),
+        }
+    }
+}

@@ -1,0 +1,467 @@
+//! Tickets, batching windows, and the coordinator-level dispatch state
+//! that forms windows **across sessions**.
+//!
+//! A [`Ticket`] is the caller's result handle; its worker-side
+//! [`TicketCompleter`] fulfills it exactly once (or resolves it
+//! `WorkerGone` on drop, so a wait can never hang on a lost request).
+//!
+//! Window formation is global: every member request — whichever session
+//! enqueued it — lands in [`DispatchState::window_enqueue`] under the
+//! coordinator's dispatch lock, so concurrent short-lived sessions share
+//! one lockstep pass instead of each sealing an underfull window. The
+//! queue-order rule keeps serving deterministic: window contents are a
+//! pure function of the global enqueue/cancel sequence plus the knobs
+//! (`batch_window_requests` / `batch_window_max` /
+//! `dispatch_lookahead`) — never of timing or worker count.
+
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::time::{Duration, Instant};
+
+use crate::config::SparsemapConfig;
+use crate::sparse::fuse::FusedBundle;
+use crate::sparse::SparseBlock;
+
+use super::queue::{resolve_queue_closed, Job, JobQueue, WindowJob};
+use super::{InferResult, ServeError};
+
+/// Fused request batching knobs (see `[coordinator] batch_window_requests`
+/// / `batch_window_max`).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchOptions {
+    /// A window seals once it holds this many member requests (`0`/`1` =
+    /// every member request is its own window).
+    pub window_requests: usize,
+    /// Cap on a window's lockstep iteration count (max over members of
+    /// the summed request stream lengths): a request that would push the
+    /// window to the cap seals it *first* and starts a fresh one, so
+    /// requests already aboard never pay an oversized rider's padding.
+    /// `0` = uncapped.
+    pub window_max_iters: usize,
+}
+
+impl BatchOptions {
+    pub fn from_config(cfg: &SparsemapConfig) -> Self {
+        BatchOptions {
+            window_requests: cfg.batch_window_requests,
+            window_max_iters: cfg.batch_window_max,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tickets
+
+/// Resolution state shared between a [`Ticket`] and its worker-side
+/// completer.
+enum TicketInner {
+    Pending,
+    Done(std::result::Result<InferResult, ServeError>),
+    /// `wait` consumed the result (tombstone — unreachable through the
+    /// public API afterwards, since `wait` takes the ticket by value).
+    Taken,
+}
+
+pub(crate) struct TicketState {
+    inner: Mutex<TicketInner>,
+    ready: Condvar,
+}
+
+impl TicketState {
+    pub(crate) fn new() -> Arc<Self> {
+        Arc::new(TicketState { inner: Mutex::new(TicketInner::Pending), ready: Condvar::new() })
+    }
+
+    /// First completion wins; later calls (e.g. the completer's drop guard
+    /// after an explicit fulfill) are no-ops.
+    fn complete(&self, res: std::result::Result<InferResult, ServeError>) {
+        let mut inner = self.inner.lock().expect("ticket state");
+        if matches!(&*inner, TicketInner::Pending) {
+            *inner = TicketInner::Done(res);
+            self.ready.notify_all();
+        }
+    }
+
+    /// Block until the ticket is resolved (without consuming the result).
+    pub(crate) fn wait_done(&self) {
+        let mut inner = self.inner.lock().expect("ticket state");
+        while matches!(&*inner, TicketInner::Pending) {
+            inner = self.ready.wait(inner).expect("ticket state");
+        }
+    }
+
+    /// Block until resolved, then take the result.
+    fn take(&self) -> std::result::Result<InferResult, ServeError> {
+        let mut inner = self.inner.lock().expect("ticket state");
+        while matches!(&*inner, TicketInner::Pending) {
+            inner = self.ready.wait(inner).expect("ticket state");
+        }
+        match std::mem::replace(&mut *inner, TicketInner::Taken) {
+            TicketInner::Done(res) => res,
+            // `wait` consumes the ticket, so a taken state cannot be
+            // observed again through the public API.
+            _ => Err(ServeError::WorkerGone),
+        }
+    }
+
+    /// Non-blocking peek (clones the result, leaving it claimable).
+    pub(crate) fn peek(&self) -> Option<std::result::Result<InferResult, ServeError>> {
+        let inner = self.inner.lock().expect("ticket state");
+        match &*inner {
+            TicketInner::Done(res) => Some(res.clone()),
+            _ => None,
+        }
+    }
+
+    /// Block until resolved or `deadline`, whichever comes first. `Some`
+    /// clones the result (leaving it claimable, like `peek`); `None`
+    /// means the request is still in flight at the deadline.
+    fn wait_until(
+        &self,
+        deadline: Instant,
+    ) -> Option<std::result::Result<InferResult, ServeError>> {
+        let mut inner = self.inner.lock().expect("ticket state");
+        loop {
+            if let TicketInner::Done(res) = &*inner {
+                return Some(res.clone());
+            }
+            let left = deadline.checked_duration_since(Instant::now())?;
+            let (guard, _) = self.ready.wait_timeout(inner, left).expect("ticket state");
+            inner = guard;
+        }
+    }
+}
+
+/// Worker-side handle to a pending ticket: fulfills it exactly once, and
+/// resolves it to [`ServeError::WorkerGone`] if dropped unfulfilled
+/// (worker panic, queue teardown with jobs still aboard) so a `wait` can
+/// never hang on a request the pool lost.
+pub(crate) struct TicketCompleter {
+    pub(crate) state: Arc<TicketState>,
+}
+
+impl TicketCompleter {
+    pub(crate) fn fulfill(self, res: std::result::Result<InferResult, ServeError>) {
+        self.state.complete(res);
+        // Drop runs next and no-ops: completion is first-wins.
+    }
+}
+
+impl Drop for TicketCompleter {
+    fn drop(&mut self) {
+        self.state.complete(Err(ServeError::WorkerGone));
+    }
+}
+
+/// Handle to one enqueued request. Results are retrieved by ticket, in any
+/// order — waiting also seals the request's batching window (if it is
+/// still open) so a ticket can never block on a window nobody else would
+/// close.
+pub struct Ticket {
+    pub(crate) id: u64,
+    /// Coordinator-global request uid: windows now span sessions, so the
+    /// session-scoped `id` is not unique inside a window — cancellation
+    /// keys on this instead.
+    pub(crate) uid: u64,
+    pub(crate) block_name: String,
+    pub(crate) state: Arc<TicketState>,
+    pub(crate) window: Option<WindowHandle>,
+}
+
+impl Ticket {
+    /// The request's id (session-scoped enqueue sequence number).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Name of the block the request targets.
+    pub fn block_name(&self) -> &str {
+        &self.block_name
+    }
+
+    /// Block until the request resolves and take the result. Seals the
+    /// request's batching window first if it is still open.
+    pub fn wait(mut self) -> std::result::Result<InferResult, ServeError> {
+        self.flush_window();
+        self.state.take()
+    }
+
+    /// Non-blocking poll: `None` while the request is in flight, a clone
+    /// of the result once resolved (the result stays claimable by `wait`).
+    /// Also seals the request's still-open batching window — the poll
+    /// would otherwise never turn `Some`.
+    pub fn try_wait(&mut self) -> Option<std::result::Result<InferResult, ServeError>> {
+        self.flush_window();
+        self.state.peek()
+    }
+
+    /// Bounded wait: block until the request resolves or `timeout`
+    /// elapses. Seals the request's still-open batching window first (like
+    /// `wait`). `Some` clones the result, leaving it claimable by a later
+    /// `wait`/`try_wait`; `None` means the request is still in flight —
+    /// the ticket stays live and can be waited again.
+    pub fn wait_timeout(
+        &mut self,
+        timeout: Duration,
+    ) -> Option<std::result::Result<InferResult, ServeError>> {
+        self.flush_window();
+        let deadline = Instant::now().checked_add(timeout)?;
+        self.state.wait_until(deadline)
+    }
+
+    fn flush_window(&mut self) {
+        if let Some(w) = self.window.take() {
+            w.flush();
+        }
+    }
+}
+
+impl Drop for Ticket {
+    /// Dropping an unwaited ticket cancels its request if that request is
+    /// still riding an open batching window: the request is withdrawn
+    /// before the window seals, so abandoned work is never simulated.
+    /// (A sealed or dispatched request rides along; its result is simply
+    /// discarded.) `wait`/`try_wait`/`wait_timeout` take the window handle
+    /// first, so a waited ticket never cancels.
+    fn drop(&mut self) {
+        if let Some(w) = self.window.take() {
+            w.cancel(self.uid);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batching windows
+
+/// A not-yet-dispatched batching window for one registered bundle.
+pub(crate) struct WindowCell {
+    bundle: Arc<FusedBundle>,
+    requests: Vec<WindowRequest>,
+    sealed: bool,
+}
+
+pub(crate) struct WindowRequest {
+    /// Session-scoped id (what `InferResult::id` reports).
+    pub(crate) id: u64,
+    /// Coordinator-global uid — the cancellation key (windows span
+    /// sessions, so session ids collide inside a window).
+    pub(crate) uid: u64,
+    /// Member index inside the bundle (resolved at enqueue time).
+    pub(crate) member: usize,
+    pub(crate) block: Arc<SparseBlock>,
+    pub(crate) xs: Vec<Vec<f32>>,
+    pub(crate) done: TicketCompleter,
+    /// Shed (as `DeadlineExceeded`) at worker pickup once passed.
+    pub(crate) deadline: Option<Instant>,
+    /// Enqueue timestamp, for queue-span latency attribution.
+    pub(crate) enqueued_at: Instant,
+}
+
+/// Shared handle to an open window: the dispatch state, the enqueueing
+/// session and every member ticket hold one, and whoever seals first
+/// dispatches. The owning shard's queue is held weakly so stray tickets
+/// can never keep a worker pool alive past the coordinator's drop.
+#[derive(Clone)]
+pub(crate) struct WindowHandle {
+    pub(crate) cell: Arc<Mutex<WindowCell>>,
+    tx: Weak<JobQueue>,
+}
+
+impl WindowHandle {
+    /// Seal the window (if still open and non-empty) and dispatch it as
+    /// one job; on a closed queue every member ticket resolves to
+    /// [`ServeError::QueueClosed`] instead of hanging.
+    pub(crate) fn flush(&self) {
+        let job = {
+            let mut cell = self.cell.lock().expect("window cell");
+            if cell.sealed || cell.requests.is_empty() {
+                return;
+            }
+            cell.sealed = true;
+            WindowJob {
+                bundle: Arc::clone(&cell.bundle),
+                requests: std::mem::take(&mut cell.requests),
+            }
+        };
+        match self.tx.upgrade() {
+            Some(queue) => {
+                if let Err(job) = queue.send(Job::Window(job)) {
+                    resolve_queue_closed(job);
+                }
+            }
+            None => resolve_queue_closed(Job::Window(job)),
+        }
+    }
+
+    /// Withdraw request `uid` if the window has not sealed yet (the
+    /// cancellation path of a dropped unwaited [`Ticket`]). A sealed
+    /// window is immutable: the request rides along and its result is
+    /// discarded. Window contents stay a pure function of the global
+    /// enqueue/cancel sequence.
+    pub(crate) fn cancel(&self, uid: u64) {
+        let mut cell = self.cell.lock().expect("window cell");
+        if !cell.sealed {
+            // The withdrawn completer resolves its (otherwise
+            // unobservable) ticket state on drop.
+            cell.requests.retain(|r| r.uid != uid);
+        }
+    }
+
+    /// Whether the window has been sealed (dispatched or draining).
+    pub(crate) fn is_sealed(&self) -> bool {
+        self.cell.lock().expect("window cell").sealed
+    }
+
+    /// Requests currently riding the window (`0` once sealed — a sealed
+    /// window's requests are in flight, not waiting on look-ahead).
+    fn rider_count(&self) -> usize {
+        let cell = self.cell.lock().expect("window cell");
+        if cell.sealed {
+            0
+        } else {
+            cell.requests.len()
+        }
+    }
+}
+
+/// Lockstep iteration count of the window's current contents, optionally
+/// with one more candidate request aboard.
+fn lockstep_len(cell: &WindowCell, extra: Option<&WindowRequest>) -> usize {
+    let mut totals = vec![0usize; cell.bundle.len()];
+    for r in cell.requests.iter().chain(extra) {
+        totals[r.member] += r.xs.len();
+    }
+    totals.into_iter().max().unwrap_or(0)
+}
+
+/// Whether admitting `request` would push the window's lockstep iteration
+/// count to (or past) `batch_window_max` — checked *before* admission so
+/// requests already aboard never pay the oversized rider's padding.
+fn would_exceed_cap(cell: &WindowCell, request: &WindowRequest, batching: &BatchOptions) -> bool {
+    batching.window_max_iters > 0
+        && lockstep_len(cell, Some(request)) >= batching.window_max_iters
+}
+
+/// Whether the window should seal now that its contents are final for
+/// this enqueue: the request-count knob, or (for a window whose sole
+/// request alone reaches it — a cap breach no split can avoid) the
+/// iteration cap.
+fn window_full(cell: &WindowCell, batching: &BatchOptions) -> bool {
+    if cell.requests.len() >= batching.window_requests.max(1) {
+        return true;
+    }
+    batching.window_max_iters > 0 && lockstep_len(cell, None) >= batching.window_max_iters
+}
+
+// ---------------------------------------------------------------------------
+// Global dispatch state
+
+/// The coordinator-level window former. ONE of these exists per
+/// coordinator, behind the dispatch lock: every member request from every
+/// session funnels through [`DispatchState::window_enqueue`], so windows
+/// fill from the *global* request stream (the millions-of-users shape —
+/// many short sessions, few requests each — shares lockstep passes it
+/// never could when each session formed its own windows).
+pub(crate) struct DispatchState {
+    /// Open windows keyed by bundle fingerprint, in creation order (small
+    /// linear map — one entry per actively-trafficked bundle).
+    open: Vec<(u64, WindowHandle)>,
+}
+
+impl DispatchState {
+    pub(crate) fn new() -> Self {
+        DispatchState { open: Vec::new() }
+    }
+
+    /// Append a member request to its bundle's open window (creating one
+    /// if none is open), sealing and dispatching the window when it fills.
+    /// A request that would push the window's lockstep iteration count
+    /// past `batch_window_max` seals the window *first* and starts a fresh
+    /// one — members already aboard never pay unbounded padding for a
+    /// late oversized rider. With `lookahead > 0`, windows holding more
+    /// than `lookahead` total riding requests are sealed oldest-first
+    /// after the push (bounded look-ahead: the dispatch loop never holds
+    /// an unbounded backlog open hunting for a fuller window).
+    pub(crate) fn window_enqueue(
+        &mut self,
+        tx: &Arc<JobQueue>,
+        batching: &BatchOptions,
+        lookahead: usize,
+        bundle: Arc<FusedBundle>,
+        request: WindowRequest,
+    ) -> WindowHandle {
+        let fp = bundle.fingerprint();
+        loop {
+            let handle = match self.open.iter().find(|(k, _)| *k == fp) {
+                Some((_, h)) => h.clone(),
+                None => {
+                    let h = WindowHandle {
+                        cell: Arc::new(Mutex::new(WindowCell {
+                            bundle: Arc::clone(&bundle),
+                            requests: Vec::new(),
+                            sealed: false,
+                        })),
+                        tx: Arc::downgrade(tx),
+                    };
+                    self.open.push((fp, h.clone()));
+                    h
+                }
+            };
+            let full = {
+                let mut cell = handle.cell.lock().expect("window cell");
+                if cell.sealed {
+                    // A concurrent `Ticket::wait` (tickets are `Send` and
+                    // may be waited from any thread) sealed and dispatched
+                    // this window between our lookup and this lock: forget
+                    // the stale handle and open a fresh window. The seal
+                    // decision and the push share one critical section, so
+                    // a request can never land in an already-dispatched
+                    // cell.
+                    drop(cell);
+                    self.open.retain(|(k, _)| *k != fp);
+                    continue;
+                }
+                if !cell.requests.is_empty() && would_exceed_cap(&cell, &request, batching) {
+                    drop(cell);
+                    handle.flush();
+                    self.open.retain(|(k, _)| *k != fp);
+                    continue;
+                }
+                cell.requests.push(request);
+                window_full(&cell, batching)
+            };
+            if full {
+                handle.flush();
+            } else {
+                self.enforce_lookahead(lookahead);
+            }
+            // `request` is moved only on this returning path; every
+            // `continue` above runs before the move, so the loop re-enters
+            // with the request still in hand.
+            return handle;
+        }
+    }
+
+    /// Bounded look-ahead: while more than `lookahead` requests ride open
+    /// windows, seal the oldest open window. `0` = unbounded (the
+    /// default — windows wait for their seal triggers). Deterministic:
+    /// runs under the dispatch lock, purely off the open-window contents.
+    fn enforce_lookahead(&mut self, lookahead: usize) {
+        if lookahead == 0 {
+            return;
+        }
+        loop {
+            self.open.retain(|(_, h)| !h.is_sealed());
+            let riding: usize = self.open.iter().map(|(_, h)| h.rider_count()).sum();
+            if riding <= lookahead || self.open.is_empty() {
+                return;
+            }
+            let (_, oldest) = self.open.remove(0);
+            oldest.flush();
+        }
+    }
+
+    /// Seal and dispatch every open window, in creation order (shutdown).
+    pub(crate) fn drain_open(&mut self) -> Vec<WindowHandle> {
+        self.open.drain(..).map(|(_, h)| h).collect()
+    }
+}

@@ -73,9 +73,10 @@
 //! `Ticket::wait()` / `try_wait()`, in any order — with per-request
 //! failures as a structured `ServeError` (queue closed / mapping failed /
 //! simulator fault / worker gone). Requests targeting members of a
-//! registered fused bundle aggregate into **batching windows**
-//! (`[coordinator] batch_window_requests` / `batch_window_max`;
-//! deterministic — window contents are a pure function of enqueue order):
+//! registered fused bundle aggregate into **batching windows** that span
+//! sessions (`[coordinator] batch_window_requests` / `batch_window_max`;
+//! deterministic — window contents are a pure function of the global
+//! enqueue/cancel order, independent of worker or shard count):
 //! one window runs ONE lockstep simulation pass
 //! ([`sim::simulate_fused_batch`]) with a real iteration stream per
 //! member, and outputs plus a proportional share of the pass's cycles
@@ -85,6 +86,28 @@
 //! shims over an internal session; the crate itself compiles with
 //! `deny(deprecated)`, so only the shims reference them
 //! (`tests/serving_api.rs` locks shim-vs-ticket bit-identity).
+//!
+//! ## Sharded serving: worker pools per shard, one global dispatch order
+//!
+//! The coordinator partitions registered blocks and bundles across
+//! `[coordinator] shards` worker pools (`SPARSEMAP_SHARDS` overrides the
+//! knob; `cli serve --shards N` pins it over both): a deterministic
+//! capacity-constrained assigner places each unit on the shard whose
+//! post-admission combined MII over estimated PE/bus demand stays lowest
+//! (ties to the lowest index), so the placement is a pure function of the
+//! registration order. Each shard owns its mapping cache, job queue,
+//! supervisor, restart budget and poison registry — one pool's death
+//! drains only its own queue while siblings keep serving — and per-shard
+//! `windows`/`shed`/`worker_restarts`/`poisoned` counters plus queue-wait
+//! p50/p99 ride along in `MetricsSnapshot::shards`. Batching windows form
+//! ABOVE the shard layer in a single global dispatch loop, so window
+//! contents (and therefore outputs) are bit-identical for any shard and
+//! worker count; `shards = 1` (the default) is bit-identical to the
+//! pre-sharding coordinator. An optional warm-start manifest
+//! (`[coordinator] warm_start_path`, off by default) persists the
+//! registered units and pre-builds their mappings through the normal
+//! cache path at construction, so a restarted server takes no cold-start
+//! misses. `tests/sharded_serving.rs` locks all of it.
 //!
 //! ## Failure model: the serving tier survives its workers
 //!

@@ -158,5 +158,10 @@ fn bench_mapper_json_schema() {
     require("serving/fused3/window8", &["serving/fused3/window8_compiled"]);
     require("serving/wide_k128/per_request_compiled", &["serving/wide_k128/per_request"]);
     require("serving/wide_k128/per_request", &["serving/wide_k128/per_request_compiled"]);
+    // The sharded rows joined serving_throughput with the sharded tier
+    // (an older snapshot may predate them), but one run writes both —
+    // require them pairwise.
+    require("serving/sharded/window8_x2shards", &["serving/sharded/cross_session_window8"]);
+    require("serving/sharded/cross_session_window8", &["serving/sharded/window8_x2shards"]);
     eprintln!("BENCH_mapper.json schema ok ({rows} rows)");
 }

@@ -1,0 +1,355 @@
+//! Integration suite for the sharded serving tier: bit-identical outputs
+//! across shard/worker/batching topologies, cross-session window
+//! formation as a pure function of the global enqueue/cancel order, warm
+//! starts from the on-disk manifest, and (under the `failpoints` feature)
+//! shard-level fault isolation — one dead pool drains its own queue while
+//! sibling shards keep serving.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sparsemap::config::SparsemapConfig;
+use sparsemap::coordinator::{Coordinator, ServeError, Ticket};
+use sparsemap::sparse::fuse::FusedBundle;
+use sparsemap::sparse::SparseBlock;
+use sparsemap::util::rng::Pcg64;
+
+#[cfg(feature = "failpoints")]
+use sparsemap::util::failpoint::{configure, FailScenario, FaultKind, Trigger};
+
+/// Failpoint state is process-global and cargo runs this file's tests
+/// concurrently: under the `failpoints` feature EVERY test (armed or not)
+/// holds a `FailScenario`, which serializes them and guarantees no armed
+/// site leaks into an unsuspecting test. Without the feature it is free.
+#[cfg(feature = "failpoints")]
+fn scenario() -> FailScenario {
+    FailScenario::setup()
+}
+
+/// No-op stand-in guard when failpoints are compiled out.
+#[cfg(not(feature = "failpoints"))]
+struct FailScenario;
+
+#[cfg(not(feature = "failpoints"))]
+fn scenario() -> FailScenario {
+    FailScenario
+}
+
+fn tiny(name: &str, c: usize, k: usize, mask: Vec<bool>) -> Arc<SparseBlock> {
+    Arc::new(SparseBlock::from_mask(name, c, k, mask).unwrap())
+}
+
+fn tiny_members() -> Vec<Arc<SparseBlock>> {
+    vec![
+        tiny("f1", 2, 2, vec![true, false, true, true]),
+        tiny("f2", 3, 2, vec![true, true, false, true, true, false]),
+        tiny("f3", 2, 3, vec![true, false, true, false, true, true]),
+    ]
+}
+
+fn stream_for(block: &SparseBlock, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..n)
+        .map(|_| (0..block.c).map(|_| rng.next_normal() as f32).collect())
+        .collect()
+}
+
+fn base_cfg() -> SparsemapConfig {
+    let mut cfg = SparsemapConfig::default();
+    cfg.queue_depth = 8;
+    cfg.parallelism = 1;
+    cfg.mis_iterations = 20_000;
+    cfg
+}
+
+/// Bounded wait: a ticket that does not resolve within the bound is a
+/// hang — exactly the bug class this suite exists to catch.
+fn must_resolve(t: &mut Ticket) -> Result<(), ServeError> {
+    t.wait_timeout(Duration::from_secs(60))
+        .expect("ticket must resolve, not hang")
+        .map(|_| ())
+}
+
+/// Poll the worker-side window/job counters up to a bound without
+/// touching any ticket (waiting a ticket seals its window, which would
+/// mask the enqueue-order-driven seal these tests assert).
+fn wait_for_counters(coord: &Coordinator, windows: u64, jobs: u64) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let m = coord.metrics.snapshot();
+        if m.windows >= windows && m.jobs >= jobs {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "counters stuck at windows={} jobs={} (want {windows}/{jobs})",
+            m.windows,
+            m.jobs
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Run one fixed multi-session traffic trace (fused members round-robin
+/// with two solo blocks, interleaved over three sessions) against a
+/// pinned topology and return every request's outputs as raw bits, in
+/// global enqueue order.
+fn run_trace(shards: usize, workers: usize, window_requests: usize) -> Vec<Vec<Vec<u32>>> {
+    let mut cfg = base_cfg();
+    cfg.workers = workers;
+    cfg.batch_window_requests = window_requests;
+    let coord = Coordinator::with_shard_count(&cfg, shards);
+    let members = tiny_members();
+    coord.register_bundle(Arc::new(FusedBundle::new(members.clone()).unwrap()));
+    let solos = vec![
+        tiny("s1", 2, 2, vec![true, true, true, false]),
+        tiny("s2", 3, 3, vec![true, false, true, false, true, true, true, false, true]),
+    ];
+    let traffic: Vec<Arc<SparseBlock>> = members.iter().chain(solos.iter()).cloned().collect();
+
+    let mut sessions: Vec<_> = (0..3).map(|_| coord.session()).collect();
+    let mut tickets = Vec::new();
+    for i in 0..20usize {
+        let block = &traffic[i % traffic.len()];
+        let xs = stream_for(block, 1 + i % 3, i as u64);
+        tickets.push(sessions[i % sessions.len()].enqueue(Arc::clone(block), xs));
+    }
+    for s in &mut sessions {
+        s.flush();
+    }
+    tickets
+        .into_iter()
+        .map(|t| {
+            let r = t.wait().expect("traced request ok");
+            r.outputs
+                .iter()
+                .map(|row| row.iter().map(|v| v.to_bits()).collect())
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn outputs_bit_identical_across_shard_worker_and_batching_knobs() {
+    let _s = scenario();
+    // The determinism contract: serving output is a pure function of the
+    // request trace — shard count, worker count and window knobs shape
+    // latency and window composition, never bits.
+    let reference = run_trace(1, 1, 2);
+    let topologies = [(1, 2, 2), (2, 1, 2), (2, 2, 2), (3, 2, 4), (2, 2, 1), (4, 1, 8)];
+    for (shards, workers, window) in topologies {
+        let got = run_trace(shards, workers, window);
+        assert_eq!(
+            got, reference,
+            "outputs diverged at shards={shards} workers={workers} window={window}"
+        );
+    }
+}
+
+#[test]
+fn cross_session_window_forms_from_the_global_enqueue_order() {
+    let _s = scenario();
+    // Two sessions, two member requests each, interleaved: the window
+    // fills from the GLOBAL stream and seals at 4 riders — no flush, no
+    // wait, no timing involved.
+    let run = || -> (u64, u64) {
+        let mut cfg = base_cfg();
+        cfg.workers = 2;
+        cfg.batch_window_requests = 4;
+        let coord = Coordinator::with_shard_count(&cfg, 2);
+        let members = tiny_members();
+        coord.register_bundle(Arc::new(FusedBundle::new(members.clone()).unwrap()));
+        let mut s1 = coord.session();
+        let mut s2 = coord.session();
+        let mut tickets = Vec::new();
+        for i in 0..4usize {
+            let b = &members[i % members.len()];
+            let xs = stream_for(b, 2, i as u64);
+            tickets.push(if i % 2 == 0 {
+                s1.enqueue(Arc::clone(b), xs)
+            } else {
+                s2.enqueue(Arc::clone(b), xs)
+            });
+        }
+        // No flush, no wait (`wait` would seal the window itself): the
+        // 4th enqueue alone must have sealed and dispatched it. Poll the
+        // worker-side counters under a bound.
+        wait_for_counters(&coord, 1, 4);
+        for mut t in tickets {
+            must_resolve(&mut t).expect("windowed request ok");
+        }
+        let m = coord.metrics.snapshot();
+        (m.windows, m.jobs)
+    };
+    assert_eq!(run(), (1, 4), "four riders from two sessions → ONE window");
+    assert_eq!(run(), (1, 4), "repeat runs form identical windows");
+}
+
+#[test]
+fn cancellation_is_part_of_the_window_forming_order() {
+    let _s = scenario();
+    // Window contents are a pure function of the global enqueue/CANCEL
+    // sequence: a dropped ticket withdraws its rider, so the window seals
+    // only when four *live* riders are aboard.
+    let run = || -> (u64, u64) {
+        let mut cfg = base_cfg();
+        cfg.workers = 2;
+        cfg.batch_window_requests = 4;
+        let coord = Coordinator::with_shard_count(&cfg, 2);
+        let members = tiny_members();
+        coord.register_bundle(Arc::new(FusedBundle::new(members.clone()).unwrap()));
+        let mut s1 = coord.session();
+        let mut s2 = coord.session();
+        let t0 = s1.enqueue(Arc::clone(&members[0]), stream_for(&members[0], 2, 0));
+        let dropped = s2.enqueue(Arc::clone(&members[1]), stream_for(&members[1], 2, 1));
+        drop(dropped); // withdrawn: the window is back to 1 rider
+        let t2 = s1.enqueue(Arc::clone(&members[2]), stream_for(&members[2], 2, 2));
+        let t3 = s2.enqueue(Arc::clone(&members[0]), stream_for(&members[0], 2, 3));
+        let t4 = s1.enqueue(Arc::clone(&members[1]), stream_for(&members[1], 2, 4));
+        // The 5th enqueue is the 4th LIVE rider: it alone seals the
+        // window — observed worker-side before any ticket is waited.
+        wait_for_counters(&coord, 1, 4);
+        for mut t in [t0, t2, t3, t4] {
+            must_resolve(&mut t).expect("surviving rider ok");
+        }
+        let m = coord.metrics.snapshot();
+        (m.windows, m.jobs)
+    };
+    assert_eq!(run(), (1, 4), "the cancelled rider never dispatches");
+    assert_eq!(run(), (1, 4), "cancel-shaped windows are deterministic too");
+}
+
+#[test]
+fn warm_start_prebuilds_registered_mappings_from_the_manifest() {
+    let _s = scenario();
+    let path = std::env::temp_dir()
+        .join(format!("sparsemap-warmstart-{}.manifest", std::process::id()));
+    let path_str = path.to_str().expect("utf8 temp path").to_string();
+    let _ = std::fs::remove_file(&path);
+
+    let mut cfg = base_cfg();
+    cfg.workers = 1;
+    cfg.warm_start_path = path_str;
+    let members = tiny_members();
+    let solo = tiny("warm", 2, 2, vec![true, false, true, true]);
+
+    // First life: registrations persist to the manifest as they happen.
+    {
+        let coord = Coordinator::with_shard_count(&cfg, 2);
+        coord.register_block(Arc::clone(&solo));
+        coord.register_bundle(Arc::new(FusedBundle::new(members.clone()).unwrap()));
+        let mut session = coord.session();
+        let mut t = session.enqueue(Arc::clone(&solo), stream_for(&solo, 2, 1));
+        must_resolve(&mut t).expect("first-life request ok");
+        coord.shutdown();
+    }
+    assert!(path.exists(), "registration must write the manifest");
+
+    // Second life: construction replays the manifest, pre-building the
+    // solo and bundle mappings through the normal cache path — so the
+    // first real requests are cache hits.
+    {
+        let coord = Coordinator::with_shard_count(&cfg, 2);
+        let m = coord.metrics.snapshot();
+        assert_eq!(m.cache_misses, 2, "solo + bundle pre-built at construction");
+        let mut session = coord.session();
+        let solo_r = session
+            .enqueue(Arc::clone(&solo), stream_for(&solo, 2, 2))
+            .wait()
+            .expect("warm solo ok");
+        assert!(!solo_r.mapped_fresh, "warm-started mapping serves as a cache hit");
+        let xs = stream_for(&members[0], 2, 3);
+        let member_t = session.enqueue(Arc::clone(&members[0]), xs);
+        session.flush();
+        let member_r = member_t.wait().expect("warm member ok");
+        assert!(!member_r.mapped_fresh, "bundle mapping was pre-built too");
+        assert_eq!(member_r.fused_members, 3, "manifest restored the bundle route");
+        assert_eq!(coord.metrics.snapshot().cache_misses, 2, "no cold builds");
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn snapshot_reports_per_shard_counters() {
+    let _s = scenario();
+    let mut cfg = base_cfg();
+    cfg.workers = 1;
+    cfg.batch_window_requests = 2;
+    let coord = Coordinator::with_shard_count(&cfg, 2);
+    let members = tiny_members();
+    coord.register_bundle(Arc::new(FusedBundle::new(members.clone()).unwrap()));
+    let mut session = coord.session();
+    let t0 = session.enqueue(Arc::clone(&members[0]), stream_for(&members[0], 2, 0));
+    let t1 = session.enqueue(Arc::clone(&members[1]), stream_for(&members[1], 2, 1));
+    for mut t in [t0, t1] {
+        must_resolve(&mut t).expect("windowed request ok");
+    }
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.shards.len(), 2, "one counter block per shard");
+    assert_eq!(m.windows, 1);
+    let per_shard: u64 = m.shards.iter().map(|s| s.windows).sum();
+    assert_eq!(per_shard, 1, "the window is attributed to exactly one shard");
+    let served = m.shards.iter().find(|s| s.windows == 1).expect("owning shard");
+    assert!(
+        served.queue_ns_p99 >= served.queue_ns_p50 && served.queue_ns_p50 > 0.0,
+        "the owning shard observed the riders' queue spans"
+    );
+    let idle = m.shards.iter().find(|s| s.windows == 0).expect("idle shard");
+    assert_eq!(idle.queue_ns_p50, 0.0, "the idle shard observed nothing");
+}
+
+#[cfg(feature = "failpoints")]
+#[test]
+fn one_dead_shard_pool_never_blocks_sibling_shards() {
+    let _s = scenario();
+    // Kill the first worker to pick up a job — hard, outside the per-job
+    // catch_unwind — with a restart budget of zero: that shard's pool
+    // dies for good and its supervisor drains the queue, while the
+    // sibling shard keeps serving. Per-shard budgets are the isolation
+    // boundary under test.
+    configure("coordinator::worker_hard", FaultKind::Panic, Trigger::FirstN(1), 0);
+    let mut cfg = base_cfg();
+    cfg.workers = 1;
+    cfg.restart_budget = 0;
+    let coord = Coordinator::with_shard_count(&cfg, 2);
+    // Two equal-demand blocks spread across both shards deterministically
+    // (greedy assigner: first → shard 0, second → the empty shard 1).
+    let block_a = tiny("victim", 2, 2, vec![true, false, true, true]);
+    let block_b = tiny("survivor", 2, 2, vec![true, true, false, true]);
+    let sid_a = coord.register_block(Arc::clone(&block_a));
+    let sid_b = coord.register_block(Arc::clone(&block_b));
+    assert_ne!(sid_a, sid_b, "equal-demand blocks must spread across shards");
+
+    let mut session = coord.session();
+    // Serialize the kill: the first pickup anywhere trips the failpoint,
+    // so send the victim alone and wait for its WorkerGone before any
+    // other traffic can race for the trigger.
+    let mut victim = session.enqueue(Arc::clone(&block_a), stream_for(&block_a, 2, 0));
+    match must_resolve(&mut victim) {
+        Err(ServeError::WorkerGone) => {}
+        other => panic!("expected WorkerGone aboard the dying worker, got {other:?}"),
+    }
+
+    // The dead shard's queue still resolves everything (supervisor
+    // drain), and the sibling shard serves normally — every enqueued
+    // ticket resolves, on both sides.
+    let mut gone = 0;
+    let mut ok = 0;
+    for i in 0..4u64 {
+        let block = if i % 2 == 0 { &block_a } else { &block_b };
+        let mut t = session.enqueue(Arc::clone(block), stream_for(block, 2, 10 + i));
+        match must_resolve(&mut t) {
+            Ok(()) => ok += 1,
+            Err(ServeError::WorkerGone) => gone += 1,
+            Err(other) => panic!("unexpected error under shard death: {other:?}"),
+        }
+    }
+    assert_eq!(gone, 2, "the dead shard drains its tickets as WorkerGone");
+    assert_eq!(ok, 2, "the sibling shard serves its tickets");
+
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.shards.len(), 2);
+    assert_eq!(m.worker_restarts, 0, "budget 0: the pool was never respawned");
+    assert!(m.shards[sid_b].queue_ns_p50 > 0.0, "the surviving shard served requests");
+    assert_eq!(m.shards[sid_a].queue_ns_p50, 0.0, "the dead shard served nothing");
+}
