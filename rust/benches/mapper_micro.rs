@@ -16,7 +16,10 @@ use sparsemap::dfg::build::build_sdfg;
 use sparsemap::dfg::oracle as dfg_oracle;
 use sparsemap::mapper::{map_block, map_bundle, MapperOptions};
 use sparsemap::sched::{baseline, sparsemap as sm_sched};
-use sparsemap::sim::{simulate_and_check, simulate_fused, ExecPlan};
+use sparsemap::sim::{
+    execute_plan_lanes_with, simulate_and_check, simulate_fused, ExecPlan, ExecScratch,
+    MemberSegment,
+};
 use sparsemap::sparse::gen::{fused3_bundle, paper_blocks, wide_blocks};
 use sparsemap::sparse::SparseBlock;
 use sparsemap::util::bench::{black_box, repo_root_path, BenchConfig, Bencher};
@@ -230,6 +233,27 @@ fn main() {
     // registration to serve every later window off the compiled backend.
     bw.bench("fused3/plan_compile", || {
         black_box(ExecPlan::for_outcome(&fused_out, &cgra).unwrap());
+    });
+    // The PlanOp sweep in isolation, scalar vs 8-wide lanes, through one
+    // pooled scratch (the worker steady state): lanes1 vs lanes8 is the
+    // microarchitectural win of evaluating the window's iterations as
+    // contiguous lanes instead of one at a time.
+    let fused_plan = ExecPlan::for_outcome(&fused_out, &cgra).unwrap();
+    let batches: Vec<Vec<MemberSegment<'_>>> = members
+        .iter()
+        .zip(&streams)
+        .map(|(blk, s)| vec![MemberSegment { block: *blk, xs: s.as_slice() }])
+        .collect();
+    let mut scratch = ExecScratch::new();
+    bw.bench("fused3/plan_sweep_lanes1", || {
+        black_box(
+            execute_plan_lanes_with(&fused_plan, &members, &batches, 1, &mut scratch).unwrap(),
+        );
+    });
+    bw.bench("fused3/plan_sweep_lanes8", || {
+        black_box(
+            execute_plan_lanes_with(&fused_plan, &members, &batches, 8, &mut scratch).unwrap(),
+        );
     });
     b.results.extend(bw.results);
 

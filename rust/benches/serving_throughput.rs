@@ -8,7 +8,10 @@
 //! carries three rows: `per_request` (window size 1 — the old
 //! per-member-serial semantics, one whole-bundle pass per request),
 //! `batched_request` (default batching — requests amortize one lockstep
-//! pass per window) and `window8` (one full 8-request window end to end).
+//! pass per window) and `window8` (one full 8-request window end to end);
+//! the `window8_compiled` / `window8_lanes` twins price the plan path
+//! scalar vs lane-vectorized on the same window shape (and `wide_k128`
+//! gets its own `window8_lanes` row via a single-member bundle).
 //! The sharded scenario prices the same window shape on a two-shard
 //! topology (`window8_x2shards`: both pools serving concurrently) and the
 //! cross-session window path (`cross_session_window8`: eight sessions
@@ -183,6 +186,10 @@ fn main() {
         {
             let mut ccfg = cfg.clone();
             ccfg.sim_backend = SimBackend::Compiled;
+            // Pinned to the scalar sweep so this row keeps measuring the
+            // plan rewrite alone; window8_lanes below prices the
+            // lane-vectorized path on the same block.
+            ccfg.sim_lanes = 1;
             let coord = Coordinator::new(&ccfg);
             let mut session = coord.session();
             let _ = session.enqueue(Arc::clone(&wide), stream(&wide, 4, 99)).wait();
@@ -215,6 +222,54 @@ fn main() {
                 name: "serving/wide_k128/per_request_compiled".into(),
                 summary: per_request,
                 iters_per_sample: n,
+            });
+        }
+
+        // Lane-vectorized window twin: the same wide block batched into
+        // 8-request windows and served off the plan at the default (auto)
+        // lane width. Single-member bundles are legal, so the wide block
+        // gets the same window amortization the fused bundle enjoys — one
+        // PlanOp sweep covers the whole window's iterations in lanes.
+        {
+            let mut lcfg = cfg.clone();
+            lcfg.sim_backend = SimBackend::Compiled;
+            lcfg.batch_window_requests = 8;
+            lcfg.batch_window_max = 0;
+            let coord = Coordinator::new(&lcfg);
+            coord.register_bundle(Arc::new(
+                sparsemap::sparse::fuse::FusedBundle::new(vec![Arc::clone(&wide)]).unwrap(),
+            ));
+            let mut session = coord.session();
+            // Warm the mapping off the measurement (wait seals the warm
+            // request's window itself).
+            let _ = session.enqueue(Arc::clone(&wide), stream(&wide, 2, 98)).wait();
+            let rounds = 16u64;
+            let t0 = Instant::now();
+            for round in 0..rounds {
+                let mut window: Vec<Ticket> = (0..8u64)
+                    .map(|i| {
+                        let xs = stream(&wide, iters, 500 + round * 8 + i);
+                        session.enqueue(Arc::clone(&wide), xs)
+                    })
+                    .collect();
+                for t in window.drain(..) {
+                    let _ = t.wait();
+                }
+            }
+            let wall = t0.elapsed();
+            let m = coord.metrics.snapshot();
+            println!(
+                "wide_k128 window8 (lanes): {rounds} windows in {wall:?} → {:.2} ms/window \
+                 (lane passes {})",
+                wall.as_secs_f64() * 1e3 / rounds as f64,
+                m.lane_windows,
+            );
+            let mut window8l = Summary::new();
+            window8l.add(wall.as_nanos() as f64 / rounds as f64);
+            results.push(BenchResult {
+                name: "serving/wide_k128/window8_lanes".into(),
+                summary: window8l,
+                iters_per_sample: rounds,
             });
         }
 
@@ -401,10 +456,13 @@ fn main() {
         });
 
         // Compiled-backend twin of window8: same bundle, same window
-        // shape, served off the execution plan.
+        // shape, served off the execution plan — pinned to the scalar
+        // sweep (`sim_lanes = 1`) so the row keeps its historical meaning
+        // now that serving defaults to the lane-vectorized sweep.
         {
             let mut ccfg = cfg.clone();
             ccfg.sim_backend = SimBackend::Compiled;
+            ccfg.sim_lanes = 1;
             let coord = Coordinator::new(&ccfg);
             coord.register_bundle(Arc::clone(&bundle));
             let mut session = coord.session();
@@ -434,6 +492,49 @@ fn main() {
             results.push(BenchResult {
                 name: "serving/fused3/window8_compiled".into(),
                 summary: window8c,
+                iters_per_sample: rounds,
+            });
+        }
+
+        // Lane-vectorized twin of window8: the same traffic at the
+        // default (auto) lane width. window8_compiled vs window8_lanes is
+        // the sweep-vectorization win in isolation — same plan, same
+        // window shape, the only difference is lanes.
+        {
+            let mut lcfg = cfg.clone();
+            lcfg.sim_backend = SimBackend::Compiled;
+            let coord = Coordinator::new(&lcfg);
+            coord.register_bundle(Arc::clone(&bundle));
+            let mut session = coord.session();
+            let _ = session
+                .enqueue(Arc::clone(&members[0]), stream(&members[0], 2, 98))
+                .wait();
+            let t0 = Instant::now();
+            for round in 0..rounds {
+                let mut window: Vec<Ticket> = (0..8u64)
+                    .map(|i| {
+                        let member = &members[(i as usize) % members.len()];
+                        let xs = stream(member, iters, round * 8 + i);
+                        session.enqueue(Arc::clone(member), xs)
+                    })
+                    .collect();
+                for t in window.drain(..) {
+                    let _ = t.wait();
+                }
+            }
+            let wall = t0.elapsed();
+            let m = coord.metrics.snapshot();
+            println!(
+                "fused3 window8 (lanes): {rounds} windows in {wall:?} → {:.2} ms/window \
+                 (lane passes {})",
+                wall.as_secs_f64() * 1e3 / rounds as f64,
+                m.lane_windows,
+            );
+            let mut window8l = Summary::new();
+            window8l.add(wall.as_nanos() as f64 / rounds as f64);
+            results.push(BenchResult {
+                name: "serving/fused3/window8_lanes".into(),
+                summary: window8l,
                 iters_per_sample: rounds,
             });
         }

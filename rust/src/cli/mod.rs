@@ -233,6 +233,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         0 => Coordinator::new(&cfg),
         n => Coordinator::with_shard_count(&cfg, n),
     };
+    // Startup banner: the resolved serving stack (knobs + env overrides
+    // applied), so a silently overridden backend or lane width is visible
+    // before the first request.
+    let backend = match coord.sim_backend() {
+        crate::config::SimBackend::Compiled => "compiled",
+        crate::config::SimBackend::Interpreter => "interpreter",
+    };
+    let lanes = match coord.sim_lanes() {
+        0 => "auto".to_string(),
+        1 => "scalar".to_string(),
+        w => w.to_string(),
+    };
+    println!(
+        "serving on {} shard(s) × {} worker(s), sim backend {backend}, lanes {lanes}",
+        coord.shard_count(),
+        cfg.workers,
+    );
     let blocks: Vec<std::sync::Arc<crate::sparse::SparseBlock>> = paper_blocks()
         .into_iter()
         .take(4)
@@ -260,8 +277,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let m = coord.metrics.snapshot();
     println!(
         "served {ok}/{n} requests in {wall:?}: cache hits {} misses {} windows {} \
-         total CGRA cycles {}",
-        m.cache_hits, m.cache_misses, m.windows, m.total_cycles
+         (lane passes {}) total CGRA cycles {}",
+        m.cache_hits, m.cache_misses, m.windows, m.lane_windows, m.total_cycles
     );
     println!(
         "mean latency {:.2} ms, throughput {:.1} req/s",

@@ -84,6 +84,38 @@ impl SimBackend {
     }
 }
 
+/// Environment override for `[coordinator] sim_lanes`, honoured at
+/// coordinator construction like [`SimBackend::ENV`]: CI pins the scalar
+/// plan sweep suite-wide by exporting `SPARSEMAP_SIM_LANES=1`.
+pub const SIM_LANES_ENV: &str = "SPARSEMAP_SIM_LANES";
+
+/// Whether `v` is a legal `[coordinator] sim_lanes` value: `0` (auto
+/// width from the window size), `1` (the scalar plan sweep) or a
+/// supported lane width.
+pub fn valid_sim_lanes(v: usize) -> bool {
+    matches!(v, 0 | 1 | 2 | 4 | 8)
+}
+
+/// Resolve the effective lane knob: [`SIM_LANES_ENV`] wins over the
+/// config value when set; an unparsable or unsupported value is ignored
+/// with a warning (warn-and-keep, mirroring [`SimBackend::effective`] —
+/// an operational override must never brick a valid config).
+pub fn effective_sim_lanes(configured: usize) -> usize {
+    match std::env::var(SIM_LANES_ENV) {
+        Ok(raw) => match raw.parse::<usize>() {
+            Ok(v) if valid_sim_lanes(v) => v,
+            _ => {
+                crate::log_warn!(
+                    "ignoring {SIM_LANES_ENV}='{raw}': expected 0 (auto), 1 (scalar) \
+                     or a lane width in {{2, 4, 8}}"
+                );
+                configured
+            }
+        },
+        Err(_) => configured,
+    }
+}
+
 /// Ablation switches (Table 4): each of the paper's three techniques can be
 /// disabled independently.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -182,6 +214,13 @@ pub struct SparsemapConfig {
     /// `SPARSEMAP_SIM_BACKEND` env var overrides this at coordinator
     /// construction.
     pub sim_backend: SimBackend,
+    /// Lane width of the compiled backend's vectorized sweep: `0`
+    /// (default) picks a width per window from its lockstep iteration
+    /// count, `1` pins the scalar plan sweep, `2`/`4`/`8` force a fixed
+    /// width. Ignored by the interpreter backend. The
+    /// `SPARSEMAP_SIM_LANES` env var overrides this at coordinator
+    /// construction (invalid values warn and keep the config).
+    pub sim_lanes: usize,
     /// Maximum member blocks per fused bundle (`1` disables fusion).
     pub max_fused_blocks: usize,
     /// Combined-MII budget for the fusion planner.
@@ -213,6 +252,7 @@ impl Default for SparsemapConfig {
             shed_watermark: 0,
             failure_ttl: 0,
             sim_backend: SimBackend::Compiled,
+            sim_lanes: 0,
             max_fused_blocks: 4,
             fusion_max_ii: 12,
             seed: 42,
@@ -283,6 +323,7 @@ impl SparsemapConfig {
                 ("coordinator", "sim_backend") => {
                     cfg.sim_backend = value.as_str()?.parse()?
                 }
+                ("coordinator", "sim_lanes") => cfg.sim_lanes = value.as_int()? as usize,
                 ("workload", "seed") => cfg.seed = value.as_int()? as u64,
                 (s, k) => {
                     return Err(Error::Config(format!("unknown config key [{s}] {k}")));
@@ -307,6 +348,13 @@ impl SparsemapConfig {
             return Err(Error::Config(
                 "mapper.max_fused_blocks must be >= 1 (1 disables fusion)".into(),
             ));
+        }
+        if !valid_sim_lanes(cfg.sim_lanes) {
+            return Err(Error::Config(format!(
+                "coordinator.sim_lanes must be 0 (auto), 1 (scalar) or a lane width \
+                 in {{2, 4, 8}}, got {}",
+                cfg.sim_lanes
+            )));
         }
         Ok(cfg)
     }
@@ -445,6 +493,31 @@ seed = 7
             SparsemapConfig::from_str_cfg("[coordinator]\nsim_backend = \"vectorized\"\n")
                 .unwrap_err();
         assert!(err.to_string().contains("vectorized"), "{err}");
+    }
+
+    #[test]
+    fn sim_lanes_knob_parses_and_validates() {
+        for (text, want) in [
+            ("[coordinator]\nsim_lanes = 0\n", 0usize),
+            ("[coordinator]\nsim_lanes = 1\n", 1),
+            ("[coordinator]\nsim_lanes = 4\n", 4),
+            ("[coordinator]\nsim_lanes = 8\n", 8),
+        ] {
+            assert_eq!(SparsemapConfig::from_str_cfg(text).unwrap().sim_lanes, want);
+        }
+        // Default is auto width — the vectorized path on by default.
+        assert_eq!(SparsemapConfig::default().sim_lanes, 0);
+        // Unsupported widths fail loudly in a config file ...
+        let err = SparsemapConfig::from_str_cfg("[coordinator]\nsim_lanes = 3\n").unwrap_err();
+        assert!(err.to_string().contains("sim_lanes"), "{err}");
+        // ... while the env override is warn-and-keep (exercised via the
+        // helper directly — tests must not mutate process-global env, and
+        // a CI leg may legitimately export the override suite-wide).
+        if std::env::var(SIM_LANES_ENV).is_err() {
+            assert_eq!(effective_sim_lanes(4), 4);
+        }
+        assert!(valid_sim_lanes(2));
+        assert!(!valid_sim_lanes(16));
     }
 
     #[test]

@@ -22,6 +22,9 @@ pub struct Metrics {
     pub total_latency_ns: AtomicU64,
     /// Batching windows simulated (one fused lockstep pass each).
     pub windows: AtomicU64,
+    /// Lockstep passes the lane-vectorized plan backend served (batched
+    /// windows plus solo requests, which run as one-member windows).
+    pub lane_windows: AtomicU64,
     /// Requests shed by admission control (`try_enqueue` → `Overloaded`);
     /// they never entered the queue, so they do not count as `jobs`.
     pub shed: AtomicU64,
@@ -101,6 +104,7 @@ impl Metrics {
             total_cycles: self.total_cycles.load(Ordering::Relaxed),
             total_latency_ns: self.total_latency_ns.load(Ordering::Relaxed),
             windows: self.windows.load(Ordering::Relaxed),
+            lane_windows: self.lane_windows.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
             deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
             worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
@@ -182,6 +186,12 @@ pub struct MetricsSnapshot {
     pub total_cycles: u64,
     pub total_latency_ns: u64,
     pub windows: u64,
+    /// Lockstep passes served on the lane-vectorized plan path (batched
+    /// windows plus solo one-member windows). On the compiled backend
+    /// with `sim_lanes` ≥ 0 (auto) this should track traffic — a
+    /// persistent `0` under multi-iteration load means serving silently
+    /// fell back to the scalar sweep.
+    pub lane_windows: u64,
     pub shed: u64,
     pub deadline_expired: u64,
     pub worker_restarts: u64,

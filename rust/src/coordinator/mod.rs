@@ -650,6 +650,9 @@ pub struct Coordinator {
     /// their own copy in `WorkerCtx`).
     opts: MapperOptions,
     backend: SimBackend,
+    /// Resolved `[coordinator] sim_lanes` (env override applied): lane
+    /// width of the compiled backend's vectorized sweep.
+    lanes: usize,
     /// `[coordinator] warm_start_path`, `None` when unset.
     warm_start_path: Option<String>,
     legacy: Mutex<LegacyState>,
@@ -687,6 +690,7 @@ impl Coordinator {
         let batching = BatchOptions::from_config(cfg);
         let cgra = cfg.cgra.clone();
         let backend = SimBackend::effective(cfg.sim_backend);
+        let lanes = crate::config::effective_sim_lanes(cfg.sim_lanes);
 
         let mut queues = Vec::with_capacity(nshards);
         let mut shard_list = Vec::with_capacity(nshards);
@@ -711,6 +715,7 @@ impl Coordinator {
                 poison: Arc::new(PoisonRegistry::new()),
                 poison_threshold: cfg.poison_threshold as u32,
                 backend,
+                lanes,
             };
             let (exit_tx, exit_rx) = channel();
             let handles: Vec<Option<std::thread::JoinHandle<()>>> = (0..cfg.workers)
@@ -752,6 +757,7 @@ impl Coordinator {
             next_uid: AtomicU64::new(0),
             opts,
             backend,
+            lanes,
             warm_start_path,
             legacy: Mutex::new(LegacyState { core: SessionCore::new(), fifo: VecDeque::new() }),
         };
@@ -769,6 +775,20 @@ impl Coordinator {
     /// Number of worker-pool shards this coordinator runs.
     pub fn shard_count(&self) -> usize {
         self.nshards
+    }
+
+    /// The resolved simulation backend workers serve on (config knob
+    /// plus `SPARSEMAP_SIM_BACKEND` override, fixed at construction).
+    pub fn sim_backend(&self) -> SimBackend {
+        self.backend
+    }
+
+    /// The resolved `[coordinator] sim_lanes` knob (plus
+    /// `SPARSEMAP_SIM_LANES` override): `0` = auto width per window,
+    /// `1` = the scalar plan sweep, otherwise a fixed lane width. Only
+    /// meaningful on the compiled backend.
+    pub fn sim_lanes(&self) -> usize {
+        self.lanes
     }
 
     fn sender(&self, sid: usize) -> Option<Arc<JobQueue>> {

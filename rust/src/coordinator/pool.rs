@@ -24,7 +24,8 @@ use crate::config::SimBackend;
 use crate::error::{Error, Result};
 use crate::mapper::{map_unit, MapOutcome, MapUnit, MapperOptions};
 use crate::sim::{
-    execute_plan_batch, simulate, simulate_fused_batch, ExecPlan, MemberSegment, SegmentSim,
+    execute_plan_lanes_with, simulate, simulate_fused_batch, ExecPlan, ExecScratch,
+    MemberSegment, SegmentSim,
 };
 use crate::sparse::fuse::{BundleRoutes, FusedBundle};
 use crate::sparse::SparseBlock;
@@ -468,6 +469,9 @@ pub(crate) struct WorkerCtx {
     /// Which simulation backend freshly built cache entries compile for.
     /// Resolved once at construction (config knob + env override).
     pub(crate) backend: SimBackend,
+    /// Resolved `[coordinator] sim_lanes`: lane width of the compiled
+    /// backend's vectorized sweep (`0` auto, `1` scalar).
+    pub(crate) lanes: usize,
 }
 
 /// Drop guard a worker thread holds for its whole life: tells the
@@ -578,6 +582,13 @@ pub(crate) fn supervisor_loop(
 }
 
 fn worker_loop(ctx: &WorkerCtx) {
+    // Plan-execution scratch, owned by this worker thread for its whole
+    // life: steady-state windows reuse the grown buffers instead of
+    // allocating per window. It lives here — not in `WorkerCtx`, which
+    // is shared (cloned) with the supervisor for respawns — so each
+    // worker mutates its own scratch without synchronization; a respawn
+    // simply starts a fresh one.
+    let mut scratch = ExecScratch::new();
     loop {
         let job = {
             // Poison-recover: a panicking peer must not wedge the whole
@@ -594,8 +605,8 @@ fn worker_loop(ctx: &WorkerCtx) {
                 // resolve `WorkerGone` as the unwind drops them.
                 crate::fail_point!("coordinator::worker_hard");
                 match job {
-                    Job::Single(job) => execute_single(job, ctx),
-                    Job::Window(job) => execute_window(job, ctx),
+                    Job::Single(job) => execute_single(job, ctx, &mut scratch),
+                    Job::Window(job) => execute_window(job, ctx, &mut scratch),
                 }
             }
             Err(_) => return,
@@ -607,7 +618,7 @@ fn worker_loop(ctx: &WorkerCtx) {
 /// check at pickup, then mapping + simulation under a per-job
 /// `catch_unwind`, retried in place until the job identity's poison
 /// quarantine trips.
-pub(crate) fn execute_single(job: SingleJob, ctx: &WorkerCtx) {
+pub(crate) fn execute_single(job: SingleJob, ctx: &WorkerCtx, scratch: &mut ExecScratch) {
     let picked = Instant::now();
     ctx.metrics.jobs.fetch_add(1, Ordering::Relaxed);
     let SingleJob { id, block, xs, done, deadline, enqueued_at } = job;
@@ -632,10 +643,15 @@ pub(crate) fn execute_single(job: SingleJob, ctx: &WorkerCtx) {
         let attempt = catch_unwind(AssertUnwindSafe(|| {
             crate::fail_point!("coordinator::serve");
             crate::fail_point!("coordinator::delay");
-            serve_solo(&block, &xs, ctx)
+            serve_solo(&block, &xs, ctx, &mut *scratch)
         }));
         match attempt {
-            Ok(Ok((outputs, cycles, ii, fresh))) => {
+            Ok(Ok((outputs, cycles, ii, fresh, lanes))) => {
+                if lanes {
+                    // A solo request runs as a one-member window; count
+                    // its lockstep pass like a batched one.
+                    ctx.metrics.lane_windows.fetch_add(1, Ordering::Relaxed);
+                }
                 ctx.metrics.total_cycles.fetch_add(cycles, Ordering::Relaxed);
                 let service_ns = picked.elapsed().as_nanos() as u64;
                 let latency_ns = queue_ns + service_ns;
@@ -681,12 +697,15 @@ pub(crate) fn execute_single(job: SingleJob, ctx: &WorkerCtx) {
     }
 }
 
-/// Solo path: compile-once mapping keyed by block identity.
+/// Solo path: compile-once mapping keyed by block identity. The last
+/// tuple field reports whether the lane-vectorized sweep served the
+/// request (feeds the `lane_windows` counter).
 fn serve_solo(
     block: &Arc<SparseBlock>,
     xs: &[Vec<f32>],
     ctx: &WorkerCtx,
-) -> std::result::Result<(Vec<Vec<f32>>, u64, usize, bool), ServeError> {
+    scratch: &mut ExecScratch,
+) -> std::result::Result<(Vec<Vec<f32>>, u64, usize, bool, bool), ServeError> {
     let key = solo_cache_key(block);
     let (serving, fresh) = ctx
         .cache
@@ -700,8 +719,9 @@ fn serve_solo(
             // Solo block as a one-member window: same compiled inner loop
             // the batched path runs, same bit-exact results.
             let batches = vec![vec![MemberSegment { block: block.as_ref(), xs }]];
-            let res = execute_plan_batch(plan, &[block.as_ref()], &batches)
-                .map_err(|e| ServeError::Sim(e.to_string()))?;
+            let (res, width) =
+                execute_plan_lanes_with(plan, &[block.as_ref()], &batches, ctx.lanes, scratch)
+                    .map_err(|e| ServeError::Sim(e.to_string()))?;
             let outputs = res
                 .per_member
                 .into_iter()
@@ -709,12 +729,12 @@ fn serve_solo(
                 .and_then(|m| m.segments.into_iter().next())
                 .map(|s| s.outputs)
                 .unwrap_or_default();
-            Ok((outputs, res.cycles, serving.outcome.mapping.ii, fresh))
+            Ok((outputs, res.cycles, serving.outcome.mapping.ii, fresh, width > 1))
         }
         None => {
             let res = simulate(&serving.outcome.mapping, block, &ctx.cgra, xs)
                 .map_err(|e| ServeError::Sim(e.to_string()))?;
-            Ok((res.outputs, res.cycles, serving.outcome.mapping.ii, fresh))
+            Ok((res.outputs, res.cycles, serving.outcome.mapping.ii, fresh, false))
         }
     }
 }
@@ -725,7 +745,7 @@ fn serve_solo(
 /// discipline as solo serving (quarantine keyed by the bundle
 /// fingerprint). An unmappable bundle deregisters loudly and its live
 /// members fall back to solo serving.
-pub(crate) fn execute_window(job: WindowJob, ctx: &WorkerCtx) {
+pub(crate) fn execute_window(job: WindowJob, ctx: &WorkerCtx, scratch: &mut ExecScratch) {
     let picked = Instant::now();
     let WindowJob { bundle, requests } = job;
     let mut live = Vec::with_capacity(requests.len());
@@ -757,13 +777,16 @@ pub(crate) fn execute_window(job: WindowJob, ctx: &WorkerCtx) {
         let attempt = catch_unwind(AssertUnwindSafe(|| {
             crate::fail_point!("coordinator::serve");
             crate::fail_point!("coordinator::delay");
-            attempt_window(&bundle, &live, ctx)
+            attempt_window(&bundle, &live, ctx, &mut *scratch)
         }));
         match attempt {
-            Ok(WindowAttempt::Served { segments, pass_cycles, ii, fresh, members }) => {
+            Ok(WindowAttempt::Served { segments, pass_cycles, ii, fresh, members, lanes }) => {
                 ctx.metrics.jobs.fetch_add(w, Ordering::Relaxed);
                 ctx.metrics.windows.fetch_add(1, Ordering::Relaxed);
                 ctx.shard.windows.fetch_add(1, Ordering::Relaxed);
+                if lanes {
+                    ctx.metrics.lane_windows.fetch_add(1, Ordering::Relaxed);
+                }
                 // The window pays for the resident configuration ONCE —
                 // this is the fused double-count fix: W member requests
                 // never charge W whole-bundle passes.
@@ -826,6 +849,7 @@ pub(crate) fn execute_window(job: WindowJob, ctx: &WorkerCtx) {
                             enqueued_at: r.enqueued_at,
                         },
                         ctx,
+                        &mut *scratch,
                     );
                 }
                 return;
@@ -859,6 +883,9 @@ enum WindowAttempt {
         ii: usize,
         fresh: bool,
         members: usize,
+        /// Whether the lane-vectorized sweep ran the pass (feeds the
+        /// `lane_windows` counter at the fulfillment site).
+        lanes: bool,
     },
     /// The bundle's shared fused mapping failed to build: the caller
     /// deregisters the bundle and falls back to solo serving.
@@ -874,6 +901,7 @@ fn attempt_window(
     bundle: &Arc<FusedBundle>,
     requests: &[WindowRequest],
     ctx: &WorkerCtx,
+    scratch: &mut ExecScratch,
 ) -> WindowAttempt {
     let (serving, fresh) = match fused_serving(bundle, ctx) {
         Ok(sf) => sf,
@@ -910,17 +938,19 @@ fn attempt_window(
         })
         .collect();
     let sim = match serving.plan.as_ref() {
-        Some(plan) => execute_plan_batch(plan, &blocks, &batches),
+        Some(plan) => execute_plan_lanes_with(plan, &blocks, &batches, ctx.lanes, scratch)
+            .map(|(res, width)| (res, width > 1)),
         None => simulate_fused_batch(
             &serving.outcome.mapping,
             &serving.outcome.tags,
             &blocks,
             &ctx.cgra,
             &batches,
-        ),
+        )
+        .map(|res| (res, false)),
     };
     match sim {
-        Ok(res) => {
+        Ok((res, lanes)) => {
             let w = requests.len();
             let mut per_request: Vec<Option<SegmentSim>> = Vec::new();
             per_request.resize_with(w, || None);
@@ -939,6 +969,7 @@ fn attempt_window(
                 ii: serving.outcome.mapping.ii,
                 fresh,
                 members: resident.len(),
+                lanes,
             }
         }
         Err(e) => WindowAttempt::SimFailed(ServeError::Sim(e.to_string())),

@@ -168,13 +168,17 @@
 //!   the bundle's combined mask fingerprint) and serves mixed
 //!   fused/unfused traffic.
 //!
-//! ## Simulation backends: compiled plans, interpreter oracle
+//! ## Simulation backends: interpreter → scalar plan → lanes
 //!
 //! The serving tier's per-window hot path is cycle-level simulation, and
-//! it runs on one of two backends with **identical semantics**:
+//! it runs on one of three tiers with **identical semantics**:
 //!
-//! * **Compiled** (default) — [`sim::ExecPlan`] is compiled ONCE per
-//!   cached mapping (`ExecPlan::for_outcome`, under the mapping cache's
+//! * **Interpreter** — the scalar lockstep pass
+//!   ([`sim::simulate_fused_batch`]), the reference semantics, retained
+//!   per the hot-path-rewrite workflow below as the root differential
+//!   oracle.
+//! * **Compiled plan** — [`sim::ExecPlan`] is compiled ONCE per cached
+//!   mapping (`ExecPlan::for_outcome`, under the mapping cache's
 //!   single-flight guard, evicted with the entry): a flattened slot-major
 //!   op array with pre-resolved operand sources (LRF slot / GRF index /
 //!   bus hop), precomputed weight indices and structure-of-arrays
@@ -185,20 +189,33 @@
 //!   windows execute as tight inner loops with no per-cycle HashMap
 //!   dispatch. `fused3/plan_compile` benches the one-time cost; the
 //!   `*_compiled` serving rows measure the payoff.
-//! * **Interpreter** — the scalar lockstep pass
-//!   ([`sim::simulate_fused_batch`]), retained per the hot-path-rewrite
-//!   workflow below as the differential oracle.
-//!   `tests/sim_equivalence.rs` holds the two backends **bit-identical**
-//!   (outputs, cycles, per-segment shares, COPs/MCIDs, `pe_busy`) across
-//!   the paper blocks, the canonical bundle, wide blocks and randomized
-//!   instances, and plan compilation deterministic.
+//! * **Vectorized lanes** (the serving default, on top of the compiled
+//!   plan) — [`sim::lanes`] regroups the plan's SoA state lane-major so
+//!   ONE sweep over the op array evaluates a whole chunk of a window's
+//!   lockstep iterations: per-lane loops over contiguous `f32` rows that
+//!   LLVM auto-vectorizes, per-lane write masks for ragged/padded tails,
+//!   and a per-worker pooled [`sim::ExecScratch`] so steady-state windows
+//!   allocate nothing. The `*_lanes` serving rows and the
+//!   `fused3/plan_sweep_lanes{1,8}` micro rows measure the payoff.
+//!
+//! Each tier is the oracle for the next: `tests/sim_equivalence.rs`
+//! holds interpreter vs scalar plan vs lanes (at widths 1/2/4/8/auto)
+//! **bit-identical** (outputs, cycles, per-segment shares, COPs/MCIDs,
+//! `pe_busy`) across the paper blocks, the canonical bundle, wide blocks
+//! and randomized instances, and plan compilation deterministic — lane
+//! independence means any width replays the interpreter's exact
+//! per-iteration f32 operand order.
 //!
 //! The `[coordinator] sim_backend` knob (`compiled` | `interpreter`)
-//! selects the backend; the `SPARSEMAP_SIM_BACKEND` env var overrides the
-//! config (CI runs the whole suite once per backend). A mapping whose
-//! plan fails to compile serves off the interpreter instead — a loud,
-//! logged fallback (`coordinator::plan` failpoint locks it), never a lost
-//! ticket.
+//! selects the backend and `[coordinator] sim_lanes` the lane width
+//! (`0` auto per window, `1` the scalar plan sweep, `2`/`4`/`8` fixed);
+//! the `SPARSEMAP_SIM_BACKEND` / `SPARSEMAP_SIM_LANES` env vars override
+//! the config (CI runs the whole suite once per backend and once with
+//! the scalar sweep pinned). A mapping whose plan fails to compile
+//! serves off the interpreter instead — a loud, logged fallback
+//! (`coordinator::plan` failpoint locks it), never a lost ticket — and
+//! the `lane_windows` counter in `MetricsSnapshot` makes a silent
+//! scalar fallback observable.
 //!
 //! ## Hot-path rewrites are oracle-tested
 //!

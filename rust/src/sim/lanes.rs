@@ -1,0 +1,439 @@
+//! Lane-vectorized plan execution: one `PlanOp` sweep evaluates a whole
+//! chunk of a window's lockstep iterations at once.
+//!
+//! A batching window is the ideal SIMD shape — every iteration runs the
+//! *same* compiled configuration over *different* inputs — yet the scalar
+//! sweep in [`super::plan`] walks the op array once per iteration. This
+//! module regroups the plan's structure-of-arrays state lane-major
+//! (`values[reg][lane]`: `L` consecutive lockstep iterations per chunk,
+//! drawn across all segments of the window) so a single pass over
+//! `plan.ops` evaluates `L` iterations: `Read`/`Mul`/`Cop`/`Write` become
+//! per-lane loops over contiguous `f32` rows that LLVM auto-vectorizes,
+//! and `Add` accumulates the operand pool per lane in predecessor order.
+//!
+//! ## Bit-identical at any width
+//!
+//! Lanes are fully independent — no cross-iteration state exists in the
+//! plan semantics, and lane `l` performs the interpreter's exact
+//! per-iteration arithmetic in the exact operand order (f32 addition
+//! order is semantics, so reordering *within* a lane would change bits;
+//! widening *across* lanes cannot). Ragged and absent members reuse the
+//! existing zero-input padding: a padded lane streams zeros, resolves
+//! fallback weights, and its `Write`s are masked off per lane, so
+//! [`super::attribute_segments`] and every other closed-form field of
+//! [`BatchSimResult`] are untouched. `tests/sim_equivalence.rs` holds the
+//! interpreter, the scalar plan sweep, and this backend bit-identical at
+//! every supported width.
+//!
+//! ## Scratch pooling
+//!
+//! All transient state — the lane-major register file, per-lane segment
+//! locations, the lane-major input gather and the per-member uniform
+//! weight-source flags — lives in an [`ExecScratch`] that grows
+//! monotonically to the largest plan it has served. The serving tier
+//! keeps one per worker thread (`coordinator::pool`), so steady-state
+//! windows allocate nothing beyond their output planes;
+//! [`ExecScratch::grows`] makes the reuse assertable.
+
+use crate::error::{Error, Result};
+use crate::sparse::SparseBlock;
+
+use super::plan::{self, ExecPlan, PlanOp};
+use super::{build_member_streams, BatchSimResult, MemberSegment, MemberStream};
+
+/// Widest supported lane chunk. Wide enough for one AVX2/NEON register
+/// row per op; wider chunks only add padding overhead on the short
+/// windows serving actually sees.
+pub const MAX_LANES: usize = 8;
+
+/// Pick a lane width for a window of `n_iters` lockstep iterations: the
+/// widest supported chunk not exceeding the window. Padding lanes do
+/// real (masked-off) arithmetic, so a window smaller than one chunk runs
+/// narrow — or scalar — instead of mostly-padding.
+pub fn auto_width(n_iters: usize) -> usize {
+    match n_iters {
+        0..=1 => 1,
+        2..=3 => 2,
+        4..=7 => 4,
+        _ => MAX_LANES,
+    }
+}
+
+/// Weight resolution mode of one member for one lane chunk.
+#[derive(Clone, Copy, Debug, Default)]
+enum UniformSrc {
+    /// Every lane of the chunk sits in the same segment (`Some`) or is
+    /// padding (`None`): one weight lookup broadcasts across the chunk.
+    Uniform(Option<usize>),
+    /// The chunk straddles a segment boundary: per-lane resolution.
+    #[default]
+    Mixed,
+}
+
+/// Reusable plan-execution scratch: the scalar sweep's SoA state plus
+/// the lane backend's gather/scatter staging. Buffers grow monotonically
+/// (never shrink their capacity), so a scratch pooled per worker thread
+/// reaches a steady state where serving another window of any
+/// already-seen size performs no allocation — asserted via
+/// [`Self::grows`].
+///
+/// Stale contents are harmless by construction: ops execute in schedule
+/// order, where every register is written before it is read within one
+/// sweep, and per-lane segment locations are restaged per chunk.
+#[derive(Debug, Default)]
+pub struct ExecScratch {
+    /// Lane-major register file: `values[reg * L + lane]` (the scalar
+    /// sweep uses it at `L = 1`).
+    values: Vec<f32>,
+    /// Per-member, per-lane segment locations: `locs[member * L + lane]`.
+    locs: Vec<Option<(usize, usize)>>,
+    /// Lane-major input gather, member-major: channel `ch` of member `m`
+    /// occupies `gather[offsets[m] + ch * L ..][..L]`.
+    gather: Vec<f32>,
+    /// Per-member start of the gather region (in `f32` slots).
+    gather_offsets: Vec<usize>,
+    /// Per-member weight resolution mode for the current chunk.
+    uniform: Vec<UniformSrc>,
+    /// Times any buffer outgrew its capacity (see [`Self::grows`]).
+    grows: u64,
+}
+
+/// Grow `buf` to `len` elements, counting a capacity growth (a `resize`
+/// within capacity never allocates — that is the steady state).
+fn ensure<T: Clone + Default>(buf: &mut Vec<T>, len: usize, grows: &mut u64) {
+    if len > buf.capacity() {
+        *grows += 1;
+    }
+    buf.resize(len, T::default());
+}
+
+impl ExecScratch {
+    /// A fresh, empty scratch — it sizes itself to each plan it serves.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// How many times any internal buffer had to allocate. A pooled
+    /// scratch in steady state serves window after window without this
+    /// moving — the property `coordinator::pool` relies on and the
+    /// scratch-reuse tests assert.
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+
+    /// The scalar sweep's view: one register per node, one location per
+    /// member.
+    pub(in crate::sim) fn scalar(
+        &mut self,
+        n_nodes: usize,
+        members: usize,
+    ) -> (&mut [f32], &mut [Option<(usize, usize)>]) {
+        ensure(&mut self.values, n_nodes, &mut self.grows);
+        ensure(&mut self.locs, members, &mut self.grows);
+        (&mut self.values[..n_nodes], &mut self.locs[..members])
+    }
+
+    /// Size every lane buffer for `lanes`-wide execution of a plan with
+    /// `n_nodes` registers over the given member roster.
+    fn ensure_lanes(&mut self, n_nodes: usize, blocks: &[&SparseBlock], lanes: usize) {
+        ensure(&mut self.values, n_nodes * lanes, &mut self.grows);
+        ensure(&mut self.locs, blocks.len() * lanes, &mut self.grows);
+        ensure(&mut self.uniform, blocks.len(), &mut self.grows);
+        if blocks.len() > self.gather_offsets.capacity() {
+            self.grows += 1;
+        }
+        self.gather_offsets.clear();
+        let mut off = 0usize;
+        for b in blocks {
+            self.gather_offsets.push(off);
+            off += b.c * lanes;
+        }
+        ensure(&mut self.gather, off, &mut self.grows);
+    }
+}
+
+/// Run a batched request window on the lane-vectorized backend. `lanes`
+/// follows the `[coordinator] sim_lanes` contract: `0` picks a width
+/// from the window size ([`auto_width`]), `1` pins the scalar plan
+/// sweep, `2`/`4`/`8` force a fixed width (shorter windows pad). Other
+/// values are rejected. Allocates its own scratch — the serving tier
+/// uses [`execute_plan_lanes_with`] with a pooled one.
+pub fn execute_plan_lanes(
+    plan: &ExecPlan,
+    blocks: &[&SparseBlock],
+    batches: &[Vec<MemberSegment<'_>>],
+    lanes: usize,
+) -> Result<BatchSimResult> {
+    let mut scratch = ExecScratch::new();
+    execute_plan_lanes_with(plan, blocks, batches, lanes, &mut scratch).map(|(res, _)| res)
+}
+
+/// [`execute_plan_lanes`] with a caller-owned scratch. Returns the
+/// result plus the lane width actually used (`1` = the scalar sweep ran
+/// — what the serving tier's `lane_windows` counter distinguishes).
+pub fn execute_plan_lanes_with(
+    plan: &ExecPlan,
+    blocks: &[&SparseBlock],
+    batches: &[Vec<MemberSegment<'_>>],
+    lanes: usize,
+    scratch: &mut ExecScratch,
+) -> Result<(BatchSimResult, usize)> {
+    if !matches!(lanes, 0 | 1 | 2 | 4 | MAX_LANES) {
+        return Err(Error::Config(format!(
+            "sim lane width must be 0 (auto), 1 (scalar) or one of {{2, 4, {MAX_LANES}}}, \
+             got {lanes}"
+        )));
+    }
+    let streams = build_member_streams(plan.members, blocks, batches)?;
+    let n_iters = streams.iter().map(MemberStream::total).max().unwrap_or(0);
+    let width = if lanes == 0 { auto_width(n_iters) } else { lanes };
+    let mut outputs = plan::alloc_outputs(blocks, batches);
+    match width {
+        1 => plan::scalar_sweep(plan, &streams, &mut outputs, n_iters, scratch),
+        2 => sweep::<2>(plan, &streams, blocks, &mut outputs, n_iters, scratch),
+        4 => sweep::<4>(plan, &streams, blocks, &mut outputs, n_iters, scratch),
+        _ => sweep::<MAX_LANES>(plan, &streams, blocks, &mut outputs, n_iters, scratch),
+    }
+    Ok((plan::package_result(plan, &streams, outputs, n_iters), width))
+}
+
+/// The lane-major op sweep: each pass of the outer loop stages and
+/// evaluates `L` consecutive lockstep iterations. Monomorphized per
+/// width so every inner loop has a compile-time trip count `L` —
+/// contiguous `[f32; L]` rows LLVM turns into vector code.
+fn sweep<const L: usize>(
+    plan: &ExecPlan,
+    streams: &[MemberStream<'_>],
+    blocks: &[&SparseBlock],
+    outputs: &mut [Vec<Vec<Vec<f32>>>],
+    n_iters: usize,
+    scratch: &mut ExecScratch,
+) {
+    scratch.ensure_lanes(plan.n_nodes, blocks, L);
+    let ExecScratch { values, locs, gather, gather_offsets, uniform, .. } = scratch;
+    let mut base = 0usize;
+    while base < n_iters {
+        // Stage the chunk: per-lane segment locations, each member's
+        // weight resolution mode, and the lane-major input gather. Lanes
+        // past the window (`base + l >= n_iters`) are padding — `locate`
+        // yields `None`, so they stream zero inputs, resolve fallback
+        // weights, and the `Write` mask discards their outputs: exactly
+        // the interpreter's treatment of padded iterations.
+        for (m, st) in streams.iter().enumerate() {
+            let lane_locs = &mut locs[m * L..(m + 1) * L];
+            for (l, loc) in lane_locs.iter_mut().enumerate() {
+                *loc = st.locate(base + l);
+            }
+            let seg0 = lane_locs[0].map(|(seg, _)| seg);
+            uniform[m] = if lane_locs.iter().all(|loc| loc.map(|(seg, _)| seg) == seg0) {
+                UniformSrc::Uniform(seg0)
+            } else {
+                UniformSrc::Mixed
+            };
+            let go = gather_offsets[m];
+            for ch in 0..blocks[m].c {
+                let row = &mut gather[go + ch * L..go + (ch + 1) * L];
+                for (slot, loc) in row.iter_mut().zip(lane_locs.iter()) {
+                    *slot = st.input_at(*loc, ch);
+                }
+            }
+        }
+
+        for op in &plan.ops {
+            match *op {
+                PlanOp::Read { dst, member, ch } => {
+                    let go = gather_offsets[member as usize] + ch as usize * L;
+                    let d = dst as usize * L;
+                    values[d..d + L].copy_from_slice(&gather[go..go + L]);
+                }
+                PlanOp::Mul { dst, a, member, ch, kr } => {
+                    let m = member as usize;
+                    let (ch, kr) = (ch as usize, kr as usize);
+                    // The source row is copied out first: src != dst in
+                    // the DAG, but the register file is one slice.
+                    let mut x = [0.0f32; L];
+                    let s = a.src as usize * L;
+                    x.copy_from_slice(&values[s..s + L]);
+                    let d = dst as usize * L;
+                    let dst_row = &mut values[d..d + L];
+                    match uniform[m] {
+                        UniformSrc::Uniform(seg) => {
+                            let w = streams[m].weight_source(seg).weight(ch, kr);
+                            for (slot, &xv) in dst_row.iter_mut().zip(&x) {
+                                *slot = xv * w;
+                            }
+                        }
+                        UniformSrc::Mixed => {
+                            let lane_locs = &locs[m * L..(m + 1) * L];
+                            for ((slot, &xv), loc) in
+                                dst_row.iter_mut().zip(&x).zip(lane_locs)
+                            {
+                                *slot = xv * streams[m].weight_at(*loc, ch, kr);
+                            }
+                        }
+                    }
+                }
+                PlanOp::Add { dst, first, len } => {
+                    // Operands in predecessor order per lane — the
+                    // interpreter's exact f32 summation order.
+                    let mut acc = [0.0f32; L];
+                    for o in &plan.operands[first as usize..(first + len) as usize] {
+                        let s = o.src as usize * L;
+                        for (a, &v) in acc.iter_mut().zip(&values[s..s + L]) {
+                            *a += v;
+                        }
+                    }
+                    let d = dst as usize * L;
+                    values[d..d + L].copy_from_slice(&acc);
+                }
+                PlanOp::Cop { dst, a } => {
+                    let s = a.src as usize * L;
+                    values.copy_within(s..s + L, dst as usize * L);
+                }
+                PlanOp::Write { dst, a, member, kr } => {
+                    let m = member as usize;
+                    let mut y = [0.0f32; L];
+                    let s = a.src as usize * L;
+                    y.copy_from_slice(&values[s..s + L]);
+                    let out = &mut outputs[m];
+                    for (loc, &yv) in locs[m * L..(m + 1) * L].iter().zip(&y) {
+                        if let Some((seg, local)) = *loc {
+                            out[seg][local][kr as usize] = yv;
+                        }
+                    }
+                    let d = dst as usize * L;
+                    values[d..d + L].copy_from_slice(&y);
+                }
+            }
+        }
+        base += L;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::StreamingCgra;
+    use crate::mapper::{map_block, MapperOptions};
+    use crate::sim::execute_plan_batch;
+    use crate::sparse::gen::paper_blocks;
+
+    fn stream(c: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = crate::util::rng::Pcg64::seeded(seed);
+        (0..n).map(|_| (0..c).map(|_| rng.next_normal() as f32).collect()).collect()
+    }
+
+    fn assert_bitwise(a: &BatchSimResult, b: &BatchSimResult, ctx: &str) {
+        assert_eq!(a.cycles, b.cycles, "{ctx}: cycles");
+        assert_eq!(a.iterations, b.iterations, "{ctx}: iterations");
+        assert_eq!(a.pe_busy, b.pe_busy, "{ctx}: pe_busy");
+        for (am, bm) in a.per_member.iter().zip(&b.per_member) {
+            for (asg, bsg) in am.segments.iter().zip(&bm.segments) {
+                assert_eq!(asg.cycles, bsg.cycles, "{ctx}: segment cycles");
+                for (av, bv) in asg.outputs.iter().zip(&bsg.outputs) {
+                    for (x, y) in av.iter().zip(bv) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: output bits");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_width_picks_the_widest_fitting_chunk() {
+        assert_eq!(auto_width(0), 1);
+        assert_eq!(auto_width(1), 1);
+        assert_eq!(auto_width(2), 2);
+        assert_eq!(auto_width(3), 2);
+        assert_eq!(auto_width(4), 4);
+        assert_eq!(auto_width(7), 4);
+        assert_eq!(auto_width(8), 8);
+        assert_eq!(auto_width(1000), MAX_LANES);
+    }
+
+    #[test]
+    fn invalid_lane_widths_are_rejected() {
+        let cgra = StreamingCgra::paper_default();
+        let nb = &paper_blocks()[0];
+        let out = map_block(&nb.block, &cgra, &MapperOptions::sparsemap()).unwrap();
+        let plan = ExecPlan::for_outcome(&out, &cgra).unwrap();
+        let xs = stream(nb.block.c, 3, 1);
+        let batches = vec![vec![MemberSegment { block: &nb.block, xs: &xs }]];
+        for bad in [3usize, 5, 6, 7, 9, 16] {
+            let err = execute_plan_lanes(&plan, &[&nb.block], &batches, bad);
+            assert!(err.is_err(), "lane width {bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn every_width_matches_the_scalar_sweep_bitwise() {
+        let cgra = StreamingCgra::paper_default();
+        let nb = &paper_blocks()[0];
+        let out = map_block(&nb.block, &cgra, &MapperOptions::sparsemap()).unwrap();
+        let plan = ExecPlan::for_outcome(&out, &cgra).unwrap();
+        // Ragged two-segment window: 5 + 2 iterations — smaller than one
+        // 8-wide chunk, and the 2/4-wide chunks straddle the boundary.
+        let a = stream(nb.block.c, 5, 3);
+        let b = stream(nb.block.c, 2, 4);
+        let batches = vec![vec![
+            MemberSegment { block: &nb.block, xs: &a },
+            MemberSegment { block: &nb.block, xs: &b },
+        ]];
+        let blocks = [&nb.block];
+        let want = execute_plan_batch(&plan, &blocks, &batches).unwrap();
+        let mut scratch = ExecScratch::new();
+        for lanes in [0usize, 1, 2, 4, 8] {
+            let (got, width) =
+                execute_plan_lanes_with(&plan, &blocks, &batches, lanes, &mut scratch)
+                    .unwrap();
+            if lanes > 0 {
+                assert_eq!(width, lanes, "explicit widths are honoured");
+            } else {
+                assert_eq!(width, auto_width(7));
+            }
+            assert_bitwise(&got, &want, &format!("lanes={lanes}"));
+        }
+    }
+
+    #[test]
+    fn pooled_scratch_stops_allocating_in_steady_state() {
+        let cgra = StreamingCgra::paper_default();
+        let blocks = paper_blocks();
+        let nb = &blocks[0];
+        let other = &blocks[1];
+        let out = map_block(&nb.block, &cgra, &MapperOptions::sparsemap()).unwrap();
+        let plan = ExecPlan::for_outcome(&out, &cgra).unwrap();
+        let oout = map_block(&other.block, &cgra, &MapperOptions::sparsemap()).unwrap();
+        let oplan = ExecPlan::for_outcome(&oout, &cgra).unwrap();
+        let mut scratch = ExecScratch::new();
+        let run = |scratch: &mut ExecScratch, plan: &ExecPlan, b: &SparseBlock, n, seed| {
+            let xs = stream(b.c, n, seed);
+            let batches = vec![vec![MemberSegment { block: b, xs: &xs }]];
+            execute_plan_lanes_with(plan, &[b], &batches, 0, scratch).unwrap().0
+        };
+        // Warm up on the largest shapes this worker will see (both
+        // plans, both window sizes) ...
+        run(&mut scratch, &plan, &nb.block, 16, 1);
+        run(&mut scratch, &oplan, &other.block, 16, 2);
+        run(&mut scratch, &plan, &nb.block, 3, 3);
+        let grown = scratch.grows();
+        assert!(grown > 0, "first windows must size the scratch");
+        // ... then steady state: window after window, zero growth, and
+        // results still match fresh-scratch runs bitwise (stale lanes
+        // from a *different* plan must not leak).
+        for seed in 10..30u64 {
+            let n = 1 + (seed as usize % 16);
+            let pooled = run(&mut scratch, &plan, &nb.block, n, seed);
+            let fresh = run(&mut ExecScratch::new(), &plan, &nb.block, n, seed);
+            assert_bitwise(&pooled, &fresh, &format!("seed={seed}"));
+            let pooled = run(&mut scratch, &oplan, &other.block, n, seed);
+            let fresh = run(&mut ExecScratch::new(), &oplan, &other.block, n, seed);
+            assert_bitwise(&pooled, &fresh, &format!("other seed={seed}"));
+        }
+        assert_eq!(
+            scratch.grows(),
+            grown,
+            "steady-state windows must not grow the pooled scratch"
+        );
+    }
+}

@@ -35,16 +35,20 @@
 //! streams, per-block outputs and COPs/MCIDs) and [`simulate`] the
 //! single-block wrapper over the same core.
 //!
-//! ## Two backends, one semantics
+//! ## Three tiers, one semantics
 //!
-//! This scalar interpreter is the **reference semantics** — and, per the
-//! crate's hot-path-rewrite discipline, the differential oracle for the
-//! compiled backend in [`plan`]: [`ExecPlan`] pre-resolves every
-//! per-cycle decision once at mapping time and [`execute_plan_batch`]
-//! replays a window as tight inner loops, bit-identical to this
-//! interpreter on every field of [`BatchSimResult`]
-//! (`tests/sim_equivalence.rs`). The serving tier picks the backend via
-//! `[coordinator] sim_backend`.
+//! This interpreter is the **reference semantics** — and, per the
+//! crate's hot-path-rewrite discipline, the differential oracle for two
+//! faster tiers that replay the same windows: the scalar compiled plan
+//! in [`plan`] ([`ExecPlan`] pre-resolves every per-cycle decision once
+//! at mapping time, [`execute_plan_batch`] replays a window as tight
+//! inner loops) and the lane-vectorized sweep in [`lanes`]
+//! ([`execute_plan_lanes`] evaluates a whole chunk of lockstep
+//! iterations per pass over the op array). All three are held
+//! bit-identical on every field of [`BatchSimResult`] by the three-way
+//! oracle in `tests/sim_equivalence.rs`. The serving tier picks the
+//! backend via `[coordinator] sim_backend` and the lane width via
+//! `[coordinator] sim_lanes`.
 
 use std::collections::HashMap;
 
@@ -56,9 +60,11 @@ use crate::error::{Error, Result};
 use crate::mapper::{per_block_stats, BlockStats};
 use crate::sparse::SparseBlock;
 
+pub mod lanes;
 pub mod plan;
 
-pub use plan::{execute_plan_batch, ExecPlan};
+pub use lanes::{execute_plan_lanes, execute_plan_lanes_with, ExecScratch};
+pub use plan::{execute_plan_batch, execute_plan_batch_with, ExecPlan};
 
 /// Result of simulating a mapping over an input stream.
 #[derive(Clone, Debug)]
@@ -263,6 +269,17 @@ impl<'a> MemberStream<'a> {
             None => self.fallback.weight(ch, kr),
         }
     }
+
+    /// The block a whole lane chunk reads weights from when every lane
+    /// sits in segment `seg` (or, for `None`, in padding) — the lane
+    /// backend's broadcast fast path, resolving to exactly what
+    /// [`Self::weight_at`] would return lane by lane.
+    fn weight_source(&self, seg: Option<usize>) -> &SparseBlock {
+        match seg {
+            Some(s) => self.segments[s].block,
+            None => self.fallback,
+        }
+    }
 }
 
 /// Validate a batched window against the member roster and resolve each
@@ -283,19 +300,24 @@ fn build_member_streams<'a>(
     }
     let mut streams = Vec::with_capacity(blocks.len());
     for (bi, (&b, segs)) in blocks.iter().zip(batches).enumerate() {
+        // The roster side of each check is a per-member constant —
+        // resolved once here, not once per segment (a member often
+        // repeats across a window's segments, one per riding request).
+        let fp = b.mask_fingerprint();
+        let c = b.c;
         for seg in segs {
-            if seg.block.mask_fingerprint() != b.mask_fingerprint() {
+            if seg.block.mask_fingerprint() != fp {
                 return Err(Error::Workload(format!(
                     "member {bi} ('{}') segment block '{}' has a different mask structure",
                     b.name, seg.block.name
                 )));
             }
-            if let Some(bad) = seg.xs.iter().find(|x| x.len() != b.c) {
+            if let Some(bad) = seg.xs.iter().find(|x| x.len() != c) {
                 return Err(Error::Workload(format!(
                     "member {bi} ('{}') input vector of length {} for {} channels",
                     b.name,
                     bad.len(),
-                    b.c
+                    c
                 )));
             }
         }

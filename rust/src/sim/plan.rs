@@ -8,7 +8,10 @@
 //! `(member, channel, kernel)`, and output routing.
 //! [`execute_plan_batch`] then runs a whole request window as tight
 //! per-iteration inner loops over the op array — no HashMaps, no
-//! `BlockTags` provenance lookups, no per-cycle dispatch.
+//! `BlockTags` provenance lookups, no per-cycle dispatch — and
+//! [`super::lanes`] lifts the same sweep lane-major so one pass over the
+//! ops evaluates a whole chunk of lockstep iterations (the serving
+//! default).
 //!
 //! ## Why execution cannot fault
 //!
@@ -40,6 +43,7 @@ use crate::error::{Error, Result};
 use crate::mapper::{per_block_stats, BlockStats, MapOutcome};
 use crate::sparse::SparseBlock;
 
+use super::lanes::ExecScratch;
 use super::{
     attribute_segments, build_member_streams, register_pressure, BatchSimResult, MemberSegment,
     MemberStream,
@@ -75,9 +79,10 @@ pub struct Operand {
 }
 
 /// One entry of the flattened op array, every index resolved ahead of
-/// time. `dst` is the node's own register.
+/// time. `dst` is the node's own register. Shared with [`super::lanes`],
+/// which replays the same ops lane-major.
 #[derive(Clone, Copy, Debug, PartialEq)]
-enum PlanOp {
+pub(in crate::sim) enum PlanOp {
     /// Stream channel `ch` of member `member`'s input into `dst`.
     Read { dst: u32, member: u32, ch: u32 },
     /// `dst = a · weight(member, ch, kr)` — weights resolve per segment.
@@ -100,25 +105,25 @@ enum PlanOp {
 /// the property) — so a cached plan is a pure function of its cache key.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExecPlan {
-    ii: usize,
-    makespan: u64,
-    members: usize,
-    n_nodes: usize,
+    pub(in crate::sim) ii: usize,
+    pub(in crate::sim) makespan: u64,
+    pub(in crate::sim) members: usize,
+    pub(in crate::sim) n_nodes: usize,
     /// Ops in schedule-time order `(t(v), topo position)`: a valid
     /// topological order for every lockstep iteration and exactly the
     /// order the interpreter visits one iteration's nodes.
-    ops: Vec<PlanOp>,
+    pub(in crate::sim) ops: Vec<PlanOp>,
     /// Flattened Add-operand pool (predecessor order per Add).
-    operands: Vec<Operand>,
+    pub(in crate::sim) operands: Vec<Operand>,
     /// Scheduled node count per PE (row-major). Every placed node fires
     /// exactly once per lockstep iteration, so `pe_busy` is this times
     /// the iteration count — the closed form of the interpreter's
     /// per-cycle busy accounting.
-    pe_nodes: Vec<u64>,
+    pub(in crate::sim) pe_nodes: Vec<u64>,
     /// Per-member schedule statistics (COPs / MCIDs).
-    stats: Vec<BlockStats>,
-    lrf_peak: usize,
-    grf_peak: usize,
+    pub(in crate::sim) stats: Vec<BlockStats>,
+    pub(in crate::sim) lrf_peak: usize,
+    pub(in crate::sim) grf_peak: usize,
 }
 
 fn missing_operand(v: NodeId, what: &str) -> Error {
@@ -327,25 +332,60 @@ pub fn execute_plan_batch(
     blocks: &[&SparseBlock],
     batches: &[Vec<MemberSegment<'_>>],
 ) -> Result<BatchSimResult> {
+    execute_plan_batch_with(plan, blocks, batches, &mut ExecScratch::new())
+}
+
+/// [`execute_plan_batch`] with a caller-owned [`ExecScratch`]: the
+/// serving tier keeps one scratch per worker thread, so steady-state
+/// windows allocate nothing beyond their output planes. This is the
+/// scalar (one-iteration-at-a-time) sweep; the serving default is its
+/// lane-vectorized twin, [`super::lanes::execute_plan_lanes_with`].
+pub fn execute_plan_batch_with(
+    plan: &ExecPlan,
+    blocks: &[&SparseBlock],
+    batches: &[Vec<MemberSegment<'_>>],
+    scratch: &mut ExecScratch,
+) -> Result<BatchSimResult> {
     let streams = build_member_streams(plan.members, blocks, batches)?;
     let n_iters = streams.iter().map(MemberStream::total).max().unwrap_or(0);
-    let total_cycles = (n_iters.max(1) as u64 - 1) * plan.ii as u64 + plan.makespan;
+    let mut outputs = alloc_outputs(blocks, batches);
+    scalar_sweep(plan, &streams, &mut outputs, n_iters, scratch);
+    Ok(package_result(plan, &streams, outputs, n_iters))
+}
 
-    // Per-member, per-segment output planes, member-kernel-indexed.
-    let mut outputs: Vec<Vec<Vec<Vec<f32>>>> = blocks
+/// Per-member, per-segment output planes, member-kernel-indexed and
+/// zero-filled — padded iterations never write, so untouched slots stay
+/// zero. Shared by the scalar and lane sweeps.
+pub(in crate::sim) fn alloc_outputs(
+    blocks: &[&SparseBlock],
+    batches: &[Vec<MemberSegment<'_>>],
+) -> Vec<Vec<Vec<Vec<f32>>>> {
+    blocks
         .iter()
         .zip(batches)
         .map(|(b, segs)| {
             segs.iter().map(|seg| vec![vec![0.0; b.k]; seg.xs.len()]).collect()
         })
-        .collect();
+        .collect()
+}
 
+/// The scalar op sweep, one lockstep iteration at a time — the lane
+/// backend's width-1 tier and the `[coordinator] sim_lanes = 1` serving
+/// path, kept as the mid-tier differential oracle between the
+/// interpreter and the vectorized lanes.
+pub(in crate::sim) fn scalar_sweep(
+    plan: &ExecPlan,
+    streams: &[MemberStream<'_>],
+    outputs: &mut [Vec<Vec<Vec<f32>>>],
+    n_iters: usize,
+    scratch: &mut ExecScratch,
+) {
     // Structure-of-arrays per-iteration state: one register per node,
     // rewritten every iteration (values are functional per iteration —
-    // no cross-iteration state survives), plus each member's segment
-    // location resolved once per iteration instead of once per node.
-    let mut values = vec![0.0f32; plan.n_nodes];
-    let mut locs: Vec<Option<(usize, usize)>> = vec![None; plan.members];
+    // no cross-iteration state survives, which also makes stale scratch
+    // contents harmless), plus each member's segment location resolved
+    // once per iteration instead of once per node.
+    let (values, locs) = scratch.scalar(plan.n_nodes, plan.members);
     for iter in 0..n_iters {
         for (m, st) in streams.iter().enumerate() {
             locs[m] = st.locate(iter);
@@ -382,19 +422,31 @@ pub fn execute_plan_batch(
             }
         }
     }
+}
 
+/// Package a sweep's outputs into a [`BatchSimResult`] via the closed
+/// forms both plan sweeps share: total cycles from the modulo schedule,
+/// `pe_busy` from per-PE node counts, and segment attribution through
+/// [`attribute_segments`] (so rounding can never drift between tiers).
+pub(in crate::sim) fn package_result(
+    plan: &ExecPlan,
+    streams: &[MemberStream<'_>],
+    outputs: Vec<Vec<Vec<Vec<f32>>>>,
+    n_iters: usize,
+) -> BatchSimResult {
+    let total_cycles = (n_iters.max(1) as u64 - 1) * plan.ii as u64 + plan.makespan;
     let pe_busy: Vec<u64> = plan.pe_nodes.iter().map(|&c| c * n_iters as u64).collect();
     let total_req_iters: u64 = streams.iter().map(|st| st.total() as u64).sum();
     let per_member =
         attribute_segments(total_cycles, outputs, plan.stats.clone(), total_req_iters);
-    Ok(BatchSimResult {
+    BatchSimResult {
         per_member,
         cycles: total_cycles,
         iterations: n_iters,
         pe_busy,
         lrf_peak: plan.lrf_peak,
         grf_peak: plan.grf_peak,
-    })
+    }
 }
 
 #[cfg(test)]

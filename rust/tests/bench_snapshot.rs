@@ -163,5 +163,16 @@ fn bench_mapper_json_schema() {
     // require them pairwise.
     require("serving/sharded/window8_x2shards", &["serving/sharded/cross_session_window8"]);
     require("serving/sharded/cross_session_window8", &["serving/sharded/window8_x2shards"]);
+    // Lane-vectorized rows: each `_lanes` row only means anything next to
+    // its scalar-plan sibling (the pair IS the measurement), so require
+    // them pairwise. The micro rows are one mapper_micro run with
+    // plan_compile; the serving rows ride the same run as the compiled
+    // twins. Older snapshots may predate all of them — nothing here keys
+    // off the generic markers above.
+    require("fused3/plan_sweep_lanes1", &["fused3/plan_sweep_lanes8", "fused3/plan_compile"]);
+    require("fused3/plan_sweep_lanes8", &["fused3/plan_sweep_lanes1", "fused3/plan_compile"]);
+    require("serving/fused3/window8_lanes", &["serving/fused3/window8_compiled"]);
+    require("serving/fused3/window8_compiled", &["serving/fused3/window8_lanes"]);
+    require("serving/wide_k128/window8_lanes", &["serving/wide_k128/per_request_compiled"]);
     eprintln!("BENCH_mapper.json schema ok ({rows} rows)");
 }

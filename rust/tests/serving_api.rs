@@ -428,6 +428,50 @@ fn try_enqueue_sheds_with_overloaded_when_the_queue_backs_up() {
 }
 
 #[test]
+fn lane_windows_counter_tracks_the_vectorized_path() {
+    // The counter is only meaningful when serving runs the compiled plan
+    // with the configured lane width; a CI leg that pins either knob
+    // suite-wide legitimately changes the answer, so skip there.
+    use sparsemap::config::{SimBackend, SIM_LANES_ENV};
+    if std::env::var(SimBackend::ENV).is_ok() || std::env::var(SIM_LANES_ENV).is_ok() {
+        eprintln!("ignored: sim backend/lane env override active");
+        return;
+    }
+
+    // 8-iteration streams: auto lane selection picks a width > 1, so both
+    // the batched-window pass and the solo one-member pass must count.
+    let serve = |sim_lanes: usize| -> (Vec<Vec<Vec<f32>>>, u64, u64) {
+        let mut cfg = cfg_with(2, 1, 3);
+        cfg.sim_lanes = sim_lanes;
+        let coord = registered_coordinator(&cfg);
+        let members = tiny_members();
+        let solo = tiny("lanesolo", 2, 2, vec![true, true, false, true]);
+        let mut session = coord.session();
+        let mut tickets: Vec<Ticket> = members
+            .iter()
+            .enumerate()
+            .map(|(i, b)| session.enqueue(Arc::clone(b), stream_for(b, 8, 300 + i as u64)))
+            .collect();
+        tickets.push(session.enqueue(Arc::clone(&solo), stream_for(&solo, 8, 310)));
+        session.drain();
+        let outputs = tickets.into_iter().map(|t| t.wait().expect("job ok").outputs).collect();
+        let m = coord.metrics.snapshot();
+        (outputs, m.windows, m.lane_windows)
+    };
+
+    let (vectored, windows, lane_windows) = serve(0);
+    assert_eq!(windows, 1, "three member requests against a window of 3");
+    assert_eq!(
+        lane_windows,
+        windows + 1,
+        "the batched window plus the solo pass both ride the lane path"
+    );
+    let (scalar, _, scalar_lane_windows) = serve(1);
+    assert_eq!(scalar_lane_windows, 0, "sim_lanes = 1 forces the scalar sweep");
+    assert_bitwise_eq(&scalar, &vectored, "scalar vs lane serving outputs");
+}
+
+#[test]
 fn dropping_a_session_never_strands_windowed_requests() {
     // An open window is sealed when its session drops (and when a member
     // ticket is waited on) — a ticket can always resolve.

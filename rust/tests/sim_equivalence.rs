@@ -1,10 +1,12 @@
-//! Differential sim-equivalence suite: the compiled execution-plan
-//! backend (`sim::plan`) against the scalar lockstep interpreter.
+//! Differential sim-equivalence suite: three backends, one semantics.
 //!
-//! The interpreter is the oracle — `ExecPlan` execution must be
-//! **bit-identical** on every `BatchSimResult` field (outputs, pass
-//! cycles, per-segment cycle shares, COPs/MCIDs, `pe_busy`, register
-//! peaks) for every mapping the binder produces. The suite locks that on
+//! The interpreter is the root oracle — compiled `ExecPlan` execution
+//! must be **bit-identical** on every `BatchSimResult` field (outputs,
+//! pass cycles, per-segment cycle shares, COPs/MCIDs, `pe_busy`,
+//! register peaks) for every mapping the binder produces, and the
+//! lane-vectorized sweep (`sim::lanes`) must match both at every lane
+//! width in {1, 2, 4, 8, auto} — including windows smaller than one lane
+//! chunk, where the write masks carry the tail. The suite locks that on
 //! the seven paper blocks, the canonical `fused3` bundle, the `wide_k128`
 //! block, ragged/padded batch windows, and ≥100 randomized blocks ×
 //! window shapes; plan compilation itself must be deterministic (compile
@@ -13,7 +15,8 @@
 use sparsemap::arch::StreamingCgra;
 use sparsemap::mapper::{map_unit, MapOutcome, MapUnit, MapperOptions};
 use sparsemap::sim::{
-    execute_plan_batch, simulate_fused_batch, BatchSimResult, ExecPlan, MemberSegment,
+    execute_plan_batch, execute_plan_lanes_with, simulate_fused_batch, BatchSimResult, ExecPlan,
+    ExecScratch, MemberSegment,
 };
 use sparsemap::sparse::gen::{fused3_bundle, paper_blocks, random_block, wide_blocks};
 use sparsemap::sparse::SparseBlock;
@@ -62,8 +65,10 @@ fn assert_bit_identical(compiled: &BatchSimResult, interp: &BatchSimResult, ctx:
     }
 }
 
-/// Compile the plan twice (determinism), execute the window on both
-/// backends, and hold them bit-identical. Returns the (shared) result.
+/// Compile the plan twice (determinism), execute the window on every
+/// backend — interpreter, scalar plan, and the lane-vectorized sweep at
+/// each supported width — and hold them all bit-identical. Returns the
+/// (shared) result.
 fn run_both(
     outcome: &MapOutcome,
     cgra: &StreamingCgra,
@@ -81,6 +86,25 @@ fn run_both(
         simulate_fused_batch(&outcome.mapping, &outcome.tags, blocks, cgra, batches)
             .unwrap_or_else(|e| panic!("{ctx}: interpreter: {e}"));
     assert_bit_identical(&compiled, &interp, ctx);
+    // Lane matrix: every width against the interpreter oracle, through ONE
+    // shared scratch so reuse across differently-shaped calls is
+    // exercised the way a pooled worker would.
+    let mut scratch = ExecScratch::new();
+    for lanes in [0usize, 1, 2, 4, 8] {
+        let (vectored, width) =
+            execute_plan_lanes_with(&plan, blocks, batches, lanes, &mut scratch)
+                .unwrap_or_else(|e| panic!("{ctx}: lanes={lanes}: {e}"));
+        if lanes > 0 {
+            assert_eq!(width, lanes, "{ctx}: explicit lane width must be honored");
+        } else {
+            assert_eq!(
+                width,
+                sparsemap::sim::lanes::auto_width(interp.iterations),
+                "{ctx}: auto width must follow the window length"
+            );
+        }
+        assert_bit_identical(&vectored, &interp, &format!("{ctx} [lanes={lanes}]"));
+    }
     compiled
 }
 
@@ -197,6 +221,25 @@ fn randomized_blocks_and_window_shapes_match_bitwise() {
         covered += 1;
     }
     assert!(covered >= 100, "only {covered} randomized instances covered");
+}
+
+#[test]
+fn windows_smaller_than_one_chunk_match_at_every_width() {
+    // A 1-, 2- and 3-iteration window under 8 lanes leaves most of the
+    // chunk as padding; the per-lane write masks must keep those ghost
+    // iterations out of every output plane and closed-form counter.
+    let cgra = StreamingCgra::paper_default();
+    let opts = MapperOptions::sparsemap().with_parallelism(1);
+    let nb = &paper_blocks()[2];
+    let out = map_unit(MapUnit::Single(&nb.block), &cgra, &opts)
+        .unwrap_or_else(|e| panic!("{}: must map: {e}", nb.label));
+    for n in 1..=3usize {
+        let xs = stream_for(&nb.block, n, 4000 + n as u64);
+        let batches = vec![vec![MemberSegment { block: &nb.block, xs: &xs }]];
+        let res = run_both(&out, &cgra, &[&nb.block], &batches, &format!("tiny window n={n}"));
+        assert_eq!(res.iterations, n);
+        assert_eq!(res.per_member[0].segments[0].outputs.len(), n);
+    }
 }
 
 #[test]
