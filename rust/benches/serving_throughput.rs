@@ -696,6 +696,69 @@ fn main() {
         });
     }
 
+    // Whole-network pipeline serving scenario: the vgg_head preset
+    // (3→64→64→128→128, k = 128 layers tiling into the wide-block class)
+    // registered as a network and served end to end through
+    // `enqueue_network`. The vgg_head_e2e row is one full pipeline pass
+    // (gather → serve → scatter across all four stages, warm caches); the
+    // per_layer row normalizes the same passes by stage count, the
+    // apples-to-apples comparison against per-request rows.
+    {
+        let wide_point = sparsemap::mapper::MapperOptions::wide();
+        let mut cfg = SparsemapConfig { workers: 4, queue_depth: 64, ..SparsemapConfig::default() };
+        cfg.mis_iterations = wide_point.mis_iterations;
+        cfg.ii_slack = wide_point.ii_slack;
+        let coord = Coordinator::new(&cfg);
+        let net = coord
+            .register_network(sparsemap::model::vgg_head())
+            .expect("register vgg_head");
+        let session = coord.session();
+        let mut rng = Pcg64::seeded(5);
+        let input = |rng: &mut Pcg64| -> Vec<f32> {
+            (0..net.input_width()).map(|_| rng.next_normal() as f32).collect()
+        };
+        // Warm every tile mapping off the measurement with one full pass.
+        let x = input(&mut rng);
+        let warm = session
+            .enqueue_network(&net.name, &x)
+            .expect("enqueue vgg_head")
+            .wait()
+            .expect("warm vgg_head pass");
+        let stages = warm.layers.len() as u64;
+
+        let passes = 6u64;
+        let t0 = Instant::now();
+        for _ in 0..passes {
+            let x = input(&mut rng);
+            let _ = session
+                .enqueue_network(&net.name, &x)
+                .expect("enqueue vgg_head")
+                .wait()
+                .expect("vgg_head pass");
+        }
+        let wall = t0.elapsed();
+        println!(
+            "network vgg_head: {passes} pipeline passes ({} tiles over {stages} stages) \
+             in {wall:?} → {:.2} ms/pass",
+            net.block_count(),
+            wall.as_secs_f64() * 1e3 / passes as f64,
+        );
+        let mut e2e = Summary::new();
+        e2e.add(wall.as_nanos() as f64 / passes as f64);
+        results.push(BenchResult {
+            name: "serving/network/vgg_head_e2e".into(),
+            summary: e2e,
+            iters_per_sample: passes,
+        });
+        let mut per_layer = Summary::new();
+        per_layer.add(wall.as_nanos() as f64 / (passes * stages) as f64);
+        results.push(BenchResult {
+            name: "serving/network/per_layer".into(),
+            summary: per_layer,
+            iters_per_sample: passes * stages,
+        });
+    }
+
     let json = repo_root_path("BENCH_mapper.json");
     match write_json_merged(&json, &results) {
         Ok(()) => println!("\nwrote {json}"),

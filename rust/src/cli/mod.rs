@@ -12,6 +12,9 @@
 //!   simulate   --block <name>   map + simulate + verify one block
 //!   serve      --requests <n>   run the streaming coordinator demo
 //!              --fuse <0|1>     register fused bundles (batching windows)
+//!              --model <m>      serve a whole network end to end
+//!   ingest     --dump <path>    load a pruned-model dump, print sparsity
+//!              --preset <name>  …or characterize a preset network
 //!   artifacts                   list AOT artifacts and smoke-run one
 //! common flags:
 //!   --config <path>             TOML-subset config file
@@ -126,6 +129,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "map" => cmd_map(args),
         "simulate" => cmd_simulate(args),
         "serve" => cmd_serve(args),
+        "ingest" => cmd_ingest(args),
         "artifacts" => cmd_artifacts(args),
         "" | "help" | "--help" | "-h" => {
             print!("{}", USAGE);
@@ -147,11 +151,59 @@ commands:
   map      --block blockN    map one block, print II/COPs/MCIDs
   simulate --block blockN    map + cycle-accurate simulate + verify
   serve    --requests N      streaming coordinator demo
+  ingest   --dump path       load a pruned-model dump, print per-layer sparsity
   artifacts                  list + smoke-run the AOT artifacts
 flags:
   --config path  --scheduler sparsemap|baseline  --iters N  --seed N
   --shards N   (serve) worker-pool shards, overrides [coordinator] shards
+  --model m    (serve) serve a network end to end: a preset name
+               (vgg_head|resnet_tail) or a dump path
+  --preset m   (ingest) characterize a preset instead of a dump
+  --out path   (ingest) write the ingested network back out as a dump
 ";
+
+/// Resolve a `--model` / `--preset` spec: a preset name, or (for
+/// `--model`/`--dump`) a dump-file path.
+fn resolve_network(spec: &str, allow_path: bool) -> Result<crate::model::NetworkGraph> {
+    match spec {
+        "vgg_head" => Ok(crate::model::vgg_head()),
+        "resnet_tail" => Ok(crate::model::resnet_tail()),
+        other if allow_path => {
+            let dump = crate::model::load_dump_file(other)?;
+            crate::model::NetworkGraph::from_layers(&dump.name, dump.layers)
+        }
+        other => Err(Error::Config(format!(
+            "unknown preset '{other}' (try vgg_head|resnet_tail)"
+        ))),
+    }
+}
+
+fn cmd_ingest(args: &Args) -> Result<()> {
+    let net = match (args.get("dump"), args.get("preset")) {
+        (Some(path), None) => resolve_network(path, true)?,
+        (None, Some(preset)) => resolve_network(preset, false)?,
+        _ => {
+            return Err(Error::Config(
+                "ingest needs exactly one of --dump <path> or --preset <name>".into(),
+            ))
+        }
+    };
+    println!(
+        "network {}: {} layer(s), {} partitioned block(s), {} channels in -> {} kernels out",
+        net.name,
+        net.layers.len(),
+        net.block_count(),
+        net.input_width(),
+        net.output_width(),
+    );
+    println!("{}", report::sparsity_table(&crate::model::profile_network(&net)));
+    if let Some(out) = args.get("out") {
+        let layers: Vec<_> = net.layers.iter().map(|nl| nl.layer.clone()).collect();
+        crate::model::write_dump_file(out, &net.name, &layers)?;
+        println!("wrote dump to {out}");
+    }
+    Ok(())
+}
 
 fn cmd_table3(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
@@ -223,10 +275,16 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let cfg = load_config(args)?;
+    let mut cfg = load_config(args)?;
     let n = args.get_usize("requests", 32)?;
     let iters = args.get_usize("iters", 16)?;
     let fuse = args.get_usize("fuse", 0)? != 0;
+    let model = args.get("model").map(|m| resolve_network(m, true)).transpose()?;
+    if model.is_some() {
+        // Network layers with k >= 96 tile into the wide-block class,
+        // which needs the wide operating point's II slack to map.
+        cfg.ii_slack = cfg.ii_slack.max(MapperOptions::wide().ii_slack);
+    }
     // --shards pins the topology explicitly (over both the config knob
     // and SPARSEMAP_SHARDS); without it Coordinator::new resolves those.
     let coord = match args.get_usize("shards", 0)? {
@@ -250,6 +308,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         coord.shard_count(),
         cfg.workers,
     );
+    if let Some(net) = model {
+        return serve_network(&coord, net, n, cfg.seed);
+    }
     let blocks: Vec<std::sync::Arc<crate::sparse::SparseBlock>> = paper_blocks()
         .into_iter()
         .take(4)
@@ -297,6 +358,56 @@ fn cmd_serve(args: &Args) -> Result<()> {
             s.queue_ns_p99 / 1e3,
         );
     }
+    Ok(())
+}
+
+/// The `serve --model` path: register the network (tiles shard-pinned,
+/// small tiles bundle-packed) and pump whole-network pipeline requests
+/// through `enqueue_network`, then print per-layer attribution.
+fn serve_network(
+    coord: &Coordinator,
+    net: crate::model::NetworkGraph,
+    n: usize,
+    seed: u64,
+) -> Result<()> {
+    let serving = coord.register_network(net)?;
+    println!(
+        "registered network {}: {} stage(s), {} tile block(s)",
+        serving.name,
+        serving.stages.len(),
+        serving.block_count(),
+    );
+    let mut rng = crate::util::rng::Pcg64::seeded(seed);
+    let session = coord.session();
+    let t0 = std::time::Instant::now();
+    let mut last = None;
+    for _ in 0..n.max(1) {
+        let x: Vec<f32> = (0..serving.input_width())
+            .map(|_| rng.next_normal() as f32)
+            .collect();
+        let ticket = session.enqueue_network(&serving.name, &x)?;
+        last = Some(ticket.wait().map_err(Error::from)?);
+    }
+    let wall = t0.elapsed();
+    let res = last.expect("served at least one network request");
+    println!("network {} served: {} outputs, {} total cycles", res.network, res.outputs.len(), res.cycles);
+    for lm in &res.layers {
+        println!(
+            "  {}: {} block(s) cycles {} COPs {} MCIDs {} latency {:.2} ms fused_requests {}",
+            lm.layer,
+            lm.blocks,
+            lm.cycles,
+            lm.cops,
+            lm.mcids,
+            lm.latency_ns as f64 / 1e6,
+            lm.fused_requests,
+        );
+    }
+    let m = coord.metrics.snapshot();
+    println!(
+        "served {} network request(s) in {wall:?}: {} stage(s) assembled, cache hits {} misses {}",
+        m.networks_served, m.network_stages, m.cache_hits, m.cache_misses
+    );
     Ok(())
 }
 
@@ -365,5 +476,26 @@ mod tests {
     fn unknown_block_errors() {
         assert!(find_block("block99").is_err());
         assert!(find_block("block2").is_ok());
+    }
+
+    #[test]
+    fn ingest_preset_writes_and_reloads_dump() {
+        let path = std::env::temp_dir()
+            .join(format!("sparsemap-cli-ingest-{}.txt", std::process::id()));
+        let path_s = path.to_str().unwrap().to_string();
+        let write = format!("ingest --preset vgg_head --out {path_s}");
+        assert!(dispatch(&Args::parse(argv(&write)).unwrap()).is_ok());
+        let reread = format!("ingest --dump {path_s}");
+        assert!(dispatch(&Args::parse(argv(&reread)).unwrap()).is_ok());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn ingest_rejects_bad_invocations() {
+        assert!(dispatch(&Args::parse(argv("ingest")).unwrap()).is_err());
+        assert!(dispatch(&Args::parse(argv("ingest --preset nope")).unwrap()).is_err());
+        assert!(
+            dispatch(&Args::parse(argv("ingest --dump /nonexistent/x.txt")).unwrap()).is_err()
+        );
     }
 }

@@ -38,6 +38,13 @@ pub struct Metrics {
     /// Requests resolved `Poisoned` (their job identity crossed the panic
     /// quarantine threshold); also counted in `failures`.
     pub poisoned: AtomicU64,
+    /// Whole-network pipelines resolved through `enqueue_network`
+    /// (successes only; a stage failure fails the network ticket without
+    /// counting here).
+    pub networks_served: AtomicU64,
+    /// Layer stages assembled by the network pipeline driver (each stage
+    /// fans out into per-block requests that count as `jobs` normally).
+    pub network_stages: AtomicU64,
     /// Per-request latency attribution, sampled at successful resolution.
     latency: Mutex<LatencyStats>,
     /// Per-shard counter blocks, attached once at coordinator
@@ -109,6 +116,8 @@ impl Metrics {
             deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
             worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
             poisoned: self.poisoned.load(Ordering::Relaxed),
+            networks_served: self.networks_served.load(Ordering::Relaxed),
+            network_stages: self.network_stages.load(Ordering::Relaxed),
             queue_ns_p50,
             queue_ns_p99,
             service_ns_p50,
@@ -196,6 +205,10 @@ pub struct MetricsSnapshot {
     pub deadline_expired: u64,
     pub worker_restarts: u64,
     pub poisoned: u64,
+    /// Whole-network pipelines resolved through `enqueue_network`.
+    pub networks_served: u64,
+    /// Layer stages the network pipeline driver assembled.
+    pub network_stages: u64,
     /// p50/p99 over per-request queueing spans (ns); `0.0` with no samples.
     pub queue_ns_p50: f64,
     pub queue_ns_p99: f64,

@@ -137,12 +137,14 @@
 //! single queue slot however many requests it carries.
 
 mod metrics;
+pub mod network;
 mod pool;
 mod queue;
 mod shard;
 mod window;
 
 pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot};
+pub use network::{LayerMetrics, NetworkResult, NetworkTicket, ServingNetwork};
 pub use shard::SHARDS_ENV;
 pub use window::{BatchOptions, Ticket};
 
@@ -194,6 +196,12 @@ pub struct InferResult {
     pub outputs: Vec<Vec<f32>>,
     /// II of the mapping used.
     pub ii: usize,
+    /// Caching operations (COPs) of the mapping that served this request —
+    /// a member request carries its own member's count, not the window's.
+    pub cops: usize,
+    /// Multi-cycle internal dependencies (MCIDs) routed through GRF/LRF in
+    /// the mapping that served this request.
+    pub mcids: usize,
     /// Whether this job triggered a fresh mapping (cache miss). In a
     /// batching window, the window's first request carries the flag.
     pub mapped_fresh: bool,
@@ -590,6 +598,36 @@ impl ServeSession<'_> {
     }
 }
 
+impl<'a> ServeSession<'a> {
+    /// Run one input through a registered network
+    /// ([`Coordinator::register_network`]), layer by layer: each stage's
+    /// partitioned blocks are enqueued as ordinary requests (batching
+    /// windows form normally within a stage), their outputs assemble into
+    /// the stage's activation vector, and that vector streams into the
+    /// next stage. The first stage is enqueued before this returns; the
+    /// returned [`NetworkTicket`] drives the remaining stages when
+    /// waited on and resolves a [`NetworkResult`] with per-layer
+    /// cycle/COP/MCID attribution.
+    pub fn enqueue_network(
+        &self,
+        network: &str,
+        x: &[f32],
+    ) -> Result<NetworkTicket<'a>> {
+        let net = self
+            .coord
+            .network(network)
+            .ok_or_else(|| Error::Workload(format!("network '{network}' is not registered")))?;
+        if x.len() != net.input_width() {
+            return Err(Error::Workload(format!(
+                "network '{network}': input has {} channels, first layer expects {}",
+                x.len(),
+                net.input_width()
+            )));
+        }
+        Ok(NetworkTicket::start(self.coord, net, x))
+    }
+}
+
 impl Drop for ServeSession<'_> {
     fn drop(&mut self) {
         self.core.flush_all();
@@ -606,6 +644,7 @@ struct Registry {
     assigner: ShardAssigner,
     blocks: Vec<Arc<SparseBlock>>,
     bundles: Vec<Arc<FusedBundle>>,
+    networks: Vec<Arc<ServingNetwork>>,
 }
 
 /// Legacy `submit`/`collect` shim state: an internal session core plus the
@@ -752,6 +791,7 @@ impl Coordinator {
                 assigner: ShardAssigner::new(nshards),
                 blocks: Vec::new(),
                 bundles: Vec::new(),
+                networks: Vec::new(),
             }),
             dispatch: Mutex::new(DispatchState::new()),
             next_uid: AtomicU64::new(0),
@@ -876,6 +916,70 @@ impl Coordinator {
         plan
     }
 
+    /// Register a whole [`NetworkGraph`] for pipeline serving
+    /// ([`ServeSession::enqueue_network`]): every partitioned tile block
+    /// is registered (demand-balanced shard pins, warm starts), the
+    /// network's tile population is packed into fused bundles by the
+    /// fusion planner, and the network itself joins the registry (and the
+    /// warm-start manifest, when one is configured) under its name.
+    /// Registering an already-registered name returns the existing
+    /// serving form unchanged.
+    pub fn register_network(&self, graph: crate::model::NetworkGraph) -> Result<Arc<ServingNetwork>> {
+        self.register_network_at(Arc::new(graph), true)
+    }
+
+    fn register_network_at(
+        &self,
+        graph: Arc<crate::model::NetworkGraph>,
+        persist: bool,
+    ) -> Result<Arc<ServingNetwork>> {
+        if graph.layers.is_empty() {
+            return Err(Error::Workload(format!("network '{}': no layers", graph.name)));
+        }
+        if let Some(existing) = self.network(&graph.name) {
+            return Ok(existing);
+        }
+        let serving = Arc::new(ServingNetwork::build(&graph));
+        let tiles = serving.all_blocks();
+        for block in &tiles {
+            self.register_block_at(block, false);
+        }
+        // Pack the network's tile population into resident fused
+        // configurations — this is the realistic small-layer population
+        // the planner exists for; wide tiles exceed the bundle II cap and
+        // stay solo.
+        for bundle in plan_bundles(&tiles, &self.cgra, &self.fusion) {
+            if bundle.len() > 1 {
+                let bundle = Arc::new(bundle);
+                self.register_bundle_at(&bundle, false);
+                self.bundles.register(bundle);
+            }
+        }
+        let mut reg = self.registry.lock().unwrap_or_else(|p| p.into_inner());
+        // Re-check under the lock: a racing registration of the same name
+        // wins and this serving form is discarded.
+        if let Some(existing) = reg.networks.iter().find(|n| n.name == serving.name) {
+            return Ok(Arc::clone(existing));
+        }
+        reg.networks.push(Arc::clone(&serving));
+        if persist {
+            self.persist_manifest(&reg);
+        }
+        Ok(serving)
+    }
+
+    /// Look up a registered network by name.
+    pub fn network(&self, name: &str) -> Option<Arc<ServingNetwork>> {
+        let reg = self.registry.lock().unwrap_or_else(|p| p.into_inner());
+        reg.networks.iter().find(|n| n.name == name).map(Arc::clone)
+    }
+
+    /// Names of registered networks, in registration order.
+    pub fn network_names(&self) -> Vec<String> {
+        let reg = self.registry.lock().unwrap_or_else(|p| p.into_inner());
+        reg.networks.iter().map(|n| n.name.clone()).collect()
+    }
+
     fn register_block_at(&self, block: &Arc<SparseBlock>, persist: bool) -> usize {
         let fp = block.mask_fingerprint();
         let mut reg = self.registry.lock().unwrap_or_else(|p| p.into_inner());
@@ -910,7 +1014,9 @@ impl Coordinator {
     /// to cold; it never fails the registration.
     fn persist_manifest(&self, reg: &Registry) {
         let Some(path) = &self.warm_start_path else { return };
-        if let Err(e) = shard::write_manifest(path, &reg.blocks, &reg.bundles) {
+        let graphs: Vec<Arc<crate::model::NetworkGraph>> =
+            reg.networks.iter().map(|n| Arc::clone(&n.graph)).collect();
+        if let Err(e) = shard::write_manifest(path, &reg.blocks, &reg.bundles, &graphs) {
             crate::log_warn!("writing warm-start manifest {path} failed: {e}");
         }
     }
@@ -962,6 +1068,19 @@ impl Coordinator {
                     });
                     if let Err(e) = built {
                         crate::log_warn!("warm-start mapping for {key} failed: {e}");
+                    }
+                }
+                // A network's tile blocks and bundles ride their own
+                // manifest lines (written by the same registration), so
+                // their shard pins and mappings are already replayed by
+                // the arms above — the network unit only restores the
+                // registry entry the pipeline driver looks up by name.
+                ManifestUnit::Network(graph) => {
+                    let graph = Arc::new(graph);
+                    let serving = Arc::new(ServingNetwork::build(&graph));
+                    let mut reg = self.registry.lock().unwrap_or_else(|p| p.into_inner());
+                    if reg.networks.iter().all(|n| n.name != serving.name) {
+                        reg.networks.push(serving);
                     }
                 }
             }

@@ -1,0 +1,243 @@
+//! Whole-network pipeline serving: a registered [`NetworkGraph`] served
+//! layer by layer through the normal request path.
+//!
+//! [`ServingNetwork`] is the registration-time form of a network: every
+//! layer becomes a [`Stage`] whose partitioned blocks carry their
+//! precomputed live-channel gather lists and kernel offsets. Serving
+//! ([`crate::coordinator::ServeSession::enqueue_network`]) streams each
+//! stage's assembled outputs into the next stage's member requests:
+//!
+//! 1. gather — each stage block reads its live channels out of the
+//!    current activation vector (layer input for stage 0, the previous
+//!    stage's assembled outputs after);
+//! 2. serve — the blocks are enqueued as ordinary session requests, so
+//!    mapping-cache reuse, fusion routing and batching windows all apply
+//!    within a stage exactly as for ad-hoc traffic;
+//! 3. scatter — block outputs accumulate into the stage's `k_total`-wide
+//!    activation vector at each block's kernel offset, in partition
+//!    order (deterministic — the assembled vector is a pure function of
+//!    the stage input, so repeated runs are bit-identical).
+//!
+//! The resolved [`NetworkResult`] carries per-layer cycle/COP/MCID
+//! attribution ([`LayerMetrics`]) on top of the per-ticket latency fields
+//! every [`crate::coordinator::InferResult`] already has.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::{Coordinator, ServeError, Ticket};
+use crate::model::NetworkGraph;
+use crate::sparse::partition::SparseLayer;
+use crate::sparse::SparseBlock;
+
+/// One layer of a registered network, in serving form.
+#[derive(Debug)]
+pub struct Stage {
+    pub layer_name: String,
+    pub c_total: usize,
+    pub k_total: usize,
+    pub blocks: Vec<StageBlock>,
+}
+
+/// One partitioned block of a stage, with its gather/scatter placement.
+#[derive(Debug)]
+pub struct StageBlock {
+    pub block: Arc<SparseBlock>,
+    /// Layer channels this block reads (gather list, ascending).
+    pub live: Vec<usize>,
+    /// First layer kernel this block's outputs accumulate into.
+    pub kr_offset: usize,
+}
+
+/// A registered network: the graph it was built from (what the warm-start
+/// manifest persists) plus its per-stage serving form.
+#[derive(Debug)]
+pub struct ServingNetwork {
+    pub name: String,
+    pub graph: Arc<NetworkGraph>,
+    pub stages: Vec<Stage>,
+}
+
+impl ServingNetwork {
+    pub(crate) fn build(graph: &Arc<NetworkGraph>) -> Self {
+        let stages = graph
+            .layers
+            .iter()
+            .map(|nl| Stage {
+                layer_name: nl.layer.name.clone(),
+                c_total: nl.layer.c_total,
+                k_total: nl.layer.k_total,
+                blocks: nl
+                    .blocks
+                    .iter()
+                    .map(|lb| StageBlock {
+                        block: Arc::new(lb.block.clone()),
+                        live: SparseLayer::live_channels(&lb.block.name),
+                        kr_offset: lb.kr_offset,
+                    })
+                    .collect(),
+            })
+            .collect();
+        ServingNetwork { name: graph.name.clone(), graph: Arc::clone(graph), stages }
+    }
+
+    /// Channels the first stage consumes.
+    pub fn input_width(&self) -> usize {
+        self.stages.first().map_or(0, |s| s.c_total)
+    }
+
+    /// Kernels the last stage produces.
+    pub fn output_width(&self) -> usize {
+        self.stages.last().map_or(0, |s| s.k_total)
+    }
+
+    /// Total partitioned blocks across stages.
+    pub fn block_count(&self) -> usize {
+        self.stages.iter().map(|s| s.blocks.len()).sum()
+    }
+
+    /// Every stage block, in stage/partition order (the registration and
+    /// fusion-planning population).
+    pub(crate) fn all_blocks(&self) -> Vec<Arc<SparseBlock>> {
+        self.stages
+            .iter()
+            .flat_map(|s| s.blocks.iter().map(|sb| Arc::clone(&sb.block)))
+            .collect()
+    }
+}
+
+/// Per-layer serving attribution inside a [`NetworkResult`].
+#[derive(Clone, Debug)]
+pub struct LayerMetrics {
+    pub layer: String,
+    /// Partitioned blocks this layer served through.
+    pub blocks: usize,
+    /// CGRA cycles charged across the layer's block requests (each a
+    /// proportional share of its serving pass).
+    pub cycles: u64,
+    /// Caching operations summed over the mappings that served the
+    /// layer's blocks.
+    pub cops: usize,
+    /// Multi-cycle internal dependencies summed over the serving mappings.
+    pub mcids: usize,
+    /// Slowest block request of the layer, enqueue → resolution (the
+    /// stage assembles when its last block resolves).
+    pub latency_ns: u64,
+    /// Block requests served inside a multi-member fused configuration.
+    pub fused_requests: usize,
+}
+
+/// The resolved answer of a whole-network pipeline request.
+#[derive(Clone, Debug)]
+pub struct NetworkResult {
+    pub network: String,
+    /// The final stage's assembled activation vector.
+    pub outputs: Vec<f32>,
+    /// Per-layer attribution, in stage order.
+    pub layers: Vec<LayerMetrics>,
+    /// Total CGRA cycles charged across all stages.
+    pub cycles: u64,
+    /// Wall nanoseconds from `enqueue_network` to resolution.
+    pub latency_ns: u64,
+}
+
+/// Result handle for one in-flight network request. Stage 0 is enqueued
+/// at creation; [`NetworkTicket::wait`] assembles each stage and streams
+/// it into the next. Dropping an unwaited ticket abandons the remaining
+/// stages (the already-enqueued block requests still resolve — enqueued
+/// tickets always do — and cancel out of still-open windows).
+pub struct NetworkTicket<'a> {
+    coord: &'a Coordinator,
+    net: Arc<ServingNetwork>,
+    started: Instant,
+    /// Index of the stage `pending` belongs to.
+    stage: usize,
+    /// In-flight block tickets of the current stage, in partition order.
+    pending: Vec<Ticket>,
+    layers: Vec<LayerMetrics>,
+}
+
+impl<'a> NetworkTicket<'a> {
+    pub(crate) fn start(coord: &'a Coordinator, net: Arc<ServingNetwork>, x: &[f32]) -> Self {
+        let started = Instant::now();
+        let pending = enqueue_stage(coord, &net.stages[0], x);
+        NetworkTicket { coord, net, started, stage: 0, pending, layers: Vec::new() }
+    }
+
+    /// The network this ticket runs.
+    pub fn network(&self) -> &str {
+        &self.net.name
+    }
+
+    /// Drive the remaining stages to completion and return the assembled
+    /// result. Any failed block request fails the whole network with that
+    /// request's [`ServeError`] (later stages are never enqueued).
+    pub fn wait(mut self) -> std::result::Result<NetworkResult, ServeError> {
+        loop {
+            let stage = &self.net.stages[self.stage];
+            self.coord.metrics.network_stages.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let mut acc = vec![0f32; stage.k_total];
+            let mut lm = LayerMetrics {
+                layer: stage.layer_name.clone(),
+                blocks: stage.blocks.len(),
+                cycles: 0,
+                cops: 0,
+                mcids: 0,
+                latency_ns: 0,
+                fused_requests: 0,
+            };
+            let pending = std::mem::take(&mut self.pending);
+            for (sb, ticket) in stage.blocks.iter().zip(pending) {
+                let res = ticket.wait()?;
+                // Each stage request carries exactly one iteration, so the
+                // block's answer is its first (only) output vector.
+                let y = res.outputs.first().map_or(&[][..], |v| v.as_slice());
+                for (bk, &v) in y.iter().enumerate() {
+                    acc[sb.kr_offset + bk] += v;
+                }
+                lm.cycles += res.cycles;
+                lm.cops += res.cops;
+                lm.mcids += res.mcids;
+                lm.latency_ns = lm.latency_ns.max(res.latency_ns);
+                if res.fused_members > 1 {
+                    lm.fused_requests += 1;
+                }
+            }
+            self.layers.push(lm);
+            self.stage += 1;
+            if self.stage == self.net.stages.len() {
+                self.coord
+                    .metrics
+                    .networks_served
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                return Ok(NetworkResult {
+                    network: self.net.name.clone(),
+                    cycles: self.layers.iter().map(|l| l.cycles).sum(),
+                    latency_ns: self.started.elapsed().as_nanos() as u64,
+                    layers: std::mem::take(&mut self.layers),
+                    outputs: acc,
+                });
+            }
+            self.pending = enqueue_stage(self.coord, &self.net.stages[self.stage], &acc);
+        }
+    }
+}
+
+/// Fan one stage out into per-block session requests: gather each block's
+/// live channels from the stage input and enqueue a one-iteration request.
+/// The throwaway session seals any batching windows the requests joined
+/// when it drops, so a stage never deadlocks waiting on its own unsealed
+/// window; windows still form normally (globally) within the stage and
+/// with concurrent traffic.
+fn enqueue_stage(coord: &Coordinator, stage: &Stage, input: &[f32]) -> Vec<Ticket> {
+    debug_assert_eq!(input.len(), stage.c_total);
+    let mut session = coord.session();
+    stage
+        .blocks
+        .iter()
+        .map(|sb| {
+            let xs = vec![sb.live.iter().map(|&ch| input[ch]).collect::<Vec<f32>>()];
+            session.enqueue(Arc::clone(&sb.block), xs)
+        })
+        .collect()
+}

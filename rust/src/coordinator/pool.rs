@@ -646,7 +646,8 @@ pub(crate) fn execute_single(job: SingleJob, ctx: &WorkerCtx, scratch: &mut Exec
             serve_solo(&block, &xs, ctx, &mut *scratch)
         }));
         match attempt {
-            Ok(Ok((outputs, cycles, ii, fresh, lanes))) => {
+            Ok(Ok(solo)) => {
+                let SoloServe { outputs, cycles, ii, fresh, lanes, cops, mcids } = solo;
                 if lanes {
                     // A solo request runs as a one-member window; count
                     // its lockstep pass like a batched one.
@@ -664,6 +665,8 @@ pub(crate) fn execute_single(job: SingleJob, ctx: &WorkerCtx, scratch: &mut Exec
                     outputs,
                     cycles,
                     ii,
+                    cops,
+                    mcids,
                     mapped_fresh: fresh,
                     fused_members: 1,
                     latency_ns,
@@ -697,15 +700,30 @@ pub(crate) fn execute_single(job: SingleJob, ctx: &WorkerCtx, scratch: &mut Exec
     }
 }
 
-/// Solo path: compile-once mapping keyed by block identity. The last
-/// tuple field reports whether the lane-vectorized sweep served the
-/// request (feeds the `lane_windows` counter).
+/// One served solo request, as `serve_solo` hands it back for ticket
+/// fulfillment.
+struct SoloServe {
+    outputs: Vec<Vec<f32>>,
+    cycles: u64,
+    ii: usize,
+    /// Whether this request built the mapping (cache miss).
+    fresh: bool,
+    /// Whether the lane-vectorized sweep served the request (feeds the
+    /// `lane_windows` counter).
+    lanes: bool,
+    /// Caching operations of the mapping that served the request.
+    cops: usize,
+    /// Multi-cycle internal dependencies routed through GRF/LRF.
+    mcids: usize,
+}
+
+/// Solo path: compile-once mapping keyed by block identity.
 fn serve_solo(
     block: &Arc<SparseBlock>,
     xs: &[Vec<f32>],
     ctx: &WorkerCtx,
     scratch: &mut ExecScratch,
-) -> std::result::Result<(Vec<Vec<f32>>, u64, usize, bool, bool), ServeError> {
+) -> std::result::Result<SoloServe, ServeError> {
     let key = solo_cache_key(block);
     let (serving, fresh) = ctx
         .cache
@@ -722,19 +740,43 @@ fn serve_solo(
             let (res, width) =
                 execute_plan_lanes_with(plan, &[block.as_ref()], &batches, ctx.lanes, scratch)
                     .map_err(|e| ServeError::Sim(e.to_string()))?;
-            let outputs = res
+            let cycles = res.cycles;
+            let (outputs, cops, mcids) = res
                 .per_member
                 .into_iter()
                 .next()
-                .and_then(|m| m.segments.into_iter().next())
-                .map(|s| s.outputs)
+                .map(|m| {
+                    let outputs = m
+                        .segments
+                        .into_iter()
+                        .next()
+                        .map(|s| s.outputs)
+                        .unwrap_or_default();
+                    (outputs, m.cops, m.mcids)
+                })
                 .unwrap_or_default();
-            Ok((outputs, res.cycles, serving.outcome.mapping.ii, fresh, width > 1))
+            Ok(SoloServe {
+                outputs,
+                cycles,
+                ii: serving.outcome.mapping.ii,
+                fresh,
+                lanes: width > 1,
+                cops,
+                mcids,
+            })
         }
         None => {
             let res = simulate(&serving.outcome.mapping, block, &ctx.cgra, xs)
                 .map_err(|e| ServeError::Sim(e.to_string()))?;
-            Ok((res.outputs, res.cycles, serving.outcome.mapping.ii, fresh, false))
+            Ok(SoloServe {
+                outputs: res.outputs,
+                cycles: res.cycles,
+                ii: serving.outcome.mapping.ii,
+                fresh,
+                lanes: false,
+                cops: serving.outcome.mapping.cops(),
+                mcids: serving.outcome.mapping.mcids(),
+            })
         }
     }
 }
@@ -792,7 +834,7 @@ pub(crate) fn execute_window(job: WindowJob, ctx: &WorkerCtx, scratch: &mut Exec
                 // never charge W whole-bundle passes.
                 ctx.metrics.total_cycles.fetch_add(pass_cycles, Ordering::Relaxed);
                 let service_ns = picked.elapsed().as_nanos() as u64;
-                for (ri, (r, seg)) in live.into_iter().zip(segments).enumerate() {
+                for (ri, (r, (seg, cops, mcids))) in live.into_iter().zip(segments).enumerate() {
                     let queue_ns =
                         picked.saturating_duration_since(r.enqueued_at).as_nanos() as u64;
                     let latency_ns = queue_ns + service_ns;
@@ -805,6 +847,8 @@ pub(crate) fn execute_window(job: WindowJob, ctx: &WorkerCtx, scratch: &mut Exec
                         outputs: seg.outputs,
                         cycles: seg.cycles,
                         ii,
+                        cops,
+                        mcids,
                         mapped_fresh: fresh && ri == 0,
                         fused_members: members,
                         latency_ns,
@@ -877,8 +921,10 @@ pub(crate) fn execute_window(job: WindowJob, ctx: &WorkerCtx, scratch: &mut Exec
 /// ticket fulfillment never happens under `catch_unwind`.
 enum WindowAttempt {
     Served {
-        /// One simulated segment per live request, in window order.
-        segments: Vec<SegmentSim>,
+        /// One `(segment, cops, mcids)` per live request, in window order —
+        /// the COP/MCID counts are the serving member's own (static per
+        /// mapping, attributed to every request that member carried).
+        segments: Vec<(SegmentSim, usize, usize)>,
         pass_cycles: u64,
         ii: usize,
         fresh: bool,
@@ -952,11 +998,12 @@ fn attempt_window(
     match sim {
         Ok((res, lanes)) => {
             let w = requests.len();
-            let mut per_request: Vec<Option<SegmentSim>> = Vec::new();
+            let mut per_request: Vec<Option<(SegmentSim, usize, usize)>> = Vec::new();
             per_request.resize_with(w, || None);
             for (mi, m) in res.per_member.into_iter().enumerate() {
+                let (cops, mcids) = (m.cops, m.mcids);
                 for (seg, &ri) in m.segments.into_iter().zip(&member_reqs[mi]) {
-                    per_request[ri] = Some(seg);
+                    per_request[ri] = Some((seg, cops, mcids));
                 }
             }
             let segments = per_request

@@ -143,6 +143,12 @@ impl ShardAssigner {
 pub(crate) enum ManifestUnit {
     Block(Arc<SparseBlock>),
     Bundle(Arc<FusedBundle>),
+    /// A whole-network registration. Its tiles and bundles ride their own
+    /// `block`/`bundle` lines (they replay through the normal cache
+    /// pre-build path), so the network unit only restores the registry
+    /// entry — which needs the full graph, weights included, to rebuild
+    /// the serving stages.
+    Network(crate::model::NetworkGraph),
 }
 
 const MANIFEST_HEADER: &str = "# sparsemap warm-start manifest v1";
@@ -156,13 +162,30 @@ fn block_line(kw: &str, block: &SparseBlock) -> String {
     format!("{kw} {} {} {} {}", block.c, block.k, mask_string(block), block.name)
 }
 
+/// Serialize one network layer: `nlayer <c> <k> <max_c> <max_k> <mask01>
+/// <w0> … <w{c*k-1}> <name…>`. Weights are f32 bit patterns (same
+/// convention as the model-dump format) so a manifest round trip restores
+/// the graph bit-identically; the name goes last, as everywhere else.
+fn network_layer_line(nl: &crate::model::NetworkLayer) -> String {
+    let l = &nl.layer;
+    let mut out = format!("nlayer {} {} {} {} ", l.c_total, l.k_total, nl.max_c, nl.max_k);
+    out.extend(l.mask.iter().map(|&m| if m { '1' } else { '0' }));
+    for w in &l.weights {
+        out.push_str(&format!(" 0x{:08x}", w.to_bits()));
+    }
+    out.push(' ');
+    out.push_str(&l.name);
+    out
+}
+
 /// Serialize the registered units. The whole file is rewritten on every
 /// registration (registrations are rare and the manifest is small — a
-/// few lines per unit).
+/// few lines per unit; networks add a line per layer).
 pub(crate) fn write_manifest(
     path: &str,
     blocks: &[Arc<SparseBlock>],
     bundles: &[Arc<FusedBundle>],
+    networks: &[Arc<crate::model::NetworkGraph>],
 ) -> std::io::Result<()> {
     let mut out = String::from(MANIFEST_HEADER);
     out.push('\n');
@@ -174,6 +197,13 @@ pub(crate) fn write_manifest(
         out.push_str(&format!("bundle {}\n", bundle.len()));
         for m in &bundle.blocks {
             out.push_str(&block_line("member", m));
+            out.push('\n');
+        }
+    }
+    for net in networks {
+        out.push_str(&format!("network {} {}\n", net.layers.len(), net.name));
+        for nl in &net.layers {
+            out.push_str(&network_layer_line(nl));
             out.push('\n');
         }
     }
@@ -193,6 +223,37 @@ fn parse_block_payload(rest: &str) -> Option<Arc<SparseBlock>> {
     }
     let mask: Vec<bool> = mask_s.chars().map(|ch| ch == '1').collect();
     SparseBlock::from_mask(name, c, k, mask).ok().map(Arc::new)
+}
+
+/// Parse the payload of an `nlayer` line (see [`network_layer_line`]).
+/// Returns the rebuilt layer with its tile caps.
+fn parse_network_layer_payload(
+    rest: &str,
+) -> Option<(crate::sparse::partition::SparseLayer, usize, usize)> {
+    let mut parts = rest.splitn(5, ' ');
+    let c: usize = parts.next()?.trim().parse().ok()?;
+    let k: usize = parts.next()?.trim().parse().ok()?;
+    let max_c: usize = parts.next()?.trim().parse().ok()?;
+    let max_k: usize = parts.next()?.trim().parse().ok()?;
+    let mut rest = parts.next()?;
+    let n = c.checked_mul(k)?;
+    let (mask_s, after_mask) = rest.split_once(' ')?;
+    if mask_s.len() != n || !mask_s.bytes().all(|b| b == b'0' || b == b'1') {
+        return None;
+    }
+    rest = after_mask;
+    // Exactly c*k weight tokens, then the name (which may contain spaces).
+    let mut weights = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tok, after) = rest.split_once(' ')?;
+        let bits = u32::from_str_radix(tok.trim().strip_prefix("0x")?, 16).ok()?;
+        weights.push(f32::from_bits(bits));
+        rest = after;
+    }
+    let mask: Vec<bool> = mask_s.bytes().map(|b| b == b'1').collect();
+    crate::sparse::partition::SparseLayer::new(rest, c, k, weights, mask)
+        .ok()
+        .map(|l| (l, max_c, max_k))
 }
 
 /// Load and parse the manifest at `path`. Malformed lines are skipped
@@ -238,6 +299,40 @@ pub(crate) fn load_manifest(path: &str) -> std::io::Result<Vec<ManifestUnit>> {
             match FusedBundle::new(members) {
                 Ok(bundle) => units.push(ManifestUnit::Bundle(Arc::new(bundle))),
                 Err(e) => crate::log_warn!("warm-start manifest: skipping bundle ({e})"),
+            }
+        } else if let Some(rest) = line.strip_prefix("network ") {
+            let Some((n_s, name)) = rest.split_once(' ') else {
+                crate::log_warn!("warm-start manifest: skipping malformed line '{line}'");
+                continue;
+            };
+            let Ok(n) = n_s.trim().parse::<usize>() else {
+                crate::log_warn!("warm-start manifest: skipping malformed line '{line}'");
+                continue;
+            };
+            let mut graph = crate::model::NetworkGraph::new(name);
+            for _ in 0..n {
+                let layer = lines
+                    .next()
+                    .and_then(|l| l.trim().strip_prefix("nlayer "))
+                    .and_then(parse_network_layer_payload);
+                match layer {
+                    Some((layer, max_c, max_k)) => {
+                        if let Err(e) = graph.push_layer(layer, max_c, max_k) {
+                            crate::log_warn!("warm-start manifest: network '{name}': {e}");
+                            break;
+                        }
+                    }
+                    None => break,
+                }
+            }
+            if n > 0 && graph.layers.len() == n {
+                units.push(ManifestUnit::Network(graph));
+            } else {
+                crate::log_warn!(
+                    "warm-start manifest: network '{name}' with {} of {n} parsable layers; \
+                     skipping",
+                    graph.layers.len()
+                );
             }
         } else {
             crate::log_warn!("warm-start manifest: skipping unrecognized line '{line}'");
@@ -297,7 +392,7 @@ mod tests {
         let path = std::env::temp_dir()
             .join(format!("sparsemap-manifest-roundtrip-{}.txt", std::process::id()));
         let path_s = path.to_str().unwrap().to_string();
-        write_manifest(&path_s, &[Arc::clone(&solo)], &[Arc::clone(&bundle)]).unwrap();
+        write_manifest(&path_s, &[Arc::clone(&solo)], &[Arc::clone(&bundle)], &[]).unwrap();
         let units = load_manifest(&path_s).unwrap();
         let _ = std::fs::remove_file(&path);
         assert_eq!(units.len(), 2);
@@ -341,6 +436,70 @@ mod tests {
         match &units[0] {
             ManifestUnit::Block(b) => assert_eq!(b.name, "good"),
             _ => panic!("expected the one good block"),
+        }
+    }
+
+    #[test]
+    fn manifest_round_trips_networks_bit_identically() {
+        use crate::sparse::prune::synthetic_pruned_layer;
+        let mut graph = crate::model::NetworkGraph::new("tiny net");
+        graph
+            .push_layer(synthetic_pruned_layer("conv a", 4, 6, 0.4, 71).unwrap(), 8, 8)
+            .unwrap();
+        graph
+            .push_layer(synthetic_pruned_layer("conv b", 6, 5, 0.5, 72).unwrap(), 8, 8)
+            .unwrap();
+        let graph = Arc::new(graph);
+        let path = std::env::temp_dir()
+            .join(format!("sparsemap-manifest-network-{}.txt", std::process::id()));
+        let path_s = path.to_str().unwrap().to_string();
+        write_manifest(&path_s, &[], &[], &[Arc::clone(&graph)]).unwrap();
+        let units = load_manifest(&path_s).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(units.len(), 1);
+        match &units[0] {
+            ManifestUnit::Network(got) => {
+                assert_eq!(got.name, "tiny net", "network names with spaces survive");
+                assert_eq!(got.layers.len(), 2);
+                for (g, w) in got.layers.iter().zip(&graph.layers) {
+                    assert_eq!(g.layer.name, w.layer.name, "layer names with spaces survive");
+                    assert_eq!((g.max_c, g.max_k), (w.max_c, w.max_k));
+                    assert_eq!(g.layer.mask, w.layer.mask);
+                    let gb: Vec<u32> = g.layer.weights.iter().map(|x| x.to_bits()).collect();
+                    let wb: Vec<u32> = w.layer.weights.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(gb, wb, "weights round-trip bit-identically");
+                    assert_eq!(g.blocks.len(), w.blocks.len(), "re-partition matches");
+                }
+            }
+            _ => panic!("expected the network unit"),
+        }
+    }
+
+    #[test]
+    fn manifest_skips_malformed_networks() {
+        let path = std::env::temp_dir()
+            .join(format!("sparsemap-manifest-badnet-{}.txt", std::process::id()));
+        let path_s = path.to_str().unwrap().to_string();
+        // Three broken networks (truncated, bad weight count, zero
+        // layers) around one good block.
+        std::fs::write(
+            &path,
+            "# sparsemap warm-start manifest v1\n\
+             network 2 truncated\n\
+             nlayer 1 2 8 8 11 0x3f800000 0x40000000 only layer\n\
+             # filler: absorbed by the truncated network's layer scan\n\
+             network 1 shortweights\n\
+             nlayer 1 2 8 8 11 0x3f800000 lone\n\
+             network 0 empty\n\
+             block 2 2 1011 good\n",
+        )
+        .unwrap();
+        let units = load_manifest(&path_s).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(units.len(), 1);
+        match &units[0] {
+            ManifestUnit::Block(b) => assert_eq!(b.name, "good"),
+            _ => panic!("expected only the good block to survive"),
         }
     }
 }

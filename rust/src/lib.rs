@@ -109,6 +109,35 @@
 //! cache path at construction, so a restarted server takes no cold-start
 //! misses. `tests/sharded_serving.rs` locks all of it.
 //!
+//! ## Model ingestion & network serving: serve a pruned CNN, not a block
+//!
+//! The [`model`] layer turns pruned layer dumps into something the
+//! coordinator serves end to end. [`model::dump`] is the ingestion
+//! format — a self-describing text dump (name, `c_total × k_total`,
+//! dense f32 weights as bit patterns, optional 0/1 mask) whose
+//! loader↔writer round trip is bit-identical and whose parser tolerates
+//! unknown fields but rejects structural damage; `cli ingest` loads one
+//! and prints the per-layer [`model::SparsityProfile`] table
+//! ([`report::sparsity_table`]: sparsity, channel-fanout and kernel-size
+//! spreads). [`model::NetworkGraph`] chains pruned layers
+//! (`layers[i].k_total == layers[i+1].c_total`) and partitions each via
+//! [`sparse::partition`] — k ≥ 96 layers tile into the wide-block class,
+//! small layers into bundle-sized pieces; the `vgg_head()` /
+//! `resnet_tail()` presets build synthetic pruned networks at real layer
+//! widths. `Coordinator::register_network` registers every tile
+//! (demand-balanced shard pins), packs the tile population into fused
+//! bundles, and adds the network to the warm-start manifest; then
+//! `ServeSession::enqueue_network(name, x)` returns a `NetworkTicket`
+//! that streams each stage's assembled outputs into the next stage's
+//! block requests (gather live channels → serve through the normal
+//! request path, batching windows included → scatter-accumulate at each
+//! block's kernel offset). The resolved `NetworkResult` carries the
+//! final activation vector plus per-layer cycle/COP/MCID attribution
+//! (`LayerMetrics`), and `tests/network_serving.rs` locks the pipeline
+//! bit-identical to serving each tile solo and ~1e-3-close to the dense
+//! [`model::NetworkGraph::forward`] chain, across shard counts and lane
+//! widths.
+//!
 //! ## Failure model: the serving tier survives its workers
 //!
 //! The worker pool is supervised, and the contract is simple: **every
@@ -246,6 +275,7 @@ pub mod coordinator;
 pub mod dfg;
 pub mod error;
 pub mod mapper;
+pub mod model;
 pub mod report;
 pub mod runtime;
 pub mod sched;

@@ -1,0 +1,316 @@
+//! The pruned-layer dump format: a self-describing, line-oriented text
+//! format carrying a network's layers (name, `c_total × k_total`, dense
+//! f32 weights, optional 0/1 mask). This is the ingestion path for real
+//! pruned models — the stand-in for npz/ONNX-style layer dumps until a
+//! binary front-end lands (ROADMAP follow-on).
+//!
+//! ```text
+//! # sparsemap model dump v1
+//! network tiny_cnn
+//! layer 2 3 conv1
+//! weights 0x3f800000 0x00000000 0xbf000000
+//! weights 0x00000000 0x40200000 0x3e800000
+//! mask 101011
+//! end
+//! ```
+//!
+//! Rules, chosen to mirror the warm-start manifest's garbage tolerance:
+//!
+//! - The first non-empty line must be the [`DUMP_HEADER`]; later `#` lines
+//!   are comments.
+//! - Weights are written as f32 bit patterns (`0x{:08x}` of
+//!   [`f32::to_bits`]) so a loader↔writer round trip is bit-identical;
+//!   the parser also accepts plain decimal floats for hand-written dumps.
+//! - `mask` is optional — absent, it derives as `weight != 0.0`. Present,
+//!   weights outside the mask are forced to zero (pruned semantics).
+//! - Unknown keywords are tolerated with a warning (a newer writer may
+//!   emit fields this parser predates); structural damage — truncated
+//!   payload, weight-count or mask-length mismatch against the declared
+//!   shape — is an [`Error::Workload`].
+
+use crate::error::{Error, Result};
+use crate::sparse::partition::SparseLayer;
+
+/// Required first line of a dump file.
+pub const DUMP_HEADER: &str = "# sparsemap model dump v1";
+
+/// A loaded dump: the network name plus its layers in file order.
+#[derive(Debug)]
+pub struct ModelDump {
+    pub name: String,
+    pub layers: Vec<SparseLayer>,
+}
+
+/// Serialize layers into the dump format. Weights are emitted as bit
+/// patterns, so `load_dump(&dump_to_string(n, &ls))` reproduces every
+/// layer bit-identically.
+pub fn dump_to_string(name: &str, layers: &[SparseLayer]) -> String {
+    let mut out = String::new();
+    out.push_str(DUMP_HEADER);
+    out.push('\n');
+    out.push_str(&format!("network {name}\n"));
+    for layer in layers {
+        out.push_str(&format!("layer {} {} {}\n", layer.c_total, layer.k_total, layer.name));
+        for chunk in layer.weights.chunks(16) {
+            out.push_str("weights");
+            for w in chunk {
+                out.push_str(&format!(" 0x{:08x}", w.to_bits()));
+            }
+            out.push('\n');
+        }
+        out.push_str("mask ");
+        out.extend(layer.mask.iter().map(|&m| if m { '1' } else { '0' }));
+        out.push('\n');
+        out.push_str("end\n");
+    }
+    out
+}
+
+/// Write a dump file (see [`dump_to_string`]).
+pub fn write_dump_file(path: &str, name: &str, layers: &[SparseLayer]) -> Result<()> {
+    std::fs::write(path, dump_to_string(name, layers))?;
+    Ok(())
+}
+
+/// Parse a dump. Unknown keywords warn and skip; structural damage errors.
+pub fn load_dump(text: &str) -> Result<ModelDump> {
+    let mut lines = text.lines();
+    let header = loop {
+        match lines.next() {
+            Some(l) if l.trim().is_empty() => continue,
+            Some(l) => break l.trim(),
+            None => {
+                return Err(Error::Workload("model dump: empty input".into()));
+            }
+        }
+    };
+    if header != DUMP_HEADER {
+        return Err(Error::Workload(format!(
+            "model dump: bad header '{header}' (want '{DUMP_HEADER}')"
+        )));
+    }
+
+    let mut name = String::from("model");
+    let mut layers: Vec<SparseLayer> = Vec::new();
+    // Open layer being assembled: (name, c, k, weights, mask).
+    let mut open: Option<(String, usize, usize, Vec<f32>, Option<Vec<bool>>)> = None;
+
+    for raw in lines {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (kw, rest) = match line.split_once(' ') {
+            Some((kw, rest)) => (kw, rest.trim()),
+            None => (line, ""),
+        };
+        match kw {
+            "network" => {
+                if rest.is_empty() {
+                    crate::log_warn!("model dump: 'network' line without a name; keeping '{name}'");
+                } else {
+                    name = rest.to_string();
+                }
+            }
+            "layer" => {
+                if let Some((lname, ..)) = &open {
+                    return Err(Error::Workload(format!(
+                        "model dump: layer '{lname}' not terminated before next 'layer'"
+                    )));
+                }
+                let mut parts = rest.splitn(3, ' ');
+                let c = parse_dim(parts.next(), "c_total", rest)?;
+                let k = parse_dim(parts.next(), "k_total", rest)?;
+                let lname = parts.next().map(str::trim).unwrap_or("");
+                if lname.is_empty() {
+                    return Err(Error::Workload(format!(
+                        "model dump: layer line '{rest}' missing a name"
+                    )));
+                }
+                open = Some((lname.to_string(), c, k, Vec::new(), None));
+            }
+            "weights" => match &mut open {
+                Some((lname, c, k, weights, _)) => {
+                    for tok in rest.split_whitespace() {
+                        weights.push(parse_weight(tok, lname)?);
+                    }
+                    if weights.len() > *c * *k {
+                        return Err(Error::Workload(format!(
+                            "model dump: layer '{lname}': {} weights exceed {c}x{k}",
+                            weights.len()
+                        )));
+                    }
+                }
+                None => crate::log_warn!("model dump: 'weights' outside a layer; skipping"),
+            },
+            "mask" => match &mut open {
+                Some((lname, c, k, _, mask)) => {
+                    if rest.len() != *c * *k || !rest.bytes().all(|b| b == b'0' || b == b'1') {
+                        return Err(Error::Workload(format!(
+                            "model dump: layer '{lname}': mask is not {c}x{k} 0/1 chars"
+                        )));
+                    }
+                    *mask = Some(rest.bytes().map(|b| b == b'1').collect());
+                }
+                None => crate::log_warn!("model dump: 'mask' outside a layer; skipping"),
+            },
+            "end" => match open.take() {
+                Some((lname, c, k, mut weights, mask)) => {
+                    if weights.len() != c * k {
+                        return Err(Error::Workload(format!(
+                            "model dump: layer '{lname}': {} weights for {c}x{k}",
+                            weights.len()
+                        )));
+                    }
+                    let mask = match mask {
+                        Some(m) => {
+                            // Pruned semantics: the mask is authoritative.
+                            for (w, &m) in weights.iter_mut().zip(&m) {
+                                if !m {
+                                    *w = 0.0;
+                                }
+                            }
+                            m
+                        }
+                        None => weights.iter().map(|&w| w != 0.0).collect(),
+                    };
+                    layers.push(SparseLayer::new(&lname, c, k, weights, mask)?);
+                }
+                None => crate::log_warn!("model dump: stray 'end'; skipping"),
+            },
+            other => {
+                crate::log_warn!("model dump: unknown keyword '{other}'; skipping line");
+            }
+        }
+    }
+    if let Some((lname, ..)) = open {
+        return Err(Error::Workload(format!(
+            "model dump: truncated — layer '{lname}' has no 'end'"
+        )));
+    }
+    if layers.is_empty() {
+        return Err(Error::Workload(format!("model dump '{name}': no layers")));
+    }
+    Ok(ModelDump { name, layers })
+}
+
+/// Load a dump file (see [`load_dump`]).
+pub fn load_dump_file(path: &str) -> Result<ModelDump> {
+    load_dump(&std::fs::read_to_string(path)?)
+}
+
+fn parse_dim(tok: Option<&str>, what: &str, line: &str) -> Result<usize> {
+    let tok = tok
+        .ok_or_else(|| Error::Workload(format!("model dump: layer line '{line}' missing {what}")))?;
+    let dim: usize = tok.parse().map_err(|_| {
+        Error::Workload(format!("model dump: bad {what} '{tok}' in layer line '{line}'"))
+    })?;
+    if dim == 0 {
+        return Err(Error::Workload(format!("model dump: {what} = 0 in layer line '{line}'")));
+    }
+    Ok(dim)
+}
+
+fn parse_weight(tok: &str, lname: &str) -> Result<f32> {
+    if let Some(hex) = tok.strip_prefix("0x").or_else(|| tok.strip_prefix("0X")) {
+        return u32::from_str_radix(hex, 16)
+            .map(f32::from_bits)
+            .map_err(|_| {
+                Error::Workload(format!("model dump: layer '{lname}': bad weight bits '{tok}'"))
+            });
+    }
+    tok.parse().map_err(|_| {
+        Error::Workload(format!("model dump: layer '{lname}': bad weight '{tok}'"))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::prune::synthetic_pruned_layer;
+
+    fn layers() -> Vec<SparseLayer> {
+        vec![
+            synthetic_pruned_layer("conv1", 6, 8, 0.45, 31).unwrap(),
+            synthetic_pruned_layer("conv2", 8, 5, 0.60, 32).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn round_trip_is_bit_identical() {
+        let ls = layers();
+        let text = dump_to_string("tiny", &ls);
+        let dump = load_dump(&text).unwrap();
+        assert_eq!(dump.name, "tiny");
+        assert_eq!(dump.layers.len(), ls.len());
+        for (got, want) in dump.layers.iter().zip(&ls) {
+            assert_eq!(got.name, want.name);
+            assert_eq!((got.c_total, got.k_total), (want.c_total, want.k_total));
+            assert_eq!(got.mask, want.mask);
+            let gb: Vec<u32> = got.weights.iter().map(|w| w.to_bits()).collect();
+            let wb: Vec<u32> = want.weights.iter().map(|w| w.to_bits()).collect();
+            assert_eq!(gb, wb, "weights must round-trip bit-identically");
+        }
+    }
+
+    #[test]
+    fn rejects_missing_or_bad_header() {
+        assert!(load_dump("").is_err());
+        assert!(load_dump("network x\n").is_err());
+        assert!(load_dump("# sparsemap model dump v2\nnetwork x\n").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        // Cut the dump off mid-layer: declared 6x8 but the file ends
+        // before `end`.
+        let full = dump_to_string("t", &layers());
+        let cut = full.find("end").unwrap();
+        let err = load_dump(&full[..cut]).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn rejects_weight_count_mismatch() {
+        let text = format!("{DUMP_HEADER}\nlayer 2 2 l\nweights 0x3f800000 1.0 2.0\nend\n");
+        let err = load_dump(&text).unwrap_err();
+        assert!(err.to_string().contains("3 weights for 2x2"), "{err}");
+        let text = format!("{DUMP_HEADER}\nlayer 2 2 l\nweights 1 2 3 4 5\nend\n");
+        assert!(load_dump(&text).is_err());
+    }
+
+    #[test]
+    fn rejects_mask_shape_mismatch() {
+        let text = format!("{DUMP_HEADER}\nlayer 2 2 l\nweights 1 2 3 4\nmask 101\nend\n");
+        assert!(load_dump(&text).is_err());
+        let text = format!("{DUMP_HEADER}\nlayer 2 2 l\nweights 1 2 3 4\nmask 10x1\nend\n");
+        assert!(load_dump(&text).is_err());
+    }
+
+    #[test]
+    fn tolerates_unknown_fields_and_comments() {
+        let text = format!(
+            "{DUMP_HEADER}\n# a comment\nnetwork n\nframework torch-prune 2.1\n\
+             layer 2 2 l\nquantization none\nweights 1.0 0.0 2.0 3.0\nend\n"
+        );
+        let dump = load_dump(&text).unwrap();
+        assert_eq!(dump.name, "n");
+        assert_eq!(dump.layers.len(), 1);
+        // No mask line: derived from nonzero weights.
+        assert_eq!(dump.layers[0].mask, vec![true, false, true, true]);
+    }
+
+    #[test]
+    fn mask_is_authoritative_over_weights() {
+        let text = format!("{DUMP_HEADER}\nlayer 2 2 l\nweights 1 2 3 4\nmask 1010\nend\n");
+        let dump = load_dump(&text).unwrap();
+        assert_eq!(dump.layers[0].weights, vec![1.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn accepts_decimal_weights() {
+        let text = format!("{DUMP_HEADER}\nlayer 1 3 l\nweights 1.5 -0.25 0\nend\n");
+        let dump = load_dump(&text).unwrap();
+        assert_eq!(dump.layers[0].weights, vec![1.5, -0.25, 0.0]);
+    }
+}

@@ -1,0 +1,200 @@
+//! `NetworkGraph`: an ordered chain of pruned [`SparseLayer`]s, each
+//! pre-partitioned into mapper-sized blocks. This is the unit the
+//! coordinator registers and serves end-to-end — layer L's assembled
+//! outputs stream into layer L+1's partitioned-block requests.
+//!
+//! Construction validates the chain shape (`layers[i].k_total ==
+//! layers[i+1].c_total` — the im2col-flattened view where a layer's
+//! kernels are the next layer's channels) and partitions every layer up
+//! front, so a registered network's block population is fixed and the
+//! fusion planner can pack the small-layer tiles into bundles.
+//!
+//! The [`vgg_head`] / [`resnet_tail`] presets build synthetic pruned
+//! networks at real layer widths via
+//! [`crate::sparse::prune::synthetic_pruned_layer`]; their k ≥ 96 layers
+//! tile into the wide-block class (PR 3) the mapper's `wide` operating
+//! point exists for.
+
+use crate::error::{Error, Result};
+use crate::sparse::partition::{LayerBlock, SparseLayer};
+
+/// One layer of a network: the layer itself, its tile caps, and the
+/// partitioned blocks (fixed at construction).
+#[derive(Clone, Debug)]
+pub struct NetworkLayer {
+    pub layer: SparseLayer,
+    pub max_c: usize,
+    pub max_k: usize,
+    pub blocks: Vec<LayerBlock>,
+}
+
+/// An ordered chain of pruned layers, partitioned and ready to register.
+#[derive(Clone, Debug)]
+pub struct NetworkGraph {
+    pub name: String,
+    pub layers: Vec<NetworkLayer>,
+}
+
+/// Default per-layer tile caps: k ≥ 96 layers tile into the proven
+/// wide-block class (`32 × 128`); small layers tile into paper-block-sized
+/// pieces the fusion planner can bundle.
+pub fn tile_caps(layer: &SparseLayer) -> (usize, usize) {
+    if layer.k_total >= 96 {
+        (32, 128)
+    } else {
+        (8, 8)
+    }
+}
+
+impl NetworkGraph {
+    pub fn new(name: &str) -> Self {
+        NetworkGraph { name: name.to_string(), layers: Vec::new() }
+    }
+
+    /// Append a layer with explicit tile caps. Validates the chain shape
+    /// and that the layer partitions into at least one block.
+    pub fn push_layer(&mut self, layer: SparseLayer, max_c: usize, max_k: usize) -> Result<()> {
+        if let Some(prev) = self.layers.last() {
+            if prev.layer.k_total != layer.c_total {
+                return Err(Error::Workload(format!(
+                    "network '{}': layer '{}' expects {} input channels but '{}' \
+                     produces {} kernels",
+                    self.name, layer.name, layer.c_total, prev.layer.name, prev.layer.k_total
+                )));
+            }
+        }
+        let blocks = layer.partition(max_c, max_k);
+        if blocks.is_empty() {
+            return Err(Error::Workload(format!(
+                "network '{}': layer '{}' is entirely zero — nothing to serve",
+                self.name, layer.name
+            )));
+        }
+        self.layers.push(NetworkLayer { layer, max_c, max_k, blocks });
+        Ok(())
+    }
+
+    /// Build a network from layers in order, using [`tile_caps`] per layer.
+    pub fn from_layers(name: &str, layers: Vec<SparseLayer>) -> Result<Self> {
+        let mut net = NetworkGraph::new(name);
+        for layer in layers {
+            let (max_c, max_k) = tile_caps(&layer);
+            net.push_layer(layer, max_c, max_k)?;
+        }
+        if net.layers.is_empty() {
+            return Err(Error::Workload(format!("network '{name}': no layers")));
+        }
+        Ok(net)
+    }
+
+    /// Input width (channels of the first layer).
+    pub fn input_width(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.layer.c_total)
+    }
+
+    /// Output width (kernels of the last layer).
+    pub fn output_width(&self) -> usize {
+        self.layers.last().map_or(0, |l| l.layer.k_total)
+    }
+
+    /// Total partitioned blocks across all layers.
+    pub fn block_count(&self) -> usize {
+        self.layers.iter().map(|l| l.blocks.len()).sum()
+    }
+
+    /// Dense reference forward: chain every layer's
+    /// [`SparseLayer::forward`]. The serving path
+    /// (`ServeSession::enqueue_network`) is held bit-identical to this.
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        let mut cur = x.to_vec();
+        for nl in &self.layers {
+            cur = nl.layer.forward(&cur);
+        }
+        cur
+    }
+}
+
+/// Synthetic pruned VGG-16 head at real layer widths: conv1_1 … conv2_2.
+/// The k = 128 layers tile into the wide_k128 class (`32 × 128` tiles at
+/// ~0.92 sparsity — the exact shape `sparse::gen::wide_blocks` benches).
+pub fn vgg_head() -> NetworkGraph {
+    use crate::sparse::prune::synthetic_pruned_layer;
+    let layers = vec![
+        // Early layers prune little; deep layers prune hard (paper §1).
+        synthetic_pruned_layer("conv1_1", 3, 64, 0.30, 1101).unwrap(),
+        synthetic_pruned_layer("conv1_2", 64, 64, 0.80, 1102).unwrap(),
+        synthetic_pruned_layer("conv2_1", 64, 128, 0.92, 1103).unwrap(),
+        synthetic_pruned_layer("conv2_2", 128, 128, 0.92, 1104).unwrap(),
+    ];
+    NetworkGraph::from_layers("vgg_head", layers).expect("vgg_head preset")
+}
+
+/// Synthetic pruned ResNet-18 tail at real layer widths: the deep,
+/// hard-pruned end of the network plus the narrow projection into the
+/// classifier head.
+pub fn resnet_tail() -> NetworkGraph {
+    use crate::sparse::prune::synthetic_pruned_layer;
+    let layers = vec![
+        synthetic_pruned_layer("layer4_conv1", 128, 128, 0.92, 2101).unwrap(),
+        synthetic_pruned_layer("layer4_conv2", 128, 256, 0.94, 2102).unwrap(),
+        synthetic_pruned_layer("layer4_conv3", 256, 256, 0.94, 2103).unwrap(),
+        synthetic_pruned_layer("fc_proj", 256, 64, 0.90, 2104).unwrap(),
+    ];
+    NetworkGraph::from_layers("resnet_tail", layers).expect("resnet_tail preset")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::partition::SparseLayer;
+    use crate::sparse::prune::synthetic_pruned_layer;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn rejects_shape_mismatch_between_layers() {
+        let a = synthetic_pruned_layer("a", 4, 6, 0.4, 1).unwrap();
+        let b = synthetic_pruned_layer("b", 5, 4, 0.4, 2).unwrap();
+        let err = NetworkGraph::from_layers("bad", vec![a, b]).unwrap_err();
+        assert!(err.to_string().contains("expects 5 input channels"), "{err}");
+    }
+
+    #[test]
+    fn rejects_all_zero_layer() {
+        let z = SparseLayer::new("z", 4, 4, vec![0.0; 16], vec![false; 16]).unwrap();
+        assert!(NetworkGraph::from_layers("zero", vec![z]).is_err());
+    }
+
+    #[test]
+    fn forward_chains_layers() {
+        let a = synthetic_pruned_layer("a", 6, 8, 0.5, 3).unwrap();
+        let b = synthetic_pruned_layer("b", 8, 5, 0.5, 4).unwrap();
+        let want_a = a.clone();
+        let want_b = b.clone();
+        let net = NetworkGraph::from_layers("two", vec![a, b]).unwrap();
+        assert_eq!(net.input_width(), 6);
+        assert_eq!(net.output_width(), 5);
+        let mut rng = Pcg64::seeded(9);
+        let x: Vec<f32> = (0..6).map(|_| rng.next_normal() as f32).collect();
+        let got = net.forward(&x);
+        let want = want_b.forward(&want_a.forward(&x));
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn presets_build_with_wide_class_tiles() {
+        for net in [vgg_head(), resnet_tail()] {
+            assert!(net.layers.len() >= 4, "{}", net.name);
+            assert!(net.block_count() > 0);
+            // At least one layer tiles into the wide-block class.
+            let wide = net
+                .layers
+                .iter()
+                .any(|nl| nl.max_k >= 96 && nl.blocks.iter().any(|lb| lb.block.k >= 96));
+            assert!(wide, "{}: no wide_k128-class tiles", net.name);
+            // Chain shape holds end to end.
+            for pair in net.layers.windows(2) {
+                assert_eq!(pair[0].layer.k_total, pair[1].layer.c_total);
+            }
+        }
+    }
+}

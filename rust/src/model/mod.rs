@@ -1,0 +1,151 @@
+//! Model ingestion: pruned-layer dumps → [`SparseLayer`]s →
+//! [`NetworkGraph`]s the coordinator serves end-to-end.
+//!
+//! - [`dump`] — the self-describing layer-dump format (loader + writer,
+//!   bit-identical round trip, garbage-tolerant parse).
+//! - [`graph`] — [`NetworkGraph`]: ordered pruned layers partitioned into
+//!   mapper-sized blocks, plus the `vgg_head` / `resnet_tail` presets.
+//! - [`SparsityProfile`] — per-layer characterization (overall sparsity,
+//!   per-channel fanout histogram, per-kernel size histogram), the
+//!   fpgaconvnet-style summary `report::sparsity_table` renders and
+//!   `cli ingest` prints.
+
+pub mod dump;
+pub mod graph;
+
+pub use dump::{dump_to_string, load_dump, load_dump_file, write_dump_file, ModelDump};
+pub use graph::{resnet_tail, vgg_head, NetworkGraph, NetworkLayer};
+
+use crate::sparse::partition::SparseLayer;
+
+/// Per-layer sparsity characterization.
+///
+/// The histograms are indexed by value: `fanout_hist[f]` counts channels
+/// whose weights reach `f` kernels; `kernel_hist[s]` counts kernels with
+/// `s` live channels. Both always have at least one entry (index 0).
+#[derive(Clone, Debug)]
+pub struct SparsityProfile {
+    pub name: String,
+    pub c_total: usize,
+    pub k_total: usize,
+    pub nonzeros: usize,
+    /// Fraction of zero weights.
+    pub sparsity: f64,
+    /// `fanout_hist[f]` = number of channels with fanout `f`.
+    pub fanout_hist: Vec<usize>,
+    /// `kernel_hist[s]` = number of kernels of size `s`.
+    pub kernel_hist: Vec<usize>,
+}
+
+impl SparsityProfile {
+    /// (min, median, max) channel fanout over channels with any weight.
+    pub fn fanout_spread(&self) -> (usize, usize, usize) {
+        spread(&self.fanout_hist)
+    }
+
+    /// (min, median, max) kernel size over kernels with any weight.
+    pub fn kernel_spread(&self) -> (usize, usize, usize) {
+        spread(&self.kernel_hist)
+    }
+}
+
+/// Characterize one layer.
+pub fn profile(layer: &SparseLayer) -> SparsityProfile {
+    let (c, k) = (layer.c_total, layer.k_total);
+    let mut fanout = vec![0usize; c];
+    let mut ksize = vec![0usize; k];
+    let mut nonzeros = 0usize;
+    for ch in 0..c {
+        for kr in 0..k {
+            if layer.mask[ch * k + kr] {
+                fanout[ch] += 1;
+                ksize[kr] += 1;
+                nonzeros += 1;
+            }
+        }
+    }
+    SparsityProfile {
+        name: layer.name.clone(),
+        c_total: c,
+        k_total: k,
+        nonzeros,
+        sparsity: 1.0 - nonzeros as f64 / (c * k) as f64,
+        fanout_hist: histogram(&fanout),
+        kernel_hist: histogram(&ksize),
+    }
+}
+
+/// Characterize every layer of a network.
+pub fn profile_network(net: &NetworkGraph) -> Vec<SparsityProfile> {
+    net.layers.iter().map(|nl| profile(&nl.layer)).collect()
+}
+
+fn histogram(values: &[usize]) -> Vec<usize> {
+    let max = values.iter().copied().max().unwrap_or(0);
+    let mut hist = vec![0usize; max + 1];
+    for &v in values {
+        hist[v] += 1;
+    }
+    hist
+}
+
+/// (min, median, max) over the nonzero-valued entries of a histogram
+/// (index 0 — dead channels/kernels — excluded).
+fn spread(hist: &[usize]) -> (usize, usize, usize) {
+    let total: usize = hist.iter().skip(1).sum();
+    if total == 0 {
+        return (0, 0, 0);
+    }
+    let min = hist.iter().enumerate().skip(1).find(|(_, &n)| n > 0).map(|(i, _)| i).unwrap();
+    let max = hist
+        .iter()
+        .enumerate()
+        .skip(1)
+        .rev()
+        .find(|(_, &n)| n > 0)
+        .map(|(i, _)| i)
+        .unwrap();
+    let mut seen = 0usize;
+    let mut median = min;
+    for (i, &n) in hist.iter().enumerate().skip(1) {
+        seen += n;
+        if seen * 2 >= total {
+            median = i;
+            break;
+        }
+    }
+    (min, median, max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_counts_histograms() {
+        // 2x3 layer: channel 0 reaches kernels {0,2}; channel 1 reaches {0}.
+        let mask = vec![true, false, true, true, false, false];
+        let weights = vec![1.0, 0.0, 2.0, 3.0, 0.0, 0.0];
+        let l = SparseLayer::new("p", 2, 3, weights, mask).unwrap();
+        let p = profile(&l);
+        assert_eq!(p.nonzeros, 3);
+        assert!((p.sparsity - 0.5).abs() < 1e-9);
+        // Fanouts: [2, 1] → hist [0, 1, 1].
+        assert_eq!(p.fanout_hist, vec![0, 1, 1]);
+        // Kernel sizes: [2, 0, 1] → hist [1, 1, 1].
+        assert_eq!(p.kernel_hist, vec![1, 1, 1]);
+        assert_eq!(p.fanout_spread(), (1, 1, 2));
+        assert_eq!(p.kernel_spread(), (1, 1, 2));
+    }
+
+    #[test]
+    fn profile_matches_prune_sparsity() {
+        use crate::sparse::prune::{sparsity, synthetic_pruned_layer};
+        let l = synthetic_pruned_layer("s", 16, 12, 0.7, 5).unwrap();
+        let p = profile(&l);
+        assert!((p.sparsity - sparsity(&l)).abs() < 1e-12);
+        let total_by_fanout: usize =
+            p.fanout_hist.iter().enumerate().map(|(f, &n)| f * n).sum();
+        assert_eq!(total_by_fanout, p.nonzeros);
+    }
+}

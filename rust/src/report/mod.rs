@@ -4,6 +4,7 @@
 use crate::arch::StreamingCgra;
 use crate::config::Techniques;
 use crate::mapper::{map_block, MapperOptions};
+use crate::model::SparsityProfile;
 use crate::sparse::gen::{paper_blocks, NamedBlock};
 use crate::util::table::Table;
 
@@ -178,6 +179,28 @@ pub fn table4(cgra: &StreamingCgra) -> (Table, Vec<Vec<MappingRow>>) {
     (t, all_rows)
 }
 
+/// Per-layer sparsity characterization table (the `cli ingest` report):
+/// shape, nonzeros, overall sparsity, and the channel-fanout / kernel-size
+/// spreads that predict how well each layer's tiles map.
+pub fn sparsity_table(profiles: &[SparsityProfile]) -> Table {
+    let mut t = Table::new([
+        "layer", "CxK", "nnz", "sparsity", "fanout(min/med/max)", "kernel(min/med/max)",
+    ]);
+    for p in profiles {
+        let (fmin, fmed, fmax) = p.fanout_spread();
+        let (kmin, kmed, kmax) = p.kernel_spread();
+        t.row([
+            p.name.clone(),
+            format!("{}x{}", p.c_total, p.k_total),
+            p.nonzeros.to_string(),
+            format!("{:.3}", p.sparsity),
+            format!("{fmin}/{fmed}/{fmax}"),
+            format!("{kmin}/{kmed}/{kmax}"),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,6 +213,17 @@ mod tests {
         assert!(s.contains("block1") && s.contains("C4K6"), "{s}");
         assert!(s.contains("block5") && s.contains("C8K8"));
         assert_eq!(t.num_rows(), 7);
+    }
+
+    #[test]
+    fn sparsity_table_renders_every_layer() {
+        let net = crate::model::vgg_head();
+        let profiles = crate::model::profile_network(&net);
+        let t = sparsity_table(&profiles);
+        assert_eq!(t.num_rows(), net.layers.len());
+        let s = t.render();
+        assert!(s.contains("conv1_1") && s.contains("3x64"), "{s}");
+        assert!(s.contains("conv2_2") && s.contains("128x128"), "{s}");
     }
 
     #[test]

@@ -27,8 +27,13 @@ pub fn magnitude_prune(
             "prune '{name}': sparsity {target_sparsity} outside [0,1)"
         )));
     }
+    if let Some(pos) = weights.iter().position(|w| w.is_nan()) {
+        return Err(Error::Workload(format!(
+            "prune '{name}': NaN weight at index {pos}"
+        )));
+    }
     let mut mags: Vec<f32> = weights.iter().map(|w| w.abs()).collect();
-    mags.sort_by(|a, b| a.partial_cmp(b).expect("no NaN weights"));
+    mags.sort_by(f32::total_cmp);
     let cut = ((weights.len() as f64) * target_sparsity).floor() as usize;
     let threshold = if cut == 0 { -1.0 } else { mags[cut - 1] };
     let mask: Vec<bool> = weights.iter().map(|w| w.abs() > threshold).collect();
@@ -115,5 +120,19 @@ mod tests {
     fn rejects_bad_input() {
         assert!(magnitude_prune("b", 2, 2, &[1.0; 3], 0.5).is_err());
         assert!(magnitude_prune("b", 2, 2, &[1.0; 4], 1.0).is_err());
+    }
+
+    #[test]
+    fn rejects_nan_weights_without_panicking() {
+        let weights = [1.0, f32::NAN, 3.0, 4.0];
+        let err = magnitude_prune("nan", 2, 2, &weights, 0.5).unwrap_err();
+        match err {
+            Error::Workload(msg) => assert!(msg.contains("NaN"), "{msg}"),
+            other => panic!("expected Workload error, got {other}"),
+        }
+        // Infinities are orderable and must still prune fine (total_cmp).
+        let weights = [1.0, f32::INFINITY, -3.0, 0.5];
+        let l = magnitude_prune("inf", 2, 2, &weights, 0.5).unwrap();
+        assert_eq!(sparsity(&l), 0.5);
     }
 }

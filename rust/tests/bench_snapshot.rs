@@ -174,5 +174,10 @@ fn bench_mapper_json_schema() {
     require("serving/fused3/window8_lanes", &["serving/fused3/window8_compiled"]);
     require("serving/fused3/window8_compiled", &["serving/fused3/window8_lanes"]);
     require("serving/wide_k128/window8_lanes", &["serving/wide_k128/per_request_compiled"]);
+    // Network pipeline rows: one serving run writes both (the per_layer
+    // row is the e2e passes normalized by stage count), so a merge must
+    // keep the pair together.
+    require("serving/network/vgg_head_e2e", &["serving/network/per_layer"]);
+    require("serving/network/per_layer", &["serving/network/vgg_head_e2e"]);
     eprintln!("BENCH_mapper.json schema ok ({rows} rows)");
 }

@@ -1,0 +1,262 @@
+//! Acceptance suite for model ingestion + whole-network pipeline serving:
+//! a synthetic pruned ≥4-layer network (one wide_k128-class layer
+//! included) loads through `cli ingest`, registers with the coordinator,
+//! and serves end to end through `ServeSession::enqueue_network` —
+//! bit-identical to the per-layer reference chain that serves every
+//! partitioned tile solo through the plain session API with the same
+//! gather/scatter, ~1e-3-close to the dense `NetworkGraph::forward`
+//! chain, with per-layer cycle/COP/MCID attribution. The equivalence
+//! matrix locks the pipeline bit-identical across shard counts and lane
+//! widths (CI additionally runs this file under `SPARSEMAP_SHARDS=2`).
+
+use std::sync::Arc;
+
+use sparsemap::config::SparsemapConfig;
+use sparsemap::coordinator::{Coordinator, NetworkResult};
+use sparsemap::mapper::MapperOptions;
+use sparsemap::model::{dump_to_string, load_dump, NetworkGraph};
+use sparsemap::sparse::partition::SparseLayer;
+use sparsemap::sparse::prune::synthetic_pruned_layer;
+use sparsemap::util::rng::Pcg64;
+
+/// The acceptance network: four pruned layers, the third in the
+/// wide_k128 class (k = 128 tiles at ~0.92 sparsity — the shape the
+/// mapper's wide operating point exists for).
+fn acceptance_layers() -> Vec<SparseLayer> {
+    vec![
+        synthetic_pruned_layer("net_conv1", 6, 8, 0.50, 301).unwrap(),
+        synthetic_pruned_layer("net_conv2", 8, 12, 0.60, 302).unwrap(),
+        synthetic_pruned_layer("net_wide", 12, 128, 0.92, 303).unwrap(),
+        synthetic_pruned_layer("net_head", 128, 8, 0.90, 304).unwrap(),
+    ]
+}
+
+/// A cheaper all-small-tile network for the topology matrix.
+fn small_layers() -> Vec<SparseLayer> {
+    vec![
+        synthetic_pruned_layer("sm1", 6, 8, 0.50, 311).unwrap(),
+        synthetic_pruned_layer("sm2", 8, 10, 0.60, 312).unwrap(),
+        synthetic_pruned_layer("sm3", 10, 4, 0.50, 313).unwrap(),
+    ]
+}
+
+/// Serving config at the wide operating point (the k = 128 tile needs
+/// its II slack), worker-pool sized for a 16-tile stage.
+fn net_cfg() -> SparsemapConfig {
+    let wide = MapperOptions::wide();
+    let mut cfg = SparsemapConfig::default();
+    cfg.workers = 2;
+    cfg.queue_depth = 32;
+    cfg.parallelism = 1;
+    cfg.ii_slack = wide.ii_slack;
+    cfg.mis_iterations = wide.mis_iterations;
+    cfg
+}
+
+fn input_for(width: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..width).map(|_| rng.next_normal() as f32).collect()
+}
+
+fn bits(r: &NetworkResult) -> Vec<u32> {
+    r.outputs.iter().map(|v| v.to_bits()).collect()
+}
+
+/// The reference chain: each partitioned tile served SOLO through the
+/// plain session API with the pipeline's exact gather/scatter (live
+/// channels in, scatter-sum at the tile's kernel offset, partition
+/// order). Serving outputs are a pure function of the mapping — window
+/// composition, shard count and backend never move bits — so the
+/// pipeline must reproduce this chain exactly.
+fn serve_reference_chain(coord: &Coordinator, net: &NetworkGraph, x: &[f32]) -> Vec<f32> {
+    let mut cur = x.to_vec();
+    for nl in &net.layers {
+        let mut acc = vec![0f32; nl.layer.k_total];
+        for lb in &nl.blocks {
+            let live = SparseLayer::live_channels(&lb.block.name);
+            let xs = vec![live.iter().map(|&ch| cur[ch]).collect::<Vec<f32>>()];
+            // Same shape as the pipeline's stage driver: the throwaway
+            // session drops before the wait, sealing any window the
+            // request joined.
+            let ticket = {
+                let mut session = coord.session();
+                session.enqueue(Arc::new(lb.block.clone()), xs)
+            };
+            let res = ticket.wait().expect("reference tile request ok");
+            let y = res.outputs.first().cloned().unwrap_or_default();
+            for (bk, &v) in y.iter().enumerate() {
+                acc[lb.kr_offset + bk] += v;
+            }
+        }
+        cur = acc;
+    }
+    cur
+}
+
+#[test]
+fn pipeline_serves_the_acceptance_network_end_to_end() {
+    // Ingest path: the network travels as a dump (bit-identical round
+    // trip) and `cli ingest` accepts the file with exit code 0.
+    let layers = acceptance_layers();
+    let text = dump_to_string("acceptance_net", &layers);
+    let path = std::env::temp_dir()
+        .join(format!("sparsemap-acceptance-net-{}.dump", std::process::id()));
+    let path_s = path.to_str().unwrap().to_string();
+    std::fs::write(&path, &text).unwrap();
+    let code =
+        sparsemap::cli::run(vec!["ingest".to_string(), "--dump".to_string(), path_s.clone()]);
+    assert_eq!(code, 0, "cli ingest must accept the acceptance dump");
+    let dump = load_dump(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    let net = NetworkGraph::from_layers(&dump.name, dump.layers).unwrap();
+    assert!(net.layers.len() >= 4, "acceptance network is >= 4 layers");
+    assert!(
+        net.layers.iter().any(|nl| nl.blocks.iter().any(|lb| lb.block.k >= 96)),
+        "one layer must tile into the wide_k128 class"
+    );
+
+    let cfg = net_cfg();
+    let coord = Coordinator::with_shard_count(&cfg, 2);
+    let serving = coord.register_network(net.clone()).unwrap();
+    assert_eq!(serving.name, "acceptance_net");
+    assert_eq!(coord.network_names(), vec!["acceptance_net".to_string()]);
+    assert_eq!(serving.block_count(), net.block_count());
+
+    let x = input_for(net.input_width(), 41);
+    let session = coord.session();
+    let res = session
+        .enqueue_network("acceptance_net", &x)
+        .unwrap()
+        .wait()
+        .expect("pipeline request ok");
+
+    // Shape + per-layer attribution.
+    assert_eq!(res.outputs.len(), net.output_width());
+    assert_eq!(res.layers.len(), net.layers.len(), "one attribution row per layer");
+    let mut total_cops = 0usize;
+    for (lm, nl) in res.layers.iter().zip(&net.layers) {
+        assert_eq!(lm.layer, nl.layer.name);
+        assert_eq!(lm.blocks, nl.blocks.len());
+        assert!(lm.cycles > 0, "{}: zero cycles attributed", lm.layer);
+        assert!(lm.latency_ns > 0, "{}: zero latency attributed", lm.layer);
+        total_cops += lm.cops + lm.mcids;
+    }
+    assert!(total_cops > 0, "COP/MCID attribution must surface the mappings' counts");
+    assert_eq!(
+        res.cycles,
+        res.layers.iter().map(|l| l.cycles).sum::<u64>(),
+        "network cycles are the per-layer sum"
+    );
+
+    // Bit-identity against the solo-served reference chain, on a fresh
+    // coordinator (same config, nothing registered): mapping and
+    // simulation are deterministic, so the tiles serve identically.
+    let ref_coord = Coordinator::with_shard_count(&cfg, 1);
+    let reference = serve_reference_chain(&ref_coord, &net, &x);
+    let got: Vec<u32> = res.outputs.iter().map(|v| v.to_bits()).collect();
+    let want: Vec<u32> = reference.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(got, want, "pipeline output != solo-served reference chain");
+
+    // Approximate agreement with the dense forward chain (per-mapping
+    // accumulation order differs, so this is relative-tolerance, not
+    // bit-exact).
+    let dense = net.forward(&x);
+    for (i, (a, b)) in res.outputs.iter().zip(&dense).enumerate() {
+        let tol = 1e-3 * (1.0 + b.abs());
+        assert!((a - b).abs() <= tol, "output {i}: pipeline {a} vs dense {b}");
+    }
+
+    // The serving counters saw the pipeline.
+    let m = coord.metrics.snapshot();
+    assert_eq!(m.networks_served, 1);
+    assert_eq!(m.network_stages, net.layers.len() as u64);
+}
+
+#[test]
+fn pipeline_output_is_bit_identical_across_shards_and_lanes() {
+    let layers = small_layers();
+    let net = NetworkGraph::from_layers("matrix_net", layers).unwrap();
+    let x = input_for(net.input_width(), 57);
+
+    let run = |shards: usize, lanes: usize| -> (Vec<u32>, u64) {
+        let mut cfg = net_cfg();
+        cfg.sim_lanes = lanes;
+        let coord = Coordinator::with_shard_count(&cfg, shards);
+        let serving = coord.register_network(net.clone()).unwrap();
+        let session = coord.session();
+        let res = session
+            .enqueue_network(&serving.name, &x)
+            .unwrap()
+            .wait()
+            .expect("matrix pipeline ok");
+        (bits(&res), res.cycles)
+    };
+
+    let reference = run(1, 1);
+    for (shards, lanes) in [(1usize, 4usize), (2, 1), (2, 4)] {
+        let got = run(shards, lanes);
+        assert_eq!(
+            got, reference,
+            "pipeline output diverged at shards={shards} lanes={lanes}"
+        );
+    }
+}
+
+#[test]
+fn repeated_pipeline_requests_are_deterministic_and_cached() {
+    let net = NetworkGraph::from_layers("repeat_net", small_layers()).unwrap();
+    let cfg = net_cfg();
+    let coord = Coordinator::new(&cfg);
+    let serving = coord.register_network(net.clone()).unwrap();
+    let session = coord.session();
+    let x = input_for(net.input_width(), 9);
+
+    let first = session
+        .enqueue_network(&serving.name, &x)
+        .unwrap()
+        .wait()
+        .expect("first pass ok");
+    let misses_after_first = coord.metrics.snapshot().cache_misses;
+    let second = session
+        .enqueue_network(&serving.name, &x)
+        .unwrap()
+        .wait()
+        .expect("second pass ok");
+    assert_eq!(bits(&first), bits(&second), "same input → same bits");
+    assert_eq!(first.cycles, second.cycles, "cycle attribution is deterministic");
+    assert_eq!(
+        coord.metrics.snapshot().cache_misses,
+        misses_after_first,
+        "the second pass serves entirely from the mapping cache"
+    );
+    assert_eq!(coord.metrics.snapshot().networks_served, 2);
+}
+
+#[test]
+fn enqueue_network_validates_name_and_input_width() {
+    let cfg = net_cfg();
+    let coord = Coordinator::new(&cfg);
+    let session = coord.session();
+    assert!(
+        session.enqueue_network("nope", &[0.0]).is_err(),
+        "unregistered network name must error"
+    );
+    let net = NetworkGraph::from_layers("vnet", small_layers()).unwrap();
+    let width = net.input_width();
+    coord.register_network(net).unwrap();
+    let err = session.enqueue_network("vnet", &vec![0.0; width + 1]).unwrap_err();
+    assert!(err.to_string().contains("expects"), "{err}");
+}
+
+#[test]
+fn register_network_is_idempotent_by_name() {
+    let cfg = net_cfg();
+    let coord = Coordinator::new(&cfg);
+    let a = coord.register_network(NetworkGraph::from_layers("idem", small_layers()).unwrap());
+    let a = a.unwrap();
+    let b = coord.register_network(NetworkGraph::from_layers("idem", small_layers()).unwrap());
+    let b = b.unwrap();
+    assert!(Arc::ptr_eq(&a, &b), "second registration returns the existing serving form");
+    assert_eq!(coord.network_names().len(), 1);
+}

@@ -269,6 +269,77 @@ fn warm_start_prebuilds_registered_mappings_from_the_manifest() {
     let _ = std::fs::remove_file(&path);
 }
 
+/// Satellite of the network-serving subsystem: a registered network
+/// round-trips through the warm-start manifest. Its tile blocks (and any
+/// bundles the fusion planner packed) ride their own manifest lines, so
+/// the second life pre-builds every mapping at construction; the
+/// `network` line restores the registry entry `enqueue_network` looks up
+/// by name — and the restored network serves bit-identically to the
+/// first life without a single cold build.
+#[test]
+fn warm_start_restores_registered_networks_from_the_manifest() {
+    use sparsemap::model::NetworkGraph;
+    use sparsemap::sparse::prune::synthetic_pruned_layer;
+
+    let _s = scenario();
+    let path = std::env::temp_dir()
+        .join(format!("sparsemap-warmstart-net-{}.manifest", std::process::id()));
+    let path_str = path.to_str().expect("utf8 temp path").to_string();
+    let _ = std::fs::remove_file(&path);
+
+    let mut cfg = base_cfg();
+    cfg.workers = 1;
+    cfg.warm_start_path = path_str;
+    let layers = || {
+        vec![
+            synthetic_pruned_layer("wn1", 4, 6, 0.50, 81).unwrap(),
+            synthetic_pruned_layer("wn2", 6, 4, 0.50, 82).unwrap(),
+        ]
+    };
+    let x: Vec<f32> = (0..4).map(|i| 0.25 + i as f32 * 0.5).collect();
+
+    // First life: register + serve once; registration writes the manifest.
+    let first_bits: Vec<u32> = {
+        let coord = Coordinator::with_shard_count(&cfg, 2);
+        let net = NetworkGraph::from_layers("warmnet", layers()).unwrap();
+        coord.register_network(net).expect("first-life registration ok");
+        let session = coord.session();
+        let res = session
+            .enqueue_network("warmnet", &x)
+            .unwrap()
+            .wait()
+            .expect("first-life network ok");
+        coord.shutdown();
+        res.outputs.iter().map(|v| v.to_bits()).collect()
+    };
+    assert!(path.exists(), "network registration must write the manifest");
+
+    // Second life: the manifest restores the network and pre-builds its
+    // tile mappings through the normal cache path.
+    {
+        let coord = Coordinator::with_shard_count(&cfg, 2);
+        let restored = coord.network("warmnet").expect("manifest restored the network");
+        assert_eq!(restored.stages.len(), 2, "both layers survive the round trip");
+        let prebuilt = coord.metrics.snapshot().cache_misses;
+        assert!(prebuilt > 0, "tile mappings pre-built at construction");
+        let session = coord.session();
+        let res = session
+            .enqueue_network("warmnet", &x)
+            .unwrap()
+            .wait()
+            .expect("second-life network ok");
+        assert_eq!(res.layers.len(), 2, "per-layer attribution survives the round trip");
+        let bits: Vec<u32> = res.outputs.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, first_bits, "restored network serves bit-identically");
+        assert_eq!(
+            coord.metrics.snapshot().cache_misses,
+            prebuilt,
+            "the warm life never cold-builds a network tile"
+        );
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
 #[test]
 fn snapshot_reports_per_shard_counters() {
     let _s = scenario();
